@@ -1,0 +1,7 @@
+"""Pytest bootstrap: make `compile.*` importable when pytest runs from
+the repository root (`pytest python/tests/`) as well as from `python/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

@@ -1,0 +1,41 @@
+//! AlexNet bandwidth study: the Fig. 9 per-layer rows for one network,
+//! every division mode, both platforms.
+//!
+//! ```bash
+//! cargo run --release --example alexnet_bandwidth
+//! ```
+
+use gratetile::compress::Scheme;
+use gratetile::config::hardware::Platform;
+use gratetile::config::zoo::{network_layers, Network};
+use gratetile::sim::experiment::{bench_feature_map, run_bench_layer};
+use gratetile::tiling::DivisionMode;
+use gratetile::util::table::Table;
+
+fn main() {
+    for platform in [Platform::NvidiaSmallTile, Platform::EyerissLargeTile] {
+        let hw = platform.hardware();
+        let modes = DivisionMode::table3_modes();
+        let mut header = vec!["Layer".to_string(), "Optimal %".to_string()];
+        header.extend(modes.iter().map(|m| m.name()));
+        let mut t = Table::new(&format!(
+            "AlexNet bandwidth savings, {} (bitmask, with metadata)",
+            hw.name
+        ))
+        .header(header);
+        for bench in network_layers(Network::AlexNet) {
+            let fm = bench_feature_map(&bench);
+            let mut row =
+                vec![bench.name.to_string(), format!("{:.1}", (1.0 - fm.density()) * 100.0)];
+            for &mode in &modes {
+                row.push(
+                    run_bench_layer(&hw, &bench, mode, Scheme::Bitmask, &fm)
+                        .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
+                        .unwrap_or_else(|_| "N/A".into()),
+                );
+            }
+            t.row(row);
+        }
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,42 @@
+//! Serving demo: a leader admitting inference requests to worker
+//! pipelines that keep all intermediate activations in GrateTile
+//! storage. Reports throughput and latency percentiles.
+//!
+//! ```bash
+//! cargo run --release --example serve -- 4 32   # workers, requests
+//! ```
+
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::coordinator::{PipelineConfig, Server, ServerConfig, Weights};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workers: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+
+    // A small VDSR-flavoured stack.
+    let l1 = ConvLayer::new(1, 1, 32, 32, 8, 16);
+    let l2 = ConvLayer::new(1, 1, 32, 32, 16, 16);
+    let l3 = ConvLayer::new(1, 2, 32, 32, 16, 16);
+    let l4 = ConvLayer::new(1, 1, 16, 16, 16, 8);
+    let layers = vec![
+        (l1, Weights::random(&l1, 1)),
+        (l2, Weights::random(&l2, 2)),
+        (l3, Weights::random(&l3, 3)),
+        (l4, Weights::random(&l4, 4)),
+    ];
+
+    let server = Server::new(
+        ServerConfig {
+            pipeline: PipelineConfig::new(Platform::NvidiaSmallTile.hardware()),
+            workers,
+            queue_depth: workers * 2,
+        },
+        layers,
+    );
+    println!("serving {requests} requests on {workers} workers ...");
+    let report = server.serve(server.synthetic_requests(requests, 0.5, 13))?;
+    println!("{}", report.summary());
+    Ok(())
+}

@@ -1,0 +1,129 @@
+"""L1: tiled direct-convolution Pallas kernel.
+
+The paper's compute hot-spot is the tiled convolution consuming the
+windows that GrateTile fetches. On TPU the natural mapping (DESIGN.md
+§Hardware-Adaptation) is:
+
+* the processing tile (paper Table I) becomes a VMEM block: the grid
+  iterates output *row blocks*, and each step loads the halo'd input
+  rows it needs (the HBM->VMEM schedule the paper's memory controller
+  performs with sub-tensor fetches);
+* the per-tap inner product is phrased as a ``(tile_pixels x Cin) @
+  (Cin x Cout)`` matmul per kernel tap - the MXU-native shape - instead
+  of a GPU-style im2col + WMMA;
+* sparsity is exploited on the *bandwidth* side (L3 storage), not by
+  gating the MXU: exactly the paper's "independent of the PE design"
+  claim.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is checked against ``ref.py`` by pytest and
+the lowered HLO is what `aot.py` ships to the Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, ks, s, th, w_out, cin, cout):
+    """One grid step: convolve `th` output rows.
+
+    x_ref: (H_pad, W_pad, Cin) padded input (full, dynamically sliced).
+    w_ref: (ks, ks, Cin, Cout) weights.
+    o_ref: (th, w_out, Cout) output block.
+    """
+    i = pl.program_id(0)
+    rows = (th - 1) * s + ks
+    # Halo'd row block for this output tile (the "fetch" of Fig. 5).
+    x = pl.load(
+        x_ref,
+        (pl.ds(i * th * s, rows), slice(None), slice(None)),
+    )  # (rows, W_pad, cin)
+
+    acc = jnp.zeros((th * w_out, cout), jnp.float32)
+    for ky in range(ks):
+        for kx in range(ks):
+            # Strided patch for this tap: (th, w_out, cin).
+            patch = jax.lax.slice(
+                x,
+                (ky, kx, 0),
+                (ky + (th - 1) * s + 1, kx + (w_out - 1) * s + 1, cin),
+                (s, s, 1),
+            )
+            # MXU-shaped matmul: (th*w_out, cin) @ (cin, cout).
+            acc = acc + jnp.dot(
+                patch.reshape(th * w_out, cin),
+                w_ref[ky, kx],
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = acc.reshape(th, w_out, cout)
+
+
+def conv2d_same(x, w, *, stride=1, dilation=1, row_block=8, interpret=True):
+    """2-D convolution, SAME padding, HWC layout, via the Pallas kernel.
+
+    x: (H, W, Cin) float32.  w: (ks, ks, Cin, Cout).
+    Returns (ceil(H/s), ceil(W/s), Cout) float32.
+
+    Dilation is handled by dilating the kernel taps into an equivalent
+    dense kernel footprint before the Pallas call (tap loop indices are
+    Python-static), matching the paper's Fig. 6b window geometry.
+    """
+    h, w_in, cin = x.shape
+    ks = w.shape[0]
+    assert w.shape[:2] == (ks, ks) and ks % 2 == 1, "odd square kernels"
+    assert w.shape[2] == cin
+    cout = w.shape[3]
+    k = (ks - 1) // 2
+
+    if dilation > 1:
+        # Embed the dilated kernel in a dense (2*k*d+1)^2 footprint.
+        ks_d = 2 * k * dilation + 1
+        wd = jnp.zeros((ks_d, ks_d, cin, cout), w.dtype)
+        wd = wd.at[::dilation, ::dilation].set(w)
+        w = wd
+        ks = ks_d
+        k = k * dilation
+
+    s = stride
+    h_out = -(-h // s)
+    w_out = -(-w_in // s)
+
+    # SAME padding for the walker geometry of the paper (§III-B): the
+    # first window starts at -k; the last ends at (out-1)*s + k + 1.
+    pad_top = k
+    pad_bot = max(0, (h_out - 1) * s + k + 1 - h)
+    pad_l = k
+    pad_r = max(0, (w_out - 1) * s + k + 1 - w_in)
+    xp = jnp.pad(x, ((pad_top, pad_bot), (pad_l, pad_r), (0, 0)))
+
+    # Row-block the grid; pad H_out to a multiple of the block.
+    th = min(row_block, h_out)
+    grid = -(-h_out // th)
+    h_out_pad = grid * th
+    if h_out_pad != h_out:
+        # Extend the padded input so the last block's halo'd rows exist.
+        need_rows = (h_out_pad - 1) * s + ks
+        extra = need_rows - xp.shape[0]
+        if extra > 0:
+            xp = jnp.pad(xp, ((0, extra), (0, 0), (0, 0)))
+
+    kernel = functools.partial(
+        _conv_kernel, ks=ks, s=s, th=th, w_out=w_out, cin=cin, cout=cout
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            # Full (unblocked) refs: halo'd row blocks overlap, so the
+            # kernel slices dynamically.
+            pl.BlockSpec(xp.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((th, w_out, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out_pad, w_out, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, w)
+    return out[:h_out]

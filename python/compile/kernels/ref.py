@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest asserts kernel == ref over hypothesis-generated sweeps).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv2d_same_ref(x, w, *, stride=1, dilation=1):
+    """Reference 2-D convolution, SAME padding, HWC layout.
+
+    Matches the paper's window geometry (§III-B): output oy reads input
+    rows oy*s - k*d .. oy*s + k*d, zero-padded at the borders; output
+    size is ceil(H/s) x ceil(W/s).
+    """
+    h, w_in, _ = x.shape
+    ks = w.shape[0]
+    k = (ks - 1) // 2
+    s = stride
+    h_out = -(-h // s)
+    w_out = -(-w_in // s)
+    kd = k * dilation
+    pad_top = kd
+    pad_bot = max(0, (h_out - 1) * s + kd + 1 - h)
+    pad_l = kd
+    pad_r = max(0, (w_out - 1) * s + kd + 1 - w_in)
+    out = lax.conv_general_dilated(
+        x[None].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(s, s),
+        padding=((pad_top, pad_bot), (pad_l, pad_r)),
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0]
+
+
+def bitmask_stats_ref(blocks):
+    """Reference bitmask stats: (B, 512) f32 -> ((B, 32) i32, (B,) i32)."""
+    b, n = blocks.shape
+    nz = (blocks != 0.0).astype(jnp.int32)
+    bits = nz.reshape(b, n // 16, 16)
+    weights = (1 << jnp.arange(16, dtype=jnp.int32)).astype(jnp.int32)
+    mask = jnp.sum(bits * weights[None, None, :], axis=2, dtype=jnp.int32)
+    nnz = jnp.sum(nz, axis=1, dtype=jnp.int32)
+    return mask, nnz

@@ -1,0 +1,70 @@
+"""L2: the JAX CNN whose ReLU activations feed the GrateTile simulator.
+
+A small conv-ReLU stack (VDSR-flavoured: 3x3 kernels, one strided
+stage) built ON the L1 Pallas conv kernel, so the whole model lowers
+into a single HLO module. `aot.py` lowers `cnn_forward` once; the Rust
+runtime then produces *real* activation sparsity for the end-to-end
+example without Python on the request path.
+
+Weights are deterministic (seeded) constants baked into the HLO: the
+artifact is self-contained and reproducible.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv import conv2d_same
+
+# (kernel_size, stride, c_out) per layer; c_in chains from the input.
+LAYER_SPECS = [
+    (3, 1, 8),
+    (3, 1, 16),
+    (3, 2, 16),
+    (3, 1, 8),
+]
+
+INPUT_SHAPE = (32, 32, 1)  # H, W, C of the input image
+SEED = 2020  # the paper's year
+
+
+def layer_shapes():
+    """Output (h, w, c) of each layer, for the artifact manifest."""
+    h, w, _ = INPUT_SHAPE
+    shapes = []
+    for _, s, c_out in LAYER_SPECS:
+        h = -(-h // s)
+        w = -(-w // s)
+        shapes.append((h, w, c_out))
+    return shapes
+
+
+def init_weights():
+    """He-initialised deterministic weights, mixed-sign (so ReLU yields
+    realistic 40-70% sparsity)."""
+    key = jax.random.PRNGKey(SEED)
+    weights = []
+    c_in = INPUT_SHAPE[2]
+    for ks, _s, c_out in LAYER_SPECS:
+        key, sub = jax.random.split(key)
+        scale = (2.0 / (ks * ks * c_in)) ** 0.5
+        w = jax.random.normal(sub, (ks, ks, c_in, c_out), jnp.float32) * scale
+        weights.append(w)
+        c_in = c_out
+    return weights
+
+
+def cnn_forward(image, *, interpret=True):
+    """Run the stack; returns the tuple of every layer's post-ReLU
+    activation map (the feature maps GrateTile stores and fetches).
+
+    image: (32, 32, 1) float32.
+    """
+    weights = init_weights()
+    x = image
+    activations = []
+    for (ks, s, _c_out), w in zip(LAYER_SPECS, weights):
+        del ks
+        x = conv2d_same(x, w, stride=s, interpret=interpret)
+        x = jnp.maximum(x, 0.0)  # ReLU: the sparsity source
+        activations.append(x)
+    return tuple(activations)

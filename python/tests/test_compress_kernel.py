@@ -1,0 +1,58 @@
+"""L1 bitmask-stats kernel vs oracle: exact integer agreement over
+hypothesis-generated block batches."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.compress import BLOCK_WORDS, MASK_WORDS, bitmask_stats
+from compile.kernels.ref import bitmask_stats_ref
+
+
+def _blocks(seed, batch, density):
+    key = jax.random.PRNGKey(seed)
+    kv, km = jax.random.split(key)
+    x = jax.random.normal(kv, (batch, BLOCK_WORDS), jnp.float32)
+    mask = jax.random.uniform(km, (batch, BLOCK_WORDS)) < density
+    return jnp.where(mask, x, 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 8),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stats_match_ref(batch, density, seed):
+    x = _blocks(seed, batch, density)
+    m1, n1 = bitmask_stats(x)
+    m2, n2 = bitmask_stats_ref(x)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+
+
+def test_all_zero_and_all_dense():
+    z = jnp.zeros((2, BLOCK_WORDS))
+    m, n = bitmask_stats(z)
+    assert np.asarray(m).sum() == 0 and np.asarray(n).sum() == 0
+    d = jnp.ones((2, BLOCK_WORDS))
+    m, n = bitmask_stats(d)
+    # Every mask word = 0xFFFF; as signed i32 via the weights sum: 65535.
+    assert np.all(np.asarray(m) == 65535)
+    assert np.all(np.asarray(n) == BLOCK_WORDS)
+
+
+def test_single_nonzero_positions():
+    # Bit i of word j covers element 16*j + i (the Rust codec layout).
+    for pos in [0, 1, 15, 16, 17, 511]:
+        x = jnp.zeros((1, BLOCK_WORDS)).at[0, pos].set(3.5)
+        m, n = bitmask_stats(x)
+        m = np.asarray(m)[0]
+        assert np.asarray(n)[0] == 1
+        assert m[pos // 16] == 1 << (pos % 16), (pos, m[pos // 16])
+        assert np.count_nonzero(m) == 1
+
+
+def test_mask_word_count():
+    assert MASK_WORDS == 32

@@ -1,0 +1,91 @@
+"""L1 conv kernel vs the pure-jnp oracle (the core build-time
+correctness signal). Hypothesis sweeps shapes, strides, dilations and
+sparsity; every case must match `ref.py` to float32 tolerance."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv import conv2d_same
+from compile.kernels.ref import conv2d_same_ref
+
+
+def _random_sparse(key, shape, density):
+    kv, km = jax.random.split(key)
+    x = jax.random.normal(kv, shape, jnp.float32)
+    mask = jax.random.uniform(km, shape) < density
+    return jnp.where(mask, x, 0.0)
+
+
+def _check(h, w, cin, cout, ks, stride, dilation, density, seed, row_block=8):
+    key = jax.random.PRNGKey(seed)
+    kx, kw = jax.random.split(key)
+    x = _random_sparse(kx, (h, w, cin), density)
+    wgt = jax.random.normal(kw, (ks, ks, cin, cout), jnp.float32)
+    got = conv2d_same(x, wgt, stride=stride, dilation=dilation, row_block=row_block)
+    want = conv2d_same_ref(x, wgt, stride=stride, dilation=dilation)
+    assert got.shape == want.shape, (got.shape, want.shape)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h=st.integers(5, 24),
+    w=st.integers(5, 24),
+    cin=st.sampled_from([1, 3, 4, 8]),
+    cout=st.sampled_from([1, 4, 8]),
+    ks=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_ref_hypothesis(h, w, cin, cout, ks, stride, density, seed):
+    _check(h, w, cin, cout, ks, stride, 1, density, seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(8, 20),
+    w=st.integers(8, 20),
+    dilation=st.sampled_from([2, 3]),
+    ks=st.sampled_from([3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dilated_conv_matches_ref(h, w, dilation, ks, seed):
+    # The paper's Fig. 6b geometry: G = {-kd, kd-s+1}.
+    _check(h, w, 4, 4, ks, 1, dilation, 0.5, seed)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("ks", [1, 3, 5])
+def test_table1_layer_geometries(ks, stride):
+    # The (kernel, stride) pairs of paper Table I.
+    _check(27, 27, 8, 8, ks, stride, 1, 0.4, 7)
+
+
+def test_row_block_boundary_cases():
+    # H_out not a multiple of the row block; tiny row blocks.
+    _check(13, 13, 4, 4, 3, 1, 1, 0.4, 1, row_block=8)
+    _check(13, 13, 4, 4, 3, 2, 1, 0.4, 2, row_block=4)
+    _check(9, 9, 2, 2, 3, 1, 1, 0.4, 3, row_block=2)
+
+
+def test_all_zero_input_gives_all_zero_output():
+    x = jnp.zeros((16, 16, 4))
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 3, 4, 8))
+    out = conv2d_same(x, w)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_pointwise_conv_is_channel_mix():
+    # 1x1 conv == per-pixel matmul.
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (10, 10, 4))
+    w = jax.random.normal(key, (1, 1, 4, 6))
+    got = conv2d_same(x, w)
+    want = jnp.einsum("hwc,cd->hwd", x, w[0, 0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

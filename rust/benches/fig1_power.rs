@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig. 1 (power breakdown) and time the power model.
+
+use gratetile::config::zoo::Network;
+use gratetile::power::{network_power, ArrayConfig, EnergyTable};
+use gratetile::util::benchkit::Bencher;
+
+fn main() {
+    let t = gratetile::harness::fig1();
+    println!("{}", t.render());
+    t.save_csv("fig1");
+
+    let mut b = Bencher::new();
+    let cfg = ArrayConfig::default();
+    let e = EnergyTable::default();
+    b.bench("fig1/power_model_all_networks", || {
+        Network::all()
+            .iter()
+            .map(|&n| network_power(&cfg, &e, n).total_pj())
+            .sum::<f64>()
+    });
+    b.write_csv("fig1_power");
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Fig. 8 (overall geomean bandwidth reduction) and
+//! time the full-suite sweep.
+
+use gratetile::compress::Scheme;
+use gratetile::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    // The figure itself (also saved to results/fig8.csv).
+    let t = gratetile::harness::fig8(Scheme::Bitmask);
+    println!("{}", t.render());
+    t.save_csv("fig8");
+    // Timing: one platform suite sweep.
+    let benches = gratetile::config::benchmark_suite();
+    let hw = gratetile::config::Platform::NvidiaSmallTile.hardware();
+    let modes = [gratetile::tiling::DivisionMode::GrateTile { n: 8 }];
+    b.bench("fig8/suite_sweep_grate8_nvidia", || {
+        gratetile::sim::experiment::run_suite(&hw, &benches, &modes, Scheme::Bitmask)
+    });
+    b.write_csv("fig8_overall");
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 9a/b (per-layer bandwidth reduction).
+
+use gratetile::compress::Scheme;
+use gratetile::config::Platform;
+
+fn main() {
+    for (name, p) in [
+        ("fig9a", Platform::NvidiaSmallTile),
+        ("fig9b", Platform::EyerissLargeTile),
+    ] {
+        let t = gratetile::harness::fig9(p, Scheme::Bitmask);
+        println!("{}", t.render());
+        t.save_csv(name);
+    }
+}

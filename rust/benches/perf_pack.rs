@@ -1,0 +1,38 @@
+//! Perf bench: the packer hot path (compress + address assignment).
+//! §Perf target: ≥ 1 GB/s single-core feature-map packing (sizes-only).
+
+use gratetile::compress::Scheme;
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::{ConvLayer, TileShape};
+use gratetile::layout::Packer;
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::tiling::{Division, DivisionMode};
+use gratetile::util::benchkit::Bencher;
+
+fn main() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let layer = ConvLayer::new(1, 1, 224, 224, 64, 64);
+    let tile = TileShape::new(8, 16, 8);
+    let fm = generate(224, 224, 64, SparsityParams::clustered(0.37, 42));
+    let bytes = (fm.words() * 2) as u64;
+    let mut b = Bencher::new();
+
+    for (label, mode) in [
+        ("grate8", DivisionMode::GrateTile { n: 8 }),
+        ("uniform8", DivisionMode::Uniform { edge: 8 }),
+        ("uniform1", DivisionMode::Uniform { edge: 1 }),
+    ] {
+        let division = Division::build(mode, &layer, &tile, &hw, 224, 224, 64).unwrap();
+        for (suffix, scheme) in [("bitmask", Scheme::Bitmask), ("zrlc", Scheme::Zrlc)] {
+            let packer = Packer::new(hw, scheme);
+            b.bench_bytes(&format!("pack/{label}/{suffix}/sizes_only"), bytes, || {
+                packer.pack(&fm, &division, false).total_words
+            });
+        }
+        let packer = Packer::new(hw, Scheme::Bitmask);
+        b.bench_bytes(&format!("pack/{label}/bitmask/with_payload"), bytes, || {
+            packer.pack(&fm, &division, true).total_words
+        });
+    }
+    b.write_csv("perf_pack");
+}

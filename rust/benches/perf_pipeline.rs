@@ -1,0 +1,36 @@
+//! Perf bench: the coordinator pipeline (fetch → decompress → conv),
+//! double-buffered vs serialised prefetch. §Perf target: fetch and
+//! compute overlap (overlap efficiency → 1.0) and tiles/s.
+
+use gratetile::compress::Scheme;
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::coordinator::{LayerRunner, PipelineConfig, Weights};
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::tiling::DivisionMode;
+use gratetile::util::benchkit::Bencher;
+
+fn main() {
+    let layer = ConvLayer::new(1, 1, 56, 56, 32, 32);
+    let fm = generate(56, 56, 32, SparsityParams::clustered(0.4, 11));
+    let weights = Weights::random(&layer, 3);
+    let mut b = Bencher::new();
+
+    for depth in [1usize, 2, 4] {
+        let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+        cfg.mode = DivisionMode::GrateTile { n: 8 };
+        cfg.scheme = Scheme::Bitmask;
+        cfg.prefetch_depth = depth;
+        let runner = LayerRunner::new(cfg);
+        let packed = runner.pack(&layer, &fm).unwrap();
+        let mut last = None;
+        b.bench(&format!("pipeline/56x56x32/depth{depth}"), || {
+            let (_out, m) = runner.run_layer(&layer, &weights, &packed).unwrap();
+            last = Some(m);
+        });
+        if let Some(m) = last {
+            println!("  depth {depth}: {}", m.summary());
+        }
+    }
+    b.write_csv("perf_pipeline");
+}

@@ -1,0 +1,35 @@
+//! Perf bench: the bandwidth-simulator tile walk (the inner loop of
+//! every table/figure regeneration). §Perf target: a full 23-layer
+//! Table III sweep in < 2 s (measured end-to-end in table3_divisions).
+
+use gratetile::compress::Scheme;
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::sim::experiment::run_layer;
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::tiling::DivisionMode;
+use gratetile::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    for (label, h, w, c) in [
+        ("vgg_conv1_2/224x224x64", 224usize, 224usize, 64usize),
+        ("vdsr/256x256x64", 256, 256, 64),
+        ("alexnet_conv3/13x13x256", 13, 13, 256),
+    ] {
+        let layer = ConvLayer::new(1, 1, h, w, c, c);
+        let fm = generate(h, w, c, SparsityParams::clustered(0.37, 7));
+        let words = fm.words() as u64;
+        for (m, mode) in [
+            ("grate8", DivisionMode::GrateTile { n: 8 }),
+            ("uniform4", DivisionMode::Uniform { edge: 4 }),
+            ("uniform1", DivisionMode::Uniform { edge: 1 }),
+        ] {
+            let hw = Platform::NvidiaSmallTile.hardware();
+            b.bench_items(&format!("walk/{label}/{m}"), words, || {
+                run_layer(&hw, &layer, &fm, mode, Scheme::Bitmask).map(|r| r.fetched_bits)
+            });
+        }
+    }
+    b.write_csv("perf_walk");
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Table III (the headline evaluation) and time the
+//! two-platform, seven-mode, 23-layer sweep end to end.
+
+use gratetile::compress::Scheme;
+use gratetile::util::benchkit::Bencher;
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let t = gratetile::harness::table3(Scheme::Bitmask);
+    let elapsed = t0.elapsed();
+    println!("{}", t.render());
+    t.save_csv("table3");
+    println!("full Table III sweep: {:.2}s", elapsed.as_secs_f64());
+
+    // Also regenerate with ZRLC (robustness of the result to the codec).
+    let tz = gratetile::harness::table3(Scheme::Zrlc);
+    println!("{}", tz.render());
+    tz.save_csv("table3_zrlc");
+
+    let mut b = Bencher::new();
+    b.bench("table3/bitmask_full", || gratetile::harness::table3(Scheme::Bitmask));
+    b.write_csv("table3_divisions");
+}

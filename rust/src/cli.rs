@@ -1,0 +1,110 @@
+//! Dependency-free CLI argument parsing (no `clap` in the offline
+//! build environment).
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positional args, and `--key value`
+/// / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Cli {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            cli.command = cmd;
+        }
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare flag.
+                if let Some((k, v)) = key.split_once('=') {
+                    cli.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    cli.options.insert(key.to_string(), v);
+                } else {
+                    cli.flags.push(key.to_string());
+                }
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        cli
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let c = parse("table3 extra --scheme bitmask --seed=42 --markdown");
+        assert_eq!(c.command, "table3");
+        assert_eq!(c.opt("scheme"), Some("bitmask"));
+        assert_eq!(c.opt("seed"), Some("42"));
+        assert!(c.has_flag("markdown"));
+        assert_eq!(c.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn greedy_value_binding() {
+        // A bare token after `--key` binds as its value (clap-style).
+        let c = parse("cmd --markdown extra");
+        assert_eq!(c.opt("markdown"), Some("extra"));
+        assert!(c.positional.is_empty());
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let c = parse("sweep --n 16 --density 0.4");
+        assert_eq!(c.opt_usize("n", 8), 16);
+        assert_eq!(c.opt_f64("density", 0.3), 0.4);
+        assert_eq!(c.opt_usize("missing", 7), 7);
+        assert_eq!(c.opt_or("scheme", "bitmask"), "bitmask");
+    }
+
+    #[test]
+    fn empty_args() {
+        let c = Cli::parse(std::iter::empty());
+        assert_eq!(c.command, "");
+    }
+
+    #[test]
+    fn flag_before_value_option() {
+        let c = parse("x --verbose --k 3");
+        assert!(c.has_flag("verbose"));
+        assert_eq!(c.opt("k"), Some("3"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Bitmask compression (paper Fig. 4, used for all §IV experiments).
+//!
+//! Layout: `ceil(n/16)` mask words (bit i of word j covers element
+//! `16*j + i`; 1 = nonzero) followed by the nonzero bf16 values in order.
+//! Size is exactly `ceil(n/16) + nnz` words, which makes the simulator's
+//! fast path a popcount-free nonzero count.
+
+use super::{CompressedBlock, Compressor, CodecCost, Scheme};
+use crate::tensor::dense::{bf16_bits, bf16_from_bits};
+use crate::util::ceil_div;
+
+/// The bitmask codec (stateless).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Bitmask;
+
+impl Compressor for Bitmask {
+    fn scheme(&self) -> Scheme {
+        Scheme::Bitmask
+    }
+
+    fn compress(&self, block: &[f32]) -> CompressedBlock {
+        let n = block.len();
+        let mask_words = ceil_div(n, 16);
+        let mut words = vec![0u16; mask_words];
+        let mut values = Vec::new();
+        for (i, &v) in block.iter().enumerate() {
+            if v != 0.0 {
+                words[i / 16] |= 1 << (i % 16);
+                values.push(bf16_bits(v));
+            }
+        }
+        words.extend_from_slice(&values);
+        CompressedBlock { n_elems: n, words }
+    }
+
+    fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
+        assert_eq!(out.len(), comp.n_elems);
+        let mask_words = ceil_div(comp.n_elems, 16);
+        let (mask, values) = comp.words.split_at(mask_words);
+        let mut vi = 0;
+        for (i, o) in out.iter_mut().enumerate() {
+            if mask[i / 16] >> (i % 16) & 1 == 1 {
+                *o = bf16_from_bits(values[vi]);
+                vi += 1;
+            } else {
+                *o = 0.0;
+            }
+        }
+    }
+
+    fn compressed_words(&self, block: &[f32]) -> usize {
+        let nnz = block.iter().filter(|&&v| v != 0.0).count();
+        ceil_div(block.len(), 16) + nnz
+    }
+
+    fn compressed_bits(&self, block: &[f32]) -> usize {
+        // Exact: one mask bit per element + 16 bits per nonzero.
+        let nnz = block.iter().filter(|&&v| v != 0.0).count();
+        block.len() + nnz * 16
+    }
+
+    fn cost(&self) -> CodecCost {
+        // One comparator + mask register per lane; decompression is a
+        // prefix-sum scatter. See `cost.rs` for the model.
+        CodecCost { gates_per_lane: 120, enc_cycles_per_word: 1.0, dec_cycles_per_word: 1.0, serial: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::random_block;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = SplitMix64::new(1);
+        for &d in &[0.0, 0.1, 0.5, 1.0] {
+            let blk = random_block(&mut rng, 512, d);
+            let c = Bitmask.compress(&blk);
+            let mut out = vec![0.0; 512];
+            Bitmask.decompress(&c, &mut out);
+            assert_eq!(out, blk, "density {d}");
+        }
+    }
+
+    #[test]
+    fn size_formula() {
+        let mut blk = vec![0.0f32; 512];
+        blk[0] = 1.0;
+        blk[100] = 2.0;
+        blk[511] = 3.0;
+        assert_eq!(Bitmask.compressed_words(&blk), 32 + 3);
+        assert_eq!(Bitmask.compress(&blk).compressed_words(), 32 + 3);
+    }
+
+    #[test]
+    fn non_multiple_of_16_lengths() {
+        let mut rng = SplitMix64::new(2);
+        for len in [1usize, 15, 17, 100, 511] {
+            let blk = random_block(&mut rng, len, 0.4);
+            let c = Bitmask.compress(&blk);
+            let mut out = vec![0.0; len];
+            Bitmask.decompress(&c, &mut out);
+            assert_eq!(out, blk, "len {len}");
+            assert_eq!(c.compressed_words(), Bitmask.compressed_words(&blk));
+        }
+    }
+
+    #[test]
+    fn empty_block() {
+        let c = Bitmask.compress(&[]);
+        assert_eq!(c.compressed_words(), 0);
+        let mut out: Vec<f32> = vec![];
+        Bitmask.decompress(&c, &mut out);
+    }
+
+    #[test]
+    fn mask_bits_match_layout() {
+        // Element 17 nonzero -> bit 1 of word 1.
+        let mut blk = vec![0.0f32; 32];
+        blk[17] = 1.0;
+        let c = Bitmask.compress(&blk);
+        assert_eq!(c.words[0], 0);
+        assert_eq!(c.words[1], 1 << 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! Bit-level packing into 16-bit word streams.
+//!
+//! ZRLC tokens (21 bits) and dictionary indices (1–15 bits) are not
+//! word-aligned; these helpers pack/unpack little-endian bit runs into
+//! the `Vec<u16>` payloads used by [`super::CompressedBlock`].
+
+/// Append-only bit writer over 16-bit words (LSB-first within a word).
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    words: Vec<u16>,
+    /// Bits already used in the last word (0 when aligned).
+    bit_pos: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n ≤ 32).
+    pub fn write(&mut self, v: u32, n: usize) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || v < (1u32 << n), "value {v} does not fit {n} bits");
+        let mut remaining = n;
+        let mut val = v as u64;
+        while remaining > 0 {
+            if self.bit_pos == 0 {
+                self.words.push(0);
+            }
+            let last = self.words.last_mut().unwrap();
+            let space = 16 - self.bit_pos;
+            let take = space.min(remaining);
+            let mask = if take == 16 { 0xFFFF } else { (1u64 << take) - 1 };
+            *last |= (((val & mask) as u16) << self.bit_pos) as u16;
+            val >>= take;
+            self.bit_pos = (self.bit_pos + take) % 16;
+            remaining -= take;
+        }
+    }
+
+    /// Total bits written so far.
+    pub fn bits(&self) -> usize {
+        if self.bit_pos == 0 {
+            self.words.len() * 16
+        } else {
+            (self.words.len() - 1) * 16 + self.bit_pos
+        }
+    }
+
+    /// Finish, returning the padded word vector.
+    pub fn finish(self) -> Vec<u16> {
+        self.words
+    }
+}
+
+/// Sequential bit reader matching [`BitWriter`]'s layout.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    words: &'a [u16],
+    pos: usize, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(words: &'a [u16]) -> Self {
+        Self { words, pos: 0 }
+    }
+
+    /// Read `n` bits (n ≤ 32). Panics past end of stream.
+    pub fn read(&mut self, n: usize) -> u32 {
+        debug_assert!(n <= 32);
+        let mut out: u64 = 0;
+        let mut got = 0;
+        while got < n {
+            let word_idx = self.pos / 16;
+            let bit_idx = self.pos % 16;
+            let avail = 16 - bit_idx;
+            let take = avail.min(n - got);
+            let chunk = (self.words[word_idx] >> bit_idx) as u64;
+            let mask = if take == 16 { 0xFFFF } else { (1u64 << take) - 1 };
+            out |= (chunk & mask) << got;
+            got += take;
+            self.pos += take;
+        }
+        out as u32
+    }
+
+    pub fn bits_read(&self) -> usize {
+        self.pos
+    }
+}
+
+/// Words needed for `bits` bits.
+pub fn words_for_bits(bits: usize) -> usize {
+    bits.div_ceil(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn simple_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0xFFFF, 16);
+        w.write(0, 1);
+        w.write(0x1F, 5);
+        assert_eq!(w.bits(), 25);
+        let words = w.finish();
+        assert_eq!(words.len(), 2);
+        let mut r = BitReader::new(&words);
+        assert_eq!(r.read(3), 0b101);
+        assert_eq!(r.read(16), 0xFFFF);
+        assert_eq!(r.read(1), 0);
+        assert_eq!(r.read(5), 0x1F);
+    }
+
+    #[test]
+    fn word_aligned_values() {
+        let mut w = BitWriter::new();
+        w.write(0xABCD, 16);
+        w.write(0x1234, 16);
+        let words = w.finish();
+        assert_eq!(words, vec![0xABCD, 0x1234]);
+    }
+
+    #[test]
+    fn randomized_roundtrip_property() {
+        let mut rng = SplitMix64::new(0xB175);
+        for _ in 0..200 {
+            let n_items = rng.range(1, 100);
+            let items: Vec<(u32, usize)> = (0..n_items)
+                .map(|_| {
+                    let bits = rng.range(1, 24);
+                    let v = (rng.next_u64() as u32) & ((1u32 << bits) - 1).max(1);
+                    (v.min((1u32 << bits) - 1), bits)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, b) in &items {
+                w.write(v, b);
+            }
+            let words = w.finish();
+            let mut r = BitReader::new(&words);
+            for &(v, b) in &items {
+                assert_eq!(r.read(b), v, "bits={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn words_for_bits_rounding() {
+        assert_eq!(words_for_bits(0), 0);
+        assert_eq!(words_for_bits(1), 1);
+        assert_eq!(words_for_bits(16), 1);
+        assert_eq!(words_for_bits(17), 2);
+        assert_eq!(words_for_bits(21 * 3), 4);
+    }
+}

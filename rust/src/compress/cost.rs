@@ -1,0 +1,87 @@
+//! Hardware cost proxy for the §V codec comparison.
+//!
+//! The paper closes with a qualitative note: its SystemVerilog
+//! implementation shows "promising area efficiency compared to ZRLC,
+//! bitmask, and dictionary-based algorithms, with better scalability and
+//! less serialization". No numbers are given, so this module provides a
+//! documented, order-of-magnitude proxy — gate counts per decode lane and
+//! cycles per word — so the comparison is *runnable* (`gratetile
+//! ablation --codecs`). The absolute values are engineering estimates;
+//! the *ordering* (bitmask ≈ cheap/parallel, ZRLC serial, dictionary
+//! area-heavy) is what the ablation asserts.
+
+/// Area/throughput proxy for one codec.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecCost {
+    /// Approximate NAND2-equivalent gates per decode lane.
+    pub gates_per_lane: u32,
+    /// Encode cycles per word at steady state.
+    pub enc_cycles_per_word: f64,
+    /// Decode cycles per word at steady state.
+    pub dec_cycles_per_word: f64,
+    /// Whether decode has a serial dependency chain (limits lane
+    /// scaling — the ZRLC drawback the paper calls out).
+    pub serial: bool,
+}
+
+impl CodecCost {
+    /// Effective decode throughput (words/cycle) with `lanes` lanes; a
+    /// serial codec cannot scale past ~2 effective lanes.
+    pub fn decode_words_per_cycle(&self, lanes: u32) -> f64 {
+        let eff_lanes = if self.serial { lanes.min(2) } else { lanes };
+        if self.dec_cycles_per_word == 0.0 {
+            return f64::INFINITY;
+        }
+        eff_lanes as f64 / self.dec_cycles_per_word
+    }
+
+    /// Area for `lanes` lanes.
+    pub fn area_gates(&self, lanes: u32) -> u64 {
+        self.gates_per_lane as u64 * lanes as u64
+    }
+
+    /// Throughput per area: words/cycle per kilo-gate. The GrateTile §V
+    /// figure of merit.
+    pub fn throughput_per_kgate(&self, lanes: u32) -> f64 {
+        let area = self.area_gates(lanes);
+        if area == 0 {
+            return f64::INFINITY;
+        }
+        self.decode_words_per_cycle(lanes) / (area as f64 / 1000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Bitmask, Compressor, Dictionary, Zrlc};
+
+    #[test]
+    fn serial_codecs_do_not_scale() {
+        let z = Zrlc.cost();
+        assert!(z.serial);
+        assert_eq!(
+            z.decode_words_per_cycle(8),
+            z.decode_words_per_cycle(2),
+            "serial decode must saturate"
+        );
+    }
+
+    #[test]
+    fn parallel_codecs_scale_linearly() {
+        let b = Bitmask.cost();
+        assert!(!b.serial);
+        assert!((b.decode_words_per_cycle(8) - 4.0 * b.decode_words_per_cycle(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ordering_matches_paper_qualitative_claim() {
+        // At 8 lanes: bitmask beats both ZRLC (serialization) and
+        // dictionary (area) on throughput-per-area.
+        let bm = Bitmask.cost().throughput_per_kgate(8);
+        let zr = Zrlc.cost().throughput_per_kgate(8);
+        let di = Dictionary::default().cost().throughput_per_kgate(8);
+        assert!(bm > zr, "bitmask {bm} vs zrlc {zr}");
+        assert!(bm > di, "bitmask {bm} vs dict {di}");
+    }
+}

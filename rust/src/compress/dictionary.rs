@@ -1,0 +1,204 @@
+//! Dictionary (vector-quantisation-style) compression.
+//!
+//! Mentioned in the paper's §V hardware comparison and related work
+//! (Wu et al.'s k-means value clustering). Per block: a header word with
+//! the entry count, the dictionary of distinct bf16 values, then one
+//! bit-packed index per element. Falls back to raw (entry count 0 marker)
+//! when the block has more distinct values than [`Dictionary::max_entries`]
+//! — on such blocks VQ is counter-productive.
+
+use super::bits::{words_for_bits, BitReader, BitWriter};
+use super::{CodecCost, CompressedBlock, Compressor, Scheme};
+use crate::tensor::dense::{bf16_bits, bf16_from_bits};
+
+/// Dictionary codec with a bounded per-block dictionary.
+#[derive(Debug, Clone, Copy)]
+pub struct Dictionary {
+    /// Maximum dictionary entries (index width = ceil(log2(entries))).
+    pub max_entries: usize,
+}
+
+impl Default for Dictionary {
+    fn default() -> Self {
+        Self { max_entries: 256 }
+    }
+}
+
+/// Header encoding: entry count, or RAW_MARKER for the fallback.
+const RAW_MARKER: u16 = u16::MAX;
+
+impl Dictionary {
+    fn build_dict(&self, block: &[f32]) -> Option<Vec<u16>> {
+        let mut dict: Vec<u16> = Vec::new();
+        for &v in block {
+            let bits = bf16_bits(v);
+            if !dict.contains(&bits) {
+                if dict.len() == self.max_entries {
+                    return None;
+                }
+                dict.push(bits);
+            }
+        }
+        Some(dict)
+    }
+
+    fn index_bits(dict_len: usize) -> usize {
+        if dict_len <= 1 {
+            1
+        } else {
+            (usize::BITS - (dict_len - 1).leading_zeros()) as usize
+        }
+    }
+}
+
+impl Compressor for Dictionary {
+    fn scheme(&self) -> Scheme {
+        Scheme::Dictionary
+    }
+
+    fn compress(&self, block: &[f32]) -> CompressedBlock {
+        if block.is_empty() {
+            return CompressedBlock { n_elems: 0, words: vec![] };
+        }
+        match self.build_dict(block) {
+            Some(dict) => {
+                let idx_bits = Self::index_bits(dict.len());
+                let mut words = vec![dict.len() as u16];
+                words.extend_from_slice(&dict);
+                let mut w = BitWriter::new();
+                for &v in block {
+                    let bits = bf16_bits(v);
+                    let idx = dict.iter().position(|&d| d == bits).unwrap();
+                    w.write(idx as u32, idx_bits);
+                }
+                words.extend(w.finish());
+                CompressedBlock { n_elems: block.len(), words }
+            }
+            None => {
+                // Raw fallback: marker + verbatim values.
+                let mut words = vec![RAW_MARKER];
+                words.extend(block.iter().map(|&v| bf16_bits(v)));
+                CompressedBlock { n_elems: block.len(), words }
+            }
+        }
+    }
+
+    fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
+        assert_eq!(out.len(), comp.n_elems);
+        if comp.n_elems == 0 {
+            return;
+        }
+        let header = comp.words[0];
+        if header == RAW_MARKER {
+            for (o, &wv) in out.iter_mut().zip(&comp.words[1..]) {
+                *o = bf16_from_bits(wv);
+            }
+            return;
+        }
+        let dict_len = header as usize;
+        let dict = &comp.words[1..1 + dict_len];
+        let idx_bits = Self::index_bits(dict_len);
+        let mut r = BitReader::new(&comp.words[1 + dict_len..]);
+        for o in out.iter_mut() {
+            let idx = r.read(idx_bits) as usize;
+            *o = bf16_from_bits(dict[idx]);
+        }
+    }
+
+    fn compressed_words(&self, block: &[f32]) -> usize {
+        if block.is_empty() {
+            return 0;
+        }
+        match self.build_dict(block) {
+            Some(dict) => {
+                1 + dict.len() + words_for_bits(block.len() * Self::index_bits(dict.len()))
+            }
+            None => 1 + block.len(),
+        }
+    }
+
+    fn compressed_bits(&self, block: &[f32]) -> usize {
+        if block.is_empty() {
+            return 0;
+        }
+        match self.build_dict(block) {
+            Some(dict) => {
+                16 + dict.len() * 16 + block.len() * Self::index_bits(dict.len())
+            }
+            None => 16 + block.len() * 16,
+        }
+    }
+
+    fn cost(&self) -> CodecCost {
+        // CAM lookup per lane; large area, parallel decode.
+        CodecCost { gates_per_lane: 450, enc_cycles_per_word: 2.0, dec_cycles_per_word: 1.0, serial: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::random_block;
+    use crate::util::SplitMix64;
+
+    fn roundtrip(blk: &[f32]) -> usize {
+        let d = Dictionary::default();
+        let c = d.compress(blk);
+        let mut out = vec![0.0; blk.len()];
+        d.decompress(&c, &mut out);
+        assert_eq!(out, blk);
+        assert_eq!(c.compressed_words(), d.compressed_words(blk));
+        c.compressed_words()
+    }
+
+    #[test]
+    fn low_cardinality_compresses_well() {
+        // 512 words drawn from 4 distinct values -> 2 bits/elem.
+        let vals = [0.0f32, 1.0, 2.0, 4.0];
+        let mut rng = SplitMix64::new(5);
+        let blk: Vec<f32> = (0..512).map(|_| vals[rng.below(4)]).collect();
+        let words = roundtrip(&blk);
+        assert_eq!(words, 1 + 4 + words_for_bits(512 * 2));
+        assert!(words < 100);
+    }
+
+    #[test]
+    fn high_cardinality_falls_back_to_raw() {
+        let small = Dictionary { max_entries: 8 };
+        let mut rng = SplitMix64::new(6);
+        let blk = random_block(&mut rng, 512, 1.0);
+        let c = small.compress(&blk);
+        assert_eq!(c.words[0], RAW_MARKER);
+        assert_eq!(c.compressed_words(), 513);
+        let mut out = vec![0.0; 512];
+        small.decompress(&c, &mut out);
+        assert_eq!(out, blk);
+        assert_eq!(small.compressed_words(&blk), 513);
+    }
+
+    #[test]
+    fn sparse_blocks_roundtrip() {
+        let mut rng = SplitMix64::new(7);
+        for &d in &[0.0, 0.2, 0.5] {
+            roundtrip(&random_block(&mut rng, 300, d));
+        }
+    }
+
+    #[test]
+    fn single_value_block() {
+        let blk = vec![3.5f32; 64];
+        let words = roundtrip(&blk);
+        // header + 1 entry + 64 x 1 bit = 2 + 4 words.
+        assert_eq!(words, 2 + words_for_bits(64));
+    }
+
+    #[test]
+    fn index_bits_widths() {
+        assert_eq!(Dictionary::index_bits(1), 1);
+        assert_eq!(Dictionary::index_bits(2), 1);
+        assert_eq!(Dictionary::index_bits(3), 2);
+        assert_eq!(Dictionary::index_bits(4), 2);
+        assert_eq!(Dictionary::index_bits(5), 3);
+        assert_eq!(Dictionary::index_bits(256), 8);
+    }
+}

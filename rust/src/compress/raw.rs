@@ -1,0 +1,51 @@
+//! Identity "codec": the uncompressed baseline.
+
+use super::{CodecCost, CompressedBlock, Compressor, Scheme};
+use crate::tensor::dense::{bf16_bits, bf16_from_bits};
+
+/// Stores blocks verbatim (1 word per element).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RawDense;
+
+impl Compressor for RawDense {
+    fn scheme(&self) -> Scheme {
+        Scheme::Raw
+    }
+
+    fn compress(&self, block: &[f32]) -> CompressedBlock {
+        CompressedBlock {
+            n_elems: block.len(),
+            words: block.iter().map(|&v| bf16_bits(v)).collect(),
+        }
+    }
+
+    fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
+        assert_eq!(out.len(), comp.n_elems);
+        for (o, &w) in out.iter_mut().zip(&comp.words) {
+            *o = bf16_from_bits(w);
+        }
+    }
+
+    fn compressed_words(&self, block: &[f32]) -> usize {
+        block.len()
+    }
+
+    fn cost(&self) -> CodecCost {
+        CodecCost { gates_per_lane: 0, enc_cycles_per_word: 0.0, dec_cycles_per_word: 0.0, serial: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let blk = vec![0.0f32, 1.5, -2.0, 0.0];
+        let c = RawDense.compress(&blk);
+        assert_eq!(c.compressed_words(), 4);
+        let mut out = vec![9.0; 4];
+        RawDense.decompress(&c, &mut out);
+        assert_eq!(out, blk);
+    }
+}

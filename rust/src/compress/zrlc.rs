@@ -1,0 +1,172 @@
+//! Zero run-length coding (ZRLC; paper Fig. 4).
+//!
+//! Token = 5-bit zero-run count (zeros *preceding* the value) + 16-bit
+//! bf16 value, the scheme used by Eyeriss-class accelerators. Runs longer
+//! than 31 are split with `(31, 0)` filler tokens; trailing zeros are
+//! implicit via `n_elems`. Tokens are bit-packed (21 bits each) into
+//! 16-bit words.
+
+use super::bits::{words_for_bits, BitReader, BitWriter};
+use super::{CodecCost, CompressedBlock, Compressor, Scheme};
+use crate::tensor::dense::{bf16_bits, bf16_from_bits};
+
+const RUN_BITS: usize = 5;
+const MAX_RUN: u32 = (1 << RUN_BITS) - 1; // 31
+const TOKEN_BITS: usize = RUN_BITS + 16;
+
+/// The ZRLC codec (stateless).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Zrlc;
+
+impl Zrlc {
+    /// Token count for a block (fast-path size computation). Trailing
+    /// zeros are implicit (no filler tokens are spent on them).
+    fn token_count(block: &[f32]) -> usize {
+        let mut tokens = 0usize;
+        let mut run = 0u32;
+        for &v in block {
+            if v == 0.0 {
+                run += 1;
+            } else {
+                // Fillers for the buffered run, then the value token.
+                tokens += (run / (MAX_RUN + 1)) as usize + 1;
+                run = 0;
+            }
+        }
+        tokens
+    }
+}
+
+impl Compressor for Zrlc {
+    fn scheme(&self) -> Scheme {
+        Scheme::Zrlc
+    }
+
+    fn compress(&self, block: &[f32]) -> CompressedBlock {
+        let mut w = BitWriter::new();
+        let mut run = 0u32;
+        for &v in block {
+            if v == 0.0 {
+                // Buffer the run; fillers are only spent when a value
+                // follows, so trailing zeros are free (implicit via
+                // `n_elems`).
+                run += 1;
+            } else {
+                while run > MAX_RUN {
+                    // Filler token: 31 zeros then an explicit 0 value
+                    // (consumes MAX_RUN + 1 zeros total).
+                    w.write(MAX_RUN, RUN_BITS);
+                    w.write(0, 16);
+                    run -= MAX_RUN + 1;
+                }
+                w.write(run, RUN_BITS);
+                w.write(bf16_bits(v) as u32, 16);
+                run = 0;
+            }
+        }
+        CompressedBlock { n_elems: block.len(), words: w.finish() }
+    }
+
+    fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
+        assert_eq!(out.len(), comp.n_elems);
+        out.fill(0.0);
+        let total_bits = comp.words.len() * 16;
+        let mut r = BitReader::new(&comp.words);
+        let mut pos = 0usize;
+        // Stop when the remaining bits cannot hold a token (tail padding).
+        while total_bits - r.bits_read() >= TOKEN_BITS && pos < comp.n_elems {
+            let run = r.read(RUN_BITS) as usize;
+            let val = r.read(16) as u16;
+            pos += run;
+            if val != 0 {
+                out[pos] = bf16_from_bits(val);
+                pos += 1;
+            } else {
+                // Filler token: consumed MAX_RUN zeros + one zero value.
+                pos += 1;
+            }
+        }
+    }
+
+    fn compressed_words(&self, block: &[f32]) -> usize {
+        words_for_bits(Self::token_count(block) * TOKEN_BITS)
+    }
+
+    fn compressed_bits(&self, block: &[f32]) -> usize {
+        Self::token_count(block) * TOKEN_BITS
+    }
+
+    fn cost(&self) -> CodecCost {
+        // Run counter + shifter; decode is inherently serial in the run
+        // chain (the paper's §V notes ZRLC's serialization).
+        CodecCost { gates_per_lane: 90, enc_cycles_per_word: 1.0, dec_cycles_per_word: 1.6, serial: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::random_block;
+    use crate::util::SplitMix64;
+
+    fn roundtrip(blk: &[f32]) {
+        let c = Zrlc.compress(blk);
+        let mut out = vec![0.0; blk.len()];
+        Zrlc.decompress(&c, &mut out);
+        assert_eq!(out, blk);
+        assert_eq!(c.compressed_words(), Zrlc.compressed_words(blk));
+    }
+
+    #[test]
+    fn roundtrip_various_densities() {
+        let mut rng = SplitMix64::new(3);
+        for &d in &[0.0, 0.05, 0.4, 0.9, 1.0] {
+            roundtrip(&random_block(&mut rng, 512, d));
+        }
+    }
+
+    #[test]
+    fn long_zero_runs_use_fillers() {
+        // 100 zeros then a value: needs 3 fillers (31+1 each = 96) + token.
+        let mut blk = vec![0.0f32; 101];
+        blk[100] = 1.0;
+        let c = Zrlc.compress(&blk);
+        // 100 zeros = 3 fillers consuming 96, remaining run 4 on the token.
+        assert_eq!(c.words.len(), words_for_bits(4 * TOKEN_BITS));
+        roundtrip(&blk);
+    }
+
+    #[test]
+    fn trailing_zeros_are_free() {
+        let mut blk = vec![0.0f32; 512];
+        blk[0] = 1.0;
+        // One token regardless of the 511 trailing zeros.
+        assert_eq!(Zrlc.compressed_words(&blk), words_for_bits(TOKEN_BITS));
+        roundtrip(&blk);
+    }
+
+    #[test]
+    fn all_zero_block_is_empty() {
+        let blk = vec![0.0f32; 512];
+        assert_eq!(Zrlc.compressed_words(&blk), 0);
+        roundtrip(&blk);
+    }
+
+    #[test]
+    fn dense_block_costs_more_than_raw() {
+        let mut rng = SplitMix64::new(4);
+        let blk = random_block(&mut rng, 512, 1.0);
+        // 21 bits per word vs 16 raw.
+        assert!(Zrlc.compressed_words(&blk) > 512);
+        roundtrip(&blk);
+    }
+
+    #[test]
+    fn exact_run_boundary_31_and_32() {
+        for zeros in [30usize, 31, 32, 33, 62, 63, 64] {
+            let mut blk = vec![0.0f32; zeros + 1];
+            blk[zeros] = 2.0;
+            roundtrip(&blk);
+        }
+    }
+}

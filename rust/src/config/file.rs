@@ -1,0 +1,240 @@
+//! Config-file support: define custom hardware platforms and layer
+//! workloads without recompiling (the launcher-grade entry point).
+//!
+//! Dependency-free INI-style format (no serde/toml in the offline
+//! environment):
+//!
+//! ```ini
+//! [hardware]
+//! name = my-accel
+//! tile_budget_words = 8192
+//! base_tile = 8x16x8          # th x tw x tc at stride 1
+//!
+//! [layer conv3_1]
+//! k = 1        # kernel half-width (kernel = 2k+1)
+//! s = 2
+//! d = 1
+//! h = 56
+//! w = 56
+//! c_in = 64
+//! c_out = 128
+//! density = 0.45
+//! ```
+//!
+//! Used by `gratetile sweep --config <file>` and available to library
+//! users for custom studies.
+
+use super::hardware::{Hardware, Platform, WORDS_PER_LINE};
+use super::layer::{ConvLayer, TileShape};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A layer entry from a config file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigLayer {
+    pub name: String,
+    pub layer: ConvLayer,
+    pub density: f64,
+}
+
+/// Parsed configuration.
+#[derive(Debug, Clone)]
+pub struct FileConfig {
+    /// Custom hardware, if a `[hardware]` section was present.
+    pub hardware: Option<Hardware>,
+    pub layers: Vec<ConfigLayer>,
+}
+
+impl FileConfig {
+    pub fn load(path: &Path) -> Result<FileConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// The effective hardware (custom or a platform default).
+    pub fn hardware_or(&self, default: Platform) -> Hardware {
+        self.hardware.unwrap_or_else(|| default.hardware())
+    }
+
+    pub fn parse(text: &str) -> Result<FileConfig> {
+        let mut cfg = FileConfig { hardware: None, layers: Vec::new() };
+        let mut section: Option<(String, Vec<(String, String)>)> = None;
+
+        let flush = |sec: Option<(String, Vec<(String, String)>)>,
+                         cfg: &mut FileConfig|
+         -> Result<()> {
+            let Some((header, kvs)) = sec else { return Ok(()) };
+            let get = |key: &str| -> Option<&str> {
+                kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+            };
+            let req_usize = |key: &str| -> Result<usize> {
+                get(key)
+                    .ok_or_else(|| anyhow!("[{header}] missing '{key}'"))?
+                    .parse()
+                    .map_err(|e| anyhow!("[{header}] {key}: {e}"))
+            };
+            if header == "hardware" {
+                let tile = get("base_tile").unwrap_or("8x16x8");
+                let dims: Vec<usize> = tile
+                    .split('x')
+                    .map(|d| d.trim().parse())
+                    .collect::<std::result::Result<_, _>>()
+                    .map_err(|e| anyhow!("[hardware] base_tile: {e}"))?;
+                if dims.len() != 3 {
+                    bail!("[hardware] base_tile must be th x tw x tc");
+                }
+                cfg.hardware = Some(Hardware {
+                    name: "custom",
+                    tile_budget_words: req_usize("tile_budget_words")?,
+                    base_tile: TileShape::new(dims[0], dims[1], dims[2]),
+                    words_per_line: WORDS_PER_LINE,
+                    pointer_bits: get("pointer_bits")
+                        .map(|v| v.parse())
+                        .transpose()?
+                        .unwrap_or(28),
+                    size_field_bits: get("size_field_bits")
+                        .map(|v| v.parse())
+                        .transpose()?
+                        .unwrap_or(20),
+                });
+            } else if let Some(name) = header.strip_prefix("layer") {
+                let name = name.trim();
+                if name.is_empty() {
+                    bail!("layer sections need a name: [layer conv1]");
+                }
+                let layer = ConvLayer {
+                    k: req_usize("k")?,
+                    s: get("s").map(|v| v.parse()).transpose()?.unwrap_or(1),
+                    d: get("d").map(|v| v.parse()).transpose()?.unwrap_or(1),
+                    h: req_usize("h")?,
+                    w: req_usize("w")?,
+                    c_in: req_usize("c_in")?,
+                    c_out: get("c_out")
+                        .map(|v| v.parse())
+                        .transpose()?
+                        .unwrap_or(req_usize("c_in")?),
+                };
+                if layer.s == 0 || layer.d == 0 || layer.h == 0 || layer.w == 0 {
+                    bail!("[{header}] dims/stride/dilation must be positive");
+                }
+                let density: f64 = get("density")
+                    .map(|v| v.parse())
+                    .transpose()?
+                    .unwrap_or(0.4);
+                if !(0.0..=1.0).contains(&density) {
+                    bail!("[{header}] density must be in [0,1]");
+                }
+                cfg.layers.push(ConfigLayer { name: name.to_string(), layer, density });
+            } else {
+                bail!("unknown section [{header}]");
+            }
+            Ok(())
+        };
+
+        for (ln, raw) in text.lines().enumerate() {
+            // Strip comments (# or ;) and whitespace.
+            let line = raw.split(['#', ';']).next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let header = h
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", ln + 1))?
+                    .trim()
+                    .to_string();
+                flush(section.take(), &mut cfg)?;
+                section = Some((header, Vec::new()));
+            } else if let Some((k, v)) = line.split_once('=') {
+                let Some((_, kvs)) = &mut section else {
+                    bail!("line {}: key outside a section", ln + 1);
+                };
+                kvs.push((k.trim().to_string(), v.trim().to_string()));
+            } else {
+                bail!("line {}: expected 'key = value' or '[section]'", ln + 1);
+            }
+        }
+        flush(section.take(), &mut cfg)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# custom platform
+[hardware]
+name = my-accel
+tile_budget_words = 8192
+base_tile = 8x16x8
+
+[layer conv3_1]
+k = 1
+s = 2
+h = 56
+w = 56
+c_in = 64
+c_out = 128
+density = 0.45
+
+[layer pw]   ; pointwise
+k = 0
+h = 28
+w = 28
+c_in = 512
+";
+
+    #[test]
+    fn parses_hardware_and_layers() {
+        let cfg = FileConfig::parse(SAMPLE).unwrap();
+        let hw = cfg.hardware.unwrap();
+        assert_eq!(hw.tile_budget_words, 8192);
+        assert_eq!((hw.base_tile.th, hw.base_tile.tw, hw.base_tile.tc), (8, 16, 8));
+        assert_eq!(cfg.layers.len(), 2);
+        let c = &cfg.layers[0];
+        assert_eq!(c.name, "conv3_1");
+        assert_eq!((c.layer.k, c.layer.s, c.layer.h), (1, 2, 56));
+        assert_eq!(c.layer.c_out, 128);
+        assert!((c.density - 0.45).abs() < 1e-12);
+        // Defaults: d=1, c_out=c_in, density=0.4.
+        let p = &cfg.layers[1];
+        assert_eq!(p.layer.d, 1);
+        assert_eq!(p.layer.c_out, 512);
+        assert!((p.density - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = FileConfig::parse("# only comments\n\n; more\n").unwrap();
+        assert!(cfg.hardware.is_none());
+        assert!(cfg.layers.is_empty());
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(FileConfig::parse("[layer x]\nk = 1\n").is_err()); // missing h/w/c_in
+        assert!(FileConfig::parse("key = 1\n").is_err()); // outside section
+        assert!(FileConfig::parse("[bogus]\na = 1\n").is_err());
+        assert!(FileConfig::parse("[layer]\nk = 1\n").is_err()); // unnamed
+        assert!(FileConfig::parse("[layer x]\nk=1\nh=8\nw=8\nc_in=8\ndensity=1.5\n").is_err());
+        assert!(FileConfig::parse("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn hardware_or_falls_back() {
+        let cfg = FileConfig::parse("[layer x]\nk=1\nh=8\nw=8\nc_in=8\n").unwrap();
+        let hw = cfg.hardware_or(Platform::EyerissLargeTile);
+        assert_eq!(hw.tile_budget_words, 16 * 1024);
+    }
+
+    #[test]
+    fn custom_hardware_drives_tiling() {
+        let cfg = FileConfig::parse(SAMPLE).unwrap();
+        let hw = cfg.hardware.unwrap();
+        let t = hw.tile_for_layer(&cfg.layers[0].layer);
+        assert!(t.input_window_words(&cfg.layers[0].layer) <= 8192);
+    }
+}

@@ -1,0 +1,179 @@
+//! Hardware platform descriptors (paper §IV-A).
+//!
+//! Two platforms bound the design space in the paper's evaluation:
+//!
+//! * **Small tile** (modelled after an NVIDIA SM with 64 KB shared
+//!   memory): the processing tile must fit a 4 K-word input window.
+//! * **Large tile** (modelled after Eyeriss with a 108 KB global buffer):
+//!   16 K-word input windows.
+//!
+//! Both use 8-word (128-bit) memory alignment — one "cache line" in this
+//! crate's terminology — matching the AXI bus width of [15] and NVIDIA's
+//! L1 sector granularity.
+
+use super::layer::{ConvLayer, TileShape};
+
+/// Words per cache line / DRAM alignment unit (8 words = 128 bits at
+/// 16-bit words). Every aligned fetch moves whole lines.
+pub const WORDS_PER_LINE: usize = 8;
+
+/// Bytes per word (16-bit feature words, paper §IV-A).
+pub const BYTES_PER_WORD: usize = 2;
+
+/// Named platform presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    /// Small-tile configuration (NVIDIA Volta SM, 64 KB shared memory).
+    NvidiaSmallTile,
+    /// Large-tile configuration (Eyeriss, 108 KB global buffer).
+    EyerissLargeTile,
+}
+
+impl Platform {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Platform::NvidiaSmallTile => "NVIDIA",
+            Platform::EyerissLargeTile => "Eyeriss",
+        }
+    }
+
+    pub fn hardware(&self) -> Hardware {
+        match self {
+            Platform::NvidiaSmallTile => Hardware {
+                name: "NVIDIA (small tile)",
+                tile_budget_words: 4 * 1024,
+                base_tile: TileShape::new(8, 16, 8),
+                words_per_line: WORDS_PER_LINE,
+                pointer_bits: 28,
+                size_field_bits: 20,
+            },
+            Platform::EyerissLargeTile => Hardware {
+                name: "Eyeriss (large tile)",
+                tile_budget_words: 16 * 1024,
+                base_tile: TileShape::new(16, 16, 16),
+                words_per_line: WORDS_PER_LINE,
+                pointer_bits: 28,
+                size_field_bits: 20,
+            },
+        }
+    }
+}
+
+/// A hardware configuration: buffer budget, alignment, metadata widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hardware {
+    pub name: &'static str,
+    /// Max words of one input tile window (≈ ¼ of the on-chip buffer,
+    /// leaving room for double buffering + kernels; paper §IV-A).
+    pub tile_budget_words: usize,
+    /// Output-tile shape at stride 1; shrinks with stride (see
+    /// [`Hardware::tile_for_layer`]).
+    pub base_tile: TileShape,
+    /// Words per aligned line (8 = 128 bits).
+    pub words_per_line: usize,
+    /// Pointer width for block metadata: 32-bit addresses with 16-byte
+    /// alignment → 28 bits (paper §III-C).
+    pub pointer_bits: usize,
+    /// Total bits for the four sub-tensor size fields (paper takes the
+    /// max over supported kernel sizes → 20 bits, §III-C).
+    pub size_field_bits: usize,
+}
+
+impl Hardware {
+    /// Bytes per line.
+    pub fn line_bytes(&self) -> usize {
+        self.words_per_line * BYTES_PER_WORD
+    }
+
+    /// Choose the processing tile for a layer (reproduces Table I).
+    ///
+    /// The output tile keeps a roughly constant *input* window: spatial
+    /// output dims shrink by the stride; the window is then verified
+    /// against the buffer budget and halved (h, then w) until it fits.
+    pub fn tile_for_layer(&self, layer: &ConvLayer) -> TileShape {
+        let mut th = (self.base_tile.th / layer.s).max(1);
+        let mut tw = (self.base_tile.tw / layer.s).max(1);
+        let mut tc = self.base_tile.tc.min(layer.c_in.next_power_of_two());
+        loop {
+            let t = TileShape::new(th, tw, tc);
+            if t.input_window_words(layer) <= self.tile_budget_words {
+                return t;
+            }
+            // Shrink spatial dims first (keeps channel-group width, which
+            // metadata blocks are sized for), then the channel group.
+            if th > 1 || tw > 1 {
+                if th >= tw {
+                    th = (th / 2).max(1);
+                } else {
+                    tw = (tw / 2).max(1);
+                }
+            } else if tc > 1 {
+                tc = (tc / 2).max(1);
+            } else {
+                // Degenerate: a single halo'd pixel over one channel
+                // exceeds the buffer; return it anyway (caller checks).
+                return t;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_geometry() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        assert_eq!(hw.words_per_line, 8);
+        assert_eq!(hw.line_bytes(), 16);
+    }
+
+    #[test]
+    fn table1_tiles_small() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        // (3,1) -> input window 10x18x8 (Table I row 1).
+        let l = ConvLayer::new(1, 1, 224, 224, 64, 64);
+        let t = hw.tile_for_layer(&l);
+        assert_eq!((t.in_h(&l), t.in_w(&l), t.tc), (10, 18, 8));
+        // (3,2) -> 9x17x8 (row 2).
+        let l2 = ConvLayer::new(1, 2, 224, 224, 64, 64);
+        let t2 = hw.tile_for_layer(&l2);
+        assert_eq!((t2.in_h(&l2), t2.in_w(&l2), t2.tc), (9, 17, 8));
+        // (5,1) -> 12x20x8 (row 3).
+        let l3 = ConvLayer::new(2, 1, 224, 224, 64, 64);
+        let t3 = hw.tile_for_layer(&l3);
+        assert_eq!((t3.in_h(&l3), t3.in_w(&l3), t3.tc), (12, 20, 8));
+    }
+
+    #[test]
+    fn table1_tiles_large() {
+        let hw = Platform::EyerissLargeTile.hardware();
+        let l = ConvLayer::new(1, 1, 224, 224, 64, 64);
+        let t = hw.tile_for_layer(&l);
+        assert_eq!((t.in_h(&l), t.in_w(&l), t.tc), (18, 18, 16));
+        let l2 = ConvLayer::new(1, 2, 224, 224, 64, 64);
+        let t2 = hw.tile_for_layer(&l2);
+        assert_eq!((t2.in_h(&l2), t2.in_w(&l2), t2.tc), (17, 17, 16));
+        let l3 = ConvLayer::new(2, 1, 224, 224, 64, 64);
+        let t3 = hw.tile_for_layer(&l3);
+        assert_eq!((t3.in_h(&l3), t3.in_w(&l3), t3.tc), (20, 20, 16));
+    }
+
+    #[test]
+    fn budget_is_respected_for_large_kernels() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        // A huge dilated kernel must still produce a window within budget.
+        let l = ConvLayer::new(5, 1, 224, 224, 64, 64).dilated(4);
+        let t = hw.tile_for_layer(&l);
+        assert!(t.input_window_words(&l) <= hw.tile_budget_words);
+    }
+
+    #[test]
+    fn narrow_channel_input_clamps_tc() {
+        let hw = Platform::EyerissLargeTile.hardware();
+        let l = ConvLayer::new(1, 1, 64, 64, 3, 64);
+        let t = hw.tile_for_layer(&l);
+        assert!(t.tc <= 4);
+    }
+}

@@ -1,0 +1,180 @@
+//! CNN layer descriptors.
+//!
+//! The paper (§III-B) characterises every modern CNN layer by three
+//! parameters: kernel half-width `k` (kernel size `2k+1`), output stride
+//! `s`, and dilation `d`. We add the input feature-map geometry and the
+//! output channel count so the simulator and the power model can derive
+//! exact access counts.
+
+/// One convolution layer, as seen from its *input* feature map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvLayer {
+    /// Kernel half-width; kernel size is `2k+1` (paper notation).
+    pub k: usize,
+    /// Output stride `s >= 1`.
+    pub s: usize,
+    /// Dilation `d >= 1` (paper's dilated-CNN extension, Fig. 6b).
+    pub d: usize,
+    /// Input feature map height.
+    pub h: usize,
+    /// Input feature map width.
+    pub w: usize,
+    /// Input channels.
+    pub c_in: usize,
+    /// Output channels (used by the power model / e2e pipeline).
+    pub c_out: usize,
+}
+
+impl ConvLayer {
+    /// Standard (non-dilated) layer.
+    pub fn new(k: usize, s: usize, h: usize, w: usize, c_in: usize, c_out: usize) -> Self {
+        Self { k, s, d: 1, h, w, c_in, c_out }
+    }
+
+    /// Dilated variant.
+    pub fn dilated(mut self, d: usize) -> Self {
+        assert!(d >= 1);
+        self.d = d;
+        self
+    }
+
+    /// Kernel size along one spatial axis (`2k+1`).
+    pub fn kernel_size(&self) -> usize {
+        2 * self.k + 1
+    }
+
+    /// Effective kernel reach (`k * d`) — the halo half-width.
+    pub fn halo(&self) -> usize {
+        self.k * self.d
+    }
+
+    /// Output spatial dims under SAME padding (paper's setting: windows
+    /// may start at `-k*d`, i.e. zero padding of the halo).
+    pub fn out_h(&self) -> usize {
+        self.h.div_ceil(self.s)
+    }
+
+    pub fn out_w(&self) -> usize {
+        self.w.div_ceil(self.s)
+    }
+
+    /// Words in the input feature map (1 word = 1 element).
+    pub fn input_words(&self) -> usize {
+        self.h * self.w * self.c_in
+    }
+
+    /// MAC count for the full layer (for the power model).
+    pub fn macs(&self) -> u64 {
+        self.out_h() as u64
+            * self.out_w() as u64
+            * self.c_out as u64
+            * self.c_in as u64
+            * (self.kernel_size() * self.kernel_size()) as u64
+    }
+
+    /// Kernel (weight) word count.
+    pub fn weight_words(&self) -> u64 {
+        (self.kernel_size() * self.kernel_size()) as u64 * self.c_in as u64 * self.c_out as u64
+    }
+
+    /// Output feature-map word count.
+    pub fn output_words(&self) -> u64 {
+        self.out_h() as u64 * self.out_w() as u64 * self.c_out as u64
+    }
+}
+
+/// An output processing tile: the unit of work the accelerator schedules
+/// (paper §III-B, Table I). `th x tw` output pixels over `tc` input
+/// channels are produced from one halo'd input window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileShape {
+    pub th: usize,
+    pub tw: usize,
+    /// Channels of the *input* feature map processed per tile pass.
+    pub tc: usize,
+}
+
+impl TileShape {
+    pub fn new(th: usize, tw: usize, tc: usize) -> Self {
+        assert!(th > 0 && tw > 0 && tc > 0);
+        Self { th, tw, tc }
+    }
+
+    /// Input window height fetched for one tile: `(th-1)*s + 2*k*d + 1`.
+    pub fn in_h(&self, layer: &ConvLayer) -> usize {
+        (self.th - 1) * layer.s + 2 * layer.halo() + 1
+    }
+
+    /// Input window width fetched for one tile.
+    pub fn in_w(&self, layer: &ConvLayer) -> usize {
+        (self.tw - 1) * layer.s + 2 * layer.halo() + 1
+    }
+
+    /// Words in the halo'd input window for one tile.
+    pub fn input_window_words(&self, layer: &ConvLayer) -> usize {
+        self.in_h(layer) * self.in_w(layer) * self.tc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_size_and_halo() {
+        let l = ConvLayer::new(1, 1, 32, 32, 8, 8);
+        assert_eq!(l.kernel_size(), 3);
+        assert_eq!(l.halo(), 1);
+        let ld = ConvLayer::new(1, 1, 32, 32, 8, 8).dilated(2);
+        assert_eq!(ld.kernel_size(), 3);
+        assert_eq!(ld.halo(), 2);
+    }
+
+    #[test]
+    fn output_dims_same_padding() {
+        let l = ConvLayer::new(1, 1, 13, 13, 384, 384);
+        assert_eq!(l.out_h(), 13);
+        let l2 = ConvLayer::new(1, 2, 56, 56, 64, 128);
+        assert_eq!(l2.out_h(), 28);
+        let l3 = ConvLayer::new(1, 2, 13, 13, 8, 8);
+        assert_eq!(l3.out_h(), 7); // ceil(13/2)
+    }
+
+    #[test]
+    fn table1_input_window_shapes() {
+        // Paper Table I: (3,1) small tile -> 10x18x8 input window.
+        let l31 = ConvLayer::new(1, 1, 224, 224, 64, 64);
+        let t = TileShape::new(8, 16, 8);
+        assert_eq!(t.in_h(&l31), 10);
+        assert_eq!(t.in_w(&l31), 18);
+        assert_eq!(t.input_window_words(&l31), 10 * 18 * 8);
+
+        // (3,2) small tile -> 9x17x8.
+        let l32 = ConvLayer::new(1, 2, 224, 224, 64, 64);
+        let t2 = TileShape::new(4, 8, 8);
+        assert_eq!(t2.in_h(&l32), 9);
+        assert_eq!(t2.in_w(&l32), 17);
+
+        // (5,1) small tile -> 12x20x8.
+        let l51 = ConvLayer::new(2, 1, 224, 224, 64, 64);
+        let t3 = TileShape::new(8, 16, 8);
+        assert_eq!(t3.in_h(&l51), 12);
+        assert_eq!(t3.in_w(&l51), 20);
+
+        // Large-tile (Eyeriss) rows of Table I.
+        let te = TileShape::new(16, 16, 16);
+        assert_eq!(te.in_h(&l31), 18);
+        assert_eq!(te.in_w(&l31), 18);
+        let te2 = TileShape::new(8, 8, 16);
+        assert_eq!(te2.in_h(&l32), 17);
+        let te3 = TileShape::new(16, 16, 16);
+        assert_eq!(te3.in_h(&l51), 20);
+    }
+
+    #[test]
+    fn macs_count() {
+        let l = ConvLayer::new(1, 1, 4, 4, 2, 3);
+        // 4*4 outputs * 3 cout * 2 cin * 9 taps
+        assert_eq!(l.macs(), 16 * 3 * 2 * 9);
+    }
+}

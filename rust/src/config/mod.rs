@@ -1,0 +1,12 @@
+//! Configuration: CNN layer descriptors, hardware platform descriptors,
+//! and the benchmark network zoo from the paper's §IV.
+
+pub mod file;
+pub mod hardware;
+pub mod layer;
+pub mod zoo;
+
+pub use file::{ConfigLayer, FileConfig};
+pub use hardware::{Hardware, Platform, WORDS_PER_LINE};
+pub use layer::{ConvLayer, TileShape};
+pub use zoo::{benchmark_suite, network_layers, BenchLayer, Network};

@@ -1,0 +1,238 @@
+//! Direct convolution compute lane (the PE-array stand-in).
+//!
+//! The coordinator needs a real compute consumer to prove the fetch →
+//! decompress → compute path composes; this is a straightforward direct
+//! convolution with ReLU, matching the L1 Pallas kernel's semantics
+//! (SAME padding, odd kernels, stride, dilation). It doubles as the
+//! reference for pipeline correctness tests.
+
+use crate::config::layer::ConvLayer;
+use crate::layout::fetcher::DenseWindow;
+use crate::tensor::FeatureMap;
+use crate::util::SplitMix64;
+
+/// Layer weights in `[ky][kx][cin][cout]` row-major order.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub k: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    /// Deterministic pseudo-random weights (He-ish scale, mixed sign so
+    /// ReLU produces realistic sparsity).
+    pub fn random(layer: &ConvLayer, seed: u64) -> Weights {
+        let ks = layer.kernel_size();
+        let n = ks * ks * layer.c_in * layer.c_out;
+        let mut rng = SplitMix64::new(seed);
+        let scale = (2.0 / (ks * ks * layer.c_in) as f32).sqrt();
+        let data = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect();
+        Weights { k: layer.k, c_in: layer.c_in, c_out: layer.c_out, data }
+    }
+
+    #[inline]
+    pub fn at(&self, ky: usize, kx: usize, cin: usize, cout: usize) -> f32 {
+        let ks = 2 * self.k + 1;
+        self.data[((ky * ks + kx) * self.c_in + cin) * self.c_out + cout]
+    }
+}
+
+/// Accumulate the partial convolution of one fetched window into an
+/// output-tile accumulator (no ReLU yet — channel groups accumulate).
+///
+/// `acc` is `(oy1-oy0) × (ox1-ox0) × c_out` row-major; the window holds
+/// input channels `[win.c0, win.c1)`.
+#[allow(clippy::too_many_arguments)]
+pub fn accumulate_tile(
+    layer: &ConvLayer,
+    weights: &Weights,
+    win: &DenseWindow,
+    acc: &mut [f32],
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+) {
+    let ks = layer.kernel_size();
+    let halo = layer.halo() as i64;
+    let ow = ox1 - ox0;
+    let c_out = layer.c_out;
+    debug_assert_eq!(acc.len(), (oy1 - oy0) * ow * c_out);
+    for oy in oy0..oy1 {
+        for ox in ox0..ox1 {
+            let base = ((oy - oy0) * ow + (ox - ox0)) * c_out;
+            for ky in 0..ks {
+                let iy = (oy * layer.s) as i64 + (ky * layer.d) as i64 - halo;
+                if iy < 0 || iy >= layer.h as i64 {
+                    continue; // SAME zero padding
+                }
+                let iy = iy as usize;
+                if iy < win.y0 || iy >= win.y1 {
+                    continue;
+                }
+                for kx in 0..ks {
+                    let ix = (ox * layer.s) as i64 + (kx * layer.d) as i64 - halo;
+                    if ix < 0 || ix >= layer.w as i64 {
+                        continue;
+                    }
+                    let ix = ix as usize;
+                    if ix < win.x0 || ix >= win.x1 {
+                        continue;
+                    }
+                    // Hoisted inner product (§Perf): resolve the window
+                    // row pointer and the weight tap row once, then run
+                    // a slice-level AXPY per nonzero input channel.
+                    let wrow = (win.x1 - win.x0) * (win.c1 - win.c0);
+                    let wbase =
+                        ((iy - win.y0) * (win.x1 - win.x0) + (ix - win.x0)) * (win.c1 - win.c0);
+                    let _ = wrow;
+                    let tap = ((ky * ks + kx) * weights.c_in) * c_out;
+                    for cin in win.c0..win.c1 {
+                        let v = win.data[wbase + (cin - win.c0)];
+                        if v == 0.0 {
+                            continue; // sparse skip (PE gating)
+                        }
+                        let wslice = &weights.data[tap + cin * c_out..tap + (cin + 1) * c_out];
+                        let aslice = &mut acc[base..base + c_out];
+                        for (a, &wv) in aslice.iter_mut().zip(wslice) {
+                            *a += v * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Reference: full dense conv + ReLU over a feature map (oracle for the
+/// tiled pipeline).
+pub fn direct_conv_relu(layer: &ConvLayer, weights: &Weights, fm: &FeatureMap) -> FeatureMap {
+    assert_eq!((fm.h, fm.w, fm.c), (layer.h, layer.w, layer.c_in));
+    let (oh, ow) = (layer.out_h(), layer.out_w());
+    let ks = layer.kernel_size();
+    let halo = layer.halo() as i64;
+    let mut out = vec![0.0f32; oh * ow * layer.c_out];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let base = (oy * ow + ox) * layer.c_out;
+            for ky in 0..ks {
+                let iy = (oy * layer.s) as i64 + (ky * layer.d) as i64 - halo;
+                if iy < 0 || iy >= layer.h as i64 {
+                    continue;
+                }
+                for kx in 0..ks {
+                    let ix = (ox * layer.s) as i64 + (kx * layer.d) as i64 - halo;
+                    if ix < 0 || ix >= layer.w as i64 {
+                        continue;
+                    }
+                    for cin in 0..layer.c_in {
+                        let v = fm.get(iy as usize, ix as usize, cin);
+                        if v == 0.0 {
+                            continue;
+                        }
+                        for cout in 0..layer.c_out {
+                            out[base + cout] += v * weights.at(ky, kx, cin, cout);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for v in &mut out {
+        *v = v.max(0.0);
+    }
+    FeatureMap::from_vec(oh, ow, layer.c_out, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+
+    #[test]
+    fn identity_kernel_passes_through() {
+        // 1x1 conv with identity weights = ReLU(fm).
+        let layer = ConvLayer::new(0, 1, 6, 6, 3, 3);
+        let mut w = Weights { k: 0, c_in: 3, c_out: 3, data: vec![0.0; 9] };
+        for c in 0..3 {
+            w.data[c * 3 + c] = 1.0;
+        }
+        let fm = generate(6, 6, 3, SparsityParams::iid(0.5, 1));
+        let out = direct_conv_relu(&layer, &w, &fm);
+        for y in 0..6 {
+            for x in 0..6 {
+                for c in 0..3 {
+                    assert_eq!(out.get(y, x, c), fm.get(y, x, c).max(0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn averaging_kernel_on_constant_input() {
+        // 3x3 all-ones kernel over constant-1 input, 1 channel: interior
+        // outputs = 9, corners = 4, edges = 6.
+        let layer = ConvLayer::new(1, 1, 5, 5, 1, 1);
+        let w = Weights { k: 1, c_in: 1, c_out: 1, data: vec![1.0; 9] };
+        let fm = FeatureMap::from_vec(5, 5, 1, vec![1.0; 25]);
+        let out = direct_conv_relu(&layer, &w, &fm);
+        assert_eq!(out.get(2, 2, 0), 9.0);
+        assert_eq!(out.get(0, 0, 0), 4.0);
+        assert_eq!(out.get(0, 2, 0), 6.0);
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let layer = ConvLayer::new(1, 2, 8, 8, 2, 4);
+        let w = Weights::random(&layer, 3);
+        let fm = generate(8, 8, 2, SparsityParams::iid(0.7, 2));
+        let out = direct_conv_relu(&layer, &w, &fm);
+        assert_eq!((out.h, out.w, out.c), (4, 4, 4));
+    }
+
+    #[test]
+    fn relu_output_is_nonnegative_and_sparse() {
+        let layer = ConvLayer::new(1, 1, 16, 16, 8, 8);
+        let w = Weights::random(&layer, 7);
+        let fm = generate(16, 16, 8, SparsityParams::iid(0.9, 5));
+        let out = direct_conv_relu(&layer, &w, &fm);
+        assert!(out.as_slice().iter().all(|&v| v >= 0.0));
+        let d = out.density();
+        assert!(d > 0.1 && d < 0.9, "density {d}");
+    }
+
+    #[test]
+    fn accumulate_tile_matches_reference() {
+        let layer = ConvLayer::new(1, 1, 12, 12, 4, 4);
+        let w = Weights::random(&layer, 11);
+        let fm = generate(12, 12, 4, SparsityParams::iid(0.6, 6));
+        let oracle = direct_conv_relu(&layer, &w, &fm);
+        // Manually assemble the full window and accumulate one tile.
+        let win = DenseWindow {
+            y0: 0,
+            y1: 12,
+            x0: 0,
+            x1: 12,
+            c0: 0,
+            c1: 4,
+            data: fm.as_slice().to_vec(),
+        };
+        let (oy0, oy1, ox0, ox1) = (2usize, 8usize, 3usize, 9usize);
+        let mut acc = vec![0.0f32; (oy1 - oy0) * (ox1 - ox0) * 4];
+        accumulate_tile(&layer, &w, &win, &mut acc, oy0, oy1, ox0, ox1);
+        for oy in oy0..oy1 {
+            for ox in ox0..ox1 {
+                for c in 0..4 {
+                    let got = acc[((oy - oy0) * 6 + (ox - ox0)) * 4 + c].max(0.0);
+                    let want = oracle.get(oy, ox, c);
+                    assert!(
+                        (crate::tensor::dense::bf16_quantise(got) - want).abs() < 1e-2,
+                        "({oy},{ox},{c}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+}

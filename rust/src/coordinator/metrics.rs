@@ -1,0 +1,117 @@
+//! Pipeline metrics: traffic, timing, overlap.
+
+use crate::memsim::{Dram, Stream};
+use std::time::Duration;
+
+/// Metrics for one layer (or whole-network) pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineMetrics {
+    pub tiles: u64,
+    /// Wall time of the whole run.
+    pub wall: Duration,
+    /// Time the fetch lane spent fetching/decompressing.
+    pub fetch_busy: Duration,
+    /// Time the compute lane spent convolving.
+    pub compute_busy: Duration,
+    /// DRAM traffic (feature + metadata streams).
+    pub feature_lines: u64,
+    pub metadata_words: u64,
+    pub output_words: u64,
+}
+
+impl PipelineMetrics {
+    pub fn absorb_dram(&mut self, dram: &Dram) {
+        self.feature_lines += dram.lines_of(Stream::FeatureRead);
+        self.metadata_words += dram.words_of(Stream::MetadataRead);
+        self.output_words += dram.words_of(Stream::OutputWrite);
+    }
+
+    pub fn merge(&mut self, o: &PipelineMetrics) {
+        self.tiles += o.tiles;
+        self.wall += o.wall;
+        self.fetch_busy += o.fetch_busy;
+        self.compute_busy += o.compute_busy;
+        self.feature_lines += o.feature_lines;
+        self.metadata_words += o.metadata_words;
+        self.output_words += o.output_words;
+    }
+
+    pub fn tiles_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.tiles as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Overlap efficiency: with perfect double buffering the wall time
+    /// approaches max(fetch, compute) rather than their sum.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.fetch_busy.as_secs_f64() + self.compute_busy.as_secs_f64();
+        if serial == 0.0 {
+            return 1.0;
+        }
+        let ideal = self.fetch_busy.as_secs_f64().max(self.compute_busy.as_secs_f64());
+        // 1.0 = perfectly overlapped, 0.0 = fully serialised.
+        let wall = self.wall.as_secs_f64().max(ideal);
+        ((serial - wall) / (serial - ideal).max(1e-12)).clamp(0.0, 1.0)
+    }
+
+    pub fn feature_bytes(&self) -> u64 {
+        self.feature_lines * 16
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "tiles={} wall={:.1}ms fetch={:.1}ms compute={:.1}ms overlap={:.0}% feature={}KB meta={}KB out={}KB ({:.0} tiles/s)",
+            self.tiles,
+            self.wall.as_secs_f64() * 1e3,
+            self.fetch_busy.as_secs_f64() * 1e3,
+            self.compute_busy.as_secs_f64() * 1e3,
+            self.overlap_efficiency() * 100.0,
+            self.feature_bytes() / 1024,
+            self.metadata_words * 2 / 1024,
+            self.output_words * 2 / 1024,
+            self.tiles_per_sec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_efficiency_bounds() {
+        let mut m = PipelineMetrics {
+            fetch_busy: Duration::from_millis(10),
+            compute_busy: Duration::from_millis(10),
+            ..Default::default()
+        };
+        // Fully serialised: wall = sum.
+        m.wall = Duration::from_millis(20);
+        assert!(m.overlap_efficiency() < 0.05);
+        // Fully overlapped: wall = max.
+        m.wall = Duration::from_millis(10);
+        assert!(m.overlap_efficiency() > 0.95);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = PipelineMetrics { tiles: 2, ..Default::default() };
+        let b = PipelineMetrics { tiles: 3, feature_lines: 10, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.tiles, 5);
+        assert_eq!(a.feature_bytes(), 160);
+    }
+
+    #[test]
+    fn dram_absorption() {
+        let mut d = Dram::default();
+        d.access(Stream::FeatureRead, 0, 64);
+        d.account_bits(Stream::MetadataRead, 96);
+        let mut m = PipelineMetrics::default();
+        m.absorb_dram(&d);
+        assert_eq!(m.feature_lines, 8);
+        assert_eq!(m.metadata_words, 6);
+    }
+}

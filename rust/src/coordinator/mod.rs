@@ -1,0 +1,24 @@
+//! The accelerator coordinator: GrateTile's runtime integration point
+//! (paper §I "fetch and decompress sub-tensors on-the-fly in a tiled
+//! processing manner", §III-A).
+//!
+//! [`pipeline`] executes CNN layers tile-by-tile over GrateTile-packed
+//! feature maps with a *double-buffered prefetch thread*: while the
+//! compute lane convolves tile `i`, the fetch lane is already reading
+//! and decompressing the sub-tensors of tile `i+1` — the overlap a real
+//! memory controller provides. Outputs are ReLU'd and re-packed, so a
+//! multi-layer run keeps every intermediate map compressed in "DRAM".
+//!
+//! [`server`] wraps the pipeline in a request-serving leader/worker
+//! topology (bounded queue, N worker threads, latency percentiles) for
+//! the `serve` example.
+
+pub mod conv;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use conv::{direct_conv_relu, Weights};
+pub use metrics::PipelineMetrics;
+pub use pipeline::{LayerRunner, PipelineConfig};
+pub use server::{Server, ServerConfig, ServerReport};

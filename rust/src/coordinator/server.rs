@@ -1,0 +1,218 @@
+//! Request-serving leader/worker topology over the pipeline.
+//!
+//! The leader owns a bounded request queue (backpressure) and N worker
+//! threads, each running the full multi-layer pipeline on its own core —
+//! the process shape of an inference service whose accelerator-side
+//! storage is GrateTile. Reports throughput and latency percentiles.
+
+use super::conv::Weights;
+use super::pipeline::{LayerRunner, PipelineConfig};
+use crate::config::layer::ConvLayer;
+use crate::tensor::sparsity::{generate, SparsityParams};
+use crate::tensor::FeatureMap;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    pub pipeline: PipelineConfig,
+    pub workers: usize,
+    /// Bounded queue depth (requests admitted beyond in-flight).
+    pub queue_depth: usize,
+}
+
+/// One inference request: an input image (dense) to run through the
+/// network.
+pub struct Request {
+    pub id: u64,
+    pub input: FeatureMap,
+    pub enqueued: Instant,
+}
+
+/// Latency/throughput report.
+#[derive(Debug, Clone)]
+pub struct ServerReport {
+    pub completed: u64,
+    pub wall: Duration,
+    pub latencies: Vec<Duration>,
+    pub total_feature_bytes: u64,
+}
+
+impl ServerReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut l = self.latencies.clone();
+        l.sort_unstable();
+        let idx = ((l.len() as f64 - 1.0) * p).round() as usize;
+        l[idx]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests in {:.2}s -> {:.1} req/s; p50={:.1}ms p95={:.1}ms p99={:.1}ms; feature traffic {} KB",
+            self.completed,
+            self.wall.as_secs_f64(),
+            self.throughput_rps(),
+            self.percentile(0.50).as_secs_f64() * 1e3,
+            self.percentile(0.95).as_secs_f64() * 1e3,
+            self.percentile(0.99).as_secs_f64() * 1e3,
+            self.total_feature_bytes / 1024,
+        )
+    }
+}
+
+/// The serving leader.
+pub struct Server {
+    cfg: ServerConfig,
+    layers: Arc<Vec<(ConvLayer, Weights)>>,
+}
+
+impl Server {
+    pub fn new(cfg: ServerConfig, layers: Vec<(ConvLayer, Weights)>) -> Self {
+        Self { cfg, layers: Arc::new(layers) }
+    }
+
+    /// Shape expected of request inputs.
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        let l = &self.layers[0].0;
+        (l.h, l.w, l.c_in)
+    }
+
+    /// Generate a synthetic request batch (deterministic).
+    pub fn synthetic_requests(&self, n: usize, density: f64, seed: u64) -> Vec<FeatureMap> {
+        let (h, w, c) = self.input_shape();
+        (0..n)
+            .map(|i| generate(h, w, c, SparsityParams::clustered(density, seed + i as u64)))
+            .collect()
+    }
+
+    /// Serve a fixed batch of requests to completion.
+    pub fn serve(&self, inputs: Vec<FeatureMap>) -> Result<ServerReport> {
+        let n = inputs.len() as u64;
+        let start = Instant::now();
+        let (tx, rx) = sync_channel::<Request>(self.cfg.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let latencies = Arc::new(Mutex::new(Vec::<Duration>::new()));
+        let feature_bytes = Arc::new(AtomicU64::new(0));
+
+        std::thread::scope(|scope| -> Result<()> {
+            // Workers.
+            for _ in 0..self.cfg.workers.max(1) {
+                let rx = Arc::clone(&rx);
+                let layers = Arc::clone(&self.layers);
+                let latencies = Arc::clone(&latencies);
+                let feature_bytes = Arc::clone(&feature_bytes);
+                let cfg = self.cfg;
+                scope.spawn(move || {
+                    let runner = LayerRunner::new(cfg.pipeline);
+                    loop {
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            match guard.recv() {
+                                Ok(r) => r,
+                                Err(_) => break, // queue closed
+                            }
+                        };
+                        if let Ok((_out, per_layer)) =
+                            runner.run_network(&layers, req.input)
+                        {
+                            let bytes: u64 =
+                                per_layer.iter().map(|m| m.feature_bytes()).sum();
+                            feature_bytes.fetch_add(bytes, Ordering::Relaxed);
+                            latencies.lock().unwrap().push(req.enqueued.elapsed());
+                        }
+                    }
+                });
+            }
+            // Leader: admit requests (blocks on backpressure).
+            for (i, input) in inputs.into_iter().enumerate() {
+                tx.send(Request { id: i as u64, input, enqueued: Instant::now() })
+                    .expect("workers alive");
+            }
+            drop(tx);
+            Ok(())
+        })?;
+
+        let latencies = Arc::try_unwrap(latencies).unwrap().into_inner().unwrap();
+        Ok(ServerReport {
+            completed: latencies.len() as u64,
+            wall: start.elapsed(),
+            latencies,
+            total_feature_bytes: feature_bytes.load(Ordering::Relaxed),
+        })
+        .and_then(|r| {
+            if r.completed == n {
+                Ok(r)
+            } else {
+                anyhow::bail!("{} of {n} requests completed", r.completed)
+            }
+        })
+    }
+}
+
+/// Helper for recv in workers.
+#[allow(dead_code)]
+fn recv_one(rx: &Mutex<Receiver<Request>>) -> Option<Request> {
+    rx.lock().unwrap().recv().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+
+    fn tiny_net() -> Vec<(ConvLayer, Weights)> {
+        let l1 = ConvLayer::new(1, 1, 16, 16, 8, 8);
+        let l2 = ConvLayer::new(1, 2, 16, 16, 8, 8);
+        vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))]
+    }
+
+    fn server(workers: usize) -> Server {
+        let cfg = ServerConfig {
+            pipeline: PipelineConfig::new(Platform::NvidiaSmallTile.hardware()),
+            workers,
+            queue_depth: 4,
+        };
+        Server::new(cfg, tiny_net())
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let s = server(2);
+        let reqs = s.synthetic_requests(8, 0.5, 7);
+        let report = s.serve(reqs).unwrap();
+        assert_eq!(report.completed, 8);
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.total_feature_bytes > 0);
+        assert!(report.percentile(0.99) >= report.percentile(0.50));
+    }
+
+    #[test]
+    fn single_worker_also_completes() {
+        let s = server(1);
+        let reqs = s.synthetic_requests(3, 0.5, 9);
+        let report = s.serve(reqs).unwrap();
+        assert_eq!(report.completed, 3);
+    }
+
+    #[test]
+    fn more_workers_not_slower_per_request_batch() {
+        // Smoke: 4 workers on 8 requests completes; wall-time comparison
+        // is flaky on CI boxes, so only assert completion + sane stats.
+        let s = server(4);
+        let reqs = s.synthetic_requests(8, 0.4, 11);
+        let report = s.serve(reqs).unwrap();
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.latencies.len(), 8);
+    }
+}

@@ -1,0 +1,190 @@
+//! Ablations beyond the paper's headline tables (DESIGN.md §6):
+//! codec cost/benefit, the whole-channel limitation (§IV-B(3)), and a
+//! modulus × compressor × sparsity sensitivity sweep.
+
+use crate::compress::Scheme;
+use crate::config::hardware::Platform;
+use crate::config::layer::ConvLayer;
+use crate::config::zoo::{network_layers, Network};
+use crate::sim::experiment::{bench_feature_map, run_layer};
+use crate::tensor::sparsity::{generate, SparsityParams};
+use crate::tiling::division::DivisionMode;
+use crate::util::table::Table;
+
+/// §V codec comparison: compression on the suite's operating point plus
+/// the hardware cost proxy.
+pub fn ablation_codecs() -> Table {
+    let mut t = Table::new("Ablation — compression codecs (§V)")
+        .header(vec![
+            "Codec",
+            "Saving @ d=0.37 %",
+            "Saving @ d=0.15 %",
+            "Dec words/cycle (8 lanes)",
+            "Area (kGates, 8 lanes)",
+            "Words/cycle per kGate",
+        ]);
+    let hw = Platform::EyerissLargeTile.hardware();
+    let layer = ConvLayer::new(1, 1, 56, 56, 64, 64);
+    for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw] {
+        let saving = |d: f64| {
+            let fm = generate(56, 56, 64, SparsityParams::clustered(d, 31));
+            run_layer(&hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, scheme)
+                .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
+                .unwrap_or("N/A".into())
+        };
+        let cost = scheme.build().cost();
+        t.row(vec![
+            scheme.name().to_string(),
+            saving(0.37),
+            saving(0.15),
+            format!("{:.1}", cost.decode_words_per_cycle(8)),
+            format!("{:.1}", cost.area_gates(8) as f64 / 1000.0),
+            if cost.area_gates(8) == 0 {
+                "inf".to_string()
+            } else {
+                format!("{:.2}", cost.throughput_per_kgate(8))
+            },
+        ]);
+    }
+    t
+}
+
+/// §IV-B(3): the whole-channel-processing limitation. When the tile
+/// covers the whole spatial map (AlexNet CONV5 / VGG CONV5_3-like
+/// layers), GrateTile's extra cuts cost bandwidth vs not dividing.
+pub fn ablation_whole_channel() -> Table {
+    let mut t = Table::new(
+        "Ablation — whole-channel processing (§IV-B(3) limitation)",
+    )
+    .header(vec!["Layer", "GrateTile mod 8 %", "WholeMap (no division) %", "Penalty pp"]);
+    let hw = Platform::EyerissLargeTile.hardware();
+    // The paper's examples: 13x13/14x14 maps where one uniform 16x16
+    // sub-tensor would contain the whole input.
+    let candidates: Vec<_> = [Network::AlexNet, Network::Vgg16]
+        .iter()
+        .flat_map(|&n| network_layers(n))
+        .filter(|b| b.layer.h <= 16)
+        .collect();
+    for b in candidates {
+        let fm = bench_feature_map(&b);
+        let g = run_layer(&hw, &b.layer, &fm, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask);
+        let w = run_layer(&hw, &b.layer, &fm, DivisionMode::WholeMap, Scheme::Bitmask);
+        if let (Ok(g), Ok(w)) = (g, w) {
+            t.row(vec![
+                format!("{} {}", b.network.name(), b.name),
+                format!("{:.1}", g.saving_with_meta() * 100.0),
+                format!("{:.1}", w.saving_with_meta() * 100.0),
+                format!("{:+.1}", (w.saving_with_meta() - g.saving_with_meta()) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Sensitivity sweep: modulus × codec × density (and iid vs clustered).
+pub fn ablation_sweep() -> Table {
+    let mut t = Table::new("Ablation — modulus x codec x density sweep (saving %, with metadata)")
+        .header(vec!["Density", "Model", "Codec", "mod 4", "mod 8", "mod 16"]);
+    let hw = Platform::EyerissLargeTile.hardware();
+    let layer = ConvLayer::new(1, 1, 64, 64, 64, 64);
+    for &density in &[0.15, 0.37, 0.60, 0.85] {
+        for clustered in [true, false] {
+            for scheme in [Scheme::Bitmask, Scheme::Zrlc] {
+                let params = if clustered {
+                    SparsityParams::clustered(density, 57)
+                } else {
+                    SparsityParams::iid(density, 57)
+                };
+                let fm = generate(64, 64, 64, params);
+                let mut row = vec![
+                    format!("{density:.2}"),
+                    if clustered { "clustered" } else { "iid" }.to_string(),
+                    scheme.name().to_string(),
+                ];
+                for n in [4usize, 8, 16] {
+                    row.push(
+                        run_layer(&hw, &layer, &fm, DivisionMode::GrateTile { n }, scheme)
+                            .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
+                            .unwrap_or("N/A".into()),
+                    );
+                }
+                t.row(row);
+            }
+        }
+    }
+    t
+}
+
+/// Dilated-conv configurations (§III-B / Fig. 6b): Eq. 1's dilated form
+/// over a sweep of (k, s, d), verifying applicability and savings.
+pub fn ablation_dilated() -> Table {
+    let mut t = Table::new("Ablation — dilated convolutions (Fig. 6b)")
+        .header(vec!["(k,s,d)", "Config", "Saving mod 8 %"]);
+    let hw = Platform::EyerissLargeTile.hardware();
+    for (k, s, d) in [(1usize, 1usize, 2usize), (1, 1, 4), (2, 1, 2), (1, 2, 2)] {
+        let layer = ConvLayer::new(k, s, 64, 64, 64, 64).dilated(d);
+        let tile = hw.tile_for_layer(&layer);
+        let g = crate::tiling::grate::GrateConfig::for_axis(&layer, tile.th);
+        let g8 = g.reduce(8);
+        let fm = generate(64, 64, 64, SparsityParams::clustered(0.37, 91));
+        let saving = run_layer(&hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask)
+            .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
+            .unwrap_or("N/A".into());
+        t.row(vec![
+            format!("({},{},{})", 2 * k + 1, s, d),
+            g8.map(|c| c.display()).unwrap_or_else(|| g.display()),
+            saving,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_ablation_has_all_codecs() {
+        let csv = ablation_codecs().render_csv();
+        for name in ["bitmask", "zrlc", "dictionary", "raw"] {
+            assert!(csv.contains(name), "{csv}");
+        }
+    }
+
+    /// §IV-B(3): not dividing must beat GrateTile on whole-map tiles —
+    /// the paper quotes ~4% penalty.
+    #[test]
+    fn whole_channel_penalty_is_positive_and_small() {
+        let t = ablation_whole_channel();
+        let csv = t.render_csv();
+        let mut found = 0;
+        for line in csv.lines().skip(1) {
+            let pp: f64 = line.split(',').next_back().unwrap().parse().unwrap();
+            assert!(pp > -1.0, "whole-map should not lose: {line}");
+            assert!(pp < 15.0, "penalty should be small: {line}");
+            found += 1;
+        }
+        assert!(found >= 4, "need the AlexNet 13x13 and VGG 14x14 layers");
+    }
+
+    #[test]
+    fn sweep_savings_decrease_with_density() {
+        let csv = ablation_sweep().render_csv();
+        // First and last bitmask/clustered rows: d=0.15 saves more than
+        // d=0.85.
+        let rows: Vec<&str> = csv
+            .lines()
+            .filter(|l| l.contains("clustered,bitmask"))
+            .collect();
+        let first: f64 = rows[0].split(',').nth(4).unwrap().parse().unwrap();
+        let last: f64 = rows.last().unwrap().split(',').nth(4).unwrap().parse().unwrap();
+        assert!(first > last + 20.0, "{first} vs {last}");
+    }
+
+    #[test]
+    fn dilated_rows_present() {
+        let csv = ablation_dilated().render_csv();
+        assert!(csv.contains("(3,1,2)"));
+        assert_eq!(csv.lines().count(), 5);
+    }
+}

@@ -1,0 +1,191 @@
+//! Extended studies beyond the paper's tables: whole-network traffic,
+//! DRAM access efficiency, metadata caching, and the codec datapath.
+
+use crate::compress::hwmodel::{decode_block, DecoderConfig};
+use crate::compress::Scheme;
+use crate::config::hardware::Platform;
+use crate::config::layer::ConvLayer;
+use crate::config::zoo::Network;
+use crate::sim::access::access_study;
+use crate::sim::metacache::{metadata_cache_study, TileOrder};
+use crate::sim::network::run_network_bandwidth;
+use crate::tensor::sparsity::{generate, SparsityParams};
+use crate::tiling::division::DivisionMode;
+use crate::util::table::Table;
+
+/// Whole-network fetch + write-back traffic per division mode.
+pub fn network_table(scheme: Scheme) -> Table {
+    let hw = Platform::EyerissLargeTile.hardware();
+    let mut t = Table::new(&format!(
+        "Whole-network DRAM traffic saving ({} compression, Eyeriss, read+write)",
+        scheme.name()
+    ))
+    .header(vec!["Network", "GrateTile mod 8 %", "Uniform 8x8x8 %", "Uniform 4x4x8 %"]);
+    for net in Network::all() {
+        let cell = |mode| {
+            let r = run_network_bandwidth(&hw, net, mode, scheme, 17);
+            format!("{:.1}", r.total_saving() * 100.0)
+        };
+        t.row(vec![
+            net.name().to_string(),
+            cell(DivisionMode::GrateTile { n: 8 }),
+            cell(DivisionMode::Uniform { edge: 8 }),
+            cell(DivisionMode::Uniform { edge: 4 }),
+        ]);
+    }
+    t
+}
+
+/// DRAM access-efficiency study (row hits, transactions, bus
+/// efficiency) per division mode.
+pub fn access_table() -> Table {
+    let hw = Platform::EyerissLargeTile.hardware();
+    let layer = ConvLayer::new(1, 1, 56, 56, 64, 64);
+    let fm = generate(56, 56, 64, SparsityParams::clustered(0.37, 27));
+    let mut t = Table::new(
+        "DRAM access efficiency (56x56x64 layer, d=0.37; timed LPDDR4-class model)",
+    )
+    .header(vec!["Mode", "Transactions", "Row hit %", "Bus efficiency %"]);
+    for mode in DivisionMode::table3_modes() {
+        if let Ok(s) = access_study(&hw, &layer, &fm, mode, Scheme::Bitmask) {
+            t.row(vec![
+                mode.name(),
+                format!("{}", s.requests),
+                format!("{:.1}", s.row_hit_rate * 100.0),
+                format!("{:.1}", s.bus_efficiency * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Metadata cache study: absorption per mode × cache size × tile order.
+pub fn metacache_table() -> Table {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let layer = ConvLayer::new(1, 1, 56, 56, 64, 64);
+    let fm = generate(56, 56, 64, SparsityParams::clustered(0.37, 29));
+    let mut t = Table::new(
+        "Metadata SRAM cache absorption (56x56x64 layer; % of metadata traffic served on-chip)",
+    )
+    .header(vec!["Mode", "1KB spatial", "4KB spatial", "4KB channel-major"]);
+    for mode in [
+        DivisionMode::GrateTile { n: 8 },
+        DivisionMode::Uniform { edge: 8 },
+        DivisionMode::Uniform { edge: 2 },
+        DivisionMode::Uniform { edge: 1 },
+    ] {
+        let cell = |bytes: usize, order: TileOrder| {
+            metadata_cache_study(&hw, &layer, &fm, mode, bytes, order)
+                .map(|s| format!("{:.1}", s.absorbed() * 100.0))
+                .unwrap_or("N/A".into())
+        };
+        t.row(vec![
+            mode.name(),
+            cell(1024, TileOrder::SpatialMajor),
+            cell(4096, TileOrder::SpatialMajor),
+            cell(4096, TileOrder::ChannelMajor),
+        ]);
+    }
+    t
+}
+
+/// Codec datapath cycle study (hwmodel): words/cycle and stalls at 4/8/16
+/// lanes for each codec.
+pub fn codec_datapath_table() -> Table {
+    let mut t = Table::new(
+        "Codec decode datapath (cycle model; 512-word block at d=0.4)",
+    )
+    .header(vec!["Codec", "4 lanes w/cyc", "8 lanes w/cyc", "16 lanes w/cyc", "util @8"]);
+    let mut rng = crate::util::SplitMix64::new(41);
+    let data: Vec<f32> = (0..512)
+        .map(|_| if rng.chance(0.4) { rng.next_f32() + 0.01 } else { 0.0 })
+        .collect();
+    for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw] {
+        let comp = scheme.build().compress(&data);
+        let run = |lanes: usize| {
+            decode_block(
+                scheme,
+                &DecoderConfig { lanes, fifo_words: 16 * lanes, fill_rate: 2.0 * lanes as f64 },
+                &comp,
+            )
+        };
+        let s8 = run(8);
+        t.row(vec![
+            scheme.name().to_string(),
+            format!("{:.1}", run(4).words_per_cycle()),
+            format!("{:.1}", s8.words_per_cycle()),
+            format!("{:.1}", run(16).words_per_cycle()),
+            format!("{:.0}%", s8.utilisation() * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Roofline: compute/memory bound per benchmark layer and the runtime
+/// speedup GrateTile's bandwidth saving buys.
+pub fn roofline_table(scheme: Scheme) -> Table {
+    use crate::power::{roofline, Machine};
+    use crate::sim::experiment::suite_feature_maps;
+    let machine = Machine::default();
+    let hw = Platform::EyerissLargeTile.hardware();
+    let mut t = Table::new(
+        "Roofline — layer bound and runtime speedup from GrateTile mod 8 (Eyeriss)",
+    )
+    .header(vec!["Layer", "Bound (dense)", "Feature saving %", "Speedup"]);
+    for (b, fm) in suite_feature_maps() {
+        if let Ok(r) =
+            roofline(&machine, &hw, &b.layer, fm, DivisionMode::GrateTile { n: 8 }, scheme)
+        {
+            t.row(vec![
+                format!("{} {}", b.network.name(), b.name),
+                r.bound_dense().to_string(),
+                format!("{:.1}", r.feature_saving * 100.0),
+                format!("{:.2}x", r.speedup()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_table_has_all_applicable_modes() {
+        let csv = access_table().render_csv();
+        assert!(csv.contains("GrateTile (mod 8)"));
+        assert!(csv.contains("Uniform 1x1x8"));
+    }
+
+    #[test]
+    fn metacache_table_shows_gratetile_advantage() {
+        let csv = metacache_table().render_csv();
+        let row = csv.lines().find(|l| l.starts_with("GrateTile (mod 8)")).unwrap();
+        let absorbed_4k: f64 = row.split(',').nth(2).unwrap().parse().unwrap();
+        assert!(absorbed_4k > 80.0, "{row}");
+    }
+
+    #[test]
+    fn roofline_table_finds_memory_bound_layers() {
+        let csv = roofline_table(Scheme::Bitmask).render_csv();
+        assert!(csv.contains("memory"), "{csv}");
+        // Memory-bound sparse layers must show real speedup.
+        let best: f64 = csv
+            .lines()
+            .skip(1)
+            .filter(|l| l.contains("memory"))
+            .map(|l| l.rsplit(',').next().unwrap().trim_end_matches('x').parse().unwrap())
+            .fold(1.0, f64::max);
+        assert!(best > 1.3, "best speedup {best}");
+    }
+
+    #[test]
+    fn codec_datapath_bitmask_scales() {
+        let csv = codec_datapath_table().render_csv();
+        let row = csv.lines().find(|l| l.starts_with("bitmask")).unwrap();
+        let c4: f64 = row.split(',').nth(1).unwrap().parse().unwrap();
+        let c16: f64 = row.split(',').nth(3).unwrap().parse().unwrap();
+        assert!(c16 > 2.0 * c4, "{row}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Figures 1, 8 and 9 of the paper.
+
+use crate::compress::Scheme;
+use crate::config::hardware::Platform;
+use crate::config::zoo::Network;
+use crate::power::{network_power, ArrayConfig, EnergyTable};
+use crate::sim::experiment::run_suite_shared;
+use crate::tiling::division::DivisionMode;
+use crate::util::table::Table;
+
+/// Fig. 1: power breakdown of the benchmark networks on a 16×16
+/// systolic array (SCALE-sim methodology × Horowitz energies).
+pub fn fig1() -> Table {
+    let cfg = ArrayConfig::default();
+    let energy = EnergyTable::default();
+    let mut t = Table::new(
+        "Fig. 1 — Power breakdown (16x16 systolic array, Horowitz 45nm energies)",
+    )
+    .header(vec![
+        "Network",
+        "MAC %",
+        "DRAM feature read %",
+        "DRAM weight read %",
+        "DRAM output write %",
+        "SRAM %",
+        "Total (mJ)",
+    ]);
+    for net in Network::all() {
+        let b = network_power(&cfg, &energy, net);
+        let s = b.shares();
+        t.row(vec![
+            net.name().to_string(),
+            format!("{:.1}", s[0] * 100.0),
+            format!("{:.1}", s[1] * 100.0),
+            format!("{:.1}", s[2] * 100.0),
+            format!("{:.1}", s[3] * 100.0),
+            format!("{:.1}", s[4] * 100.0),
+            format!("{:.2}", b.total_pj() / 1e9),
+        ]);
+    }
+    t
+}
+
+/// Fig. 8: overall (geomean) bandwidth reduction per division mode on
+/// both platforms, with the optimal (zero-fraction) line.
+pub fn fig8(scheme: Scheme) -> Table {
+    let modes = DivisionMode::table3_modes();
+    let mut t = Table::new(&format!(
+        "Fig. 8 — Overall bandwidth reduction (geomean, {} compression, with metadata)",
+        scheme.name()
+    ))
+    .header(vec!["Division mode", "NVIDIA %", "Eyeriss %"]);
+    let suites: Vec<_> = [Platform::NvidiaSmallTile, Platform::EyerissLargeTile]
+        .iter()
+        .map(|p| run_suite_shared(&p.hardware(), &modes, scheme))
+        .collect();
+    let fmt = |v: Option<f64>| v.map(|x| format!("{:.1}", x * 100.0)).unwrap_or("N/A".into());
+    for (i, mode) in modes.iter().enumerate() {
+        t.row(vec![
+            mode.name(),
+            fmt(suites[0].geomean_saving(i, true)),
+            fmt(suites[1].geomean_saving(i, true)),
+        ]);
+    }
+    t.row(vec![
+        "Optimal (zero ratio)".to_string(),
+        format!("{:.1}", suites[0].geomean_optimal() * 100.0),
+        format!("{:.1}", suites[1].geomean_optimal() * 100.0),
+    ]);
+    t
+}
+
+/// Fig. 9a/b: per-layer bandwidth reduction breakdown for one platform.
+pub fn fig9(platform: Platform, scheme: Scheme) -> Table {
+    let modes = DivisionMode::table3_modes();
+    let suite = run_suite_shared(&platform.hardware(), &modes, scheme);
+    let sub = match platform {
+        Platform::NvidiaSmallTile => "a) small tile platform (NVIDIA Volta)",
+        Platform::EyerissLargeTile => "b) large tile platform (Eyeriss)",
+    };
+    let mut header = vec!["Layer".to_string(), "Optimal %".to_string()];
+    header.extend(modes.iter().map(|m| m.name()));
+    let mut t = Table::new(&format!(
+        "Fig. 9{sub} — per-layer bandwidth reduction ({}, with metadata)",
+        scheme.name()
+    ))
+    .header(header);
+    for (li, layer_name) in suite.layers.iter().enumerate() {
+        let mut row = vec![layer_name.clone()];
+        let density = suite
+            .results
+            .iter()
+            .find_map(|m| m[li].as_ref())
+            .map(|r| r.density)
+            .unwrap_or(f64::NAN);
+        row.push(format!("{:.1}", (1.0 - density) * 100.0));
+        for (mi, _) in modes.iter().enumerate() {
+            row.push(match &suite.results[mi][li] {
+                Some(r) => format!("{:.1}", r.saving_with_meta() * 100.0),
+                None => "N/A".into(),
+            });
+        }
+        t.row(row);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_rows_for_all_networks() {
+        let t = fig1();
+        let csv = t.render_csv();
+        for net in Network::all() {
+            assert!(csv.contains(net.name()), "{csv}");
+        }
+        // Fig. 1 headline: DRAM feature read is the largest share for
+        // the deeper networks.
+        for line in csv.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            let feature: f64 = cells[2].parse().unwrap();
+            assert!(feature > 25.0, "{line}");
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! The evaluation harness: regenerates every table and figure of the
+//! paper's evaluation (§IV) plus the ablations DESIGN.md calls out.
+//!
+//! Each function returns a [`Table`] printing the same rows the paper
+//! reports; the CLI (`gratetile <subcommand>`) and the bench targets
+//! drive these, and every run also lands as CSV under `results/`.
+
+pub mod ablation;
+pub mod extended;
+pub mod figures;
+pub mod tables;
+
+pub use ablation::{ablation_codecs, ablation_dilated, ablation_sweep, ablation_whole_channel};
+pub use extended::{access_table, codec_datapath_table, metacache_table, network_table, roofline_table};
+pub use figures::{fig1, fig8, fig9};
+pub use tables::{table1, table2, table3};

@@ -1,0 +1,126 @@
+//! Tables I–III of the paper.
+
+use crate::compress::Scheme;
+use crate::config::hardware::Platform;
+use crate::config::layer::ConvLayer;
+use crate::layout::metadata::{metadata_bits_per_kb, metadata_overhead_fraction};
+use crate::sim::experiment::run_suite_shared;
+use crate::tiling::division::DivisionMode;
+use crate::tiling::grate::GrateConfig;
+use crate::util::table::Table;
+
+/// Table I: processing tile shapes and GrateTile configurations for the
+/// (kernel, stride) classes of the benchmark networks.
+pub fn table1() -> Table {
+    let mut t = Table::new("Table I — GrateTile configurations used in our experiments")
+        .header(vec![
+            "CNN type (kernel,stride)",
+            "Tile (NVIDIA)",
+            "Tile (Eyeriss)",
+            "GrateTile configuration",
+        ]);
+    let classes: [(usize, usize); 3] = [(1, 1), (1, 2), (2, 1)];
+    for (k, s) in classes {
+        let layer = ConvLayer::new(k, s, 224, 224, 64, 64);
+        let tiles: Vec<String> = [Platform::NvidiaSmallTile, Platform::EyerissLargeTile]
+            .iter()
+            .map(|p| {
+                let hw = p.hardware();
+                let tile = hw.tile_for_layer(&layer);
+                format!("{}x{}x{}", tile.in_h(&layer), tile.in_w(&layer), tile.tc)
+            })
+            .collect();
+        // Mod-8 configuration (the paper's recommended hardware modulus).
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let tile = hw.tile_for_layer(&layer);
+        let g = GrateConfig::for_axis(&layer, tile.th).reduce(8).unwrap();
+        t.row(vec![
+            format!("({},{})", 2 * k + 1, s),
+            tiles[0].clone(),
+            tiles[1].clone(),
+            g.display(),
+        ]);
+    }
+    t
+}
+
+/// Table II: metadata size per KB of feature map, per division mode.
+pub fn table2() -> Table {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let mut t = Table::new("Table II — Feature map metadata overhead")
+        .header(vec!["Subdivision mode", "Bits per KB feature map", "Percentage"]);
+    for mode in DivisionMode::table3_modes() {
+        t.row(vec![
+            mode.name(),
+            format!("{:.0}", metadata_bits_per_kb(mode, &hw)),
+            format!("{:.2}%", metadata_overhead_fraction(mode, &hw) * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Table III: bandwidth saved with/without metadata overhead on both
+/// platforms, full benchmark suite.
+pub fn table3(scheme: Scheme) -> Table {
+    let mut t = Table::new(&format!(
+        "Table III — Impact of metadata on bandwidth reduction ({} compression)",
+        scheme.name()
+    ))
+    .header(vec![
+        "Division mode",
+        "w/o ovh NVIDIA",
+        "w/o ovh Eyeriss",
+        "with ovh NVIDIA",
+        "with ovh Eyeriss",
+    ]);
+    let modes = DivisionMode::table3_modes();
+    let suites: Vec<_> = [Platform::NvidiaSmallTile, Platform::EyerissLargeTile]
+        .iter()
+        .map(|p| run_suite_shared(&p.hardware(), &modes, scheme))
+        .collect();
+    let fmt = |v: Option<f64>| {
+        v.map(|x| format!("{:.1}", x * 100.0)).unwrap_or_else(|| "N/A (a)".into())
+    };
+    for (i, mode) in modes.iter().enumerate() {
+        t.row(vec![
+            mode.name(),
+            fmt(suites[0].geomean_saving(i, false)),
+            fmt(suites[1].geomean_saving(i, false)),
+            fmt(suites[0].geomean_saving(i, true)),
+            fmt(suites[1].geomean_saving(i, true)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table I must literally reproduce the paper's cells.
+    #[test]
+    fn table1_matches_paper() {
+        let t = table1();
+        let csv = t.render_csv();
+        assert!(csv.contains("(3,1),10x18x8,18x18x16,G = {1,7} (mod 8)"), "{csv}");
+        assert!(csv.contains("(3,2),9x17x8,17x17x16,G = {0,7} (mod 8)"), "{csv}");
+        assert!(csv.contains("(5,1),12x20x8,20x20x16,G = {2,6} (mod 8)"), "{csv}");
+    }
+
+    /// Table II must reproduce the paper's bits-per-KB column.
+    #[test]
+    fn table2_matches_paper() {
+        let csv = table2().render_csv();
+        for expect in [
+            "GrateTile (mod 4),192,2.34%",
+            "GrateTile (mod 8),48,0.59%",
+            "GrateTile (mod 16),12,0.15%",
+            "Uniform 8x8x8,28,0.34%",
+            "Uniform 4x4x8,112,1.37%",
+            "Uniform 2x2x8,448,5.47%",
+            "Uniform 1x1x8,2048,25.00%",
+        ] {
+            assert!(csv.contains(expect), "missing {expect} in\n{csv}");
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! The Fig. 7 metadata structure and Table II accounting.
+//!
+//! Uniform division (Fig. 7a): one pointer per sub-tensor. GrateTile
+//! (Fig. 7b): one pointer per mod-N block plus the compressed sizes (in
+//! cache lines) of the up-to-four uneven sub-tensors inside the block;
+//! access is the paper's two-step procedure — locate the block start
+//! from the pointer, then add size prefixes for the actual offset.
+
+use crate::config::hardware::Hardware;
+use crate::tiling::division::{Division, DivisionMode};
+use crate::util::ceil_div;
+
+/// Bits needed to represent a compressed size of up to `max_lines`
+/// cache lines (values 0..=max_lines inclusive).
+pub fn size_bits_for_lines(max_lines: usize) -> usize {
+    (usize::BITS - max_lines.leading_zeros()) as usize
+}
+
+/// Size-field bits for one GrateTile block given its period segment
+/// lengths (paper §III-C): the four sub-tensors of an `a/b` split of an
+/// N-period block of depth 8 have `a·a·8`, `a·b·8`, `b·a·8`, `b·b·8`
+/// words; each field must hold its line count.
+pub fn size_field_bits_for(seg_a: usize, seg_b: usize, depth: usize, words_per_line: usize) -> usize {
+    let shapes = [(seg_a, seg_a), (seg_a, seg_b), (seg_b, seg_a), (seg_b, seg_b)];
+    shapes
+        .iter()
+        .map(|&(h, w)| size_bits_for_lines(ceil_div(h * w * depth, words_per_line)))
+        .sum()
+}
+
+/// Metadata bits per KB (512 16-bit words) of feature map for a division
+/// mode — the Table II quantity.
+pub fn metadata_bits_per_kb(mode: DivisionMode, hw: &Hardware) -> f64 {
+    let record = |bits: usize, words_per_record: usize| -> f64 {
+        bits as f64 * (512.0 / words_per_record as f64)
+    };
+    match mode {
+        // GrateTile: 48 bits per N×N×8 block.
+        DivisionMode::GrateTile { n } => {
+            record(hw.pointer_bits + hw.size_field_bits, n * n * 8)
+        }
+        // Uniform edge≥2: 28-bit pointer per edge×edge×8 block;
+        // edge==1: compact 32-bit address per 1×1×8 sub-tensor.
+        DivisionMode::Uniform { edge } => {
+            if edge == 1 {
+                record(32, 8)
+            } else {
+                record(hw.pointer_bits, edge * edge * 8)
+            }
+        }
+        DivisionMode::WholeMap => 0.0,
+    }
+}
+
+/// Metadata overhead as a fraction of feature-map size (Table II's
+/// "Percentage" column): bits per KB over 8192 bits per KB.
+pub fn metadata_overhead_fraction(mode: DivisionMode, hw: &Hardware) -> f64 {
+    metadata_bits_per_kb(mode, hw) / (512.0 * 16.0)
+}
+
+/// Concrete per-block records for a packed map (used by the fetcher).
+#[derive(Debug, Clone)]
+pub struct BlockRecord {
+    /// Word address of the block's first sub-tensor (line-aligned).
+    pub pointer_words: u64,
+    /// Compressed sizes (words) of the block's sub-tensors in raster
+    /// order (y-major, then x, for the block's segment ranges).
+    pub sizes_words: Vec<u32>,
+}
+
+/// The metadata table: one record per (block_y, block_x, cgroup).
+#[derive(Debug, Clone)]
+pub struct MetadataTable {
+    pub records: Vec<BlockRecord>,
+    pub bits_per_record: usize,
+}
+
+impl MetadataTable {
+    pub fn total_bits(&self) -> u64 {
+        self.records.len() as u64 * self.bits_per_record as u64
+    }
+
+    pub fn record(&self, division: &Division, block_linear: usize) -> &BlockRecord {
+        debug_assert!(block_linear < division.n_blocks());
+        &self.records[block_linear]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+
+    #[test]
+    fn size_bits_match_paper_examples() {
+        // §III-C: G={1,7}: sub-tensors 2x2/2x6/6x2/6x6 ×8ch at 16-byte
+        // lines -> 64, 192, 192, 576 bytes -> 3+4+4+6 = 17 bits.
+        assert_eq!(size_field_bits_for(2, 6, 8, 8), 17);
+        // G={2,6} (kernels 5 and 9): 4x4 splits -> 5+5+5+5 = 20 bits.
+        assert_eq!(size_field_bits_for(4, 4, 8, 8), 20);
+    }
+
+    #[test]
+    fn size_bits_for_lines_basics() {
+        assert_eq!(size_bits_for_lines(4), 3); // 0..=4 needs 3 bits
+        assert_eq!(size_bits_for_lines(12), 4);
+        assert_eq!(size_bits_for_lines(36), 6);
+        assert_eq!(size_bits_for_lines(16), 5);
+    }
+
+    /// Table II, all six rows.
+    #[test]
+    fn table2_bits_per_kb() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let cases = [
+            (DivisionMode::GrateTile { n: 4 }, 192.0),
+            (DivisionMode::GrateTile { n: 8 }, 48.0),
+            (DivisionMode::GrateTile { n: 16 }, 12.0),
+            (DivisionMode::Uniform { edge: 8 }, 28.0),
+            (DivisionMode::Uniform { edge: 4 }, 112.0),
+            (DivisionMode::Uniform { edge: 2 }, 448.0),
+            (DivisionMode::Uniform { edge: 1 }, 2048.0),
+        ];
+        for (mode, expect) in cases {
+            let got = metadata_bits_per_kb(mode, &hw);
+            assert!((got - expect).abs() < 1e-9, "{}: {got} != {expect}", mode.name());
+        }
+    }
+
+    /// Table II percentage column.
+    #[test]
+    fn table2_percentages() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let pct = |m| metadata_overhead_fraction(m, &hw) * 100.0;
+        assert!((pct(DivisionMode::GrateTile { n: 8 }) - 0.59).abs() < 0.01);
+        assert!((pct(DivisionMode::GrateTile { n: 4 }) - 2.34).abs() < 0.03);
+        assert!((pct(DivisionMode::GrateTile { n: 16 }) - 0.15).abs() < 0.01);
+        assert!((pct(DivisionMode::Uniform { edge: 8 }) - 0.34).abs() < 0.01);
+        assert!((pct(DivisionMode::Uniform { edge: 4 }) - 1.37).abs() < 0.01);
+        assert!((pct(DivisionMode::Uniform { edge: 2 }) - 5.47).abs() < 0.01);
+        assert!((pct(DivisionMode::Uniform { edge: 1 }) - 25.0).abs() < 0.01);
+    }
+
+    /// §III-C example: AlexNet CONV2-sized metadata with 32-bit pointers
+    /// per 8-word sub-tensor would be ~72 kB — too big for SRAM, hence
+    /// the DRAM-resident design.
+    #[test]
+    fn alexnet_conv2_naive_metadata_is_sram_hostile() {
+        // 27*27*96 words fm, 8-word sub-tensors, 32-bit pointers.
+        let words = 27 * 27 * 96u64;
+        let pointer_bytes = (words / 8) * 4;
+        assert!(pointer_bytes > 32 * 1024, "{pointer_bytes} bytes");
+    }
+}

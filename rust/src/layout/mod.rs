@@ -1,0 +1,20 @@
+//! Compressed memory layout for divided feature maps (paper §III-C,
+//! Fig. 7).
+//!
+//! * [`packer::Packer`] compresses every sub-tensor of a [`crate::tiling::Division`]
+//!   and assigns cache-line-aligned addresses (word-compact for the
+//!   Uniform 1×1×8 baseline), producing a [`packer::PackedFeatureMap`].
+//! * [`metadata`] models the Fig. 7 metadata structure — one pointer per
+//!   block plus the compressed sizes of the block's sub-tensors — and
+//!   reproduces the Table II bits-per-KB accounting.
+//! * [`fetcher::Fetcher`] is the runtime access path: two-step metadata
+//!   lookup (pointer, then size offsets), whole-sub-tensor fetches,
+//!   on-the-fly decompression into a dense tile buffer.
+
+pub mod fetcher;
+pub mod metadata;
+pub mod packer;
+
+pub use fetcher::Fetcher;
+pub use metadata::{metadata_bits_per_kb, size_field_bits_for};
+pub use packer::{PackedFeatureMap, Packer};

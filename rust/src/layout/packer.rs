@@ -1,0 +1,427 @@
+//! The packer: compress every sub-tensor of a division and assign
+//! storage addresses (paper §III-C).
+//!
+//! Aligned modes start every sub-tensor on a cache-line boundary (the
+//! paper's "GrateTile only stores these subtensors in aligned
+//! addresses"); the Uniform 1×1×8 baseline packs word-compactly (Table
+//! II footnote a). Blocks are laid out in raster order — (block_y,
+//! block_x, channel-group) — with the block pointer addressing the first
+//! sub-tensor, exactly the two-step access structure of Fig. 7b.
+
+use super::metadata::{BlockRecord, MetadataTable};
+use crate::compress::Scheme;
+use crate::config::hardware::Hardware;
+use crate::tensor::FeatureMap;
+use crate::tiling::division::{Division, SubTensorRef};
+use crate::util::round_up;
+
+/// A fully packed feature map: per-sub-tensor compressed sizes and
+/// addresses, block metadata, and (optionally) the compressed payload.
+#[derive(Debug, Clone)]
+pub struct PackedFeatureMap {
+    pub division: Division,
+    pub scheme: Scheme,
+    /// Compressed size in words, indexed by `division.linear(ref)`.
+    pub sizes_words: Vec<u32>,
+    /// Idealised compressed size in bits (no word padding), same
+    /// indexing; what the compact baseline pays (§IV-B(2)).
+    pub sizes_bits: Vec<u32>,
+    /// Start word address, same indexing.
+    pub addr_words: Vec<u64>,
+    /// Block metadata table (Fig. 7).
+    pub metadata: MetadataTable,
+    /// Compressed payload words, addressed by `addr_words` (present only
+    /// when packed with `with_payload`).
+    pub payload: Option<Vec<u16>>,
+    /// Total storage footprint in words (end of the last sub-tensor,
+    /// line-rounded for aligned modes).
+    pub total_words: u64,
+    words_per_line: usize,
+}
+
+impl PackedFeatureMap {
+    /// Fetch cost of one sub-tensor in *bits*: aligned sub-tensors move
+    /// whole cache lines; compact ones (Uniform 1×1×8) move the exact
+    /// compressed bits — the idealised upper bound of §IV-B(2).
+    pub fn fetch_bits(&self, r: SubTensorRef) -> u64 {
+        let li = self.division.linear(r);
+        if self.division.compact {
+            self.sizes_bits[li] as u64
+        } else {
+            let words = self.sizes_words[li] as usize;
+            (round_up(words, self.words_per_line) * 16) as u64
+        }
+    }
+
+    /// Fetch cost in words (line-rounded for aligned modes).
+    pub fn fetch_words(&self, r: SubTensorRef) -> u64 {
+        self.fetch_bits(r).div_ceil(16)
+    }
+
+    /// Compressed size in words of one sub-tensor.
+    pub fn size_words(&self, r: SubTensorRef) -> u32 {
+        self.sizes_words[self.division.linear(r)]
+    }
+
+    /// Storage footprint in cache lines.
+    pub fn total_lines(&self) -> u64 {
+        (self.total_words as usize).div_ceil(self.words_per_line) as u64
+    }
+
+    /// Compression ratio vs. the dense map (< 1 is smaller).
+    pub fn compression_ratio(&self) -> f64 {
+        let dense = (self.division.fm_h * self.division.fm_w * self.division.fm_c) as f64;
+        self.total_words as f64 / dense
+    }
+}
+
+/// Packs feature maps under a division + compression scheme.
+pub struct Packer {
+    pub hw: Hardware,
+    pub scheme: Scheme,
+}
+
+impl Packer {
+    pub fn new(hw: Hardware, scheme: Scheme) -> Self {
+        Self { hw, scheme }
+    }
+
+    /// Pack `fm` under `division`. `with_payload` materialises the
+    /// compressed byte stream (needed by the fetch/decompress path; the
+    /// bandwidth simulator only needs sizes).
+    pub fn pack(
+        &self,
+        fm: &FeatureMap,
+        division: &Division,
+        with_payload: bool,
+    ) -> PackedFeatureMap {
+        assert_eq!(
+            (fm.h, fm.w, fm.c),
+            (division.fm_h, division.fm_w, division.fm_c),
+            "division was built for a different map shape"
+        );
+        // Perf fast path (§Perf, EXPERIMENTS.md): bitmask sizes depend
+        // only on per-sub-tensor nonzero counts, which one linear pass
+        // over the map computes without any block extraction.
+        if self.scheme == Scheme::Bitmask && !with_payload {
+            return self.pack_bitmask_sizes(fm, division);
+        }
+        let codec = self.scheme.build();
+        let n = division.n_subtensors();
+        let mut sizes_words = vec![0u32; n];
+        let mut sizes_bits = vec![0u32; n];
+        let mut addr_words = vec![0u64; n];
+        let mut payload: Option<Vec<u16>> = if with_payload { Some(Vec::new()) } else { None };
+        let mut records: Vec<BlockRecord> = Vec::with_capacity(division.n_blocks());
+
+        let wpl = self.hw.words_per_line;
+        let mut cursor: u64 = 0;
+        let mut block = Vec::with_capacity(64);
+
+        // Raster order over metadata blocks; sub-tensors inside a block
+        // in (y, x) raster order — the Fig. 7b layout.
+        let seg_range = |block_of: &[usize], bid: usize| -> std::ops::Range<usize> {
+            let first = block_of.partition_point(|&b| b < bid);
+            let last = block_of.partition_point(|&b| b <= bid);
+            first..last
+        };
+
+        for by in 0..division.n_blocks_y {
+            let yr = seg_range(&division.block_of_y, by);
+            for bx in 0..division.n_blocks_x {
+                let xr = seg_range(&division.block_of_x, bx);
+                for icg in 0..division.n_cgroups {
+                    // Block start: line-aligned pointer (Fig. 7).
+                    if !division.compact {
+                        cursor = round_up(cursor as usize, wpl) as u64;
+                    }
+                    let pointer_words = cursor;
+                    let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                    for iy in yr.clone() {
+                        for ix in xr.clone() {
+                            let r = SubTensorRef { iy, ix, icg };
+                            let sy = division.ys[iy];
+                            let sx = division.xs[ix];
+                            let cd = division.cg_depth(icg);
+                            fm.extract_block_into(
+                                sy.start,
+                                sx.start,
+                                icg * division.cd,
+                                sy.len,
+                                sx.len,
+                                cd,
+                                &mut block,
+                            );
+                            let li = division.linear(r);
+                            sizes_bits[li] = codec.compressed_bits(&block) as u32;
+                            if let Some(p) = &mut payload {
+                                let comp = codec.compress(&block);
+                                sizes_words[li] = comp.words.len() as u32;
+                                if !division.compact {
+                                    cursor = round_up(cursor as usize, wpl) as u64;
+                                }
+                                addr_words[li] = cursor;
+                                // Materialise at the assigned address.
+                                let end = cursor as usize + comp.words.len();
+                                if p.len() < end {
+                                    p.resize(end, 0);
+                                }
+                                p[cursor as usize..end].copy_from_slice(&comp.words);
+                                cursor += comp.words.len() as u64;
+                            } else {
+                                let size = codec.compressed_words(&block) as u32;
+                                sizes_words[li] = size;
+                                if !division.compact {
+                                    cursor = round_up(cursor as usize, wpl) as u64;
+                                }
+                                addr_words[li] = cursor;
+                                cursor += size as u64;
+                            }
+                            rec_sizes.push(sizes_words[li]);
+                        }
+                    }
+                    records.push(BlockRecord { pointer_words, sizes_words: rec_sizes });
+                }
+            }
+        }
+
+        let total_words = if division.compact { cursor } else { round_up(cursor as usize, wpl) as u64 };
+        PackedFeatureMap {
+            division: division.clone(),
+            scheme: self.scheme,
+            sizes_words,
+            sizes_bits,
+            addr_words,
+            metadata: MetadataTable {
+                records,
+                bits_per_record: division.meta_bits_per_block,
+            },
+            payload,
+            total_words,
+            words_per_line: wpl,
+        }
+    }
+}
+
+impl Packer {
+    /// Sizes-only bitmask packing in two allocation-light passes:
+    /// (1) one sweep over the map accumulating nonzeros per sub-tensor
+    /// via per-coordinate segment lookup tables, (2) the usual
+    /// block-raster address assignment reading those counts.
+    fn pack_bitmask_sizes(&self, fm: &FeatureMap, division: &Division) -> PackedFeatureMap {
+        let n = division.n_subtensors();
+        let mut nnz = vec![0u32; n];
+
+        // Coordinate -> segment index lookups.
+        let mut seg_of_y = vec![0u32; fm.h];
+        for (iy, s) in division.ys.iter().enumerate() {
+            for y in s.start..s.end() {
+                seg_of_y[y] = iy as u32;
+            }
+        }
+        let mut seg_of_x = vec![0u32; fm.w];
+        for (ix, s) in division.xs.iter().enumerate() {
+            for x in s.start..s.end() {
+                seg_of_x[x] = ix as u32;
+            }
+        }
+
+        // Pass 1: count nonzeros per (iy, ix, icg).
+        let data = fm.as_slice();
+        let nxs = division.xs.len();
+        let ncg = division.n_cgroups;
+        let cd = division.cd;
+        for y in 0..fm.h {
+            let iy = seg_of_y[y] as usize;
+            let row_base = y * fm.w;
+            for x in 0..fm.w {
+                let ix = seg_of_x[x] as usize;
+                let px = (row_base + x) * fm.c;
+                let sub_base = (iy * nxs + ix) * ncg;
+                for icg in 0..ncg {
+                    let c0 = icg * cd;
+                    let c1 = (c0 + cd).min(fm.c);
+                    let mut cnt = 0u32;
+                    for &v in &data[px + c0..px + c1] {
+                        cnt += (v != 0.0) as u32;
+                    }
+                    nnz[sub_base + icg] += cnt;
+                }
+            }
+        }
+
+        // Pass 2: sizes + block-raster addresses + records.
+        let mut sizes_words = vec![0u32; n];
+        let mut sizes_bits = vec![0u32; n];
+        let mut addr_words = vec![0u64; n];
+        let mut records: Vec<BlockRecord> = Vec::with_capacity(division.n_blocks());
+        let wpl = self.hw.words_per_line;
+        let mut cursor: u64 = 0;
+        let seg_range = |block_of: &[usize], bid: usize| -> std::ops::Range<usize> {
+            let first = block_of.partition_point(|&b| b < bid);
+            let last = block_of.partition_point(|&b| b <= bid);
+            first..last
+        };
+        for by in 0..division.n_blocks_y {
+            let yr = seg_range(&division.block_of_y, by);
+            for bx in 0..division.n_blocks_x {
+                let xr = seg_range(&division.block_of_x, bx);
+                for icg in 0..ncg {
+                    if !division.compact {
+                        cursor = crate::util::round_up(cursor as usize, wpl) as u64;
+                    }
+                    let pointer_words = cursor;
+                    let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                    for iy in yr.clone() {
+                        for ix in xr.clone() {
+                            let r = SubTensorRef { iy, ix, icg };
+                            let li = division.linear(r);
+                            let elems = division.subtensor_words(r);
+                            let z = nnz[li];
+                            sizes_words[li] = elems.div_ceil(16) as u32 + z;
+                            sizes_bits[li] = elems as u32 + z * 16;
+                            if !division.compact {
+                                cursor = crate::util::round_up(cursor as usize, wpl) as u64;
+                            }
+                            addr_words[li] = cursor;
+                            cursor += sizes_words[li] as u64;
+                            rec_sizes.push(sizes_words[li]);
+                        }
+                    }
+                    records.push(BlockRecord { pointer_words, sizes_words: rec_sizes });
+                }
+            }
+        }
+        let total_words = if division.compact {
+            cursor
+        } else {
+            crate::util::round_up(cursor as usize, wpl) as u64
+        };
+        PackedFeatureMap {
+            division: division.clone(),
+            scheme: self.scheme,
+            sizes_words,
+            sizes_bits,
+            addr_words,
+            metadata: MetadataTable { records, bits_per_record: division.meta_bits_per_block },
+            payload: None,
+            total_words,
+            words_per_line: wpl,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+    use crate::config::layer::{ConvLayer, TileShape};
+    use crate::tensor::sparsity::{generate, SparsityParams};
+    use crate::tiling::division::DivisionMode;
+
+    fn setup(mode: DivisionMode, density: f64) -> (FeatureMap, Division, Packer) {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let tile = TileShape::new(8, 8, 8);
+        let division =
+            Division::build(mode, &layer, &tile, &hw, 24, 24, 16).unwrap();
+        let fm = generate(24, 24, 16, SparsityParams::clustered(density, 11));
+        (fm, division, Packer::new(hw, Scheme::Bitmask))
+    }
+
+    #[test]
+    fn sizes_cover_all_subtensors() {
+        let (fm, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.4);
+        let packed = packer.pack(&fm, &div, false);
+        assert_eq!(packed.sizes_words.len(), div.n_subtensors());
+        assert!(packed.sizes_words.iter().all(|&s| s > 0)); // bitmask >= mask words
+        assert_eq!(packed.metadata.records.len(), div.n_blocks());
+    }
+
+    #[test]
+    fn aligned_addresses_are_line_multiples() {
+        let (fm, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.4);
+        let packed = packer.pack(&fm, &div, false);
+        for &a in &packed.addr_words {
+            assert_eq!(a % 8, 0, "sub-tensor at {a} not line-aligned");
+        }
+    }
+
+    #[test]
+    fn compact_mode_packs_without_alignment() {
+        let (fm, div, packer) = setup(DivisionMode::Uniform { edge: 1 }, 0.4);
+        let packed = packer.pack(&fm, &div, false);
+        // Compact total == sum of sizes exactly (no padding).
+        let sum: u64 = packed.sizes_words.iter().map(|&s| s as u64).sum();
+        assert_eq!(packed.total_words, sum);
+    }
+
+    #[test]
+    fn aligned_total_at_least_sum_of_sizes() {
+        let (fm, div, packer) = setup(DivisionMode::Uniform { edge: 4 }, 0.4);
+        let packed = packer.pack(&fm, &div, false);
+        let sum: u64 = packed.sizes_words.iter().map(|&s| s as u64).sum();
+        assert!(packed.total_words >= sum);
+        assert_eq!(packed.total_words % 8, 0);
+    }
+
+    #[test]
+    fn payload_and_size_only_modes_agree() {
+        let (fm, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.35);
+        let a = packer.pack(&fm, &div, false);
+        let b = packer.pack(&fm, &div, true);
+        assert_eq!(a.sizes_words, b.sizes_words);
+        assert_eq!(a.addr_words, b.addr_words);
+        assert_eq!(a.total_words, b.total_words);
+        assert!(b.payload.is_some());
+    }
+
+    #[test]
+    fn sparser_maps_pack_smaller() {
+        let (fm_d, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.8);
+        let (fm_s, _, _) = setup(DivisionMode::GrateTile { n: 8 }, 0.2);
+        let dense = packer.pack(&fm_d, &div, false);
+        let sparse = packer.pack(&fm_s, &div, false);
+        assert!(sparse.total_words < dense.total_words);
+        assert!(sparse.compression_ratio() < 0.5);
+    }
+
+    #[test]
+    fn block_records_match_subtensor_sizes() {
+        let (fm, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.4);
+        let packed = packer.pack(&fm, &div, false);
+        // Sum of record sizes == sum of sub-tensor sizes.
+        let rec_sum: u64 = packed
+            .metadata
+            .records
+            .iter()
+            .flat_map(|r| r.sizes_words.iter())
+            .map(|&s| s as u64)
+            .sum();
+        let sz_sum: u64 = packed.sizes_words.iter().map(|&s| s as u64).sum();
+        assert_eq!(rec_sum, sz_sum);
+        // Interior GrateTile blocks carry exactly 4 spatial sub-tensors.
+        let max_per_block = packed
+            .metadata
+            .records
+            .iter()
+            .map(|r| r.sizes_words.len())
+            .max()
+            .unwrap();
+        assert_eq!(max_per_block, 4);
+    }
+
+    #[test]
+    fn fetch_words_line_rounds_only_when_aligned() {
+        let (fm, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.4);
+        let packed = packer.pack(&fm, &div, false);
+        let r = SubTensorRef { iy: 1, ix: 1, icg: 0 };
+        let sz = packed.size_words(r) as u64;
+        assert_eq!(packed.fetch_words(r), sz.div_ceil(8) * 8);
+
+        let (fm2, div2, packer2) = setup(DivisionMode::Uniform { edge: 1 }, 0.4);
+        let packed2 = packer2.pack(&fm2, &div2, false);
+        let r2 = SubTensorRef { iy: 0, ix: 0, icg: 0 };
+        assert_eq!(packed2.fetch_words(r2), packed2.size_words(r2) as u64);
+    }
+}

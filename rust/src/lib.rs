@@ -1,0 +1,31 @@
+//! # GrateTile — efficient sparse tensor tiling for CNN processing
+//!
+//! A full-system reproduction of *GrateTile: Efficient Sparse Tensor
+//! Tiling for CNN Processing* (Lin et al., 2020) as a three-layer
+//! Rust + JAX + Pallas stack. See `DESIGN.md` for the architecture and
+//! `EXPERIMENTS.md` for the paper-vs-measured results.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — GrateTile division ([`tiling`]), compressed
+//!   memory layout with Fig. 7 metadata ([`layout`]), the DRAM bandwidth
+//!   simulator ([`memsim`], [`sim`]), the accelerator coordinator
+//!   ([`coordinator`]), a systolic power model ([`power`]), and the
+//!   evaluation harness ([`harness`]).
+//! * **L2/L1 (build time)** — `python/compile/` lowers a JAX CNN (with a
+//!   Pallas conv kernel) to HLO text once; [`runtime`] loads and executes
+//!   it via PJRT so the e2e example runs on *real* ReLU sparsity.
+
+pub mod cli;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod layout;
+pub mod memsim;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod tiling;
+pub mod util;

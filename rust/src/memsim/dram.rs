@@ -1,0 +1,192 @@
+//! Line-granular DRAM model with per-stream counters.
+
+use crate::config::hardware::WORDS_PER_LINE;
+
+/// Traffic streams, matching the Fig. 1 power-breakdown categories.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    FeatureRead,
+    WeightRead,
+    OutputWrite,
+    MetadataRead,
+}
+
+impl Stream {
+    pub const ALL: [Stream; 4] = [
+        Stream::FeatureRead,
+        Stream::WeightRead,
+        Stream::OutputWrite,
+        Stream::MetadataRead,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stream::FeatureRead => "feature_read",
+            Stream::WeightRead => "weight_read",
+            Stream::OutputWrite => "output_write",
+            Stream::MetadataRead => "metadata_read",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Stream::FeatureRead => 0,
+            Stream::WeightRead => 1,
+            Stream::OutputWrite => 2,
+            Stream::MetadataRead => 3,
+        }
+    }
+}
+
+/// One recorded access (when tracing is enabled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    pub stream: Stream,
+    /// Word address of the request start.
+    pub addr_words: u64,
+    pub words: u64,
+    /// Lines actually moved (span of touched lines).
+    pub lines: u64,
+}
+
+/// DRAM access accounting. `words_per_line` defaults to the global
+/// 8-word alignment; all counters are in lines and words.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    words_per_line: u64,
+    lines: [u64; 4],
+    words: [u64; 4],
+    trace: Option<Vec<Access>>,
+}
+
+impl Default for Dram {
+    fn default() -> Self {
+        Self::new(WORDS_PER_LINE)
+    }
+}
+
+impl Dram {
+    pub fn new(words_per_line: usize) -> Self {
+        assert!(words_per_line > 0);
+        Self { words_per_line: words_per_line as u64, lines: [0; 4], words: [0; 4], trace: None }
+    }
+
+    /// Enable trace recording (tests/debugging).
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(Vec::new());
+        self
+    }
+
+    /// Lines spanned by a `[addr, addr+words)` request.
+    pub fn span_lines(&self, addr_words: u64, words: u64) -> u64 {
+        if words == 0 {
+            return 0;
+        }
+        let first = addr_words / self.words_per_line;
+        let last = (addr_words + words - 1) / self.words_per_line;
+        last - first + 1
+    }
+
+    /// Issue a request; returns lines moved.
+    pub fn access(&mut self, stream: Stream, addr_words: u64, words: u64) -> u64 {
+        let lines = self.span_lines(addr_words, words);
+        let i = stream.index();
+        self.lines[i] += lines;
+        self.words[i] += words;
+        if let Some(t) = &mut self.trace {
+            t.push(Access { stream, addr_words, words, lines });
+        }
+        lines
+    }
+
+    /// Account an already-line-quantified transfer (e.g. the simulator's
+    /// precomputed sub-tensor fetch costs).
+    pub fn account_lines(&mut self, stream: Stream, lines: u64) {
+        self.lines[stream.index()] += lines;
+        self.words[stream.index()] += lines * self.words_per_line;
+    }
+
+    /// Account a raw bit quantity (metadata records), converted to words
+    /// at the 16-bit word size; lines are credited fractionally upward
+    /// only when flushed via [`Dram::lines_of`]'s rounding.
+    pub fn account_bits(&mut self, stream: Stream, bits: u64) {
+        let words = bits.div_ceil(16);
+        self.words[stream.index()] += words;
+        self.lines[stream.index()] += words.div_ceil(self.words_per_line);
+    }
+
+    pub fn lines_of(&self, stream: Stream) -> u64 {
+        self.lines[stream.index()]
+    }
+
+    pub fn words_of(&self, stream: Stream) -> u64 {
+        self.words[stream.index()]
+    }
+
+    pub fn total_lines(&self) -> u64 {
+        self.lines.iter().sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.total_lines() * self.words_per_line * 2
+    }
+
+    pub fn trace(&self) -> Option<&[Access]> {
+        self.trace.as_deref()
+    }
+
+    pub fn reset(&mut self) {
+        self.lines = [0; 4];
+        self.words = [0; 4];
+        if let Some(t) = &mut self.trace {
+            t.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_lines_alignment() {
+        let d = Dram::new(8);
+        assert_eq!(d.span_lines(0, 8), 1);
+        assert_eq!(d.span_lines(0, 9), 2);
+        assert_eq!(d.span_lines(7, 2), 2); // straddles a boundary
+        assert_eq!(d.span_lines(8, 8), 1);
+        assert_eq!(d.span_lines(3, 0), 0);
+        assert_eq!(d.span_lines(3, 1), 1);
+    }
+
+    #[test]
+    fn per_stream_counters() {
+        let mut d = Dram::new(8);
+        d.access(Stream::FeatureRead, 0, 16);
+        d.access(Stream::WeightRead, 4, 8);
+        d.access(Stream::FeatureRead, 100, 1);
+        assert_eq!(d.lines_of(Stream::FeatureRead), 2 + 1);
+        assert_eq!(d.lines_of(Stream::WeightRead), 2);
+        assert_eq!(d.words_of(Stream::FeatureRead), 17);
+        assert_eq!(d.total_lines(), 5);
+    }
+
+    #[test]
+    fn trace_records_accesses() {
+        let mut d = Dram::new(8).with_trace();
+        d.access(Stream::OutputWrite, 8, 8);
+        let t = d.trace().unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0], Access { stream: Stream::OutputWrite, addr_words: 8, words: 8, lines: 1 });
+        d.reset();
+        assert!(d.trace().unwrap().is_empty());
+        assert_eq!(d.total_lines(), 0);
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let mut d = Dram::new(8);
+        d.account_bits(Stream::MetadataRead, 48);
+        assert_eq!(d.words_of(Stream::MetadataRead), 3);
+    }
+}

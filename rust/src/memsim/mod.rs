@@ -1,0 +1,16 @@
+//! DRAM access accounting at cache-line granularity (§III-A).
+//!
+//! Modern memory hierarchies move whole aligned lines (8 words = 128
+//! bits here, §IV-A); partial-line requests still cost a full line. This
+//! module is the substrate under both the bandwidth simulator ([`crate::sim`])
+//! and the coordinator's fetch engine: every read is attributed to a
+//! stream (feature / weight / output / metadata) and accounted in lines,
+//! with optional trace recording for tests and debugging.
+
+pub mod cache;
+pub mod dram;
+pub mod timing;
+
+pub use cache::Cache;
+pub use dram::{Access, Dram, Stream};
+pub use timing::{DramTiming, TimedDram};

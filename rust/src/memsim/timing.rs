@@ -1,0 +1,164 @@
+//! DRAM timing model: banks, row buffers, burst accounting.
+//!
+//! The paper's §III-A argument is that "modern memory hierarchies, like
+//! DRAM or cache, favor aligned and coalesced access, and the variable
+//! size of compressed data can result in fragmentation and wasted
+//! bandwidth". The line-count simulator quantifies the *bytes*; this
+//! model quantifies the *access efficiency*: scattered small fetches
+//! (Uniform 1×1×8 compact, fragmented sub-tensors) cause more DRAM row
+//! activations per byte than GrateTile's long aligned sub-tensor reads.
+//!
+//! Simplified LPDDR4-class geometry: `n_banks` banks, `row_bytes` row
+//! buffers, open-page policy. Each request is split into line transfers;
+//! a transfer to the currently open row of its bank is a *row hit*
+//! (`t_ccd` cycles), otherwise a *row miss* (`t_rp + t_rcd` extra).
+
+use crate::config::hardware::WORDS_PER_LINE;
+
+/// Timing/geometry parameters (cycles at the DRAM command clock).
+#[derive(Debug, Clone, Copy)]
+pub struct DramTiming {
+    pub n_banks: usize,
+    pub row_bytes: usize,
+    /// Line-to-line transfer within an open row.
+    pub t_ccd: u64,
+    /// Precharge + activate penalty on a row miss.
+    pub t_rp_rcd: u64,
+    /// Per-request command/addressing overhead (one AXI-class
+    /// transaction per `read` call) — what makes many tiny fetches
+    /// expensive even when they raster nicely (§III-A).
+    pub t_cmd: u64,
+}
+
+impl Default for DramTiming {
+    fn default() -> Self {
+        // LPDDR4-ish: 8 banks, 2 KB rows, CCD 4, RP+RCD 36, CMD 8.
+        Self { n_banks: 8, row_bytes: 2048, t_ccd: 4, t_rp_rcd: 36, t_cmd: 8 }
+    }
+}
+
+/// Open-page DRAM with per-bank row buffers.
+#[derive(Debug, Clone)]
+pub struct TimedDram {
+    timing: DramTiming,
+    open_rows: Vec<Option<u64>>,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub cycles: u64,
+    pub lines: u64,
+    pub requests: u64,
+}
+
+impl TimedDram {
+    pub fn new(timing: DramTiming) -> Self {
+        Self {
+            timing,
+            open_rows: vec![None; timing.n_banks],
+            row_hits: 0,
+            row_misses: 0,
+            cycles: 0,
+            lines: 0,
+            requests: 0,
+        }
+    }
+
+    /// Address mapping: line-interleaved across banks, rows above.
+    fn map(&self, byte_addr: u64) -> (usize, u64) {
+        let line = byte_addr / 16;
+        let bank = (line % self.timing.n_banks as u64) as usize;
+        let row = byte_addr / self.timing.row_bytes as u64 / self.timing.n_banks as u64;
+        (bank, row)
+    }
+
+    /// Issue a read of `words` 16-bit words at word address `addr_words`.
+    /// One call = one transaction (pays `t_cmd` once).
+    pub fn read(&mut self, addr_words: u64, words: u64) {
+        if words == 0 {
+            return;
+        }
+        self.cycles += self.timing.t_cmd;
+        self.requests += 1;
+        let first_line = addr_words / WORDS_PER_LINE as u64;
+        let last_line = (addr_words + words - 1) / WORDS_PER_LINE as u64;
+        for line in first_line..=last_line {
+            let byte_addr = line * 16;
+            let (bank, row) = self.map(byte_addr);
+            if self.open_rows[bank] == Some(row) {
+                self.row_hits += 1;
+                self.cycles += self.timing.t_ccd;
+            } else {
+                self.row_misses += 1;
+                self.cycles += self.timing.t_ccd + self.timing.t_rp_rcd;
+                self.open_rows[bank] = Some(row);
+            }
+            self.lines += 1;
+        }
+    }
+
+    /// Fraction of line transfers that hit an open row.
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+
+    /// Effective bandwidth efficiency vs. the streaming ideal (every
+    /// transfer a row hit).
+    pub fn efficiency(&self) -> f64 {
+        if self.lines == 0 {
+            return 1.0;
+        }
+        (self.lines * self.timing.t_ccd) as f64 / self.cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream_is_mostly_hits() {
+        let mut d = TimedDram::new(DramTiming::default());
+        // 64 KB sequential: one miss per (row, bank) opening.
+        d.read(0, 32 * 1024);
+        assert!(d.row_hit_rate() > 0.95, "hit rate {}", d.row_hit_rate());
+        assert!(d.efficiency() > 0.8);
+    }
+
+    #[test]
+    fn random_small_reads_thrash_rows() {
+        let mut d = TimedDram::new(DramTiming::default());
+        let mut rng = crate::util::SplitMix64::new(3);
+        for _ in 0..2000 {
+            let addr = (rng.below(1 << 22) as u64) & !7; // random line
+            d.read(addr, 8);
+        }
+        assert!(d.row_hit_rate() < 0.30, "hit rate {}", d.row_hit_rate());
+        assert!(d.efficiency() < 0.5);
+    }
+
+    #[test]
+    fn straddling_reads_touch_both_lines() {
+        let mut d = TimedDram::new(DramTiming::default());
+        d.read(7, 2); // words 7..9: lines 0 and 1
+        assert_eq!(d.lines, 2);
+    }
+
+    #[test]
+    fn empty_read_is_free() {
+        let mut d = TimedDram::new(DramTiming::default());
+        d.read(100, 0);
+        assert_eq!(d.cycles, 0);
+        assert_eq!(d.lines, 0);
+    }
+
+    #[test]
+    fn efficiency_bounded() {
+        let mut d = TimedDram::new(DramTiming::default());
+        d.read(0, 8);
+        assert!(d.efficiency() > 0.0 && d.efficiency() <= 1.0);
+    }
+}

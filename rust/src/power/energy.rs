@@ -1,0 +1,51 @@
+//! Energy-per-operation table (Horowitz, "Computing's energy problem",
+//! ISSCC 2014 — the paper's reference [11]), 45 nm, scaled to the
+//! 16-bit datapath the simulator uses.
+//!
+//! Values are picojoules per 16-bit word / operation. Absolute numbers
+//! are process-dependent; what Fig. 1 relies on is the *ratio* — DRAM
+//! access ≈ 50–200× SRAM ≈ 100–1000× a MAC — which these preserve.
+
+/// Energy in pJ per elementary operation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyTable {
+    /// One 16-bit multiply-accumulate (fixed point).
+    pub mac_pj: f64,
+    /// One 16-bit word from a ~100 KB on-chip SRAM.
+    pub sram_word_pj: f64,
+    /// One 16-bit word from DRAM (LPDDR-class, incl. I/O).
+    pub dram_word_pj: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        // Horowitz 45nm: 32b int mult 3.1 pJ, 8b add 0.03 pJ, 32b SRAM
+        // (8KB) 5 pJ, 32b DRAM 640 pJ. Scaled to 16-bit words and a
+        // 100KB-class buffer:
+        Self { mac_pj: 1.0, sram_word_pj: 6.0, dram_word_pj: 320.0 }
+    }
+}
+
+impl EnergyTable {
+    /// Sanity ratios used by the Fig. 1 narrative.
+    pub fn dram_to_mac_ratio(&self) -> f64 {
+        self.dram_word_pj / self.mac_pj
+    }
+
+    pub fn dram_to_sram_ratio(&self) -> f64 {
+        self.dram_word_pj / self.sram_word_pj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_match_horowitz_orders_of_magnitude() {
+        let e = EnergyTable::default();
+        assert!(e.dram_to_mac_ratio() > 100.0);
+        assert!(e.dram_to_sram_ratio() > 20.0);
+        assert!(e.sram_word_pj > e.mac_pj);
+    }
+}

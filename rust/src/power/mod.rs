@@ -1,0 +1,18 @@
+//! The Fig. 1 power model: a SCALE-sim-style analytic simulation of the
+//! benchmark networks on a 16×16 systolic array, priced with Horowitz
+//! ISSCC'14 energy numbers.
+//!
+//! The paper uses this figure to motivate GrateTile: DRAM feature reads
+//! consume over half the power, and the MAC share shrinks from ~35 %
+//! (AlexNet, 2012) to ~15 % (2016-era networks). We reproduce the same
+//! methodology — analytic access counts per layer (no cycle-accurate
+//! simulation; SCALE-sim itself is analytic about DRAM traffic) — with
+//! every assumption documented in [`systolic`].
+
+pub mod energy;
+pub mod roofline;
+pub mod systolic;
+
+pub use energy::EnergyTable;
+pub use roofline::{roofline, Machine, Roofline};
+pub use systolic::{network_power, ArrayConfig, LayerCounts, PowerBreakdown};

@@ -1,0 +1,148 @@
+//! Roofline analysis: is a layer compute- or memory-bound, and what
+//! does GrateTile's bandwidth saving buy in *runtime*?
+//!
+//! The paper's motivation (§I) is that "an algorithm can become
+//! increasingly memory bound for future architectures" — compression is
+//! worth silicon exactly when the feature stream is the binding
+//! constraint. This analysis makes that quantitative per layer:
+//!
+//! * compute time = MACs / (array MACs/cycle),
+//! * memory time = DRAM words / (bus words/cycle), with the feature
+//!   stream scaled by a division mode's measured bandwidth saving,
+//! * bound = max of the two (perfect overlap assumption, the same one
+//!   double-buffering targets).
+
+use super::systolic::{layer_counts, ArrayConfig};
+use crate::compress::Scheme;
+use crate::config::hardware::Hardware;
+use crate::config::layer::ConvLayer;
+use crate::sim::experiment::run_layer;
+use crate::tensor::FeatureMap;
+use crate::tiling::division::{DivisionError, DivisionMode};
+
+/// Machine balance for the roofline.
+#[derive(Debug, Clone, Copy)]
+pub struct Machine {
+    pub array: ArrayConfig,
+    /// DRAM bus throughput in 16-bit words per array cycle.
+    pub bus_words_per_cycle: f64,
+}
+
+impl Default for Machine {
+    fn default() -> Self {
+        // 256-MAC array @ 1 GHz vs ~8 GB/s effective DRAM: 4 words/cycle.
+        Self { array: ArrayConfig::default(), bus_words_per_cycle: 4.0 }
+    }
+}
+
+/// Roofline verdict for one layer.
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub compute_cycles: f64,
+    pub memory_cycles_dense: f64,
+    pub memory_cycles_compressed: f64,
+    /// Bandwidth saving applied to the feature stream.
+    pub feature_saving: f64,
+}
+
+impl Roofline {
+    pub fn bound_dense(&self) -> &'static str {
+        if self.memory_cycles_dense > self.compute_cycles {
+            "memory"
+        } else {
+            "compute"
+        }
+    }
+
+    pub fn runtime_dense(&self) -> f64 {
+        self.compute_cycles.max(self.memory_cycles_dense)
+    }
+
+    pub fn runtime_compressed(&self) -> f64 {
+        self.compute_cycles.max(self.memory_cycles_compressed)
+    }
+
+    /// End-to-end speedup from compressing the feature stream.
+    pub fn speedup(&self) -> f64 {
+        self.runtime_dense() / self.runtime_compressed()
+    }
+}
+
+/// Analyse one layer: measure the division mode's feature saving on
+/// `fm`, then place the layer on the roofline with and without it.
+pub fn roofline(
+    machine: &Machine,
+    hw: &Hardware,
+    layer: &ConvLayer,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    scheme: Scheme,
+) -> Result<Roofline, DivisionError> {
+    let counts = layer_counts(&machine.array, layer);
+    let report = run_layer(hw, layer, fm, mode, scheme)?;
+    let saving = report.saving_with_meta().max(0.0);
+
+    let macs_per_cycle = (machine.array.rows * machine.array.cols) as f64;
+    let compute_cycles = counts.macs as f64 / macs_per_cycle;
+
+    let feature = counts.dram_feature_words as f64;
+    let other = (counts.dram_weight_words + counts.dram_output_words) as f64;
+    let memory_cycles_dense = (feature + other) / machine.bus_words_per_cycle;
+    let memory_cycles_compressed =
+        (feature * (1.0 - saving) + other) / machine.bus_words_per_cycle;
+
+    Ok(Roofline {
+        compute_cycles,
+        memory_cycles_dense,
+        memory_cycles_compressed,
+        feature_saving: saving,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+
+    fn analyse(layer: ConvLayer, density: f64) -> Roofline {
+        let machine = Machine::default();
+        let hw = Platform::EyerissLargeTile.hardware();
+        let fm = generate(layer.h, layer.w, layer.c_in, SparsityParams::clustered(density, 3));
+        roofline(&machine, &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask)
+            .unwrap()
+    }
+
+    /// A 1x1 conv (low arithmetic intensity: 1 MAC/word per cout-group)
+    /// is memory-bound; GrateTile's saving translates into speedup.
+    #[test]
+    fn pointwise_is_memory_bound_and_speeds_up() {
+        let r = analyse(ConvLayer::new(0, 1, 56, 56, 256, 64), 0.35);
+        assert_eq!(r.bound_dense(), "memory");
+        assert!(r.speedup() > 1.2, "speedup {}", r.speedup());
+    }
+
+    /// A 3x3 conv with many output channels is compute-bound; the
+    /// bandwidth saving then buys little runtime (the honest flip side).
+    #[test]
+    fn fat_conv_is_compute_bound() {
+        let r = analyse(ConvLayer::new(1, 1, 28, 28, 256, 512), 0.35);
+        assert_eq!(r.bound_dense(), "compute");
+        assert!(r.speedup() < 1.1, "speedup {}", r.speedup());
+    }
+
+    #[test]
+    fn speedup_monotone_in_sparsity() {
+        let layer = ConvLayer::new(0, 1, 56, 56, 256, 64);
+        let sparse = analyse(layer, 0.15);
+        let dense = analyse(layer, 0.80);
+        assert!(sparse.speedup() >= dense.speedup());
+    }
+
+    #[test]
+    fn compressed_memory_never_exceeds_dense() {
+        let r = analyse(ConvLayer::new(1, 1, 56, 56, 64, 64), 0.4);
+        assert!(r.memory_cycles_compressed <= r.memory_cycles_dense);
+        assert!(r.runtime_compressed() <= r.runtime_dense());
+    }
+}

@@ -1,0 +1,241 @@
+//! Analytic 16×16 output-stationary systolic-array model (SCALE-sim
+//! methodology, paper refs [12]–[14]).
+//!
+//! Assumptions (documented, per DESIGN.md §2):
+//!
+//! * **Array**: 16×16 PEs, output stationary — each pass pins a
+//!   16-output-channel × 16-pixel tile of outputs and streams inputs
+//!   and weights through.
+//! * **DRAM feature reads**: the input tile is re-read from DRAM once
+//!   per group of 16 output channels (`ceil(c_out/16)` passes), the
+//!   dominant reuse limit of an OS array whose buffer holds one input
+//!   tile. Halo overlap uses the exact tile-walker fetch.
+//! * **DRAM weight reads**: weights stream once per pass over the
+//!   spatial tiles unless the layer's weights fit in half the global
+//!   buffer, in which case they are read once.
+//! * **DRAM output writes**: each output word written once.
+//! * **SRAM**: every MAC consumes one input and one weight word from
+//!   SRAM through row/column broadcast over 16 PEs (2·MACs/16 reads)
+//!   and each output accumulates once per input-channel slice
+//!   (MACs/256 writes + final drain).
+//!
+//! These choices reproduce the Fig. 1 narrative: the MAC share falls
+//! from ~35 % (AlexNet) to ~15 % (2016 networks), and DRAM feature
+//! reads consume over half of the non-MAC power.
+
+use super::energy::EnergyTable;
+use crate::config::hardware::Platform;
+use crate::config::layer::ConvLayer;
+use crate::config::zoo::{full_conv_stack, Network};
+use crate::sim::walker::TileWalker;
+
+/// Systolic array configuration (SCALE-sim-class SRAM sizing: separate
+/// megabyte-scale input and filter buffers).
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Input/output global buffer in 16-bit words (512 KB).
+    pub buffer_words: usize,
+    /// Dedicated filter buffer in 16-bit words (2 MB): layers whose
+    /// weights fit are weight-resident (read once from DRAM).
+    pub weight_buffer_words: usize,
+}
+
+impl Default for ArrayConfig {
+    fn default() -> Self {
+        Self {
+            rows: 16,
+            cols: 16,
+            buffer_words: 256 * 1024,
+            weight_buffer_words: 1024 * 1024,
+        }
+    }
+}
+
+/// Raw access counts for one layer.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LayerCounts {
+    pub macs: u64,
+    pub dram_feature_words: u64,
+    pub dram_weight_words: u64,
+    pub dram_output_words: u64,
+    pub sram_words: u64,
+}
+
+impl LayerCounts {
+    pub fn add(&mut self, o: &LayerCounts) {
+        self.macs += o.macs;
+        self.dram_feature_words += o.dram_feature_words;
+        self.dram_weight_words += o.dram_weight_words;
+        self.dram_output_words += o.dram_output_words;
+        self.sram_words += o.sram_words;
+    }
+}
+
+/// Count accesses for one layer on the array.
+pub fn layer_counts(cfg: &ArrayConfig, layer: &ConvLayer) -> LayerCounts {
+    let macs = layer.macs();
+
+    // Exact tiled fetch (with halo overlap) via the shared walker, on the
+    // large-tile platform the buffer corresponds to.
+    let hw = Platform::EyerissLargeTile.hardware();
+    let tile = hw.tile_for_layer(layer);
+    let walker = TileWalker::new(*layer, tile);
+    let one_pass_feature = walker.baseline_words();
+
+    // OS array: one pass per 16-output-channel group re-reads the input.
+    let cout_passes = layer.c_out.div_ceil(cfg.cols) as u64;
+    let dram_feature_words = one_pass_feature * cout_passes;
+
+    // Weights: resident if they fit the filter buffer, else streamed
+    // once per spatial tile.
+    let weight_words = layer.weight_words();
+    let spatial_tiles = (walker.n_ty * walker.n_tx) as u64;
+    let dram_weight_words = if (weight_words as usize) <= cfg.weight_buffer_words {
+        weight_words
+    } else {
+        weight_words * spatial_tiles
+    };
+
+    let dram_output_words = layer.output_words();
+
+    // SRAM traffic: 2 operand reads per MAC amortised over a 16-wide
+    // broadcast + accumulator writeback per 16x16 tile drain.
+    let sram_words = 2 * macs / cfg.rows as u64 + layer.output_words();
+
+    LayerCounts { macs, dram_feature_words, dram_weight_words, dram_output_words, sram_words }
+}
+
+/// Energy breakdown for a network (the Fig. 1 bar).
+#[derive(Debug, Clone)]
+pub struct PowerBreakdown {
+    pub network: Network,
+    pub counts: LayerCounts,
+    pub mac_pj: f64,
+    pub dram_feature_pj: f64,
+    pub dram_weight_pj: f64,
+    pub dram_output_pj: f64,
+    pub sram_pj: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.mac_pj + self.dram_feature_pj + self.dram_weight_pj + self.dram_output_pj + self.sram_pj
+    }
+
+    pub fn mac_share(&self) -> f64 {
+        self.mac_pj / self.total_pj()
+    }
+
+    pub fn dram_feature_share(&self) -> f64 {
+        self.dram_feature_pj / self.total_pj()
+    }
+
+    /// DRAM feature read share of the *non-MAC* power — the paper's
+    /// "over half of the remaining power" claim.
+    pub fn dram_feature_share_of_rest(&self) -> f64 {
+        self.dram_feature_pj / (self.total_pj() - self.mac_pj)
+    }
+
+    /// Fractions per category, in Fig. 1 legend order:
+    /// [MAC, DRAM feature read, DRAM weight read, DRAM output write, SRAM].
+    pub fn shares(&self) -> [f64; 5] {
+        let t = self.total_pj();
+        [
+            self.mac_pj / t,
+            self.dram_feature_pj / t,
+            self.dram_weight_pj / t,
+            self.dram_output_pj / t,
+            self.sram_pj / t,
+        ]
+    }
+}
+
+/// Simulate a full network (Fig. 1 bar).
+pub fn network_power(
+    cfg: &ArrayConfig,
+    energy: &EnergyTable,
+    net: Network,
+) -> PowerBreakdown {
+    let mut total = LayerCounts::default();
+    for layer in full_conv_stack(net) {
+        total.add(&layer_counts(cfg, &layer));
+    }
+    PowerBreakdown {
+        network: net,
+        counts: total,
+        mac_pj: total.macs as f64 * energy.mac_pj,
+        dram_feature_pj: total.dram_feature_words as f64 * energy.dram_word_pj,
+        dram_weight_pj: total.dram_weight_words as f64 * energy.dram_word_pj,
+        dram_output_pj: total.dram_output_words as f64 * energy.dram_word_pj,
+        sram_pj: total.sram_words as f64 * energy.sram_word_pj,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breakdown(net: Network) -> PowerBreakdown {
+        network_power(&ArrayConfig::default(), &EnergyTable::default(), net)
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        for net in Network::all() {
+            let b = breakdown(net);
+            let s: f64 = b.shares().iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "{net:?}");
+        }
+    }
+
+    /// Fig. 1 headline: DRAM feature read dominates the non-MAC power.
+    #[test]
+    fn dram_feature_read_is_primary_draw() {
+        for net in Network::all() {
+            let b = breakdown(net);
+            assert!(
+                b.dram_feature_share_of_rest() > 0.5,
+                "{net:?}: feature share of rest {}",
+                b.dram_feature_share_of_rest()
+            );
+        }
+    }
+
+    /// Fig. 1 trend: the MAC share shrinks from 2012 (AlexNet) to the
+    /// later networks with smaller kernels / deeper stacks.
+    #[test]
+    fn mac_share_declines_over_network_generations() {
+        let alex = breakdown(Network::AlexNet).mac_share();
+        let r18 = breakdown(Network::ResNet18).mac_share();
+        let r50 = breakdown(Network::ResNet50).mac_share();
+        assert!(alex > r18, "alexnet {alex} vs resnet18 {r18}");
+        assert!(alex > r50, "alexnet {alex} vs resnet50 {r50}");
+        // Magnitudes in the paper's ballpark (35% -> 15%).
+        assert!((0.15..0.45).contains(&alex), "alexnet {alex}");
+        assert!(r18 < 0.25, "resnet18 {r18}");
+        assert!(breakdown(Network::Vdsr).mac_share() < 0.35);
+    }
+
+    #[test]
+    fn counts_scale_with_network_size() {
+        let a = breakdown(Network::AlexNet).counts;
+        let v = breakdown(Network::Vgg16).counts;
+        assert!(v.macs > 10 * a.macs);
+        assert!(v.dram_feature_words > a.dram_feature_words);
+    }
+
+    #[test]
+    fn weight_residency_kicks_in_for_small_layers() {
+        let cfg = ArrayConfig::default();
+        // Tiny layer: weights resident, read once.
+        let small = ConvLayer::new(1, 1, 56, 56, 16, 16);
+        let c = layer_counts(&cfg, &small);
+        assert_eq!(c.dram_weight_words, small.weight_words());
+        // Huge layer: weights streamed per spatial tile.
+        let big = ConvLayer::new(1, 1, 56, 56, 512, 512);
+        let cb = layer_counts(&cfg, &big);
+        assert!(cb.dram_weight_words > big.weight_words());
+    }
+}

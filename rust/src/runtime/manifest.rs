@@ -1,0 +1,171 @@
+//! Artifact manifest: what `aot.py` produced and how to feed it.
+//!
+//! A deliberately dependency-free line format (no serde in the offline
+//! build environment):
+//!
+//! ```text
+//! # comments and blank lines ignored
+//! artifact <name> <file> in=<d0>x<d1>x...xf32 outs=<n>
+//! layer <model> <idx> h=<h> w=<w> c=<c>
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input dims (single f32 input).
+    pub input_dims: Vec<usize>,
+    /// Number of tuple outputs.
+    pub n_outputs: usize,
+    /// Output feature-map shapes `(h, w, c)` per layer, when declared.
+    pub layer_shapes: Vec<(usize, usize, usize)>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: HashMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut m = Manifest { entries: HashMap::new(), dir: dir.to_path_buf() };
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("artifact") => {
+                    let name = parts.next().ok_or_else(|| anyhow!("line {ln}: name"))?;
+                    let file = parts.next().ok_or_else(|| anyhow!("line {ln}: file"))?;
+                    let mut input_dims = Vec::new();
+                    let mut n_outputs = 0usize;
+                    for kv in parts {
+                        if let Some(spec) = kv.strip_prefix("in=") {
+                            let spec = spec
+                                .strip_suffix("xf32")
+                                .ok_or_else(|| anyhow!("line {ln}: only f32 inputs supported"))?;
+                            input_dims = spec
+                                .split('x')
+                                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("line {ln}: {e}")))
+                                .collect::<Result<_>>()?;
+                        } else if let Some(n) = kv.strip_prefix("outs=") {
+                            n_outputs = n.parse().map_err(|e| anyhow!("line {ln}: {e}"))?;
+                        }
+                    }
+                    if input_dims.is_empty() || n_outputs == 0 {
+                        bail!("line {ln}: artifact needs in= and outs=");
+                    }
+                    m.entries.insert(
+                        name.to_string(),
+                        ArtifactEntry {
+                            name: name.to_string(),
+                            file: dir.join(file),
+                            input_dims,
+                            n_outputs,
+                            layer_shapes: Vec::new(),
+                        },
+                    );
+                }
+                Some("layer") => {
+                    let model = parts.next().ok_or_else(|| anyhow!("line {ln}: model"))?;
+                    let _idx: usize = parts
+                        .next()
+                        .ok_or_else(|| anyhow!("line {ln}: idx"))?
+                        .parse()?;
+                    let mut h = 0;
+                    let mut w = 0;
+                    let mut c = 0;
+                    for kv in parts {
+                        if let Some(v) = kv.strip_prefix("h=") {
+                            h = v.parse()?;
+                        } else if let Some(v) = kv.strip_prefix("w=") {
+                            w = v.parse()?;
+                        } else if let Some(v) = kv.strip_prefix("c=") {
+                            c = v.parse()?;
+                        }
+                    }
+                    m.entries
+                        .get_mut(model)
+                        .ok_or_else(|| anyhow!("line {ln}: unknown model {model}"))?
+                        .layer_shapes
+                        .push((h, w, c));
+                }
+                Some(other) => bail!("line {ln}: unknown directive {other}"),
+                None => {}
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# demo manifest
+artifact cnn model.hlo.txt in=1x32x32x1xf32 outs=4
+layer cnn 0 h=32 w=32 c=8
+layer cnn 1 h=32 w=32 c=16
+
+artifact stats compress.hlo.txt in=512xf32 outs=2
+";
+
+    #[test]
+    fn parses_entries_and_layers() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let cnn = m.get("cnn").unwrap();
+        assert_eq!(cnn.input_dims, vec![1, 32, 32, 1]);
+        assert_eq!(cnn.n_outputs, 4);
+        assert_eq!(cnn.layer_shapes, vec![(32, 32, 8), (32, 32, 16)]);
+        assert_eq!(cnn.file, Path::new("/tmp/a/model.hlo.txt"));
+        let st = m.get("stats").unwrap();
+        assert_eq!(st.input_dims, vec![512]);
+        assert_eq!(st.n_outputs, 2);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Manifest::parse("artifact x", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("bogus directive", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("layer nocnn 0 h=1 w=1 c=1", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("artifact x f in=4xf64 outs=1", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = Manifest::parse("# nothing\n\n", Path::new("/tmp")).unwrap();
+        assert!(m.entries.is_empty());
+    }
+}

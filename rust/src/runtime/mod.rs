@@ -1,0 +1,17 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs once at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 JAX CNN (whose conv layers call the L1 Pallas kernel)
+//! to **HLO text** in `artifacts/`. This module loads that text via the
+//! `xla` crate (`HloModuleProto::from_text_file` → compile on the PJRT
+//! CPU client → execute) so the request path is pure Rust.
+//!
+//! HLO *text* — not a serialized `HloModuleProto` — is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, LoadedModel};
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,193 @@
+//! Metadata SRAM-cache study (§III-C).
+//!
+//! The paper stores metadata in DRAM because "the size of metadata
+//! would be 72 kB for AlexNet CONV2" with naive pointers, yet notes the
+//! latency/bandwidth cost of DRAM-resident metadata. GrateTile's small
+//! records make a tiny on-chip metadata cache effective; this study
+//! quantifies it: the tile walk's metadata record stream runs through a
+//! set-associative SRAM cache, and only misses pay DRAM traffic.
+//!
+//! The tile *order* matters: spatial-major walks (default) revisit each
+//! block row across adjacent tiles (halo) soon — good locality; a
+//! channel-major walk (process every channel group of the map before
+//! stepping, §IV-B(3)-adjacent) stretches the reuse distance.
+
+
+use crate::config::hardware::Hardware;
+use crate::config::layer::ConvLayer;
+use crate::memsim::cache::Cache;
+use crate::sim::walker::TileWalker;
+use crate::tensor::FeatureMap;
+use crate::tiling::division::{Division, DivisionError, DivisionMode};
+
+/// Tile iteration order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileOrder {
+    /// (ty, tx) outer, channel groups inner — the paper's default.
+    SpatialMajor,
+    /// Channel groups outer, (ty, tx) inner — whole-channel processing.
+    ChannelMajor,
+}
+
+/// Result of the cache study.
+#[derive(Debug, Clone, Copy)]
+pub struct MetaCacheStudy {
+    pub hit_rate: f64,
+    /// Metadata bits that actually reach DRAM (misses only).
+    pub dram_bits: u64,
+    /// Metadata bits the walk requested (= the no-cache cost).
+    pub requested_bits: u64,
+}
+
+impl MetaCacheStudy {
+    /// Fraction of metadata traffic the cache absorbs.
+    pub fn absorbed(&self) -> f64 {
+        if self.requested_bits == 0 {
+            return 0.0;
+        }
+        1.0 - self.dram_bits as f64 / self.requested_bits as f64
+    }
+}
+
+/// Run the study: metadata records of `mode` streamed through a
+/// `cache_bytes` SRAM cache in the given tile order.
+pub fn metadata_cache_study(
+    hw: &Hardware,
+    layer: &ConvLayer,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    cache_bytes: usize,
+    order: TileOrder,
+) -> Result<MetaCacheStudy, DivisionError> {
+    let tile = hw.tile_for_layer(layer);
+    let division = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
+    let walker = TileWalker::new(*layer, tile);
+    let mut cache = Cache::new(cache_bytes, 4, hw.line_bytes());
+    let rec_bytes = (division.meta_bits_per_block as u64).div_ceil(8);
+
+    let mut requested_bits = 0u64;
+    let mut dram_bits = 0u64;
+    // Record table laid out linearly by block id.
+    let mut visit = |ty: usize, tx: usize, tcg: usize| {
+        let w = walker.window(ty, tx, tcg);
+        // Touched blocks (one record each), deduped within the window.
+        let mut last = usize::MAX;
+        for r in division.intersecting(w.y0, w.y1, w.x0, w.x1, w.c0, w.c1) {
+            let b = division.block_linear(r);
+            if b == last {
+                continue;
+            }
+            last = b;
+            requested_bits += division.meta_bits_per_block as u64;
+            let missed = cache.access(b as u64 * rec_bytes, rec_bytes);
+            if missed > 0 {
+                dram_bits += division.meta_bits_per_block as u64;
+            }
+        }
+    };
+
+    match order {
+        TileOrder::SpatialMajor => {
+            for ty in 0..walker.n_ty {
+                for tx in 0..walker.n_tx {
+                    for tcg in 0..walker.n_tcg {
+                        visit(ty, tx, tcg);
+                    }
+                }
+            }
+        }
+        TileOrder::ChannelMajor => {
+            for tcg in 0..walker.n_tcg {
+                for ty in 0..walker.n_ty {
+                    for tx in 0..walker.n_tx {
+                        visit(ty, tx, tcg);
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(MetaCacheStudy { hit_rate: cache.hit_rate(), dram_bits, requested_bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Scheme;
+    use crate::config::hardware::Platform;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+
+    fn setup() -> (Hardware, ConvLayer, FeatureMap) {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 56, 56, 64, 64);
+        let fm = generate(56, 56, 64, SparsityParams::clustered(0.4, 6));
+        (hw, layer, fm)
+    }
+
+    /// A 4 KB cache absorbs most GrateTile metadata traffic (its whole
+    /// table for this layer is ~3 KB), while Uniform 1×1×8's 25% index
+    /// (~98 KB) thrashes it.
+    #[test]
+    fn small_cache_absorbs_gratetile_but_not_compact_index() {
+        let (hw, layer, fm) = setup();
+        let g = metadata_cache_study(
+            &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, 4096, TileOrder::SpatialMajor,
+        )
+        .unwrap();
+        let u1 = metadata_cache_study(
+            &hw, &layer, &fm, DivisionMode::Uniform { edge: 1 }, 4096, TileOrder::SpatialMajor,
+        )
+        .unwrap();
+        assert!(g.absorbed() > 0.8, "grate absorbed {}", g.absorbed());
+        assert!(u1.absorbed() < 0.4, "compact absorbed {}", u1.absorbed());
+    }
+
+    #[test]
+    fn channel_major_has_worse_locality_under_tiny_cache() {
+        let (hw, layer, fm) = setup();
+        // Cache smaller than one full metadata sweep.
+        let tiny = 512;
+        let sm = metadata_cache_study(
+            &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, tiny, TileOrder::SpatialMajor,
+        )
+        .unwrap();
+        let cm = metadata_cache_study(
+            &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, tiny, TileOrder::ChannelMajor,
+        )
+        .unwrap();
+        assert!(
+            sm.hit_rate >= cm.hit_rate,
+            "spatial {} vs channel {}",
+            sm.hit_rate,
+            cm.hit_rate
+        );
+    }
+
+    #[test]
+    fn requested_matches_no_cache_accounting() {
+        let (hw, layer, fm) = setup();
+        let s = metadata_cache_study(
+            &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, 4096, TileOrder::SpatialMajor,
+        )
+        .unwrap();
+        let analytic = crate::sim::experiment::run_layer(
+            &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask,
+        )
+        .unwrap();
+        // The walk requests at least the analytic metadata (the analytic
+        // path dedups per tile with a stamp; this path dedups only
+        // consecutive repeats, so requested >= analytic).
+        assert!(s.requested_bits >= analytic.metadata_bits);
+        assert!(s.dram_bits <= s.requested_bits);
+    }
+
+    #[test]
+    fn huge_cache_absorbs_everything_after_warmup() {
+        let (hw, layer, fm) = setup();
+        let s = metadata_cache_study(
+            &hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, 1 << 20, TileOrder::SpatialMajor,
+        )
+        .unwrap();
+        assert!(s.absorbed() > 0.85, "absorbed {}", s.absorbed()); // ~10% cold misses
+    }
+}

@@ -1,0 +1,25 @@
+//! The DRAM bandwidth simulator (paper §IV).
+//!
+//! [`walker`] iterates the exact tile fetch pattern an accelerator
+//! produces for a layer — halo'd input windows per output tile, stepping
+//! by `s·t` — and prices each window under a division + compression
+//! scheme: whole compressed sub-tensors at line granularity, plus block
+//! metadata records (Table II widths) once per touched block per tile.
+//!
+//! [`experiment`] wraps the walker into the paper's experiments: one
+//! layer → [`report::LayerBandwidth`]; the benchmark suite → geometric
+//! means per division mode (Fig. 8, Fig. 9, Table III).
+
+pub mod access;
+pub mod experiment;
+pub mod metacache;
+pub mod network;
+pub mod report;
+pub mod walker;
+
+pub use access::{access_study, AccessStudy};
+pub use experiment::{run_bench_layer, run_layer, run_suite, SuiteResult};
+pub use metacache::{metadata_cache_study, MetaCacheStudy, TileOrder};
+pub use network::{run_network_bandwidth, NetworkReport};
+pub use report::LayerBandwidth;
+pub use walker::TileWalker;

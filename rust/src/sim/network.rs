@@ -1,0 +1,180 @@
+//! Whole-network bandwidth simulation.
+//!
+//! The paper prices representative layers; a deployed system processes
+//! whole networks, where every intermediate map is both *written back*
+//! compressed (producer side) and *fetched* tiled (consumer side). This
+//! module runs a network's full conv stack through the storage model
+//! and reports both directions, giving the end-to-end DRAM traffic a
+//! GrateTile deployment would see.
+
+use super::experiment::run_layer;
+use super::report::LayerBandwidth;
+use crate::compress::Scheme;
+use crate::config::hardware::Hardware;
+use crate::config::zoo::{full_conv_stack, network_layers, Network};
+use crate::layout::packer::Packer;
+use crate::tensor::sparsity::{generate, SparsityParams};
+use crate::tiling::division::{Division, DivisionMode};
+
+/// Per-network totals.
+#[derive(Debug, Clone)]
+pub struct NetworkReport {
+    pub network: Network,
+    pub mode: String,
+    pub per_layer: Vec<LayerBandwidth>,
+    /// Compressed write-back bits of every intermediate map (producer
+    /// side; the baseline writes the dense map once).
+    pub writeback_bits: u64,
+    pub writeback_baseline_bits: u64,
+}
+
+impl NetworkReport {
+    pub fn fetch_saving(&self) -> f64 {
+        let fetched: u64 = self
+            .per_layer
+            .iter()
+            .map(|l| l.fetched_bits + l.metadata_bits)
+            .sum();
+        let base: u64 = self.per_layer.iter().map(|l| l.baseline_bits).sum();
+        1.0 - fetched as f64 / base as f64
+    }
+
+    pub fn writeback_saving(&self) -> f64 {
+        1.0 - self.writeback_bits as f64 / self.writeback_baseline_bits as f64
+    }
+
+    /// Combined read+write saving.
+    pub fn total_saving(&self) -> f64 {
+        let moved: u64 = self
+            .per_layer
+            .iter()
+            .map(|l| l.fetched_bits + l.metadata_bits)
+            .sum::<u64>()
+            + self.writeback_bits;
+        let base: u64 =
+            self.per_layer.iter().map(|l| l.baseline_bits).sum::<u64>()
+                + self.writeback_baseline_bits;
+        1.0 - moved as f64 / base as f64
+    }
+}
+
+/// Interpolated activation density for layer `i` of `n` from the
+/// network's calibrated bench-layer densities (front-to-back).
+pub fn depth_density(net: Network, i: usize, n: usize) -> f64 {
+    let bench = network_layers(net);
+    let first = bench.first().map(|b| b.density).unwrap_or(0.5);
+    let last = bench.last().map(|b| b.density).unwrap_or(0.3);
+    if n <= 1 {
+        return first;
+    }
+    let t = i as f64 / (n - 1) as f64;
+    first + (last - first) * t
+}
+
+/// Simulate a whole network's feature traffic under one division mode.
+/// The first layer's input (the image) is dense and skipped, as in the
+/// paper's AlexNet treatment.
+pub fn run_network_bandwidth(
+    hw: &Hardware,
+    net: Network,
+    mode: DivisionMode,
+    scheme: Scheme,
+    seed: u64,
+) -> NetworkReport {
+    let stack = full_conv_stack(net);
+    let n = stack.len();
+    let mut per_layer = Vec::new();
+    let mut writeback_bits = 0u64;
+    let mut writeback_baseline_bits = 0u64;
+
+    for (i, layer) in stack.iter().enumerate().skip(1) {
+        let density = depth_density(net, i, n);
+        let fm = generate(
+            layer.h,
+            layer.w,
+            layer.c_in,
+            SparsityParams::clustered(density, seed ^ (i as u64) << 8),
+        );
+        // Consumer side: tiled fetch of this layer's input.
+        if let Ok(mut r) = run_layer(hw, layer, &fm, mode, scheme) {
+            r.network = net.name().to_string();
+            r.layer = format!("conv{i}");
+            per_layer.push(r);
+        }
+        // Producer side: the previous layer wrote this map compressed.
+        let tile = hw.tile_for_layer(layer);
+        if let Ok(div) = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c) {
+            let packed = Packer::new(*hw, scheme).pack(&fm, &div, false);
+            writeback_bits += packed.total_words * 16 + div.total_meta_bits();
+            writeback_baseline_bits += (fm.words() * 16) as u64;
+        }
+    }
+
+    NetworkReport {
+        network: net,
+        mode: mode.name(),
+        per_layer,
+        writeback_bits,
+        writeback_baseline_bits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+
+    #[test]
+    fn alexnet_network_report() {
+        let hw = Platform::EyerissLargeTile.hardware();
+        let r = run_network_bandwidth(
+            &hw,
+            Network::AlexNet,
+            DivisionMode::GrateTile { n: 8 },
+            Scheme::Bitmask,
+            1,
+        );
+        assert_eq!(r.per_layer.len(), 4); // conv2..conv5
+        assert!(r.fetch_saving() > 0.25, "{}", r.fetch_saving());
+        assert!(r.writeback_saving() > 0.25, "{}", r.writeback_saving());
+        assert!(r.total_saving() > 0.25);
+    }
+
+    #[test]
+    fn writeback_never_exceeds_dense_plus_meta() {
+        let hw = Platform::EyerissLargeTile.hardware();
+        for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 4 }] {
+            let r = run_network_bandwidth(&hw, Network::ResNet18, mode, Scheme::Bitmask, 2);
+            // Compressed write-back must beat dense write-back at these
+            // densities (compression ratio < 1 with small metadata).
+            assert!(
+                r.writeback_bits < r.writeback_baseline_bits,
+                "{}: {} vs {}",
+                r.mode,
+                r.writeback_bits,
+                r.writeback_baseline_bits
+            );
+        }
+    }
+
+    #[test]
+    fn grate_beats_uniform_at_network_scope() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let g = run_network_bandwidth(
+            &hw, Network::Vgg16, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 3,
+        );
+        let u = run_network_bandwidth(
+            &hw, Network::Vgg16, DivisionMode::Uniform { edge: 8 }, Scheme::Bitmask, 3,
+        );
+        assert!(g.total_saving() > u.total_saving());
+    }
+
+    #[test]
+    fn depth_density_interpolates() {
+        let d0 = depth_density(Network::Vgg16, 0, 13);
+        let dl = depth_density(Network::Vgg16, 12, 13);
+        assert!(d0 > dl, "VGG activations get sparser with depth");
+        let mid = depth_density(Network::Vgg16, 6, 13);
+        assert!(mid < d0 && mid > dl);
+    }
+}

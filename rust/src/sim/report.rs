@@ -1,0 +1,97 @@
+//! Bandwidth reports: the quantities behind Fig. 8/9 and Table III.
+
+use crate::config::hardware::BYTES_PER_WORD;
+
+/// Result of simulating one layer under one division mode.
+#[derive(Debug, Clone)]
+pub struct LayerBandwidth {
+    pub network: String,
+    pub layer: String,
+    pub mode: String,
+    pub platform: String,
+    /// Dense (uncompressed) fetch in bits — the denominator of every
+    /// saving (16 bits per word).
+    pub baseline_bits: u64,
+    /// Compressed sub-tensor fetch in bits (line-granular for aligned
+    /// modes, exact for the compact baseline).
+    pub fetched_bits: u64,
+    /// Metadata record bits fetched (Table II widths × touches).
+    pub metadata_bits: u64,
+    /// Nonzero fraction of the input map — the paper's "optimal" line.
+    pub density: f64,
+    pub n_tiles: u64,
+}
+
+impl LayerBandwidth {
+    /// Metadata traffic in words (16-bit words).
+    pub fn metadata_words(&self) -> u64 {
+        self.metadata_bits.div_ceil(16)
+    }
+
+    /// Bandwidth saved ignoring metadata (Table III "Without overhead").
+    pub fn saving_without_meta(&self) -> f64 {
+        1.0 - self.fetched_bits as f64 / self.baseline_bits as f64
+    }
+
+    /// Bandwidth saved including metadata (Table III "With overhead").
+    pub fn saving_with_meta(&self) -> f64 {
+        1.0 - (self.fetched_bits + self.metadata_bits) as f64
+            / self.baseline_bits as f64
+    }
+
+    /// The paper's optimal reduction: the zero fraction.
+    pub fn optimal_saving(&self) -> f64 {
+        1.0 - self.density
+    }
+
+    /// Total bytes moved (with metadata).
+    pub fn bytes_with_meta(&self) -> u64 {
+        (self.fetched_bits + self.metadata_bits).div_ceil(8)
+    }
+
+    /// Baseline words (16-bit).
+    pub fn baseline_words(&self) -> u64 {
+        self.baseline_bits / BYTES_PER_WORD as u64 / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lb(baseline_bits: u64, fetched_bits: u64, meta_bits: u64) -> LayerBandwidth {
+        LayerBandwidth {
+            network: "t".into(),
+            layer: "l".into(),
+            mode: "m".into(),
+            platform: "p".into(),
+            baseline_bits,
+            fetched_bits,
+            metadata_bits: meta_bits,
+            density: 0.4,
+            n_tiles: 1,
+        }
+    }
+
+    #[test]
+    fn savings_arithmetic() {
+        let r = lb(16_000, 7_200, 800);
+        assert!((r.saving_without_meta() - 0.55).abs() < 1e-12);
+        assert!((r.saving_with_meta() - 0.50).abs() < 1e-12);
+        assert!((r.optimal_saving() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn meta_always_hurts() {
+        let r = lb(16_000, 7_200, 999);
+        assert!(r.saving_with_meta() < r.saving_without_meta());
+    }
+
+    #[test]
+    fn bytes_and_words_reported() {
+        let r = lb(16_000, 6_400, 160);
+        assert_eq!(r.bytes_with_meta(), (6_400 + 160) / 8);
+        assert_eq!(r.baseline_words(), 1000);
+        assert_eq!(r.metadata_words(), 10);
+    }
+}

@@ -1,0 +1,182 @@
+//! Tile walker: the exact fetch pattern of tiled CNN processing.
+//!
+//! For every output tile `(ty, tx)` and channel group, the accelerator
+//! fetches the halo'd input window
+//! `[ty·th·s − k·d, (ty·th + th − 1)·s + k·d + 1) × [… same in x …)`,
+//! clipped to the feature map (§III-B, Fig. 5). The walker enumerates
+//! these windows; the cost model in [`crate::sim::experiment`] prices
+//! them.
+
+use crate::config::layer::{ConvLayer, TileShape};
+
+/// One fetched input window (clipped to the map).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub ty: usize,
+    pub tx: usize,
+    /// Channel-tile index (groups of `tile.tc` input channels).
+    pub tcg: usize,
+    pub y0: usize,
+    pub y1: usize,
+    pub x0: usize,
+    pub x1: usize,
+    pub c0: usize,
+    pub c1: usize,
+}
+
+impl Window {
+    pub fn words(&self) -> u64 {
+        ((self.y1 - self.y0) * (self.x1 - self.x0) * (self.c1 - self.c0)) as u64
+    }
+}
+
+/// Iterates all input windows for a layer/tile pair.
+#[derive(Debug, Clone)]
+pub struct TileWalker {
+    pub layer: ConvLayer,
+    pub tile: TileShape,
+    pub n_ty: usize,
+    pub n_tx: usize,
+    pub n_tcg: usize,
+}
+
+impl TileWalker {
+    pub fn new(layer: ConvLayer, tile: TileShape) -> Self {
+        let n_ty = layer.out_h().div_ceil(tile.th);
+        let n_tx = layer.out_w().div_ceil(tile.tw);
+        let n_tcg = layer.c_in.div_ceil(tile.tc);
+        Self { layer, tile, n_ty, n_tx, n_tcg }
+    }
+
+    pub fn n_tiles(&self) -> u64 {
+        (self.n_ty * self.n_tx * self.n_tcg) as u64
+    }
+
+    /// The window for tile `(ty, tx, tcg)`.
+    pub fn window(&self, ty: usize, tx: usize, tcg: usize) -> Window {
+        let l = &self.layer;
+        let t = &self.tile;
+        let halo = l.halo() as i64;
+        let clip = |lo: i64, hi: i64, len: usize| -> (usize, usize) {
+            (lo.max(0) as usize, hi.min(len as i64) as usize)
+        };
+        let (y0, y1) = clip(
+            (ty * t.th * l.s) as i64 - halo,
+            ((ty * t.th + t.th - 1) * l.s) as i64 + halo + 1,
+            l.h,
+        );
+        let (x0, x1) = clip(
+            (tx * t.tw * l.s) as i64 - halo,
+            ((tx * t.tw + t.tw - 1) * l.s) as i64 + halo + 1,
+            l.w,
+        );
+        let c0 = tcg * t.tc;
+        let c1 = (c0 + t.tc).min(l.c_in);
+        Window { ty, tx, tcg, y0, y1, x0, x1, c0, c1 }
+    }
+
+    /// Iterate all windows in raster order.
+    pub fn iter(&self) -> impl Iterator<Item = Window> + '_ {
+        (0..self.n_ty).flat_map(move |ty| {
+            (0..self.n_tx).flat_map(move |tx| {
+                (0..self.n_tcg).map(move |tcg| self.window(ty, tx, tcg))
+            })
+        })
+    }
+
+    /// Total words fetched by a dense (uncompressed) fetch of every
+    /// window — the paper's baseline denominator. In the channel-planar
+    /// layout each pixel's 8-deep channel group is exactly one aligned
+    /// line, so the dense fetch has no alignment slack.
+    pub fn baseline_words(&self) -> u64 {
+        self.iter().map(|w| w.words()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_geometry_interior_and_edges() {
+        // Paper Fig. 5: 3x3 conv, 8x8 tile -> 10x10 windows stepping 8.
+        let l = ConvLayer::new(1, 1, 64, 64, 8, 8);
+        let walker = TileWalker::new(l, TileShape::new(8, 8, 8));
+        assert_eq!(walker.n_ty, 8);
+        // Tile (0,0): clipped halo on the top/left.
+        let w00 = walker.window(0, 0, 0);
+        assert_eq!((w00.y0, w00.y1, w00.x0, w00.x1), (0, 9, 0, 9));
+        // Interior tile: full 10x10.
+        let w11 = walker.window(1, 1, 0);
+        assert_eq!((w11.y0, w11.y1, w11.x0, w11.x1), (7, 17, 7, 17));
+        assert_eq!(w11.words(), 10 * 10 * 8);
+        // Last tile: clipped at the bottom/right.
+        let w77 = walker.window(7, 7, 0);
+        assert_eq!((w77.y1, w77.x1), (64, 64));
+    }
+
+    #[test]
+    fn strided_windows() {
+        let l = ConvLayer::new(1, 2, 56, 56, 64, 64);
+        let walker = TileWalker::new(l, TileShape::new(4, 8, 8));
+        // out 28x28, tiles 7x4(x8 groups).
+        assert_eq!((walker.n_ty, walker.n_tx, walker.n_tcg), (7, 4, 8));
+        let w = walker.window(1, 1, 0);
+        // y: [4*2-1, (4+3)*2+1+1) = [7,16); x: [8*2-1, (8+7)*2+2) = [15,32).
+        assert_eq!((w.y0, w.y1, w.x0, w.x1), (7, 16, 15, 32));
+        assert_eq!(w.y1 - w.y0, 9); // Table I: 9x17 window
+        assert_eq!(w.x1 - w.x0, 17);
+    }
+
+    #[test]
+    fn pointwise_windows_have_no_halo() {
+        let l = ConvLayer::new(0, 1, 56, 56, 256, 128);
+        let walker = TileWalker::new(l, TileShape::new(8, 16, 8));
+        let w = walker.window(1, 1, 3);
+        assert_eq!((w.y0, w.y1), (8, 16));
+        assert_eq!((w.x0, w.x1), (16, 32));
+        assert_eq!((w.c0, w.c1), (24, 32));
+    }
+
+    #[test]
+    fn ragged_map_is_fully_covered() {
+        // 13x13 AlexNet-style map with an 8x16 tile: output pixels all
+        // covered exactly once.
+        let l = ConvLayer::new(1, 1, 13, 13, 384, 384);
+        let walker = TileWalker::new(l, TileShape::new(8, 16, 8));
+        assert_eq!((walker.n_ty, walker.n_tx), (2, 1));
+        let mut covered = vec![false; 13 * 13];
+        for ty in 0..walker.n_ty {
+            for tx in 0..walker.n_tx {
+                // Output pixels of this tile.
+                for oy in ty * 8..((ty + 1) * 8).min(13) {
+                    for ox in tx * 16..((tx + 1) * 16).min(13) {
+                        assert!(!covered[oy * 13 + ox]);
+                        covered[oy * 13 + ox] = true;
+                    }
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn baseline_includes_halo_overlap() {
+        let l = ConvLayer::new(1, 1, 64, 64, 8, 8);
+        let walker = TileWalker::new(l, TileShape::new(8, 8, 8));
+        let base = walker.baseline_words();
+        // Dense fetch must exceed the raw map size (halo re-fetch).
+        assert!(base > (64 * 64 * 8) as u64);
+        // And be below the naive (10x10 per tile everywhere) bound.
+        assert!(base <= (64 * 10 * 10 * 8) as u64);
+    }
+
+    #[test]
+    fn dilated_halo() {
+        let l = ConvLayer::new(1, 1, 32, 32, 8, 8).dilated(2);
+        let walker = TileWalker::new(l, TileShape::new(8, 8, 8));
+        let w = walker.window(1, 1, 0);
+        // halo = 2: [8-2, 15+2+1) = [6, 18).
+        assert_eq!((w.y0, w.y1), (6, 18));
+    }
+}

@@ -1,0 +1,242 @@
+//! Dense H×W×C feature map.
+//!
+//! Storage layout is channel-minor (HWC): `data[(y*w + x)*c + ch]`. This
+//! matches the paper's storage unit — a sub-tensor is a contiguous-ish
+//! spatial patch over a channel group — and makes per-block extraction a
+//! strided copy.
+//!
+//! Values are `f32` in the API but quantised to bf16 on ingest so that
+//! compression round-trips are exact at the 16-bit word granularity the
+//! simulator uses (paper §IV-A: 8-word = 128-bit alignment → 16-bit
+//! words).
+
+/// Quantise an `f32` to bf16 (round-to-nearest-even) and back.
+#[inline]
+pub fn bf16_quantise(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // Round to nearest even on the truncated 16 mantissa bits.
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Encode an f32 as a bf16 word (upper 16 bits, RNE).
+#[inline]
+pub fn bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let rounded = bits.wrapping_add(0x7FFF + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// Decode a bf16 word to f32.
+#[inline]
+pub fn bf16_from_bits(w: u16) -> f32 {
+    f32::from_bits((w as u32) << 16)
+}
+
+/// A dense feature map of shape `h × w × c`, HWC layout, bf16-quantised.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FeatureMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    data: Vec<f32>,
+}
+
+impl FeatureMap {
+    /// All-zero map.
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, data: vec![0.0; h * w * c] }
+    }
+
+    /// Build from raw values (len must be `h*w*c`); quantises to bf16.
+    pub fn from_vec(h: usize, w: usize, c: usize, mut data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w * c, "shape/data mismatch");
+        for v in &mut data {
+            *v = bf16_quantise(*v);
+        }
+        Self { h, w, c, data }
+    }
+
+    /// Total elements (= words; 1 word per element).
+    pub fn words(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn index(&self, y: usize, x: usize, ch: usize) -> usize {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[self.index(y, x, ch)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: f32) {
+        let i = self.index(y, x, ch);
+        self.data[i] = bf16_quantise(v);
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Nonzero fraction.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let nnz = self.data.iter().filter(|&&v| v != 0.0).count();
+        nnz as f64 / self.data.len() as f64
+    }
+
+    /// Extract a spatial×channel block `[y0,y0+bh) × [x0,x0+bw) ×
+    /// [c0,c0+bc)` into a row-major (bh,bw,bc) vector. The block must be
+    /// fully inside the map.
+    pub fn extract_block(
+        &self,
+        y0: usize,
+        x0: usize,
+        c0: usize,
+        bh: usize,
+        bw: usize,
+        bc: usize,
+    ) -> Vec<f32> {
+        assert!(y0 + bh <= self.h && x0 + bw <= self.w && c0 + bc <= self.c);
+        let mut out = Vec::with_capacity(bh * bw * bc);
+        for y in y0..y0 + bh {
+            for x in x0..x0 + bw {
+                let base = (y * self.w + x) * self.c + c0;
+                out.extend_from_slice(&self.data[base..base + bc]);
+            }
+        }
+        out
+    }
+
+    /// Extract a block into a preallocated buffer (hot-path variant;
+    /// avoids per-block allocation in the packer). `out` is truncated
+    /// and refilled.
+    pub fn extract_block_into(
+        &self,
+        y0: usize,
+        x0: usize,
+        c0: usize,
+        bh: usize,
+        bw: usize,
+        bc: usize,
+        out: &mut Vec<f32>,
+    ) {
+        assert!(y0 + bh <= self.h && x0 + bw <= self.w && c0 + bc <= self.c);
+        out.clear();
+        out.reserve(bh * bw * bc);
+        for y in y0..y0 + bh {
+            for x in x0..x0 + bw {
+                let base = (y * self.w + x) * self.c + c0;
+                out.extend_from_slice(&self.data[base..base + bc]);
+            }
+        }
+    }
+
+    /// Write a block back (inverse of [`FeatureMap::extract_block`]).
+    pub fn write_block(
+        &mut self,
+        y0: usize,
+        x0: usize,
+        c0: usize,
+        bh: usize,
+        bw: usize,
+        bc: usize,
+        block: &[f32],
+    ) {
+        assert_eq!(block.len(), bh * bw * bc);
+        let mut i = 0;
+        for y in y0..y0 + bh {
+            for x in x0..x0 + bw {
+                let base = (y * self.w + x) * self.c + c0;
+                self.data[base..base + bc].copy_from_slice(&block[i..i + bc]);
+                i += bc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_roundtrip_is_idempotent() {
+        for &x in &[0.0f32, 1.0, -2.5, 3.1415926, 1e-20, 1e20, -0.0] {
+            let q = bf16_quantise(x);
+            assert_eq!(bf16_quantise(q), q, "quantise must be idempotent for {x}");
+            assert_eq!(bf16_from_bits(bf16_bits(q)), q);
+        }
+    }
+
+    #[test]
+    fn bf16_zero_stays_zero() {
+        assert_eq!(bf16_quantise(0.0), 0.0);
+        assert_eq!(bf16_bits(0.0), 0);
+    }
+
+    #[test]
+    fn indexing_and_accessors() {
+        let mut fm = FeatureMap::zeros(4, 5, 3);
+        fm.set(2, 3, 1, 7.5);
+        assert_eq!(fm.get(2, 3, 1), 7.5);
+        assert_eq!(fm.get(0, 0, 0), 0.0);
+        assert_eq!(fm.words(), 60);
+    }
+
+    #[test]
+    fn density_counts_nonzeros() {
+        let mut fm = FeatureMap::zeros(2, 2, 2);
+        fm.set(0, 0, 0, 1.0);
+        fm.set(1, 1, 1, 2.0);
+        assert!((fm.density() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn block_extract_write_roundtrip() {
+        let mut fm = FeatureMap::zeros(8, 8, 4);
+        let mut v = 0.0f32;
+        for y in 0..8 {
+            for x in 0..8 {
+                for ch in 0..4 {
+                    fm.set(y, x, ch, v);
+                    v += 0.25;
+                }
+            }
+        }
+        let block = fm.extract_block(2, 3, 1, 4, 2, 2);
+        assert_eq!(block.len(), 4 * 2 * 2);
+        assert_eq!(block[0], fm.get(2, 3, 1));
+        let mut fm2 = FeatureMap::zeros(8, 8, 4);
+        fm2.write_block(2, 3, 1, 4, 2, 2, &block);
+        for y in 2..6 {
+            for x in 3..5 {
+                for ch in 1..3 {
+                    assert_eq!(fm2.get(y, x, ch), fm.get(y, x, ch));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extract_block_into_matches_extract_block() {
+        let fm = FeatureMap::from_vec(4, 4, 2, (0..32).map(|i| i as f32).collect());
+        let a = fm.extract_block(1, 1, 0, 2, 3, 2);
+        let mut b = Vec::new();
+        fm.extract_block_into(1, 1, 0, 2, 3, 2, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_block_panics() {
+        let fm = FeatureMap::zeros(4, 4, 2);
+        let _ = fm.extract_block(3, 3, 0, 2, 2, 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dense feature-map container and synthetic sparsity generation.
+
+pub mod dense;
+pub mod sparsity;
+pub mod stats;
+
+pub use dense::FeatureMap;
+pub use sparsity::{SparsityModel, SparsityParams};
+pub use stats::SparsityStats;

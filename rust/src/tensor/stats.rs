@@ -1,0 +1,116 @@
+//! Sparsity statistics over feature maps and their sub-blocks.
+
+use super::dense::FeatureMap;
+
+/// Summary statistics of the zero structure of a feature map.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityStats {
+    pub words: usize,
+    pub nonzeros: usize,
+    /// Per-8×8×8-block densities (row-major over blocks).
+    pub block_densities: Vec<f64>,
+}
+
+impl SparsityStats {
+    /// Compute stats with the given block edge (spatial) and depth.
+    pub fn compute(fm: &FeatureMap, block_edge: usize, block_depth: usize) -> Self {
+        let nonzeros = fm.as_slice().iter().filter(|&&v| v != 0.0).count();
+        let mut block_densities = Vec::new();
+        let mut by = 0;
+        while by < fm.h {
+            let bh = block_edge.min(fm.h - by);
+            let mut bx = 0;
+            while bx < fm.w {
+                let bw = block_edge.min(fm.w - bx);
+                let mut bc0 = 0;
+                while bc0 < fm.c {
+                    let bc = block_depth.min(fm.c - bc0);
+                    let blk = fm.extract_block(by, bx, bc0, bh, bw, bc);
+                    let nnz = blk.iter().filter(|&&v| v != 0.0).count();
+                    block_densities.push(nnz as f64 / blk.len() as f64);
+                    bc0 += bc;
+                }
+                bx += bw;
+            }
+            by += bh;
+        }
+        Self { words: fm.words(), nonzeros, block_densities }
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.words == 0 {
+            0.0
+        } else {
+            self.nonzeros as f64 / self.words as f64
+        }
+    }
+
+    /// Mean of per-block densities.
+    pub fn block_density_mean(&self) -> f64 {
+        if self.block_densities.is_empty() {
+            return 0.0;
+        }
+        self.block_densities.iter().sum::<f64>() / self.block_densities.len() as f64
+    }
+
+    /// Variance of per-block densities (clustering indicator).
+    pub fn block_density_var(&self) -> f64 {
+        if self.block_densities.is_empty() {
+            return 0.0;
+        }
+        let m = self.block_density_mean();
+        self.block_densities.iter().map(|d| (d - m).powi(2)).sum::<f64>()
+            / self.block_densities.len() as f64
+    }
+
+    /// Fraction of blocks that are entirely zero (free wins for any
+    /// compressor with a per-block size field).
+    pub fn all_zero_block_fraction(&self) -> f64 {
+        if self.block_densities.is_empty() {
+            return 0.0;
+        }
+        self.block_densities.iter().filter(|&&d| d == 0.0).count() as f64
+            / self.block_densities.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+
+    #[test]
+    fn stats_on_zero_map() {
+        let fm = FeatureMap::zeros(16, 16, 8);
+        let s = SparsityStats::compute(&fm, 8, 8);
+        assert_eq!(s.density(), 0.0);
+        assert_eq!(s.all_zero_block_fraction(), 1.0);
+        assert_eq!(s.block_densities.len(), 4);
+    }
+
+    #[test]
+    fn stats_on_dense_map() {
+        let fm = FeatureMap::from_vec(8, 8, 8, vec![1.0; 512]);
+        let s = SparsityStats::compute(&fm, 8, 8);
+        assert_eq!(s.density(), 1.0);
+        assert_eq!(s.all_zero_block_fraction(), 0.0);
+        assert_eq!(s.block_densities, vec![1.0]);
+    }
+
+    #[test]
+    fn block_mean_tracks_global_density() {
+        let fm = generate(32, 32, 8, SparsityParams::iid(0.37, 3));
+        let s = SparsityStats::compute(&fm, 8, 8);
+        assert!((s.block_density_mean() - s.density()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ragged_edges_are_covered() {
+        // 13x13x384-style non-multiple geometry must still partition.
+        let fm = FeatureMap::from_vec(13, 13, 12, vec![1.0; 13 * 13 * 12]);
+        let s = SparsityStats::compute(&fm, 8, 8);
+        // Blocks: 2x2 spatial x 2 channel groups = 8.
+        assert_eq!(s.block_densities.len(), 8);
+        assert_eq!(s.density(), 1.0);
+    }
+}

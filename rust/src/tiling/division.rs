@@ -1,0 +1,575 @@
+//! Concrete sub-tensor grids over a feature map.
+//!
+//! A [`Division`] partitions an `H × W × C` feature map into sub-tensors:
+//! a list of spatial segments per axis (uneven for GrateTile, even for
+//! the uniform baselines) crossed with fixed-depth channel groups (the
+//! paper never divides along channels, §III-B; the 8-deep group is the
+//! storage block depth of Fig. 7).
+//!
+//! The division also carries the Fig. 7 *metadata block* grouping: every
+//! mod-N period (or uniform block) owns one pointer record; GrateTile
+//! records additionally hold the compressed sizes of the up-to-4 uneven
+//! sub-tensors inside the period.
+
+use super::grate::GrateConfig;
+use crate::config::hardware::Hardware;
+use crate::config::layer::{ConvLayer, TileShape};
+
+/// Channel depth of storage sub-tensors/blocks (Fig. 7: 8×8×8 blocks).
+pub const BLOCK_CHANNELS: usize = 8;
+
+/// One segment along a spatial axis: `[start, start + len)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Seg {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Seg {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// How to divide a feature map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DivisionMode {
+    /// Uniform `edge × edge × 8` blocks (the §IV baselines; `edge = 1`
+    /// is the compact-packed upper bound with 32-bit pointers).
+    Uniform { edge: usize },
+    /// GrateTile with hardware modulus `n` (paper recommends 8).
+    GrateTile { n: usize },
+    /// No spatial division: one sub-tensor per channel group (the
+    /// whole-channel ablation of §IV-B(3)).
+    WholeMap,
+}
+
+impl DivisionMode {
+    pub fn name(&self) -> String {
+        match self {
+            DivisionMode::Uniform { edge } => format!("Uniform {edge}x{edge}x8"),
+            DivisionMode::GrateTile { n } => format!("GrateTile (mod {n})"),
+            DivisionMode::WholeMap => "WholeMap".to_string(),
+        }
+    }
+
+    /// The division modes compared in Table III, in the paper's row order.
+    pub fn table3_modes() -> Vec<DivisionMode> {
+        vec![
+            DivisionMode::GrateTile { n: 4 },
+            DivisionMode::GrateTile { n: 8 },
+            DivisionMode::GrateTile { n: 16 },
+            DivisionMode::Uniform { edge: 8 },
+            DivisionMode::Uniform { edge: 4 },
+            DivisionMode::Uniform { edge: 2 },
+            DivisionMode::Uniform { edge: 1 },
+        ]
+    }
+}
+
+/// Why a division cannot be built for a layer/tile combination.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum DivisionError {
+    /// Paper Table III footnote a: the fetched tile is smaller than one
+    /// sub-tensor period, or `n` does not divide the window step — the
+    /// GrateTile configuration does not exist for this tile.
+    #[error("GrateTile mod {n} not applicable: {reason}")]
+    NotApplicable { n: usize, reason: String },
+    #[error("invalid division parameter: {0}")]
+    Invalid(String),
+}
+
+/// Reference to one sub-tensor in a division grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SubTensorRef {
+    pub iy: usize,
+    pub ix: usize,
+    pub icg: usize,
+}
+
+/// A concrete division of an `h × w × c` feature map.
+#[derive(Debug, Clone)]
+pub struct Division {
+    pub mode: DivisionMode,
+    pub fm_h: usize,
+    pub fm_w: usize,
+    pub fm_c: usize,
+    /// Spatial segments (cover `[0,h)` / `[0,w)` exactly, no overlap).
+    pub ys: Vec<Seg>,
+    pub xs: Vec<Seg>,
+    /// Channel group depth (8) and count.
+    pub cd: usize,
+    pub n_cgroups: usize,
+    /// Metadata block id per segment index, per axis (non-decreasing).
+    pub block_of_y: Vec<usize>,
+    pub block_of_x: Vec<usize>,
+    pub n_blocks_y: usize,
+    pub n_blocks_x: usize,
+    /// Metadata bits per (block_y, block_x, cgroup) record.
+    pub meta_bits_per_block: usize,
+    /// Compact packing (Uniform 1×1×8): sub-tensors are not line-aligned.
+    pub compact: bool,
+}
+
+/// Split `[0, len)` at the given sorted cut positions.
+fn segments_from_cuts(len: usize, cuts: &[usize]) -> Vec<Seg> {
+    let mut segs = Vec::with_capacity(cuts.len() + 1);
+    let mut prev = 0usize;
+    for &c in cuts {
+        debug_assert!(c > prev && c < len);
+        segs.push(Seg { start: prev, len: c - prev });
+        prev = c;
+    }
+    if prev < len || len == 0 {
+        if len > 0 {
+            segs.push(Seg { start: prev, len: len - prev });
+        }
+    }
+    segs
+}
+
+/// Group segments into metadata blocks: a new block starts at every
+/// segment whose start ≡ `anchor` (mod `n`). Returns (block_of, n_blocks).
+fn group_blocks(segs: &[Seg], n: usize, anchor: usize) -> (Vec<usize>, usize) {
+    let mut block_of = Vec::with_capacity(segs.len());
+    let mut bid = 0usize;
+    for (i, s) in segs.iter().enumerate() {
+        if i > 0 && s.start % n == anchor {
+            bid += 1;
+        }
+        block_of.push(bid);
+    }
+    (block_of, if segs.is_empty() { 0 } else { bid + 1 })
+}
+
+impl Division {
+    /// Build a division for a feature map processed by `layer` with
+    /// processing tile `tile` on hardware `hw`.
+    pub fn build(
+        mode: DivisionMode,
+        layer: &ConvLayer,
+        tile: &TileShape,
+        hw: &Hardware,
+        fm_h: usize,
+        fm_w: usize,
+        fm_c: usize,
+    ) -> Result<Division, DivisionError> {
+        let cd = BLOCK_CHANNELS;
+        let n_cgroups = fm_c.div_ceil(cd);
+        match mode {
+            DivisionMode::Uniform { edge } => {
+                if edge == 0 {
+                    return Err(DivisionError::Invalid("edge must be > 0".into()));
+                }
+                // The uniform grid is anchored at the *left window
+                // boundary* residue −k·d (the B_l progression of Fig. 5):
+                // the strongest uniform baseline, and the one the paper's
+                // accelerators [15], [16] use — a grid anchored at 0
+                // would double the halo over-fetch for free. GrateTile
+                // additionally cuts at B_r; uniform cuts at B_l only.
+                let anchor = crate::util::umod(-(layer.halo() as i64), edge as i64) as usize;
+                let cuts = |len: usize| -> Vec<usize> {
+                    let first = if anchor == 0 { edge } else { anchor };
+                    (0..)
+                        .map(|i| first + i * edge)
+                        .take_while(|&p| p < len)
+                        .collect()
+                };
+                let ys = segments_from_cuts(fm_h, &cuts(fm_h));
+                let xs = segments_from_cuts(fm_w, &cuts(fm_w));
+                let (block_of_y, n_blocks_y) = group_blocks(&ys, edge, anchor);
+                let (block_of_x, n_blocks_x) = group_blocks(&xs, edge, anchor);
+                // Table II: aligned uniform blocks carry a 28-bit pointer;
+                // the compact 1×1×8 scheme uses full 32-bit addresses.
+                let (meta_bits, compact) =
+                    if edge == 1 { (32, true) } else { (hw.pointer_bits, false) };
+                Ok(Division {
+                    mode,
+                    fm_h,
+                    fm_w,
+                    fm_c,
+                    ys,
+                    xs,
+                    cd,
+                    n_cgroups,
+                    block_of_y,
+                    block_of_x,
+                    n_blocks_y,
+                    n_blocks_x,
+                    meta_bits_per_block: meta_bits,
+                    compact,
+                })
+            }
+            DivisionMode::GrateTile { n } => {
+                if n == 0 {
+                    return Err(DivisionError::Invalid("modulus must be > 0".into()));
+                }
+                // Native configurations per axis; the hardware modulus n
+                // must divide both window steps (divisor property).
+                let gy = GrateConfig::for_axis(layer, tile.th);
+                let gx = GrateConfig::for_axis(layer, tile.tw);
+                let gy = gy.reduce(n).ok_or_else(|| DivisionError::NotApplicable {
+                    n,
+                    reason: format!(
+                        "mod {n} does not divide the vertical window step {}",
+                        layer.s * tile.th
+                    ),
+                })?;
+                let gx = gx.reduce(n).ok_or_else(|| DivisionError::NotApplicable {
+                    n,
+                    reason: format!(
+                        "mod {n} does not divide the horizontal window step {}",
+                        layer.s * tile.tw
+                    ),
+                })?;
+                // Table III footnote a: a fetched tile smaller than one
+                // period cannot amortise the block — not applicable.
+                if tile.in_h(layer) < n || tile.in_w(layer) < n {
+                    return Err(DivisionError::NotApplicable {
+                        n,
+                        reason: format!(
+                            "fetched tile {}x{} is smaller than the mod-{n} sub-tensor period",
+                            tile.in_h(layer),
+                            tile.in_w(layer)
+                        ),
+                    });
+                }
+                let ys = segments_from_cuts(fm_h, &gy.cuts(fm_h));
+                let xs = segments_from_cuts(fm_w, &gx.cuts(fm_w));
+                let (block_of_y, n_blocks_y) = group_blocks(&ys, n, gy.residues[0]);
+                let (block_of_x, n_blocks_x) = group_blocks(&xs, n, gx.residues[0]);
+                // Fig. 7b record: 28-bit pointer + 20 size bits (§III-C).
+                let meta_bits = hw.pointer_bits + hw.size_field_bits;
+                Ok(Division {
+                    mode,
+                    fm_h,
+                    fm_w,
+                    fm_c,
+                    ys,
+                    xs,
+                    cd,
+                    n_cgroups,
+                    block_of_y,
+                    block_of_x,
+                    n_blocks_y,
+                    n_blocks_x,
+                    meta_bits_per_block: meta_bits,
+                    compact: false,
+                })
+            }
+            DivisionMode::WholeMap => {
+                let ys = vec![Seg { start: 0, len: fm_h }];
+                let xs = vec![Seg { start: 0, len: fm_w }];
+                Ok(Division {
+                    mode,
+                    fm_h,
+                    fm_w,
+                    fm_c,
+                    ys,
+                    xs,
+                    cd,
+                    n_cgroups,
+                    block_of_y: vec![0],
+                    block_of_x: vec![0],
+                    n_blocks_y: 1,
+                    n_blocks_x: 1,
+                    meta_bits_per_block: hw.pointer_bits,
+                    compact: false,
+                })
+            }
+        }
+    }
+
+    /// Total sub-tensor count.
+    pub fn n_subtensors(&self) -> usize {
+        self.ys.len() * self.xs.len() * self.n_cgroups
+    }
+
+    /// Total metadata record count.
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks_y * self.n_blocks_x * self.n_cgroups
+    }
+
+    /// Total metadata bits for the map.
+    pub fn total_meta_bits(&self) -> u64 {
+        self.n_blocks() as u64 * self.meta_bits_per_block as u64
+    }
+
+    /// Channel depth of group `icg` (last group may be partial).
+    pub fn cg_depth(&self, icg: usize) -> usize {
+        debug_assert!(icg < self.n_cgroups);
+        self.cd.min(self.fm_c - icg * self.cd)
+    }
+
+    /// Words in sub-tensor `(iy, ix, icg)`.
+    pub fn subtensor_words(&self, r: SubTensorRef) -> usize {
+        self.ys[r.iy].len * self.xs[r.ix].len * self.cg_depth(r.icg)
+    }
+
+    /// Linear index of a sub-tensor.
+    pub fn linear(&self, r: SubTensorRef) -> usize {
+        (r.iy * self.xs.len() + r.ix) * self.n_cgroups + r.icg
+    }
+
+    /// Linear index of the metadata block owning sub-tensor `r`.
+    pub fn block_linear(&self, r: SubTensorRef) -> usize {
+        (self.block_of_y[r.iy] * self.n_blocks_x + self.block_of_x[r.ix]) * self.n_cgroups
+            + r.icg
+    }
+
+    /// Indices of segments on `axis` intersecting `[lo, hi)`.
+    /// Returns an index range into `ys`/`xs`.
+    pub fn covering(segs: &[Seg], lo: usize, hi: usize) -> std::ops::Range<usize> {
+        if lo >= hi || segs.is_empty() {
+            return 0..0;
+        }
+        // First segment with end > lo.
+        let first = segs.partition_point(|s| s.end() <= lo);
+        // First segment with start >= hi.
+        let last = segs.partition_point(|s| s.start < hi);
+        first..last
+    }
+
+    /// Iterate sub-tensor refs intersecting a window
+    /// `[y0,y1) × [x0,x1) × [c0,c1)` (clipped to the map by the caller).
+    pub fn intersecting(
+        &self,
+        y0: usize,
+        y1: usize,
+        x0: usize,
+        x1: usize,
+        c0: usize,
+        c1: usize,
+    ) -> Vec<SubTensorRef> {
+        let yr = Self::covering(&self.ys, y0, y1);
+        let xr = Self::covering(&self.xs, x0, x1);
+        let cg0 = c0 / self.cd;
+        let cg1 = c1.div_ceil(self.cd).min(self.n_cgroups);
+        let mut out =
+            Vec::with_capacity(yr.len() * xr.len() * cg1.saturating_sub(cg0));
+        for iy in yr {
+            for ix in xr.clone() {
+                for icg in cg0..cg1 {
+                    out.push(SubTensorRef { iy, ix, icg });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+
+    fn hw() -> Hardware {
+        Platform::NvidiaSmallTile.hardware()
+    }
+
+    fn layer31() -> ConvLayer {
+        ConvLayer::new(1, 1, 56, 56, 64, 64)
+    }
+
+    fn build(mode: DivisionMode) -> Division {
+        let l = layer31();
+        let t = hw().tile_for_layer(&l);
+        Division::build(mode, &l, &t, &hw(), l.h, l.w, l.c_in).unwrap()
+    }
+
+    /// Invariant: segments tile each axis exactly, in order, no overlap.
+    fn assert_covers(segs: &[Seg], len: usize) {
+        let mut pos = 0;
+        for s in segs {
+            assert_eq!(s.start, pos, "gap/overlap at {pos}");
+            assert!(s.len > 0);
+            pos = s.end();
+        }
+        assert_eq!(pos, len, "segments must cover [0,{len})");
+    }
+
+    #[test]
+    fn uniform_division_covers_and_counts() {
+        for edge in [1usize, 2, 4, 8] {
+            let d = build(DivisionMode::Uniform { edge });
+            assert_covers(&d.ys, 56);
+            assert_covers(&d.xs, 56);
+            // Anchored at -k mod edge: one extra clipped segment when the
+            // anchor is nonzero (edge > 1 here since k=1 -> anchor edge-1).
+            let expect = if edge == 1 { 56 } else { 56 / edge + 1 };
+            assert_eq!(d.ys.len(), expect, "edge {edge}");
+            assert_eq!(d.n_cgroups, 8);
+            // Uniform: one block per segment.
+            assert_eq!(d.n_blocks_y, d.ys.len());
+            assert_eq!(d.compact, edge == 1);
+        }
+    }
+
+    /// The uniform grid anchors at the left window boundary (B_l): for a
+    /// 3×3 kernel (k=1), cuts sit at 7, 15, ... (≡ -1 mod 8), so every
+    /// window's *left* edge is block-aligned and only the right halo
+    /// spills into one neighbouring block (the Fig. 3a waste).
+    #[test]
+    fn uniform_grid_anchors_at_left_boundary() {
+        let d = build(DivisionMode::Uniform { edge: 8 });
+        assert_eq!(d.ys[0], Seg { start: 0, len: 7 });
+        assert_eq!(d.ys[1], Seg { start: 7, len: 8 });
+        // Window of tile row 1: [7, 17) -> exactly 2 blocks ([7,15),[15,23)).
+        let cover = Division::covering(&d.ys, 7, 17);
+        assert_eq!(cover.len(), 2);
+    }
+
+    #[test]
+    fn gratetile_mod8_segments_are_6_2_pattern() {
+        let d = build(DivisionMode::GrateTile { n: 8 });
+        assert_covers(&d.ys, 56);
+        // G = {1,7} mod 8 on a 56-long axis: 1,6,2,6,2,...,6,2,...
+        // Boundaries at 1,7,9,...,49,55: clipped 1-long edge segments at
+        // both ends, alternating 6/2 in the interior.
+        let lens: Vec<usize> = d.ys.iter().map(|s| s.len).collect();
+        assert_eq!(lens[0], 1);
+        assert_eq!(*lens.last().unwrap(), 1);
+        let interior = &lens[1..lens.len() - 1];
+        assert!(
+            interior.chunks(2).all(|c| c[0] == 6 && (c.len() == 1 || c[1] == 2)),
+            "lens {lens:?}"
+        );
+        assert_eq!(lens.iter().sum::<usize>(), 56);
+        // Interior blocks hold exactly 2 segments.
+        assert_eq!(d.n_blocks_y, 8); // boundaries at 1,9,...,49 -> 8 blocks
+        assert_eq!(d.meta_bits_per_block, 48); // Table II, mod 8
+    }
+
+    #[test]
+    fn gratetile_mod16_not_applicable_on_small_tile() {
+        // Small tile (NVIDIA): (3,1) window step is 8 vertically — mod 16
+        // does not exist (Table III footnote a).
+        let l = layer31();
+        let t = hw().tile_for_layer(&l);
+        let e = Division::build(DivisionMode::GrateTile { n: 16 }, &l, &t, &hw(), 56, 56, 64);
+        assert!(matches!(e, Err(DivisionError::NotApplicable { n: 16, .. })));
+    }
+
+    #[test]
+    fn gratetile_mod16_applicable_on_large_tile() {
+        let l = layer31();
+        let ehw = Platform::EyerissLargeTile.hardware();
+        let t = ehw.tile_for_layer(&l);
+        let d =
+            Division::build(DivisionMode::GrateTile { n: 16 }, &l, &t, &ehw, 56, 56, 64).unwrap();
+        assert_covers(&d.ys, 56);
+        // Metadata per 16x16x8 block is still 48 bits -> 12 bits/KB
+        // (Table II row 3).
+        assert_eq!(d.meta_bits_per_block, 48);
+        let words: usize = 56 * 56 * 64;
+        let bits_per_kb = d.total_meta_bits() as f64 / (words as f64 / 512.0);
+        assert!(bits_per_kb < 48.0, "mod16 metadata {bits_per_kb} bits/KB");
+    }
+
+    #[test]
+    fn wholemap_single_subtensor_per_cgroup() {
+        let d = build(DivisionMode::WholeMap);
+        assert_eq!(d.n_subtensors(), 8);
+        assert_eq!(d.n_blocks(), 8);
+    }
+
+    #[test]
+    fn covering_binary_search() {
+        let segs = vec![
+            Seg { start: 0, len: 1 },
+            Seg { start: 1, len: 6 },
+            Seg { start: 7, len: 2 },
+            Seg { start: 9, len: 6 },
+            Seg { start: 15, len: 2 },
+        ];
+        assert_eq!(Division::covering(&segs, 0, 1), 0..1);
+        assert_eq!(Division::covering(&segs, 0, 2), 0..2);
+        assert_eq!(Division::covering(&segs, 7, 9), 2..3);
+        assert_eq!(Division::covering(&segs, 8, 10), 2..4);
+        assert_eq!(Division::covering(&segs, 16, 17), 4..5);
+        assert_eq!(Division::covering(&segs, 5, 5), 0..0);
+    }
+
+    /// Defining GrateTile invariant at the grid level: every window the
+    /// tile walker fetches is exactly tiled by whole sub-tensors (no
+    /// partial sub-tensor access).
+    #[test]
+    fn windows_never_split_subtensors() {
+        let l = layer31();
+        let t = hw().tile_for_layer(&l);
+        let d = build(DivisionMode::GrateTile { n: 8 });
+        let halo = l.halo() as i64;
+        for ty in 0..l.out_h().div_ceil(t.th) {
+            for tx in 0..l.out_w().div_ceil(t.tw) {
+                let y0 = ((ty * t.th * l.s) as i64 - halo).max(0) as usize;
+                let y1 = ((((ty + 1) * t.th - 1) * l.s) as i64 + halo + 1).min(l.h as i64) as usize;
+                let x0 = ((tx * t.tw * l.s) as i64 - halo).max(0) as usize;
+                let x1 = ((((tx + 1) * t.tw - 1) * l.s) as i64 + halo + 1).min(l.w as i64) as usize;
+                for iy in Division::covering(&d.ys, y0, y1) {
+                    assert!(d.ys[iy].start >= y0 && d.ys[iy].end() <= y1,
+                        "tile ({ty},{tx}) splits y-segment {iy}: window [{y0},{y1}) seg [{},{})",
+                        d.ys[iy].start, d.ys[iy].end());
+                }
+                for ix in Division::covering(&d.xs, x0, x1) {
+                    assert!(d.xs[ix].start >= x0 && d.xs[ix].end() <= x1);
+                }
+            }
+        }
+    }
+
+    /// Uniform divisions DO split windows (the Fig. 3a waste) — sanity
+    /// check that the contrast the paper draws actually shows up.
+    #[test]
+    fn uniform_splits_windows() {
+        let l = layer31();
+        let t = hw().tile_for_layer(&l);
+        let d = build(DivisionMode::Uniform { edge: 8 });
+        // Window of tile (0,0): rows [0, 10). Segment [8,16) intersects
+        // and is split.
+        let y1 = ((t.th - 1) * l.s + l.halo() + 1).min(l.h);
+        let cover = Division::covering(&d.ys, 0, y1);
+        let splits = cover.clone().any(|iy| d.ys[iy].end() > y1);
+        assert!(splits, "uniform 8x8 should over-hang the 10-row window");
+    }
+
+    #[test]
+    fn intersecting_counts_match_paper_example() {
+        // Paper §III-B: a 10×10 interior window over G={1,7} mod 8
+        // decomposes into 1×(6×6) + 2×(2×6) + 2×(6×2) + 4×(2×2) = 9
+        // sub-tensors per channel group.
+        let l = ConvLayer::new(1, 1, 64, 64, 8, 8);
+        let t = TileShape::new(8, 8, 8);
+        let d = Division::build(DivisionMode::GrateTile { n: 8 }, &l, &t, &hw(), 64, 64, 8)
+            .unwrap();
+        // Interior window [7, 17) x [7, 17).
+        let subs = d.intersecting(7, 17, 7, 17, 0, 8);
+        assert_eq!(subs.len(), 9);
+        let count = |sh: (usize, usize)| {
+            subs.iter()
+                .filter(|r| (d.ys[r.iy].len, d.xs[r.ix].len) == sh)
+                .count()
+        };
+        assert_eq!(count((6, 6)), 1, "one 6x6");
+        assert_eq!(count((2, 6)), 2, "two 2x6");
+        assert_eq!(count((6, 2)), 2, "two 6x2");
+        assert_eq!(count((2, 2)), 4, "four 2x2");
+        let total: usize = subs.iter().map(|r| d.subtensor_words(*r)).sum();
+        assert_eq!(total, 10 * 10 * 8);
+    }
+
+    #[test]
+    fn partial_channel_group() {
+        let l = ConvLayer::new(1, 1, 16, 16, 12, 8);
+        let t = TileShape::new(8, 8, 8);
+        let d = Division::build(DivisionMode::Uniform { edge: 8 }, &l, &t, &hw(), 16, 16, 12)
+            .unwrap();
+        assert_eq!(d.n_cgroups, 2);
+        assert_eq!(d.cg_depth(0), 8);
+        assert_eq!(d.cg_depth(1), 4);
+        let words: usize = (0..d.ys.len())
+            .flat_map(|iy| (0..d.xs.len()).flat_map(move |ix| (0..2).map(move |icg| (iy, ix, icg))))
+            .map(|(iy, ix, icg)| d.subtensor_words(SubTensorRef { iy, ix, icg }))
+            .sum();
+        assert_eq!(words, 16 * 16 * 12);
+    }
+}

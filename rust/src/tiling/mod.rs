@@ -1,0 +1,15 @@
+//! Feature-map division: the paper's core contribution (§III-B).
+//!
+//! * [`grate::GrateConfig`] — Eq. 1: `G = {-k·d, k·d - s + 1} (mod s·t)`
+//!   per spatial axis, plus the divisor-reduction property (a mod-N
+//!   configuration is valid for any N′ | N).
+//! * [`division::Division`] — a concrete sub-tensor grid over one
+//!   feature map, buildable as uniform (the baselines of §IV) or
+//!   GrateTile (uneven, boundary-aligned) divisions, with the metadata
+//!   block grouping of Fig. 7.
+
+pub mod division;
+pub mod grate;
+
+pub use division::{Division, DivisionError, DivisionMode, Seg, SubTensorRef};
+pub use grate::GrateConfig;

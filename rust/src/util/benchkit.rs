@@ -1,0 +1,210 @@
+//! Minimal benchmarking kit (offline stand-in for `criterion`).
+//!
+//! `cargo bench` targets in this crate use `harness = false` and drive
+//! [`Bencher`] directly: warm-up, fixed-duration sampling, and a
+//! median/mean/σ report with throughput. Deterministic workloads make the
+//! numbers comparable across runs; results are also appended as CSV so
+//! EXPERIMENTS.md §Perf can cite exact figures.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark: timings in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional bytes processed per iteration, for GB/s reporting.
+    pub bytes_per_iter: Option<u64>,
+    /// Optional items processed per iteration, for item/s reporting.
+    pub items_per_iter: Option<u64>,
+}
+
+impl Sample {
+    pub fn throughput_gbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.median_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12.1} ns/iter (mean {:>12.1} ± {:>8.1}, n={})",
+            self.name, self.median_ns, self.mean_ns, self.stddev_ns, self.iters
+        );
+        if let Some(gbs) = self.throughput_gbs() {
+            s.push_str(&format!("  {gbs:>8.3} GB/s"));
+        }
+        if let Some(items) = self.items_per_iter {
+            let per_s = items as f64 / (self.median_ns * 1e-9);
+            s.push_str(&format!("  {per_s:>12.0} items/s"));
+        }
+        s
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{:.1},{:.1},{},{}",
+            self.name,
+            self.iters,
+            self.median_ns,
+            self.mean_ns,
+            self.stddev_ns,
+            self.bytes_per_iter.map(|b| b.to_string()).unwrap_or_default(),
+            self.items_per_iter.map(|b| b.to_string()).unwrap_or_default(),
+        )
+    }
+}
+
+/// Fixed-budget micro-bench runner.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    samples: Vec<Sample>,
+    /// Quick mode (env `BENCH_QUICK=1`): tiny budgets for CI smoke runs.
+    quick: bool,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let quick = std::env::var("BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        let (warmup, measure) = if quick {
+            (Duration::from_millis(20), Duration::from_millis(80))
+        } else {
+            (Duration::from_millis(200), Duration::from_millis(900))
+        };
+        Self { warmup, measure, samples: Vec::new(), quick }
+    }
+
+    pub fn is_quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Benchmark `f`, labelling the result `name`.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Sample {
+        self.bench_with(name, None, None, &mut f)
+    }
+
+    /// Benchmark with a bytes-per-iteration annotation (GB/s reporting).
+    pub fn bench_bytes<R>(
+        &mut self,
+        name: &str,
+        bytes: u64,
+        mut f: impl FnMut() -> R,
+    ) -> &Sample {
+        self.bench_with(name, Some(bytes), None, &mut f)
+    }
+
+    /// Benchmark with an items-per-iteration annotation.
+    pub fn bench_items<R>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: impl FnMut() -> R,
+    ) -> &Sample {
+        self.bench_with(name, None, Some(items), &mut f)
+    }
+
+    fn bench_with<R>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        items: Option<u64>,
+        f: &mut impl FnMut() -> R,
+    ) -> &Sample {
+        // Warm-up and per-iteration cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let est_ns = (warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+
+        // Aim for ~30 timed batches within the measurement budget.
+        let batch = ((self.measure.as_nanos() as f64 / 30.0 / est_ns).ceil() as u64).max(1);
+        let mut per_iter_ns: Vec<f64> = Vec::new();
+        let meas_start = Instant::now();
+        let mut total_iters = 0u64;
+        while meas_start.elapsed() < self.measure || per_iter_ns.len() < 5 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            per_iter_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+            if per_iter_ns.len() > 10_000 {
+                break;
+            }
+        }
+
+        per_iter_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_iter_ns[per_iter_ns.len() / 2];
+        let mean = per_iter_ns.iter().sum::<f64>() / per_iter_ns.len() as f64;
+        let var = per_iter_ns.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / per_iter_ns.len() as f64;
+
+        let sample = Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            bytes_per_iter: bytes,
+            items_per_iter: items,
+        };
+        println!("{}", sample.report());
+        self.samples.push(sample);
+        self.samples.last().unwrap()
+    }
+
+    /// All samples collected so far.
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Append collected samples to `results/bench.csv` (best-effort).
+    pub fn write_csv(&self, bench_name: &str) {
+        let _ = std::fs::create_dir_all("results");
+        let path = "results/bench.csv";
+        let mut body = String::new();
+        for s in &self.samples {
+            body.push_str(&format!("{bench_name},{}\n", s.csv_row()));
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = f.write_all(body.as_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_timing() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let s = b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(s.median_ns > 0.0);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let buf = vec![1u8; 4096];
+        let s = b.bench_bytes("sum4k", 4096, || buf.iter().map(|&x| x as u64).sum::<u64>());
+        assert!(s.throughput_gbs().unwrap() > 0.0);
+    }
+}

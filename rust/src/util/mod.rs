@@ -1,0 +1,89 @@
+//! Small shared utilities: deterministic RNG, an offline property-testing
+//! harness, a micro-benchmark kit, and table formatting.
+//!
+//! The build image is fully offline, so crates like `rand`, `proptest` and
+//! `criterion` are unavailable; these modules provide the subset of their
+//! functionality the rest of the crate needs, with deterministic seeding so
+//! every test and benchmark is reproducible.
+
+pub mod benchkit;
+pub mod proptest_lite;
+pub mod rng;
+pub mod table;
+
+pub use rng::SplitMix64;
+
+/// Round `x` up to the next multiple of `to` (`to > 0`).
+#[inline]
+pub fn round_up(x: usize, to: usize) -> usize {
+    debug_assert!(to > 0);
+    x.div_ceil(to) * to
+}
+
+/// Ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Euclidean (always non-negative) remainder of `a mod m` for signed `a`.
+///
+/// GrateTile configurations (Eq. 1) are sets of residues of possibly
+/// negative boundary offsets such as `-k`, so the euclidean remainder is
+/// the right notion everywhere in `tiling`.
+#[inline]
+pub fn umod(a: i64, m: i64) -> i64 {
+    debug_assert!(m > 0);
+    a.rem_euclid(m)
+}
+
+/// Geometric mean of a slice of positive values; 0.0 for an empty slice.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-12).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(511, 16), 512);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 8), 0);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(8, 8), 1);
+        assert_eq!(ceil_div(9, 8), 2);
+    }
+
+    #[test]
+    fn umod_negative_operands() {
+        assert_eq!(umod(-1, 8), 7);
+        assert_eq!(umod(-9, 8), 7);
+        assert_eq!(umod(9, 8), 1);
+        assert_eq!(umod(0, 8), 0);
+        // AlexNet CONV1 example from the paper: -k = -5 (mod 32) = 27.
+        assert_eq!(umod(-5, 32), 27);
+    }
+
+    #[test]
+    fn geomean_matches_hand_computation() {
+        let g = geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+        let g3 = geomean(&[2.0, 2.0, 2.0]);
+        assert!((g3 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,192 @@
+//! A miniature property-based testing harness (offline stand-in for
+//! `proptest`).
+//!
+//! Supports: seeded case generation via [`SplitMix64`], a configurable
+//! number of cases, and greedy input shrinking for generators that expose
+//! a `shrink` step. Failures report the seed, the case index and the
+//! (shrunk) input `Debug` rendering, so every failure is reproducible by
+//! re-running with the printed seed.
+//!
+//! ```ignore
+//! forall(0xC0FFEE, 256, gen_vec_f32, |v| prop_roundtrip(v));
+//! ```
+
+use super::rng::SplitMix64;
+use std::fmt::Debug;
+
+/// Number of cases run by default in `forall`.
+pub const DEFAULT_CASES: usize = 256;
+
+/// A generator: draws a value from the RNG.
+pub trait Gen<T> {
+    fn generate(&self, rng: &mut SplitMix64) -> T;
+
+    /// Candidate "smaller" versions of a failing input. Default: none.
+    fn shrink(&self, _value: &T) -> Vec<T> {
+        Vec::new()
+    }
+}
+
+/// Function generators: any `Fn(&mut SplitMix64) -> T` is a `Gen<T>`
+/// without shrinking.
+impl<T, F: Fn(&mut SplitMix64) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut SplitMix64) -> T {
+        self(rng)
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panic with a reproducible
+/// report on the first failure (after attempting to shrink it).
+pub fn forall<T: Debug + Clone, G: Gen<T>>(
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_input(&gen, input, &prop);
+            panic!(
+                "property failed (seed={seed:#x}, case={case}/{cases})\n  input: {shrunk:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so the
+/// failure message can carry detail (e.g. which element mismatched).
+pub fn forall_res<T: Debug + Clone, G: Gen<T>>(
+    seed: u64,
+    cases: usize,
+    gen: G,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen.generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let ok = |t: &T| prop(t).is_ok();
+            let shrunk = shrink_input(&gen, input, &ok);
+            let final_msg = prop(&shrunk).err().unwrap_or_else(|| msg.clone());
+            panic!(
+                "property failed (seed={seed:#x}, case={case}/{cases}): {final_msg}\n  input: {shrunk:?}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly take the first shrink candidate that still
+/// fails, up to a fixed depth to guarantee termination.
+fn shrink_input<T: Debug + Clone, G: Gen<T>>(
+    gen: &G,
+    mut failing: T,
+    prop: &impl Fn(&T) -> bool,
+) -> T {
+    for _ in 0..64 {
+        let mut improved = false;
+        for cand in gen.shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    failing
+}
+
+/// Generator for `Vec<f32>` with length in `[0, max_len]`, sparse with
+/// probability `zero_p` (models ReLU feature-map words). Shrinks by
+/// halving length and zeroing elements.
+pub struct SparseVecGen {
+    pub max_len: usize,
+    pub zero_p: f64,
+}
+
+impl Gen<Vec<f32>> for SparseVecGen {
+    fn generate(&self, rng: &mut SplitMix64) -> Vec<f32> {
+        let len = rng.below(self.max_len + 1);
+        (0..len)
+            .map(|_| {
+                if rng.chance(self.zero_p) {
+                    0.0
+                } else {
+                    rng.next_f32() * 8.0 + 0.01
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if !v.is_empty() {
+            out.push(v[..v.len() / 2].to_vec());
+            out.push(v[v.len() / 2..].to_vec());
+            if let Some(i) = v.iter().position(|&x| x != 0.0) {
+                let mut z = v.clone();
+                z[i] = 0.0;
+                out.push(z);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 64, |r: &mut SplitMix64| r.below(100), |&n| n < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(2, 64, |r: &mut SplitMix64| r.below(100), |&n| n < 50);
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_counterexample() {
+        // Property: all values are zero. The shrinker should drive the
+        // failing vector down to something tiny.
+        let gen = SparseVecGen { max_len: 64, zero_p: 0.5 };
+        let mut rng = SplitMix64::new(3);
+        let failing = loop {
+            let v = gen.generate(&mut rng);
+            if v.iter().any(|&x| x != 0.0) {
+                break v;
+            }
+        };
+        let shrunk = shrink_input(&gen, failing, &|v: &Vec<f32>| v.iter().all(|&x| x == 0.0));
+        assert!(shrunk.iter().any(|&x| x != 0.0), "shrunk input must still fail");
+        assert!(shrunk.len() <= 2, "expected aggressive shrink, got len {}", shrunk.len());
+    }
+
+    #[test]
+    fn forall_res_reports_messages() {
+        forall_res(4, 32, |r: &mut SplitMix64| r.below(8), |&n| {
+            if n < 8 {
+                Ok(())
+            } else {
+                Err(format!("{n} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    fn sparse_vec_gen_respects_bounds() {
+        let gen = SparseVecGen { max_len: 32, zero_p: 0.9 };
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..200 {
+            let v = gen.generate(&mut rng);
+            assert!(v.len() <= 32);
+        }
+    }
+}

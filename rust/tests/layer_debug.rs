@@ -1,0 +1,31 @@
+//! Debug dump: per-layer savings for a few division modes.
+use gratetile::compress::Scheme;
+use gratetile::config::{benchmark_suite, Platform};
+use gratetile::sim::experiment::{bench_feature_map, run_bench_layer};
+use gratetile::tiling::DivisionMode;
+
+#[test]
+#[ignore = "debug dump"]
+fn per_layer_dump() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    for b in benchmark_suite() {
+        let fm = bench_feature_map(&b);
+        let mut line = format!("{:<18} d={:.2}", format!("{} {}", b.network.name(), b.name), fm.density());
+        for mode in [
+            DivisionMode::GrateTile { n: 8 },
+            DivisionMode::Uniform { edge: 8 },
+            DivisionMode::Uniform { edge: 4 },
+            DivisionMode::Uniform { edge: 1 },
+        ] {
+            match run_bench_layer(&hw, &b, mode, Scheme::Bitmask, &fm) {
+                Ok(r) => line.push_str(&format!(
+                    "  {}={:>6.1}%",
+                    mode.name().replace("Uniform ", "u").replace("GrateTile (mod ", "g").replace(')', ""),
+                    r.saving_with_meta() * 100.0
+                )),
+                Err(_) => line.push_str("  N/A"),
+            }
+        }
+        println!("{line}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Randomised cross-module property tests (proptest_lite): the
+//! invariants that must hold for *any* layer geometry, sparsity and
+//! division mode, not just the benchmark configurations.
+
+use gratetile::compress::{Compressor, Scheme};
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::layout::{Fetcher, Packer};
+use gratetile::memsim::Dram;
+use gratetile::sim::experiment::run_layer;
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::tiling::division::{Division, DivisionMode};
+use gratetile::util::proptest_lite::forall_res;
+use gratetile::util::SplitMix64;
+
+/// Random layer + mode + density scenario.
+#[derive(Debug, Clone)]
+struct Scenario {
+    layer: ConvLayer,
+    mode: DivisionMode,
+    scheme: Scheme,
+    density: f64,
+    seed: u64,
+}
+
+fn gen_scenario(r: &mut SplitMix64) -> Scenario {
+    let k = r.below(3); // kernels 1/3/5
+    let s = 1 + r.below(2);
+    let d = if k > 0 && r.chance(0.2) { 2 } else { 1 };
+    let h = 9 + r.below(40);
+    let w = 9 + r.below(40);
+    let c = 8 * (1 + r.below(4));
+    let mode = match r.below(6) {
+        0 => DivisionMode::GrateTile { n: 4 },
+        1 | 2 => DivisionMode::GrateTile { n: 8 },
+        3 => DivisionMode::Uniform { edge: 8 },
+        4 => DivisionMode::Uniform { edge: 4 },
+        _ => DivisionMode::Uniform { edge: 1 },
+    };
+    let scheme = match r.below(3) {
+        0 => Scheme::Bitmask,
+        1 => Scheme::Zrlc,
+        _ => Scheme::Dictionary,
+    };
+    Scenario {
+        layer: ConvLayer { k, s, d, h, w, c_in: c, c_out: c },
+        mode,
+        scheme,
+        density: r.next_f64(),
+        seed: r.next_u64(),
+    }
+}
+
+/// Lossless storage: packing then fetching the whole map returns the
+/// exact bf16 feature map, for every (geometry, mode, codec, density).
+#[test]
+fn prop_pack_fetch_lossless() {
+    forall_res(0xFE7C, 60, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()), // N/A combinations are fine
+        };
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        let packed = Packer::new(hw, sc.scheme).pack(&fm, &division, true);
+        let mut dram = Dram::default();
+        let win = Fetcher::new(&packed).fetch_window(&mut dram, 0, h, 0, w, 0, c);
+        for y in 0..h {
+            for x in 0..w {
+                for ch in 0..c {
+                    if win.get(y, x, ch) != fm.get(y, x, ch) {
+                        return Err(format!(
+                            "mismatch at ({y},{x},{ch}) mode={} scheme={}",
+                            sc.mode.name(),
+                            sc.scheme.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Division completeness: sub-tensor word counts sum to the map size,
+/// and every sub-tensor belongs to exactly one metadata block.
+#[test]
+fn prop_division_partitions_map() {
+    forall_res(0xD117, 120, gen_scenario, |sc| {
+        let hw = Platform::EyerissLargeTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let mut total = 0usize;
+        for iy in 0..division.ys.len() {
+            for ix in 0..division.xs.len() {
+                for icg in 0..division.n_cgroups {
+                    let r = gratetile::tiling::division::SubTensorRef { iy, ix, icg };
+                    total += division.subtensor_words(r);
+                    let b = division.block_linear(r);
+                    if b >= division.n_blocks() {
+                        return Err(format!("block id {b} out of range"));
+                    }
+                }
+            }
+        }
+        if total != h * w * c {
+            return Err(format!("partition covers {total} of {}", h * w * c));
+        }
+        Ok(())
+    });
+}
+
+/// Bandwidth sanity for every scenario: fetched >= information content
+/// (can't beat the nonzeros), saving <= optimal + epsilon for sparse
+/// codecs, and metadata strictly positive.
+#[test]
+fn prop_bandwidth_bounds() {
+    forall_res(0xBA4D, 40, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        let r = match run_layer(&hw, &sc.layer, &fm, sc.mode, sc.scheme) {
+            Ok(r) => r,
+            Err(_) => return Ok(()),
+        };
+        if r.baseline_bits == 0 {
+            return Err("empty baseline".into());
+        }
+        if r.metadata_bits == 0 {
+            return Err("metadata must be accounted".into());
+        }
+        // A window's fetch can't be smaller than its nonzero payload
+        // (bitmask/zrlc/dict all store nonzeros verbatim at >= 16 bits).
+        if sc.scheme == Scheme::Bitmask {
+            let floor = (r.baseline_bits as f64) * fm.density() * 0.95;
+            if (r.fetched_bits as f64) < floor {
+                return Err(format!(
+                    "fetched {} below information floor {floor}",
+                    r.fetched_bits
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Codec round-trips on adversarial payloads: long runs, alternating
+/// patterns, denormals, negative zero, all-dense.
+#[test]
+fn codec_adversarial_payloads() {
+    let patterns: Vec<Vec<f32>> = vec![
+        vec![0.0; 1024],
+        vec![1.0; 1024],
+        (0..1024).map(|i| if i % 2 == 0 { 0.0 } else { 1.5 }).collect(),
+        (0..1024).map(|i| if i % 33 == 0 { -2.5 } else { 0.0 }).collect(),
+        (0..1024)
+            .map(|i| if i < 512 { 0.0 } else { (i as f32 - 700.0) * 1e-3 })
+            .collect(),
+        vec![-0.0; 64], // negative zero is a zero
+        (0..97).map(|i| (i as f32) * 1e30).collect(), // big magnitudes
+        (0..97).map(|i| (i as f32) * 1e-30).collect(), // tiny magnitudes
+    ];
+    for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw] {
+        let codec = scheme.build();
+        for (pi, p) in patterns.iter().enumerate() {
+            let quant: Vec<f32> =
+                p.iter().map(|&x| gratetile::tensor::dense::bf16_quantise(x)).collect();
+            let comp = codec.compress(&quant);
+            let mut out = vec![9.0f32; quant.len()];
+            codec.decompress(&comp, &mut out);
+            // -0.0 compresses as a zero; compare with == (true for ±0).
+            assert_eq!(out, quant, "{} pattern {pi}", scheme.name());
+            assert_eq!(
+                comp.compressed_words(),
+                codec.compressed_words(&quant),
+                "{} pattern {pi} size fast path",
+                scheme.name()
+            );
+        }
+    }
+}
+
+/// The mod-reduction property at the full-division level: a mod-4
+/// GrateTile division's cut set contains the mod-8 division's cuts
+/// (N′ | N ⇒ more cuts, never fewer).
+#[test]
+fn prop_mod_reduction_refines_cuts() {
+    forall_res(0x04EF, 80, |r: &mut SplitMix64| {
+        let k = r.below(3);
+        let s = 1 + r.below(2);
+        (k, s, 16 + r.below(48))
+    }, |&(k, s, len)| {
+        let layer = ConvLayer::new(k, s, 224, 224, 64, 64);
+        let hw = Platform::EyerissLargeTile.hardware();
+        let tile = hw.tile_for_layer(&layer);
+        let d8 = Division::build(DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, len, len, 8);
+        let d4 = Division::build(DivisionMode::GrateTile { n: 4 }, &layer, &tile, &hw, len, len, 8);
+        let (Ok(d8), Ok(d4)) = (d8, d4) else { return Ok(()) };
+        let cuts = |d: &Division| -> Vec<usize> {
+            d.ys.iter().skip(1).map(|s| s.start).collect()
+        };
+        let c8 = cuts(&d8);
+        let c4 = cuts(&d4);
+        for c in &c8 {
+            if !c4.contains(c) {
+                return Err(format!("mod-4 misses mod-8 cut {c} (k={k},s={s},len={len})"));
+            }
+        }
+        Ok(())
+    });
+}

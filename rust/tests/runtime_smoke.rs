@@ -1,0 +1,96 @@
+//! Runtime integration: load the AOT artifacts via PJRT and execute
+//! them. Requires `make artifacts` (the Makefile test target runs it).
+
+use gratetile::runtime::{Engine, Manifest};
+use std::path::Path;
+
+fn artifacts_dir() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts").leak()
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+#[test]
+fn cnn_artifact_runs_and_yields_sparse_activations() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).expect("manifest");
+    let entry = manifest.get("cnn").expect("cnn entry");
+    let engine = Engine::cpu().expect("cpu client");
+    let model = engine.load_entry(entry).expect("compile cnn");
+
+    // Structured synthetic image (gradient + blob), values in [0,1].
+    let (h, w, c) = (entry.input_dims[0], entry.input_dims[1], entry.input_dims[2]);
+    let image: Vec<f32> = (0..h * w * c)
+        .map(|i| {
+            let y = (i / (w * c)) as f32 / h as f32;
+            let x = ((i / c) % w) as f32 / w as f32;
+            (x * y + (10.0 * x).sin() * 0.1).max(0.0)
+        })
+        .collect();
+
+    let fms = model.run_cnn(entry, &image).expect("run cnn");
+    assert_eq!(fms.len(), entry.n_outputs);
+    for (i, fm) in fms.iter().enumerate() {
+        let (eh, ew, ec) = entry.layer_shapes[i];
+        assert_eq!((fm.h, fm.w, fm.c), (eh, ew, ec), "layer {i} shape");
+        // ReLU activations: nonnegative, nontrivially sparse.
+        assert!(fm.as_slice().iter().all(|&v| v >= 0.0), "layer {i} negative");
+        let d = fm.density();
+        assert!(d > 0.05 && d < 0.98, "layer {i} density {d}");
+    }
+}
+
+#[test]
+fn compress_stats_artifact_matches_rust_bitmask() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(artifacts_dir()).expect("manifest");
+    let entry = manifest.get("compress_stats").expect("entry");
+    let engine = Engine::cpu().expect("cpu client");
+    let model = engine.load_entry(entry).expect("compile stats");
+
+    // 8 blocks of 512 with varied sparsity.
+    let b = entry.input_dims[0];
+    let n = entry.input_dims[1];
+    let mut rng = gratetile::util::SplitMix64::new(77);
+    let blocks: Vec<f32> = (0..b * n)
+        .map(|i| {
+            let density = 0.1 + 0.1 * ((i / n) as f64);
+            if rng.chance(density) {
+                rng.next_f32() + 0.01
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let outs = model.run_literals(&[(&blocks, &entry.input_dims)]).expect("run");
+    assert_eq!(outs.len(), 2);
+    let mask_dev: Vec<i32> = outs[0].to_vec::<i32>().expect("mask i32");
+    let nnz_dev: Vec<i32> = outs[1].to_vec::<i32>().expect("nnz i32");
+    assert_eq!(mask_dev.len(), b * 32);
+    assert_eq!(nnz_dev.len(), b);
+
+    // Bit-exact agreement with the Rust codec: the L1 kernel and the L3
+    // packer must describe the same storage layout.
+    use gratetile::compress::{Bitmask, Compressor};
+    for bi in 0..b {
+        let block = &blocks[bi * n..(bi + 1) * n];
+        let comp = Bitmask.compress(block);
+        let nnz = block.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz_dev[bi] as usize, nnz, "block {bi} nnz");
+        for (j, &mw) in comp.words[..32].iter().enumerate() {
+            assert_eq!(
+                mask_dev[bi * 32 + j] as u16,
+                mw,
+                "block {bi} mask word {j}"
+            );
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Smoke validation of the Table III reproduction shape: run the full
+//! benchmark suite on both platforms and assert the paper's orderings
+//! (who wins, roughly by how much). Run with `--ignored` for the full
+//! suite; the default test uses a reduced suite for CI speed.
+
+use gratetile::compress::Scheme;
+use gratetile::config::{benchmark_suite, Platform};
+use gratetile::sim::experiment::run_suite;
+use gratetile::tiling::DivisionMode;
+
+fn print_suite(platform: Platform) -> Vec<(String, Option<f64>, Option<f64>)> {
+    let hw = platform.hardware();
+    let benches = benchmark_suite();
+    let modes = DivisionMode::table3_modes();
+    let suite = run_suite(&hw, &benches, &modes, Scheme::Bitmask);
+    let mut rows = Vec::new();
+    println!("== {} (optimal {:.1}%) ==", hw.name, suite.geomean_optimal() * 100.0);
+    for (i, m) in modes.iter().enumerate() {
+        let wo = suite.geomean_saving(i, false);
+        let wi = suite.geomean_saving(i, true);
+        println!(
+            "{:<22} without {:>6}  with {:>6}",
+            m.name(),
+            wo.map(|v| format!("{:.1}%", v * 100.0)).unwrap_or("N/A".into()),
+            wi.map(|v| format!("{:.1}%", v * 100.0)).unwrap_or("N/A".into()),
+        );
+        rows.push((m.name(), wo, wi));
+    }
+    rows
+}
+
+#[test]
+#[ignore = "full-suite smoke; run explicitly"]
+fn table3_shape_holds() {
+    for platform in [Platform::NvidiaSmallTile, Platform::EyerissLargeTile] {
+        let rows = print_suite(platform);
+        let get = |name: &str, with: bool| -> Option<f64> {
+            rows.iter().find(|r| r.0 == name).and_then(|r| if with { r.2 } else { r.1 })
+        };
+        let g8 = get("GrateTile (mod 8)", true).unwrap();
+        let u8_ = get("Uniform 8x8x8", true).unwrap();
+        let u4 = get("Uniform 4x4x8", true).unwrap();
+        let u2 = get("Uniform 2x2x8", true).unwrap();
+        let u1 = get("Uniform 1x1x8", true).unwrap();
+        let u1_wo = get("Uniform 1x1x8", false).unwrap();
+        let g8_wo = get("GrateTile (mod 8)", false).unwrap();
+        // Paper: GrateTile mod 8 beats every uniform division.
+        assert!(g8 > u8_ && g8 > u4 && g8 > u2 && g8 > u1, "mod8 must win");
+        // Paper: ~55% overall saving for mod 8.
+        assert!((0.45..0.65).contains(&g8), "mod8 saving {g8}");
+        // Paper: 1x1x8 without overhead is the upper bound; its 25%
+        // metadata then collapses it by >20pp to the bottom of the table.
+        assert!(u1_wo >= g8_wo - 0.02, "compact upper bound");
+        assert!(u1_wo - u1 > 0.20, "compact must collapse under metadata");
+        assert!(u1 < g8 && u1 < u4, "compact-with-meta loses to mod8 and u4");
+    }
+}
