@@ -25,7 +25,7 @@ use gratetile::util::table::Table;
 use std::path::Path;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gratetile::util::error::Result<()> {
     let artifacts = Path::new("artifacts");
     let manifest = Manifest::load(artifacts)?;
     let entry = manifest.get("cnn")?;

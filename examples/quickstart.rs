@@ -13,7 +13,7 @@ use gratetile::sim::experiment::run_layer;
 use gratetile::tensor::sparsity::{generate, SparsityParams};
 use gratetile::tiling::{Division, DivisionMode};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gratetile::util::error::Result<()> {
     // A VGG-ish layer: 3x3 stride-1 conv over a 56x56x64 input map at
     // 35% density (typical mid-network ReLU sparsity).
     let hw = Platform::EyerissLargeTile.hardware();

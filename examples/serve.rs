@@ -10,7 +10,7 @@ use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::coordinator::{PipelineConfig, Server, ServerConfig, Weights};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gratetile::util::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let workers: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
     let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(32);

@@ -1,17 +1,31 @@
 //! Perf bench: the bandwidth-simulator tile walk (the inner loop of
-//! every table/figure regeneration). §Perf target: a full 23-layer
-//! Table III sweep in < 2 s (measured end-to-end in table3_divisions).
+//! every table/figure regeneration), measuring both pricing paths in
+//! the same run:
+//!
+//! * `walk/...` — the production `run_layer` end to end (pack + prefix
+//!   pricer), the path every suite sweep takes.
+//! * `price/.../prefix` vs `price/.../naive` — window pricing alone on
+//!   the same pre-packed map: the prefix-sum pricer's 8-corner-lookup
+//!   walk against the seed's per-sub-tensor triple loop.
+//!
+//! §Perf acceptance (EXPERIMENTS.md): on the vgg_conv1_2/224x224x64 ×
+//! uniform1 case the prefix pricer must beat the naive walker by ≥ 5×
+//! (asserted below). Property tests prove the two are bit-exact.
 
 use gratetile::compress::Scheme;
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
+use gratetile::layout::Packer;
 use gratetile::sim::experiment::run_layer;
+use gratetile::sim::pricer::{price_naive, LayerPricer};
+use gratetile::sim::walker::TileWalker;
 use gratetile::tensor::sparsity::{generate, SparsityParams};
-use gratetile::tiling::DivisionMode;
+use gratetile::tiling::{Division, DivisionMode};
 use gratetile::util::benchkit::Bencher;
 
 fn main() {
     let mut b = Bencher::new();
+    let hw = Platform::NvidiaSmallTile.hardware();
     for (label, h, w, c) in [
         ("vgg_conv1_2/224x224x64", 224usize, 224usize, 64usize),
         ("vdsr/256x256x64", 256, 256, 64),
@@ -25,10 +39,34 @@ fn main() {
             ("uniform4", DivisionMode::Uniform { edge: 4 }),
             ("uniform1", DivisionMode::Uniform { edge: 1 }),
         ] {
-            let hw = Platform::NvidiaSmallTile.hardware();
+            // End-to-end production path (pack + prefix pricing).
             b.bench_items(&format!("walk/{label}/{m}"), words, || {
                 run_layer(&hw, &layer, &fm, mode, Scheme::Bitmask).map(|r| r.fetched_bits)
             });
+
+            // Pricing-only comparison on one shared packed map.
+            let tile = hw.tile_for_layer(&layer);
+            let division = Division::build(mode, &layer, &tile, &hw, h, w, c).unwrap();
+            let packed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, false);
+            let walker = TileWalker::new(layer, tile);
+            let pricer = LayerPricer::new(&packed);
+            let fast_name = format!("price/{label}/{m}/prefix");
+            let slow_name = format!("price/{label}/{m}/naive");
+            b.bench_items(&fast_name, walker.n_tiles(), || pricer.price(&walker));
+            b.bench_items(&slow_name, walker.n_tiles(), || price_naive(&packed, &walker));
+            assert_eq!(
+                pricer.price(&walker),
+                price_naive(&packed, &walker),
+                "pricer must stay bit-exact with the naive walker on {label}/{m}"
+            );
+            let speedup = b.report_speedup(&fast_name, &slow_name).unwrap();
+            if label == "vgg_conv1_2/224x224x64" && m == "uniform1" {
+                assert!(
+                    speedup >= 5.0,
+                    "§Perf acceptance: prefix pricer must be ≥ 5x faster than the \
+                     naive walker on {label}/{m}, measured {speedup:.1}x"
+                );
+            }
         }
     }
     b.write_csv("perf_walk");

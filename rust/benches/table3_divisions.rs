@@ -3,9 +3,15 @@
 
 use gratetile::compress::Scheme;
 use gratetile::util::benchkit::Bencher;
+use gratetile::util::parallel::threads_for;
 use std::time::Instant;
 
 fn main() {
+    // Pricing units fanned by the suite engine: platforms × modes × layers.
+    let units = 2
+        * gratetile::tiling::DivisionMode::table3_modes().len()
+        * gratetile::config::zoo::benchmark_suite().len();
+    println!("suite engine: {} worker threads for {units} units", threads_for(units));
     let t0 = Instant::now();
     let t = gratetile::harness::table3(Scheme::Bitmask);
     let elapsed = t0.elapsed();

@@ -55,6 +55,12 @@ impl Cli {
         self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Typed option without a default: `None` when absent or unparsable
+    /// (e.g. `--jobs 8` for the parallel suite engine).
+    pub fn opt_parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.opt(key).and_then(|v| v.parse().ok())
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -93,6 +99,15 @@ mod tests {
         assert_eq!(c.opt_f64("density", 0.3), 0.4);
         assert_eq!(c.opt_usize("missing", 7), 7);
         assert_eq!(c.opt_or("scheme", "bitmask"), "bitmask");
+    }
+
+    #[test]
+    fn opt_parsed_typed_access() {
+        let c = parse("table3 --jobs 8 --density 0.4 --bad x");
+        assert_eq!(c.opt_parsed::<usize>("jobs"), Some(8));
+        assert_eq!(c.opt_parsed::<f64>("density"), Some(0.4));
+        assert_eq!(c.opt_parsed::<usize>("bad"), None); // unparsable
+        assert_eq!(c.opt_parsed::<usize>("missing"), None);
     }
 
     #[test]

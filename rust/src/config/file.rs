@@ -26,7 +26,8 @@
 
 use super::hardware::{Hardware, Platform, WORDS_PER_LINE};
 use super::layer::{ConvLayer, TileShape};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::path::Path;
 
 /// A layer entry from a config file.
@@ -70,9 +71,9 @@ impl FileConfig {
             };
             let req_usize = |key: &str| -> Result<usize> {
                 get(key)
-                    .ok_or_else(|| anyhow!("[{header}] missing '{key}'"))?
+                    .ok_or_else(|| err!("[{header}] missing '{key}'"))?
                     .parse()
-                    .map_err(|e| anyhow!("[{header}] {key}: {e}"))
+                    .map_err(|e| err!("[{header}] {key}: {e}"))
             };
             if header == "hardware" {
                 let tile = get("base_tile").unwrap_or("8x16x8");
@@ -80,7 +81,7 @@ impl FileConfig {
                     .split('x')
                     .map(|d| d.trim().parse())
                     .collect::<std::result::Result<_, _>>()
-                    .map_err(|e| anyhow!("[hardware] base_tile: {e}"))?;
+                    .map_err(|e| err!("[hardware] base_tile: {e}"))?;
                 if dims.len() != 3 {
                     bail!("[hardware] base_tile must be th x tw x tc");
                 }
@@ -141,7 +142,7 @@ impl FileConfig {
             if let Some(h) = line.strip_prefix('[') {
                 let header = h
                     .strip_suffix(']')
-                    .ok_or_else(|| anyhow!("line {}: unterminated section", ln + 1))?
+                    .ok_or_else(|| err!("line {}: unterminated section", ln + 1))?
                     .trim()
                     .to_string();
                 flush(section.take(), &mut cfg)?;

@@ -25,7 +25,7 @@ use crate::memsim::{Dram, Stream};
 use crate::sim::walker::TileWalker;
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, DivisionMode};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::sync::mpsc::sync_channel;
 use std::time::{Duration, Instant};
 

@@ -10,7 +10,7 @@ use super::pipeline::{LayerRunner, PipelineConfig};
 use crate::config::layer::ConvLayer;
 use crate::tensor::sparsity::{generate, SparsityParams};
 use crate::tensor::FeatureMap;
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
@@ -154,7 +154,7 @@ impl Server {
             if r.completed == n {
                 Ok(r)
             } else {
-                anyhow::bail!("{} of {n} requests completed", r.completed)
+                crate::bail!("{} of {n} requests completed", r.completed)
             }
         })
     }

@@ -4,7 +4,7 @@ use crate::compress::Scheme;
 use crate::config::hardware::Platform;
 use crate::config::zoo::Network;
 use crate::power::{network_power, ArrayConfig, EnergyTable};
-use crate::sim::experiment::run_suite_shared;
+use crate::sim::experiment::{run_suite_shared, run_suites};
 use crate::tiling::division::DivisionMode;
 use crate::util::table::Table;
 
@@ -50,10 +50,11 @@ pub fn fig8(scheme: Scheme) -> Table {
         scheme.name()
     ))
     .header(vec!["Division mode", "NVIDIA %", "Eyeriss %"]);
-    let suites: Vec<_> = [Platform::NvidiaSmallTile, Platform::EyerissLargeTile]
-        .iter()
-        .map(|p| run_suite_shared(&p.hardware(), &modes, scheme))
-        .collect();
+    let hws = [
+        Platform::NvidiaSmallTile.hardware(),
+        Platform::EyerissLargeTile.hardware(),
+    ];
+    let suites = run_suites(&hws, &modes, scheme);
     let fmt = |v: Option<f64>| v.map(|x| format!("{:.1}", x * 100.0)).unwrap_or("N/A".into());
     for (i, mode) in modes.iter().enumerate() {
         t.row(vec![

@@ -4,7 +4,7 @@ use crate::compress::Scheme;
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::layout::metadata::{metadata_bits_per_kb, metadata_overhead_fraction};
-use crate::sim::experiment::run_suite_shared;
+use crate::sim::experiment::run_suites;
 use crate::tiling::division::DivisionMode;
 use crate::tiling::grate::GrateConfig;
 use crate::util::table::Table;
@@ -74,10 +74,12 @@ pub fn table3(scheme: Scheme) -> Table {
         "with ovh Eyeriss",
     ]);
     let modes = DivisionMode::table3_modes();
-    let suites: Vec<_> = [Platform::NvidiaSmallTile, Platform::EyerissLargeTile]
-        .iter()
-        .map(|p| run_suite_shared(&p.hardware(), &modes, scheme))
-        .collect();
+    // One pool over (platform × mode × layer): 2 × 7 × 23 pricing units.
+    let hws = [
+        Platform::NvidiaSmallTile.hardware(),
+        Platform::EyerissLargeTile.hardware(),
+    ];
+    let suites = run_suites(&hws, &modes, scheme);
     let fmt = |v: Option<f64>| {
         v.map(|x| format!("{:.1}", x * 100.0)).unwrap_or_else(|| "N/A (a)".into())
     };

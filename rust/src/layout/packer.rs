@@ -40,11 +40,11 @@ pub struct PackedFeatureMap {
 }
 
 impl PackedFeatureMap {
-    /// Fetch cost of one sub-tensor in *bits*: aligned sub-tensors move
-    /// whole cache lines; compact ones (Uniform 1×1×8) move the exact
-    /// compressed bits — the idealised upper bound of §IV-B(2).
-    pub fn fetch_bits(&self, r: SubTensorRef) -> u64 {
-        let li = self.division.linear(r);
+    /// Fetch cost by linear sub-tensor index — the single encoding of
+    /// the compact-vs-line-rounded cost rule ([`Self::fetch_bits`] and
+    /// [`Self::fetch_bits_grid`] both go through here).
+    #[inline]
+    fn fetch_bits_at(&self, li: usize) -> u64 {
         if self.division.compact {
             self.sizes_bits[li] as u64
         } else {
@@ -53,9 +53,26 @@ impl PackedFeatureMap {
         }
     }
 
+    /// Fetch cost of one sub-tensor in *bits*: aligned sub-tensors move
+    /// whole cache lines; compact ones (Uniform 1×1×8) move the exact
+    /// compressed bits — the idealised upper bound of §IV-B(2).
+    pub fn fetch_bits(&self, r: SubTensorRef) -> u64 {
+        self.fetch_bits_at(self.division.linear(r))
+    }
+
     /// Fetch cost in words (line-rounded for aligned modes).
     pub fn fetch_words(&self, r: SubTensorRef) -> u64 {
         self.fetch_bits(r).div_ceil(16)
+    }
+
+    /// Per-sub-tensor fetch costs in bits, indexed by
+    /// [`Division::linear`] — the pricer's input grid, available without
+    /// materializing any payload. Entry `i` equals `fetch_bits` of the
+    /// sub-tensor with linear index `i`.
+    pub fn fetch_bits_grid(&self) -> Vec<u64> {
+        (0..self.division.n_subtensors())
+            .map(|li| self.fetch_bits_at(li))
+            .collect()
     }
 
     /// Compressed size in words of one sub-tensor.
@@ -409,6 +426,24 @@ mod tests {
             .max()
             .unwrap();
         assert_eq!(max_per_block, 4);
+    }
+
+    #[test]
+    fn fetch_bits_grid_matches_pointwise_lookup() {
+        for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 1 }] {
+            let (fm, div, packer) = setup(mode, 0.4);
+            let packed = packer.pack(&fm, &div, false);
+            let grid = packed.fetch_bits_grid();
+            assert_eq!(grid.len(), div.n_subtensors());
+            for iy in 0..div.ys.len() {
+                for ix in 0..div.xs.len() {
+                    for icg in 0..div.n_cgroups {
+                        let r = SubTensorRef { iy, ix, icg };
+                        assert_eq!(grid[div.linear(r)], packed.fetch_bits(r));
+                    }
+                }
+            }
+        }
     }
 
     #[test]

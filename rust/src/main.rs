@@ -9,8 +9,9 @@
 //! gratetile serve --workers 4 --requests 32          # serving driver
 //! ```
 
-use anyhow::{bail, Result};
 use gratetile::cli::Cli;
+use gratetile::util::error::Result;
+use gratetile::{bail, err};
 use gratetile::compress::Scheme;
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
@@ -55,10 +56,13 @@ fn parse_mode(s: &str) -> Result<DivisionMode> {
 }
 
 fn parse_scheme(s: &str) -> Result<Scheme> {
-    Scheme::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scheme '{s}'"))
+    Scheme::parse(s).ok_or_else(|| err!("unknown scheme '{s}'"))
 }
 
 fn run(cli: &Cli) -> Result<()> {
+    if let Some(jobs) = cli.opt_parsed::<usize>("jobs") {
+        gratetile::util::parallel::set_threads(jobs);
+    }
     let scheme = parse_scheme(cli.opt_or("scheme", "bitmask"))?;
     match cli.command.as_str() {
         "table1" => emit(cli, "table1", harness::table1()),
@@ -215,8 +219,7 @@ fn cmd_e2e(cli: &Cli, scheme: Scheme) -> Result<()> {
         for (li, fm) in fms.iter().enumerate() {
             // Next-layer geometry: a 3x3 s=1 consumer of this map.
             let layer = ConvLayer::new(1, 1, fm.h, fm.w, fm.c, fm.c);
-            let report = run_layer(&cfg.hw, &layer, fm, mode, scheme)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let report = run_layer(&cfg.hw, &layer, fm, mode, scheme)?;
             // And actually run the tiled pipeline on it.
             let weights = Weights::random(&layer, li as u64);
             let packed = runner.pack(&layer, fm)?;
@@ -290,6 +293,8 @@ End to end:
   e2e                 PJRT CNN -> GrateTile pipeline  [--mode --scheme --requests]
   serve               leader/worker serving driver    [--workers --requests --density]
 
-Common flags: --markdown (emit GFM tables); all tables also land in results/*.csv"
+Common flags: --markdown (emit GFM tables); --jobs N (suite worker threads,
+default: all cores, also via GRATETILE_THREADS); all tables also land in
+results/*.csv"
     );
 }

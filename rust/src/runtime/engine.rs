@@ -1,137 +1,224 @@
 //! The PJRT execution engine: compile-once, execute-many.
+//!
+//! The real engine wraps the `xla` crate's PJRT CPU client and is gated
+//! behind the `pjrt` cargo feature, because the offline build image has
+//! no crates.io access (see DESIGN.md §Runtime: enabling the feature
+//! requires adding the vendored `xla` dependency to `Cargo.toml`). The
+//! default build compiles a stub with the same API whose methods return
+//! clean, actionable errors, so the simulator, harness and tests are
+//! fully usable without the PJRT toolchain.
 
-use super::manifest::ArtifactEntry;
-use crate::tensor::FeatureMap;
-use anyhow::{anyhow, bail, Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::runtime::manifest::ArtifactEntry;
+    use crate::tensor::FeatureMap;
+    use crate::util::error::{Context, Result};
+    use crate::{bail, err};
+    use std::path::Path;
 
-/// Wraps the PJRT CPU client. One engine per process.
-pub struct Engine {
-    client: xla::PjRtClient,
+    /// Wraps the PJRT CPU client. One engine per process.
+    pub struct Engine {
+        client: xla::PjRtClient,
+    }
+
+    impl Engine {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Engine> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e:?}"))?;
+            Ok(Engine { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo(&self, path: &Path) -> Result<LoadedModel> {
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| err!("non-utf8 path {}", path.display()))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| err!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| err!("compiling {}: {e:?}", path.display()))?;
+            Ok(LoadedModel { exe, name: path.display().to_string() })
+        }
+
+        /// Load an artifact described by a manifest entry.
+        pub fn load_entry(&self, entry: &ArtifactEntry) -> Result<LoadedModel> {
+            self.load_hlo(&entry.file)
+        }
+    }
+
+    /// A compiled executable plus invocation helpers.
+    pub struct LoadedModel {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl LoadedModel {
+        /// Execute on raw f32 inputs; returns the raw output literals of the
+        /// result tuple, in order.
+        ///
+        /// All artifacts are lowered with `return_tuple=True`, so the result
+        /// literal is always a tuple (see `python/compile/aot.py`).
+        pub fn run_literals(
+            &self,
+            inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<xla::Literal>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(data)
+                        .reshape(&dims_i64)
+                        .map_err(|e| err!("reshape to {dims:?}: {e:?}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| err!("execute {}: {e:?}", self.name))?;
+            let literal = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| err!("fetch result: {e:?}"))?;
+            literal.to_tuple().map_err(|e| err!("untuple result: {e:?}"))
+        }
+
+        /// Execute and flatten every tuple output to f32 payloads.
+        pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            self.run_literals(inputs)?
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}")))
+                .collect()
+        }
+
+        /// Execute a CNN-style artifact: image in, per-layer activation
+        /// feature maps out (shapes from the manifest entry).
+        pub fn run_cnn(
+            &self,
+            entry: &ArtifactEntry,
+            image: &[f32],
+        ) -> Result<Vec<FeatureMap>> {
+            let expect: usize = entry.input_dims.iter().product();
+            if image.len() != expect {
+                bail!(
+                    "input has {} elements, artifact expects {:?} = {expect}",
+                    image.len(),
+                    entry.input_dims
+                );
+            }
+            let outs = self.run_f32(&[(image, &entry.input_dims)])?;
+            if outs.len() != entry.n_outputs {
+                bail!(
+                    "artifact returned {} outputs, manifest says {}",
+                    outs.len(),
+                    entry.n_outputs
+                );
+            }
+            if entry.layer_shapes.len() != outs.len() {
+                bail!(
+                    "manifest declares {} layer shapes for {} outputs",
+                    entry.layer_shapes.len(),
+                    outs.len()
+                );
+            }
+            outs.into_iter()
+                .zip(&entry.layer_shapes)
+                .map(|(data, &(h, w, c))| {
+                    if data.len() != h * w * c {
+                        bail!("layer payload {} != {h}x{w}x{c}", data.len());
+                    }
+                    Ok(FeatureMap::from_vec(h, w, c, data))
+                })
+                .collect::<Result<Vec<_>>>()
+                .context("assembling feature maps")
+        }
+    }
 }
 
-impl Engine {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::bail;
+    use crate::runtime::manifest::ArtifactEntry;
+    use crate::tensor::FeatureMap;
+    use crate::util::error::Result;
+    use std::path::Path;
+
+    const HINT: &str =
+        "this build has no PJRT runtime — rebuild with `--features pjrt` \
+         (requires the offline `xla` crate; see DESIGN.md §Runtime)";
+
+    /// Stub engine: same API as the PJRT-backed one, clean errors for
+    /// every path that would need the real runtime.
+    pub struct Engine {
+        _priv: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo(&self, path: &Path) -> Result<LoadedModel> {
-        if !path.exists() {
-            bail!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            );
+    impl Engine {
+        pub fn cpu() -> Result<Engine> {
+            Ok(Engine { _priv: () })
         }
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(LoadedModel { exe, name: path.display().to_string() })
+
+        pub fn platform(&self) -> String {
+            "cpu (stub; enable the `pjrt` feature for real PJRT)".to_string()
+        }
+
+        pub fn load_hlo(&self, path: &Path) -> Result<LoadedModel> {
+            if !path.exists() {
+                bail!(
+                    "artifact {} not found — run `make artifacts` first",
+                    path.display()
+                );
+            }
+            bail!("cannot compile {}: {HINT}", path.display());
+        }
+
+        pub fn load_entry(&self, entry: &ArtifactEntry) -> Result<LoadedModel> {
+            self.load_hlo(&entry.file)
+        }
     }
 
-    /// Load an artifact described by a manifest entry.
-    pub fn load_entry(&self, entry: &ArtifactEntry) -> Result<LoadedModel> {
-        self.load_hlo(&entry.file)
+    /// Stub model: never constructed (loading always errors), but keeps
+    /// the call sites of the real API type-checking.
+    pub struct LoadedModel {
+        pub name: String,
+    }
+
+    impl LoadedModel {
+        pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+            bail!("cannot execute {}: {HINT}", self.name);
+        }
+
+        pub fn run_cnn(
+            &self,
+            _entry: &ArtifactEntry,
+            _image: &[f32],
+        ) -> Result<Vec<FeatureMap>> {
+            bail!("cannot execute {}: {HINT}", self.name);
+        }
     }
 }
 
-/// A compiled executable plus invocation helpers.
-pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl LoadedModel {
-    /// Execute on raw f32 inputs; returns the raw output literals of the
-    /// result tuple, in order.
-    ///
-    /// All artifacts are lowered with `return_tuple=True`, so the result
-    /// literal is always a tuple (see `python/compile/aot.py`).
-    pub fn run_literals(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<xla::Literal>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(data)
-                    .reshape(&dims_i64)
-                    .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        literal.to_tuple().map_err(|e| anyhow!("untuple result: {e:?}"))
-    }
-
-    /// Execute and flatten every tuple output to f32 payloads.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
-        self.run_literals(inputs)?
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
-    }
-
-    /// Execute a CNN-style artifact: image in, per-layer activation
-    /// feature maps out (shapes from the manifest entry).
-    pub fn run_cnn(
-        &self,
-        entry: &ArtifactEntry,
-        image: &[f32],
-    ) -> Result<Vec<FeatureMap>> {
-        let expect: usize = entry.input_dims.iter().product();
-        if image.len() != expect {
-            bail!(
-                "input has {} elements, artifact expects {:?} = {expect}",
-                image.len(),
-                entry.input_dims
-            );
-        }
-        let outs = self.run_f32(&[(image, &entry.input_dims)])?;
-        if outs.len() != entry.n_outputs {
-            bail!("artifact returned {} outputs, manifest says {}", outs.len(), entry.n_outputs);
-        }
-        if entry.layer_shapes.len() != outs.len() {
-            bail!(
-                "manifest declares {} layer shapes for {} outputs",
-                entry.layer_shapes.len(),
-                outs.len()
-            );
-        }
-        outs.into_iter()
-            .zip(&entry.layer_shapes)
-            .map(|(data, &(h, w, c))| {
-                if data.len() != h * w * c {
-                    bail!("layer payload {} != {h}x{w}x{c}", data.len());
-                }
-                Ok(FeatureMap::from_vec(h, w, c, data))
-            })
-            .collect::<Result<Vec<_>>>()
-            .context("assembling feature maps")
-    }
-}
+pub use imp::{Engine, LoadedModel};
 
 #[cfg(test)]
 mod tests {
     //! Engine tests that need real artifacts live in
     //! `rust/tests/runtime_smoke.rs` (they require `make artifacts`).
+    //! These contract tests hold for both the PJRT and the stub engine.
     use super::*;
+    use std::path::Path;
 
     #[test]
     fn missing_artifact_is_a_clean_error() {

@@ -9,7 +9,8 @@
 //! layer <model> <idx> h=<h> w=<w> c=<c>
 //! ```
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -53,21 +54,21 @@ impl Manifest {
             let mut parts = line.split_whitespace();
             match parts.next() {
                 Some("artifact") => {
-                    let name = parts.next().ok_or_else(|| anyhow!("line {ln}: name"))?;
-                    let file = parts.next().ok_or_else(|| anyhow!("line {ln}: file"))?;
+                    let name = parts.next().ok_or_else(|| err!("line {ln}: name"))?;
+                    let file = parts.next().ok_or_else(|| err!("line {ln}: file"))?;
                     let mut input_dims = Vec::new();
                     let mut n_outputs = 0usize;
                     for kv in parts {
                         if let Some(spec) = kv.strip_prefix("in=") {
                             let spec = spec
                                 .strip_suffix("xf32")
-                                .ok_or_else(|| anyhow!("line {ln}: only f32 inputs supported"))?;
+                                .ok_or_else(|| err!("line {ln}: only f32 inputs supported"))?;
                             input_dims = spec
                                 .split('x')
-                                .map(|d| d.parse::<usize>().map_err(|e| anyhow!("line {ln}: {e}")))
+                                .map(|d| d.parse::<usize>().map_err(|e| err!("line {ln}: {e}")))
                                 .collect::<Result<_>>()?;
                         } else if let Some(n) = kv.strip_prefix("outs=") {
-                            n_outputs = n.parse().map_err(|e| anyhow!("line {ln}: {e}"))?;
+                            n_outputs = n.parse().map_err(|e| err!("line {ln}: {e}"))?;
                         }
                     }
                     if input_dims.is_empty() || n_outputs == 0 {
@@ -85,10 +86,10 @@ impl Manifest {
                     );
                 }
                 Some("layer") => {
-                    let model = parts.next().ok_or_else(|| anyhow!("line {ln}: model"))?;
+                    let model = parts.next().ok_or_else(|| err!("line {ln}: model"))?;
                     let _idx: usize = parts
                         .next()
-                        .ok_or_else(|| anyhow!("line {ln}: idx"))?
+                        .ok_or_else(|| err!("line {ln}: idx"))?
                         .parse()?;
                     let mut h = 0;
                     let mut w = 0;
@@ -104,7 +105,7 @@ impl Manifest {
                     }
                     m.entries
                         .get_mut(model)
-                        .ok_or_else(|| anyhow!("line {ln}: unknown model {model}"))?
+                        .ok_or_else(|| err!("line {ln}: unknown model {model}"))?
                         .layer_shapes
                         .push((h, w, c));
                 }
@@ -118,7 +119,7 @@ impl Manifest {
     pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
         self.entries
             .get(name)
-            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+            .ok_or_else(|| err!("artifact '{name}' not in manifest (have: {:?})",
                 self.entries.keys().collect::<Vec<_>>()))
     }
 }

@@ -1,6 +1,7 @@
 //! Experiment drivers: price a layer / the full benchmark suite under a
 //! division mode and compression scheme (paper §IV).
 
+use super::pricer::{price_naive, LayerPricer, WalkCost};
 use super::report::LayerBandwidth;
 use super::walker::TileWalker;
 use crate::compress::Scheme;
@@ -11,15 +12,38 @@ use crate::layout::packer::Packer;
 use crate::tensor::sparsity::{generate, SparsityParams};
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, DivisionError, DivisionMode};
+use crate::util::parallel::par_map;
 use crate::util::geomean;
 
 pub use crate::tiling::division::DivisionMode as Mode;
 
+fn bandwidth_report(
+    hw: &Hardware,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    cost: WalkCost,
+    n_tiles: u64,
+) -> LayerBandwidth {
+    LayerBandwidth {
+        network: String::new(),
+        layer: String::new(),
+        mode: mode.name(),
+        platform: hw.name.to_string(),
+        baseline_bits: cost.baseline_bits,
+        fetched_bits: cost.fetched_bits,
+        metadata_bits: cost.metadata_bits,
+        density: fm.density(),
+        n_tiles,
+    }
+}
+
 /// Price one layer's feature-map traffic under `mode` + `scheme`.
 ///
-/// Walks every processing tile, fetching whole compressed sub-tensors
-/// (line-granular) and block metadata records (once per touched block
-/// per tile) — the §III cost model.
+/// The §III cost model: every processing tile fetches whole compressed
+/// sub-tensors (line-granular) and block metadata records (once per
+/// touched block per tile). Evaluated by the prefix-sum
+/// [`LayerPricer`] — O(tiles) after packing — and bit-exact with the
+/// naive reference walk ([`run_layer_naive`], property-tested).
 pub fn run_layer(
     hw: &Hardware,
     layer: &ConvLayer,
@@ -31,48 +55,27 @@ pub fn run_layer(
     let division = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
     let packed = Packer::new(*hw, scheme).pack(fm, &division, false);
     let walker = TileWalker::new(*layer, tile);
+    let cost = LayerPricer::new(&packed).price(&walker);
+    Ok(bandwidth_report(hw, fm, mode, cost, walker.n_tiles()))
+}
 
-    let mut fetched_bits = 0u64;
-    let mut metadata_bits = 0u64;
-    let mut baseline_bits = 0u64;
-
-    // Per-tile block dedup via a stamp array (no per-tile allocation).
-    let mut stamp = vec![0u32; division.n_blocks()];
-    let mut tick = 0u32;
-
-    for w in walker.iter() {
-        baseline_bits += w.words() * 16;
-        tick += 1;
-        let yr = Division::covering(&division.ys, w.y0, w.y1);
-        let xr = Division::covering(&division.xs, w.x0, w.x1);
-        let cg0 = w.c0 / division.cd;
-        let cg1 = w.c1.div_ceil(division.cd).min(division.n_cgroups);
-        for iy in yr {
-            for ix in xr.clone() {
-                for icg in cg0..cg1 {
-                    let r = crate::tiling::division::SubTensorRef { iy, ix, icg };
-                    fetched_bits += packed.fetch_bits(r);
-                    let b = division.block_linear(r);
-                    if stamp[b] != tick {
-                        stamp[b] = tick;
-                        metadata_bits += division.meta_bits_per_block as u64;
-                    }
-                }
-            }
-        }
-    }
-
-    Ok(LayerBandwidth {
-        network: String::new(),
-        layer: String::new(),
-        mode: mode.name(),
-        platform: hw.name.to_string(),
-        baseline_bits,
-        fetched_bits,
-        metadata_bits,
-        density: fm.density(),
-        n_tiles: walker.n_tiles(),
-    })
+/// Reference oracle: price the layer with the original
+/// per-sub-tensor triple loop instead of the prefix-sum pricer.
+/// O(tiles × sub-tensors-per-window); kept for the equivalence property
+/// tests and the `perf_walk` speedup comparison.
+pub fn run_layer_naive(
+    hw: &Hardware,
+    layer: &ConvLayer,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    scheme: Scheme,
+) -> Result<LayerBandwidth, DivisionError> {
+    let tile = hw.tile_for_layer(layer);
+    let division = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
+    let packed = Packer::new(*hw, scheme).pack(fm, &division, false);
+    let walker = TileWalker::new(*layer, tile);
+    let cost = price_naive(&packed, &walker);
+    Ok(bandwidth_report(hw, fm, mode, cost, walker.n_tiles()))
 }
 
 /// Run one zoo benchmark layer: synthesises the input feature map at the
@@ -145,41 +148,88 @@ impl SuiteResult {
     }
 
     /// Geomean of the optimal (zero-fraction) saving across layers.
+    ///
+    /// A layer's density is mode-independent (same synthesized map), so
+    /// each layer contributes its density from whichever mode priced it
+    /// — never silently dropping layers when some mode rows hold `None`
+    /// (Table III footnote a mixes N/A entries into arbitrary rows).
     pub fn geomean_optimal(&self) -> f64 {
-        let ratios: Vec<f64> = self.results[0]
-            .iter()
-            .flatten()
-            .map(|r| r.density)
+        let densities: Vec<f64> = (0..self.layers.len())
+            .filter_map(|li| {
+                self.results
+                    .iter()
+                    .find_map(|row| row[li].as_ref())
+                    .map(|r| r.density)
+            })
             .collect();
-        if ratios.is_empty() {
-            // Fall back to any populated mode row.
-            let ratios: Vec<f64> = self
-                .results
-                .iter()
-                .flat_map(|row| row.iter().flatten().map(|r| r.density))
-                .take(self.layers.len())
-                .collect();
-            return 1.0 - geomean(&ratios);
-        }
-        1.0 - geomean(&ratios)
+        1.0 - geomean(&densities)
     }
 }
 
 /// Process-wide cache of the benchmark suite's synthesised feature maps
 /// (§Perf: `gratetile all` prices the same 23 maps on two platforms
-/// across three figures — synthesise them once).
+/// across three figures — synthesise them once, in parallel).
 pub fn suite_feature_maps() -> &'static [(BenchLayer, FeatureMap)] {
     use std::sync::OnceLock;
     static FMS: OnceLock<Vec<(BenchLayer, FeatureMap)>> = OnceLock::new();
     FMS.get_or_init(|| {
-        crate::config::zoo::benchmark_suite()
-            .into_iter()
-            .map(|b| {
-                let fm = bench_feature_map(&b);
-                (b, fm)
-            })
-            .collect()
+        let benches = crate::config::zoo::benchmark_suite();
+        let fms = par_map(&benches, |_, b| bench_feature_map(b));
+        benches.into_iter().zip(fms).collect()
     })
+}
+
+/// Fan (platform × mode × layer) pricing units across a scoped worker
+/// pool and reassemble per-platform [`SuiteResult`]s. Every unit is an
+/// independent `run_bench_layer`, so the work-stealing pool keeps all
+/// cores busy even when a 224×224 VGG map sits next to a 13×13 AlexNet
+/// one; results are bit-identical to the sequential sweep.
+fn price_suites(
+    hws: &[Hardware],
+    suite: &[(&BenchLayer, &FeatureMap)],
+    modes: &[DivisionMode],
+    scheme: Scheme,
+) -> Vec<SuiteResult> {
+    let n_layers = suite.len();
+    let units: Vec<(usize, usize, usize)> = (0..hws.len())
+        .flat_map(|pi| {
+            (0..modes.len()).flat_map(move |mi| (0..n_layers).map(move |li| (pi, mi, li)))
+        })
+        .collect();
+    let flat: Vec<Option<LayerBandwidth>> = par_map(&units, |_, &(pi, mi, li)| {
+        let (b, fm) = suite[li];
+        run_bench_layer(&hws[pi], b, modes[mi], scheme, fm).ok()
+    });
+
+    let layers: Vec<String> = suite
+        .iter()
+        .map(|(b, _)| format!("{} {}", b.network.name(), b.name))
+        .collect();
+    let mut flat = flat.into_iter();
+    hws.iter()
+        .map(|hw| SuiteResult {
+            platform: hw.name.to_string(),
+            scheme,
+            modes: modes.to_vec(),
+            layers: layers.clone(),
+            results: (0..modes.len())
+                .map(|_| (0..n_layers).map(|_| flat.next().unwrap()).collect())
+                .collect(),
+        })
+        .collect()
+}
+
+/// Run the full (cached) benchmark suite under every mode on several
+/// platforms in one parallel fan-out (Table III / Fig. 8 price both
+/// platforms; one pool covers platform × mode × layer).
+pub fn run_suites(
+    hws: &[Hardware],
+    modes: &[DivisionMode],
+    scheme: Scheme,
+) -> Vec<SuiteResult> {
+    let suite: Vec<(&BenchLayer, &FeatureMap)> =
+        suite_feature_maps().iter().map(|(b, fm)| (b, fm)).collect();
+    price_suites(hws, &suite, modes, scheme)
 }
 
 /// Run the full (cached) benchmark suite under every mode.
@@ -188,50 +238,25 @@ pub fn run_suite_shared(
     modes: &[DivisionMode],
     scheme: Scheme,
 ) -> SuiteResult {
-    let cached = suite_feature_maps();
-    let mut results = Vec::with_capacity(modes.len());
-    for &mode in modes {
-        let mut row = Vec::with_capacity(cached.len());
-        for (b, fm) in cached {
-            row.push(run_bench_layer(hw, b, mode, scheme, fm).ok());
-        }
-        results.push(row);
-    }
-    SuiteResult {
-        platform: hw.name.to_string(),
-        scheme,
-        modes: modes.to_vec(),
-        layers: cached
-            .iter()
-            .map(|(b, _)| format!("{} {}", b.network.name(), b.name))
-            .collect(),
-        results,
-    }
+    run_suites(std::slice::from_ref(hw), modes, scheme)
+        .pop()
+        .expect("one platform in, one suite out")
 }
 
-/// Run the full benchmark suite under every mode (Fig. 8/9, Table III).
+/// Run a benchmark suite under every mode (Fig. 8/9, Table III),
+/// synthesising the feature maps (in parallel) rather than using the
+/// process-wide cache.
 pub fn run_suite(
     hw: &Hardware,
     benches: &[BenchLayer],
     modes: &[DivisionMode],
     scheme: Scheme,
 ) -> SuiteResult {
-    let fms: Vec<FeatureMap> = benches.iter().map(bench_feature_map).collect();
-    let mut results = Vec::with_capacity(modes.len());
-    for &mode in modes {
-        let mut row = Vec::with_capacity(benches.len());
-        for (b, fm) in benches.iter().zip(&fms) {
-            row.push(run_bench_layer(hw, b, mode, scheme, fm).ok());
-        }
-        results.push(row);
-    }
-    SuiteResult {
-        platform: hw.name.to_string(),
-        scheme,
-        modes: modes.to_vec(),
-        layers: benches.iter().map(|b| format!("{} {}", b.network.name(), b.name)).collect(),
-        results,
-    }
+    let fms: Vec<FeatureMap> = par_map(benches, |_, b| bench_feature_map(b));
+    let suite: Vec<(&BenchLayer, &FeatureMap)> = benches.iter().zip(&fms).collect();
+    price_suites(std::slice::from_ref(hw), &suite, modes, scheme)
+        .pop()
+        .expect("one platform in, one suite out")
 }
 
 #[cfg(test)]
@@ -345,6 +370,98 @@ mod tests {
         let modes = [DivisionMode::GrateTile { n: 16 }];
         let suite = run_suite(&hw, &benches, &modes, Scheme::Bitmask);
         assert_eq!(suite.geomean_saving(0, true), None);
+    }
+
+    #[test]
+    fn pricer_and_naive_walker_agree_bit_exactly() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (layer, fm) = small_fm(0.37);
+        for mode in DivisionMode::table3_modes() {
+            let fast = run_layer(&hw, &layer, &fm, mode, Scheme::Bitmask);
+            let slow = run_layer_naive(&hw, &layer, &fm, mode, Scheme::Bitmask);
+            match (fast, slow) {
+                (Ok(f), Ok(s)) => {
+                    assert_eq!(f.fetched_bits, s.fetched_bits, "{}", mode.name());
+                    assert_eq!(f.metadata_bits, s.metadata_bits, "{}", mode.name());
+                    assert_eq!(f.baseline_bits, s.baseline_bits, "{}", mode.name());
+                }
+                (Err(a), Err(b)) => assert_eq!(a, b),
+                (f, s) => panic!("applicability mismatch: {f:?} vs {s:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_suite_matches_single_threaded() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let benches = network_layers(Network::AlexNet);
+        let modes = [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 4 }];
+        let par = run_suite(&hw, &benches, &modes, Scheme::Bitmask);
+        // Sequential reference, bypassing the pool entirely.
+        for (mi, mode) in modes.iter().enumerate() {
+            for (li, b) in benches.iter().enumerate() {
+                let fm = bench_feature_map(b);
+                let seq = run_bench_layer(&hw, b, *mode, Scheme::Bitmask, &fm).ok();
+                match (&par.results[mi][li], &seq) {
+                    (Some(p), Some(s)) => {
+                        assert_eq!(p.fetched_bits, s.fetched_bits, "{} {li}", mode.name());
+                        assert_eq!(p.metadata_bits, s.metadata_bits);
+                        assert_eq!(p.baseline_bits, s.baseline_bits);
+                    }
+                    (None, None) => {}
+                    (p, s) => panic!("mismatch at {mi},{li}: {p:?} vs {s:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_suites_covers_all_platforms() {
+        let hws = [
+            Platform::NvidiaSmallTile.hardware(),
+            Platform::EyerissLargeTile.hardware(),
+        ];
+        let modes = [DivisionMode::GrateTile { n: 8 }];
+        let suites = run_suites(&hws, &modes, Scheme::Bitmask);
+        assert_eq!(suites.len(), 2);
+        assert_eq!(suites[0].platform, hws[0].name);
+        assert_eq!(suites[1].platform, hws[1].name);
+        // Both fully populated for mod-8 and distinct (different tiles).
+        let a = suites[0].geomean_saving(0, true).unwrap();
+        let b = suites[1].geomean_saving(0, true).unwrap();
+        assert!(a > 0.0 && b > 0.0);
+        assert_ne!(suites[0].results[0][0].as_ref().unwrap().fetched_bits,
+                   suites[1].results[0][0].as_ref().unwrap().fetched_bits);
+    }
+
+    #[test]
+    fn geomean_optimal_survives_mixed_none_rows() {
+        // Mode 0 N/A on layer 1, mode 1 N/A on layer 0: every layer's
+        // density must still contribute exactly once.
+        let lb = |density: f64| LayerBandwidth {
+            network: "t".into(),
+            layer: "l".into(),
+            mode: "m".into(),
+            platform: "p".into(),
+            baseline_bits: 1000,
+            fetched_bits: 500,
+            metadata_bits: 10,
+            density,
+            n_tiles: 1,
+        };
+        let suite = SuiteResult {
+            platform: "p".into(),
+            scheme: Scheme::Bitmask,
+            modes: vec![DivisionMode::GrateTile { n: 16 }, DivisionMode::GrateTile { n: 8 }],
+            layers: vec!["a".into(), "b".into()],
+            results: vec![
+                vec![Some(lb(0.25)), None],
+                vec![None, Some(lb(0.64))],
+            ],
+        };
+        // geomean(0.25, 0.64) = 0.4; the old results[0]-based fallback
+        // saw only 0.25.
+        assert!((suite.geomean_optimal() - (1.0 - 0.4)).abs() < 1e-12);
     }
 
     #[test]

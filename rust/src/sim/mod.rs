@@ -6,19 +6,29 @@
 //! scheme: whole compressed sub-tensors at line granularity, plus block
 //! metadata records (Table II widths) once per touched block per tile.
 //!
-//! [`experiment`] wraps the walker into the paper's experiments: one
+//! [`pricer`] evaluates that cost model in O(tiles) per layer: 3D
+//! inclusive prefix sums over the sub-tensor cost grid turn each
+//! window's fetch cost into 8 corner lookups, with the naive
+//! per-sub-tensor walk kept as a property-tested reference oracle.
+//!
+//! [`experiment`] wraps the pricer into the paper's experiments: one
 //! layer → [`report::LayerBandwidth`]; the benchmark suite → geometric
-//! means per division mode (Fig. 8, Fig. 9, Table III).
+//! means per division mode (Fig. 8, Fig. 9, Table III), fanned across
+//! (platform × mode × layer) worker threads.
 
 pub mod access;
 pub mod experiment;
 pub mod metacache;
 pub mod network;
+pub mod pricer;
 pub mod report;
 pub mod walker;
 
 pub use access::{access_study, AccessStudy};
-pub use experiment::{run_bench_layer, run_layer, run_suite, SuiteResult};
+pub use experiment::{
+    run_bench_layer, run_layer, run_layer_naive, run_suite, run_suites, SuiteResult,
+};
+pub use pricer::{price_naive, LayerPricer, WalkCost};
 pub use metacache::{metadata_cache_study, MetaCacheStudy, TileOrder};
 pub use network::{run_network_bandwidth, NetworkReport};
 pub use report::LayerBandwidth;

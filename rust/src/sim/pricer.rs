@@ -1,0 +1,290 @@
+//! The window pricer: O(1)-per-window fetch-cost evaluation via 3D
+//! inclusive prefix sums over the sub-tensor grid.
+//!
+//! The naive §III cost model walks every sub-tensor a window covers —
+//! O(tiles × sub-tensors-per-window), worst on the compact Uniform
+//! 1×1×8 baseline where a 224×224 VGG window touches hundreds of
+//! sub-tensors per channel group. [`LayerPricer`] amortizes that into
+//! one O(n_subtensors) pass (the BARISTA-style tiled-cost summary):
+//!
+//! * **fetched bits** — windows cover an axis-aligned *box* of
+//!   sub-tensor indices (the GrateTile grid is rectangular in
+//!   (iy, ix, icg) space), so a 3D inclusive prefix sum turns each
+//!   window's cost into 8 corner lookups.
+//! * **metadata bits** — the touched metadata blocks also form a box in
+//!   block space, and `block_of_*` is non-decreasing, so the per-window
+//!   distinct-block count is a product of three range widths; summed
+//!   over all windows it factorizes per axis into closed form.
+//! * **baseline bits** — window word counts are `Δy·Δx·Δc`, which also
+//!   factorizes per axis.
+//!
+//! [`price_naive`] keeps the original per-sub-tensor triple loop as the
+//! reference oracle: `rust/tests/property.rs` proves the two agree
+//! bit-exactly across division modes, strides, dilation and ragged
+//! maps, and `benches/perf_walk.rs` measures the speedup.
+
+use crate::layout::packer::PackedFeatureMap;
+use crate::sim::walker::TileWalker;
+use crate::tiling::division::Division;
+
+/// Priced totals for one layer walk (all in bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WalkCost {
+    /// Dense (uncompressed) fetch — the saving denominator.
+    pub baseline_bits: u64,
+    /// Compressed sub-tensor fetch (line-granular for aligned modes).
+    pub fetched_bits: u64,
+    /// Block metadata records, once per touched block per tile.
+    pub metadata_bits: u64,
+}
+
+/// Prefix-summed fetch costs for one packed feature map.
+///
+/// Built in one pass over the packed sub-tensor grid; prices any walker
+/// over the same map in O(tiles).
+pub struct LayerPricer<'a> {
+    division: &'a Division,
+    /// `(ny+1) × (nx+1) × (ncg+1)` inclusive prefix sums of
+    /// per-sub-tensor fetch bits; entry `(iy, ix, icg)` holds the total
+    /// over the box `[0,iy) × [0,ix) × [0,icg)`.
+    prefix: Vec<u64>,
+    nx1: usize,
+    ncg1: usize,
+}
+
+impl<'a> LayerPricer<'a> {
+    /// One O(n_subtensors) pass over `packed`'s cost grid.
+    pub fn new(packed: &'a PackedFeatureMap) -> Self {
+        let division = &packed.division;
+        let ny = division.ys.len();
+        let nx = division.xs.len();
+        let ncg = division.n_cgroups;
+        let grid = packed.fetch_bits_grid();
+
+        let nx1 = nx + 1;
+        let ncg1 = ncg + 1;
+        let mut prefix = vec![0u64; (ny + 1) * nx1 * ncg1];
+        let at = |iy: usize, ix: usize, icg: usize| (iy * nx1 + ix) * ncg1 + icg;
+        for iy in 0..ny {
+            for ix in 0..nx {
+                for icg in 0..ncg {
+                    let cost = grid[(iy * nx + ix) * ncg + icg];
+                    // Standard 3D inclusion-exclusion; grouping all
+                    // additions first keeps the u64 arithmetic
+                    // subtraction-safe (the positive terms dominate).
+                    prefix[at(iy + 1, ix + 1, icg + 1)] = (cost
+                        + prefix[at(iy, ix + 1, icg + 1)]
+                        + prefix[at(iy + 1, ix, icg + 1)]
+                        + prefix[at(iy + 1, ix + 1, icg)]
+                        + prefix[at(iy, ix, icg)])
+                        - prefix[at(iy, ix, icg + 1)]
+                        - prefix[at(iy, ix + 1, icg)]
+                        - prefix[at(iy + 1, ix, icg)];
+                }
+            }
+        }
+
+        Self { division, prefix, nx1, ncg1 }
+    }
+
+    /// Sum of fetch bits over sub-tensor index box
+    /// `[y0,y1) × [x0,x1) × [c0,c1)` — 8 corner lookups.
+    #[inline]
+    fn box_bits(&self, y0: usize, y1: usize, x0: usize, x1: usize, c0: usize, c1: usize) -> u64 {
+        let p = |iy: usize, ix: usize, icg: usize| self.prefix[(iy * self.nx1 + ix) * self.ncg1 + icg];
+        (p(y1, x1, c1) + p(y0, x0, c1) + p(y0, x1, c0) + p(y1, x0, c0))
+            - p(y0, x1, c1)
+            - p(y1, x0, c1)
+            - p(y1, x1, c0)
+            - p(y0, x0, c0)
+    }
+
+    /// Price every window of `walker` against this map: O(tiles) after
+    /// the constructor's single grid pass. Bit-exact with
+    /// [`price_naive`] (property-tested).
+    pub fn price(&self, walker: &TileWalker) -> WalkCost {
+        let div = self.division;
+
+        // Per-axis precomputation: each window's segment-index range,
+        // word span and touched-block count depend on one tile
+        // coordinate only.
+        let mut y_words = 0u64; // Σ_ty Δy
+        let mut y_blocks = 0u64; // Σ_ty (#distinct y-blocks)
+        let y_ranges: Vec<(usize, usize)> = (0..walker.n_ty)
+            .map(|ty| {
+                let (y0, y1) = walker.y_span(ty);
+                y_words += (y1 - y0) as u64;
+                let r = Division::covering(&div.ys, y0, y1);
+                debug_assert!(!r.is_empty());
+                y_blocks += (div.block_of_y[r.end - 1] - div.block_of_y[r.start] + 1) as u64;
+                (r.start, r.end)
+            })
+            .collect();
+        let mut x_words = 0u64;
+        let mut x_blocks = 0u64;
+        let x_ranges: Vec<(usize, usize)> = (0..walker.n_tx)
+            .map(|tx| {
+                let (x0, x1) = walker.x_span(tx);
+                x_words += (x1 - x0) as u64;
+                let r = Division::covering(&div.xs, x0, x1);
+                debug_assert!(!r.is_empty());
+                x_blocks += (div.block_of_x[r.end - 1] - div.block_of_x[r.start] + 1) as u64;
+                (r.start, r.end)
+            })
+            .collect();
+        let mut c_words = 0u64;
+        let mut c_groups = 0u64; // Σ_tcg (#channel groups covered)
+        let c_ranges: Vec<(usize, usize)> = (0..walker.n_tcg)
+            .map(|tcg| {
+                let (c0, c1) = walker.c_span(tcg);
+                c_words += (c1 - c0) as u64;
+                let cg0 = c0 / div.cd;
+                let cg1 = c1.div_ceil(div.cd).min(div.n_cgroups);
+                c_groups += (cg1 - cg0) as u64;
+                (cg0, cg1)
+            })
+            .collect();
+
+        // Baseline and metadata factorize per axis exactly: every
+        // (ty, tx, tcg) combination occurs once, and both per-window
+        // quantities are products of per-axis terms.
+        let baseline_bits = 16 * y_words * x_words * c_words;
+        let metadata_bits =
+            div.meta_bits_per_block as u64 * y_blocks * x_blocks * c_groups;
+
+        // Fetched bits: 8 corner lookups per window.
+        let mut fetched_bits = 0u64;
+        for &(iy0, iy1) in &y_ranges {
+            for &(ix0, ix1) in &x_ranges {
+                for &(cg0, cg1) in &c_ranges {
+                    fetched_bits += self.box_bits(iy0, iy1, ix0, ix1, cg0, cg1);
+                }
+            }
+        }
+
+        WalkCost { baseline_bits, fetched_bits, metadata_bits }
+    }
+}
+
+/// Reference oracle: the original per-sub-tensor triple loop with
+/// stamp-based block dedup (the seed's `run_layer` inner loop). Kept so
+/// property tests can prove the prefix pricer bit-exact, and so
+/// `benches/perf_walk.rs` can measure the speedup in the same run.
+pub fn price_naive(packed: &PackedFeatureMap, walker: &TileWalker) -> WalkCost {
+    let division = &packed.division;
+    let mut fetched_bits = 0u64;
+    let mut metadata_bits = 0u64;
+    let mut baseline_bits = 0u64;
+
+    // Per-tile block dedup via a stamp array (no per-tile allocation).
+    let mut stamp = vec![0u32; division.n_blocks()];
+    let mut tick = 0u32;
+
+    for w in walker.iter() {
+        baseline_bits += w.words() * 16;
+        tick += 1;
+        let yr = Division::covering(&division.ys, w.y0, w.y1);
+        let xr = Division::covering(&division.xs, w.x0, w.x1);
+        let cg0 = w.c0 / division.cd;
+        let cg1 = w.c1.div_ceil(division.cd).min(division.n_cgroups);
+        for iy in yr {
+            for ix in xr.clone() {
+                for icg in cg0..cg1 {
+                    let r = crate::tiling::division::SubTensorRef { iy, ix, icg };
+                    fetched_bits += packed.fetch_bits(r);
+                    let b = division.block_linear(r);
+                    if stamp[b] != tick {
+                        stamp[b] = tick;
+                        metadata_bits += division.meta_bits_per_block as u64;
+                    }
+                }
+            }
+        }
+    }
+
+    WalkCost { baseline_bits, fetched_bits, metadata_bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Scheme;
+    use crate::config::hardware::Platform;
+    use crate::config::layer::ConvLayer;
+    use crate::layout::packer::Packer;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+    use crate::tiling::division::DivisionMode;
+
+    fn price_both(layer: ConvLayer, mode: DivisionMode, density: f64) -> (WalkCost, WalkCost) {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let tile = hw.tile_for_layer(&layer);
+        let division =
+            Division::build(mode, &layer, &tile, &hw, layer.h, layer.w, layer.c_in).unwrap();
+        let fm = generate(layer.h, layer.w, layer.c_in, SparsityParams::clustered(density, 3));
+        let packed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, false);
+        let walker = TileWalker::new(layer, tile);
+        let pricer = LayerPricer::new(&packed);
+        (pricer.price(&walker), price_naive(&packed, &walker))
+    }
+
+    #[test]
+    fn matches_naive_on_gratetile() {
+        let (fast, slow) = price_both(
+            ConvLayer::new(1, 1, 56, 56, 64, 64),
+            DivisionMode::GrateTile { n: 8 },
+            0.37,
+        );
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn matches_naive_on_compact_uniform() {
+        let (fast, slow) = price_both(
+            ConvLayer::new(1, 1, 40, 40, 16, 16),
+            DivisionMode::Uniform { edge: 1 },
+            0.5,
+        );
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn matches_naive_on_strided_ragged_map() {
+        // 13x13 AlexNet-style ragged geometry with stride 2.
+        let (fast, slow) = price_both(
+            ConvLayer::new(1, 2, 13, 13, 24, 24),
+            DivisionMode::Uniform { edge: 4 },
+            0.3,
+        );
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn matches_naive_on_dilated_wholemap() {
+        let (fast, slow) = price_both(
+            ConvLayer::new(1, 1, 32, 32, 8, 8).dilated(2),
+            DivisionMode::WholeMap,
+            0.6,
+        );
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn box_bits_full_map_equals_grid_total() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let tile = hw.tile_for_layer(&layer);
+        let division =
+            Division::build(DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, 24, 24, 16)
+                .unwrap();
+        let fm = generate(24, 24, 16, SparsityParams::clustered(0.4, 9));
+        let packed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, false);
+        let pricer = LayerPricer::new(&packed);
+        let total: u64 = packed.fetch_bits_grid().iter().sum();
+        assert_eq!(
+            pricer.box_bits(0, division.ys.len(), 0, division.xs.len(), 0, division.n_cgroups),
+            total
+        );
+        // Empty boxes price to zero.
+        assert_eq!(pricer.box_bits(1, 1, 0, 2, 0, 2), 0);
+    }
+}

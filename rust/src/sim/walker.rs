@@ -52,26 +52,39 @@ impl TileWalker {
         (self.n_ty * self.n_tx * self.n_tcg) as u64
     }
 
+    /// One spatial axis of the §III-B window formula: tile index `ti`
+    /// over output-tile length `tlen`, clipped to `[0, limit)`.
+    fn axis_span(&self, ti: usize, tlen: usize, limit: usize) -> (usize, usize) {
+        let l = &self.layer;
+        let halo = l.halo() as i64;
+        let lo = (ti * tlen * l.s) as i64 - halo;
+        let hi = ((ti * tlen + tlen - 1) * l.s) as i64 + halo + 1;
+        (lo.max(0) as usize, hi.min(limit as i64) as usize)
+    }
+
+    /// Clipped row range `[y0, y1)` of the window for tile row `ty`.
+    /// Depends only on `ty` — the pricer exploits this per-axis
+    /// separability to precompute all spans once per walk.
+    pub fn y_span(&self, ty: usize) -> (usize, usize) {
+        self.axis_span(ty, self.tile.th, self.layer.h)
+    }
+
+    /// Clipped column range `[x0, x1)` of the window for tile column `tx`.
+    pub fn x_span(&self, tx: usize) -> (usize, usize) {
+        self.axis_span(tx, self.tile.tw, self.layer.w)
+    }
+
+    /// Channel range `[c0, c1)` of the window for channel tile `tcg`.
+    pub fn c_span(&self, tcg: usize) -> (usize, usize) {
+        let c0 = tcg * self.tile.tc;
+        (c0, (c0 + self.tile.tc).min(self.layer.c_in))
+    }
+
     /// The window for tile `(ty, tx, tcg)`.
     pub fn window(&self, ty: usize, tx: usize, tcg: usize) -> Window {
-        let l = &self.layer;
-        let t = &self.tile;
-        let halo = l.halo() as i64;
-        let clip = |lo: i64, hi: i64, len: usize| -> (usize, usize) {
-            (lo.max(0) as usize, hi.min(len as i64) as usize)
-        };
-        let (y0, y1) = clip(
-            (ty * t.th * l.s) as i64 - halo,
-            ((ty * t.th + t.th - 1) * l.s) as i64 + halo + 1,
-            l.h,
-        );
-        let (x0, x1) = clip(
-            (tx * t.tw * l.s) as i64 - halo,
-            ((tx * t.tw + t.tw - 1) * l.s) as i64 + halo + 1,
-            l.w,
-        );
-        let c0 = tcg * t.tc;
-        let c1 = (c0 + t.tc).min(l.c_in);
+        let (y0, y1) = self.y_span(ty);
+        let (x0, x1) = self.x_span(tx);
+        let (c0, c1) = self.c_span(tcg);
         Window { ty, tx, tcg, y0, y1, x0, x1, c0, c1 }
     }
 

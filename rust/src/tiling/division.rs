@@ -68,16 +68,27 @@ impl DivisionMode {
 }
 
 /// Why a division cannot be built for a layer/tile combination.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DivisionError {
     /// Paper Table III footnote a: the fetched tile is smaller than one
     /// sub-tensor period, or `n` does not divide the window step — the
     /// GrateTile configuration does not exist for this tile.
-    #[error("GrateTile mod {n} not applicable: {reason}")]
     NotApplicable { n: usize, reason: String },
-    #[error("invalid division parameter: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for DivisionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DivisionError::NotApplicable { n, reason } => {
+                write!(f, "GrateTile mod {n} not applicable: {reason}")
+            }
+            DivisionError::Invalid(msg) => write!(f, "invalid division parameter: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for DivisionError {}
 
 /// Reference to one sub-tensor in a division grid.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -171,6 +171,23 @@ impl Bencher {
         &self.samples
     }
 
+    /// Median-time speedup of sample `name` over sample `baseline`
+    /// (> 1 means `name` is faster). `None` until both are recorded;
+    /// the latest sample wins when a name was benched twice.
+    pub fn speedup(&self, name: &str, baseline: &str) -> Option<f64> {
+        let a = self.samples.iter().rev().find(|s| s.name == name)?;
+        let b = self.samples.iter().rev().find(|s| s.name == baseline)?;
+        Some(b.median_ns / a.median_ns)
+    }
+
+    /// Print and return the speedup of `name` over `baseline` — the
+    /// perf benches use this for their headline vs-baseline lines.
+    pub fn report_speedup(&self, name: &str, baseline: &str) -> Option<f64> {
+        let s = self.speedup(name, baseline)?;
+        println!("{name:<44} {s:>10.1}x faster than {baseline}");
+        Some(s)
+    }
+
     /// Append collected samples to `results/bench.csv` (best-effort).
     pub fn write_csv(&self, bench_name: &str) {
         let _ = std::fs::create_dir_all("results");
@@ -197,6 +214,33 @@ mod tests {
         let s = b.bench("noop_sum", || (0..100u64).sum::<u64>());
         assert!(s.median_ns > 0.0);
         assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn speedup_compares_medians() {
+        let mut b = Bencher::new();
+        b.samples.push(Sample {
+            name: "fast".into(),
+            iters: 1,
+            median_ns: 100.0,
+            mean_ns: 100.0,
+            stddev_ns: 0.0,
+            bytes_per_iter: None,
+            items_per_iter: None,
+        });
+        b.samples.push(Sample {
+            name: "slow".into(),
+            iters: 1,
+            median_ns: 700.0,
+            mean_ns: 700.0,
+            stddev_ns: 0.0,
+            bytes_per_iter: None,
+            items_per_iter: None,
+        });
+        assert!((b.speedup("fast", "slow").unwrap() - 7.0).abs() < 1e-12);
+        assert!((b.speedup("slow", "fast").unwrap() - 1.0 / 7.0).abs() < 1e-12);
+        assert!(b.speedup("fast", "missing").is_none());
+        assert_eq!(b.report_speedup("fast", "slow"), b.speedup("fast", "slow"));
     }
 
     #[test]

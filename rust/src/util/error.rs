@@ -1,0 +1,138 @@
+//! Dependency-free error handling (offline stand-in for `anyhow`).
+//!
+//! The build image has no crates.io access, so the crate carries its own
+//! minimal dynamic error: a message-carrying [`Error`], a [`Result`]
+//! alias, the [`Context`] extension trait, and the [`err!`]/[`bail!`]
+//! macros. Any `std::error::Error` converts into [`Error`] via `?`;
+//! context calls prepend a `caller message: ` prefix exactly like
+//! `anyhow::Context` renders single-cause chains.
+
+use std::fmt;
+
+/// A type-erased error: a rendered message chain.
+///
+/// Deliberately does *not* implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` conversion below cannot collide with the
+/// reflexive `From<Error> for Error` impl (the same trick `anyhow` uses).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error(msg.to_string())
+    }
+
+    /// Prepend a context layer to the message chain.
+    pub fn context(self, msg: impl fmt::Display) -> Error {
+        Error(format!("{msg}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{e}` and the `{e:#}` alternate form render the same chain.
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible value, like `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily built message.
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (stand-in for `anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] (stand-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_failure() -> Result<i32> {
+        let n: i32 = "not a number".parse()?; // ParseIntError -> Error via `?`
+        Ok(n)
+    }
+
+    #[test]
+    fn std_errors_convert_through_question_mark() {
+        let e = parse_failure().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn context_prepends_layers() {
+        let e = parse_failure().context("reading config").unwrap_err();
+        let rendered = format!("{e}");
+        assert!(rendered.starts_with("reading config: "), "{rendered}");
+        let e2 = Err::<(), _>(e).with_context(|| "outer".to_string()).unwrap_err();
+        assert!(format!("{e2}").starts_with("outer: reading config: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = err!("bad value {} at {}", 7, "line 3");
+        assert_eq!(e.to_string(), "bad value 7 at line 3");
+        fn bails() -> Result<()> {
+            bail!("gave up after {} tries", 2)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "gave up after 2 tries");
+    }
+
+    #[test]
+    fn alternate_display_matches_plain() {
+        let e = err!("boom").context("ctx");
+        assert_eq!(format!("{e:#}"), format!("{e}"));
+    }
+}

@@ -7,10 +7,14 @@
 //! every test and benchmark is reproducible.
 
 pub mod benchkit;
+pub mod error;
+pub mod parallel;
 pub mod proptest_lite;
 pub mod rng;
 pub mod table;
 
+pub use error::{Context, Error, Result};
+pub use parallel::par_map;
 pub use rng::SplitMix64;
 
 /// Round `x` up to the next multiple of `to` (`to > 0`).

@@ -1,0 +1,140 @@
+//! Minimal scoped-thread data parallelism (offline stand-in for `rayon`).
+//!
+//! The suite engine fans (platform × mode × layer) pricing units across
+//! `std::thread::scope` workers with an atomic work-stealing cursor — no
+//! channels, no unsafe, no dependencies. Results come back in input
+//! order, so parallel sweeps are bit-identical to sequential ones.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide worker-count override (0 = auto). Set by `--jobs` on the
+/// CLI; the `GRATETILE_THREADS` env var is consulted when unset.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the worker-thread count for all subsequent parallel sweeps
+/// (0 restores auto detection).
+pub fn set_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Worker count for a sweep of `n_items` units: the explicit override,
+/// else `GRATETILE_THREADS`, else the machine's available parallelism —
+/// never more workers than items.
+pub fn threads_for(n_items: usize) -> usize {
+    if n_items <= 1 {
+        return 1;
+    }
+    let configured = match THREAD_OVERRIDE.load(Ordering::Relaxed) {
+        0 => std::env::var("GRATETILE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            }),
+        n => n,
+    };
+    configured.clamp(1, n_items)
+}
+
+/// Apply `f` to every item of `items` on a scoped worker pool, returning
+/// results in input order. Workers pull the next index from a shared
+/// atomic cursor, so uneven unit costs (a 224×224 VGG layer next to a
+/// 13×13 AlexNet one) balance automatically.
+pub fn par_map<T: Sync, R: Send>(
+    items: &[T],
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    let workers = threads_for(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(workers);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("par_map worker panicked"));
+        }
+    });
+
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in parts.into_iter().flatten() {
+        debug_assert!(slots[i].is_none());
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("par_map produced no result for an index"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * x
+        });
+        assert_eq!(out.len(), 257);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[41], |_, &x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn threads_for_respects_override() {
+        set_threads(3);
+        assert_eq!(threads_for(100), 3);
+        assert_eq!(threads_for(2), 2); // never more workers than items
+        set_threads(0);
+        assert!(threads_for(100) >= 1);
+        assert_eq!(threads_for(1), 1);
+        assert_eq!(threads_for(0), 1);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Mixed-cost units still return ordered results.
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map(&items, |_, &x| {
+            if x % 7 == 0 {
+                // Simulate an expensive unit.
+                (0..10_000u64).sum::<u64>() + x as u64
+            } else {
+                x as u64
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            let expect = if i % 7 == 0 { 49_995_000 + i as u64 } else { i as u64 };
+            assert_eq!(*v, expect);
+        }
+    }
+}

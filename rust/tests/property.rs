@@ -7,7 +7,7 @@ use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::layout::{Fetcher, Packer};
 use gratetile::memsim::Dram;
-use gratetile::sim::experiment::run_layer;
+use gratetile::sim::experiment::{run_layer, run_layer_naive};
 use gratetile::tensor::sparsity::{generate, SparsityParams};
 use gratetile::tiling::division::{Division, DivisionMode};
 use gratetile::util::proptest_lite::forall_res;
@@ -111,6 +111,54 @@ fn prop_division_partitions_map() {
         }
         if total != h * w * c {
             return Err(format!("partition covers {total} of {}", h * w * c));
+        }
+        Ok(())
+    });
+}
+
+/// The prefix-sum pricer is the production pricing path; the naive
+/// per-sub-tensor walker is the reference oracle. They must agree
+/// bit-exactly — fetched, metadata AND baseline bits — for every random
+/// layer geometry (strides, dilation, ragged maps), density, platform,
+/// and every Table III division mode.
+#[test]
+fn prop_pricer_matches_naive_walker() {
+    forall_res(0x9A1C, 25, gen_scenario, |sc| {
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        for platform in [Platform::NvidiaSmallTile, Platform::EyerissLargeTile] {
+            let hw = platform.hardware();
+            for mode in DivisionMode::table3_modes() {
+                let fast = run_layer(&hw, &sc.layer, &fm, mode, sc.scheme);
+                let slow = run_layer_naive(&hw, &sc.layer, &fm, mode, sc.scheme);
+                match (fast, slow) {
+                    (Ok(f), Ok(s)) => {
+                        if (f.fetched_bits, f.metadata_bits, f.baseline_bits)
+                            != (s.fetched_bits, s.metadata_bits, s.baseline_bits)
+                        {
+                            return Err(format!(
+                                "{} {}: pricer ({}, {}, {}) != naive ({}, {}, {})",
+                                hw.name,
+                                mode.name(),
+                                f.fetched_bits,
+                                f.metadata_bits,
+                                f.baseline_bits,
+                                s.fetched_bits,
+                                s.metadata_bits,
+                                s.baseline_bits,
+                            ));
+                        }
+                    }
+                    (Err(a), Err(b)) if a == b => {}
+                    (f, s) => {
+                        return Err(format!(
+                            "{} {}: applicability mismatch {f:?} vs {s:?}",
+                            hw.name,
+                            mode.name()
+                        ))
+                    }
+                }
+            }
         }
         Ok(())
     });
