@@ -1,11 +1,15 @@
 //! Perf bench: the coordinator pipeline (fetch → decompress → conv),
-//! double-buffered vs serialised prefetch. §Perf target: fetch and
-//! compute overlap (overlap efficiency → 1.0) and tiles/s.
+//! double-buffered vs serialised prefetch, plus the store-resident
+//! variant (streamed compressed write-back, arena-addressed reads).
+//! §Perf target: fetch and compute overlap (overlap efficiency → 1.0),
+//! tiles/s, and the store chain's staging staying far below the dense
+//! intermediate it replaces.
 
 use gratetile::compress::Scheme;
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::coordinator::{LayerRunner, PipelineConfig, Weights};
+use gratetile::store::TensorStore;
 use gratetile::tensor::sparsity::{generate, SparsityParams};
 use gratetile::tiling::DivisionMode;
 use gratetile::util::benchkit::Bencher;
@@ -30,6 +34,40 @@ fn main() {
         });
         if let Some(m) = last {
             println!("  depth {depth}: {}", m.summary());
+        }
+    }
+
+    // Store-resident chain: read from the store, stream compressed
+    // write-back into it (no dense intermediate), timed-DRAM replay at
+    // real addresses.
+    {
+        let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+        cfg.mode = DivisionMode::GrateTile { n: 8 };
+        cfg.scheme = Scheme::Bitmask;
+        let runner = LayerRunner::new(cfg);
+        let mut last = None;
+        b.bench("pipeline/56x56x32/store-chain", || {
+            let mut store = TensorStore::new();
+            let layers = [(layer, weights.clone())];
+            let per_layer = runner
+                .run_network_in_store(&mut store, &layers, fm.clone(), "act")
+                .unwrap();
+            last = Some(per_layer.into_iter().next().unwrap());
+        });
+        if let Some(m) = last {
+            println!("  store-chain: {}", m.summary());
+            let dense_words = (layer.out_h() * layer.out_w() * layer.c_out) as u64;
+            println!(
+                "  store-chain: writeback {} KB (+{} B meta), staging peak {} of {} dense words",
+                m.writeback_payload_bits / 8 / 1024,
+                m.writeback_meta_bits / 8,
+                m.peak_staged_words,
+                dense_words,
+            );
+            assert!(
+                m.peak_staged_words < dense_words,
+                "streaming writer staged a whole dense map"
+            );
         }
     }
     b.write_csv("perf_pipeline");

@@ -17,6 +17,20 @@ pub struct PipelineMetrics {
     pub feature_lines: u64,
     pub metadata_words: u64,
     pub output_words: u64,
+    /// Producer-side index traffic (Fig. 7 records written back).
+    pub metadata_write_words: u64,
+    /// Exact streamed write-back bits (payload, line-padded) — equals
+    /// the analytic `total_words × 16` of the stored map; 0 on the
+    /// dense (non-store) path.
+    pub writeback_payload_bits: u64,
+    /// Exact streamed metadata bits (`n_blocks × bits_per_record`).
+    pub writeback_meta_bits: u64,
+    /// Dense staging high-water mark of the streaming writer, in words.
+    pub peak_staged_words: u64,
+    /// Timed-DRAM replay of the layer's real addresses (store path).
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub dram_cycles: u64,
 }
 
 impl PipelineMetrics {
@@ -24,6 +38,7 @@ impl PipelineMetrics {
         self.feature_lines += dram.lines_of(Stream::FeatureRead);
         self.metadata_words += dram.words_of(Stream::MetadataRead);
         self.output_words += dram.words_of(Stream::OutputWrite);
+        self.metadata_write_words += dram.words_of(Stream::MetadataWrite);
     }
 
     pub fn merge(&mut self, o: &PipelineMetrics) {
@@ -34,6 +49,28 @@ impl PipelineMetrics {
         self.feature_lines += o.feature_lines;
         self.metadata_words += o.metadata_words;
         self.output_words += o.output_words;
+        self.metadata_write_words += o.metadata_write_words;
+        self.writeback_payload_bits += o.writeback_payload_bits;
+        self.writeback_meta_bits += o.writeback_meta_bits;
+        self.peak_staged_words = self.peak_staged_words.max(o.peak_staged_words);
+        self.row_hits += o.row_hits;
+        self.row_misses += o.row_misses;
+        self.dram_cycles += o.dram_cycles;
+    }
+
+    /// Total producer-side bits (payload + index) of the streamed write.
+    pub fn writeback_bits(&self) -> u64 {
+        self.writeback_payload_bits + self.writeback_meta_bits
+    }
+
+    /// Row-buffer hit rate of the timed replay (0 when not replayed).
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
     }
 
     pub fn tiles_per_sec(&self) -> f64 {
@@ -61,7 +98,7 @@ impl PipelineMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "tiles={} wall={:.1}ms fetch={:.1}ms compute={:.1}ms overlap={:.0}% feature={}KB meta={}KB out={}KB ({:.0} tiles/s)",
             self.tiles,
             self.wall.as_secs_f64() * 1e3,
@@ -72,7 +109,11 @@ impl PipelineMetrics {
             self.metadata_words * 2 / 1024,
             self.output_words * 2 / 1024,
             self.tiles_per_sec(),
-        )
+        );
+        if self.row_hits + self.row_misses > 0 {
+            s.push_str(&format!(" rowhit={:.0}%", self.row_hit_rate() * 100.0));
+        }
+        s
     }
 }
 

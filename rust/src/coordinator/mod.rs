@@ -6,8 +6,11 @@
 //! feature maps with a *double-buffered prefetch thread*: while the
 //! compute lane convolves tile `i`, the fetch lane is already reading
 //! and decompressing the sub-tensors of tile `i+1` — the overlap a real
-//! memory controller provides. Outputs are ReLU'd and re-packed, so a
-//! multi-layer run keeps every intermediate map compressed in "DRAM".
+//! memory controller provides. Multi-layer runs are store-resident
+//! ([`crate::store::TensorStore`]): each layer's output streams
+//! compressed into the store tile-by-tile and becomes the next layer's
+//! packed input, so no dense intermediate map ever materialises and the
+//! DRAM timing model sees real arena-assigned addresses.
 //!
 //! [`server`] wraps the pipeline in a request-serving leader/worker
 //! topology (bounded queue, N worker threads, latency percentiles) for

@@ -16,13 +16,15 @@
 
 use super::conv::{accumulate_tile, Weights};
 use super::metrics::PipelineMetrics;
+use crate::bail;
 use crate::compress::Scheme;
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::layout::fetcher::{DenseWindow, Fetcher};
 use crate::layout::packer::{PackedFeatureMap, Packer};
-use crate::memsim::{Dram, Stream};
+use crate::memsim::{Dram, DramTiming, Stream, TimedDram};
 use crate::sim::walker::TileWalker;
+use crate::store::{StoreWriter, TensorStore};
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, DivisionMode};
 use crate::util::error::{Context, Result};
@@ -146,23 +148,202 @@ impl LayerRunner {
         Ok((out, metrics))
     }
 
-    /// Run a whole stack: pack the input once, then per layer
-    /// fetch→compute→ReLU→re-pack, keeping every intermediate map in
-    /// compressed storage. Returns the final map plus per-layer metrics.
+    /// Division the *output* of a layer is stored under: built for its
+    /// consumer (the next layer), or for a pointwise identity view when
+    /// the stack ends. Falls back to a uniform grid if the configured
+    /// GrateTile modulus does not exist for the consumer's tile
+    /// (Table III footnote a) — the store must always be writable.
+    pub fn output_division(
+        &self,
+        consumer: Option<&ConvLayer>,
+        h: usize,
+        w: usize,
+        c: usize,
+    ) -> Result<Division> {
+        let fallback = ConvLayer::new(0, 1, h, w, c, c);
+        let consumer = consumer.copied().unwrap_or(fallback);
+        let tile = self.cfg.hw.tile_for_layer(&consumer);
+        match Division::build(self.cfg.mode, &consumer, &tile, &self.cfg.hw, h, w, c) {
+            Ok(d) => Ok(d),
+            Err(_) => {
+                Division::build(
+                    DivisionMode::Uniform { edge: 8 },
+                    &consumer,
+                    &tile,
+                    &self.cfg.hw,
+                    h,
+                    w,
+                    c,
+                )
+                .context("building fallback output division")
+            }
+        }
+    }
+
+    /// Run one layer store-to-store: the input is fetched from
+    /// `store[input]` through the store-backed [`Fetcher`] (prefetch
+    /// lane, real DRAM addresses), the output is streamed compressed
+    /// into `store[output]` under `out_division` by a [`StoreWriter`] —
+    /// no dense intermediate map materialises. The layer's reads and
+    /// writes are replayed through the [`TimedDram`] row-buffer model at
+    /// their real store addresses.
+    pub fn run_layer_store(
+        &self,
+        store: &mut TensorStore,
+        input: &str,
+        output: &str,
+        layer: &ConvLayer,
+        weights: &Weights,
+        out_division: Division,
+    ) -> Result<PipelineMetrics> {
+        let tile = self.cfg.hw.tile_for_layer(layer);
+        let walker = TileWalker::new(*layer, tile);
+        let (out_h, out_w) = (layer.out_h(), layer.out_w());
+        let mut metrics = PipelineMetrics::default();
+        let wall_start = Instant::now();
+
+        let (snap_packed, snap_payload) = store.snapshot(input)?;
+        {
+            let d = &snap_packed.division;
+            if (d.fm_h, d.fm_w, d.fm_c) != (layer.h, layer.w, layer.c_in) {
+                bail!(
+                    "store tensor '{input}' is {}x{}x{}, layer expects {}x{}x{}",
+                    d.fm_h, d.fm_w, d.fm_c, layer.h, layer.w, layer.c_in
+                );
+            }
+        }
+        let mut writer = StoreWriter::new(store, output, out_division, self.cfg.scheme);
+
+        let depth = self.cfg.prefetch_depth.max(1);
+        let (tx, rx) = sync_channel::<DenseWindow>(depth);
+
+        let (fetch_busy, fetch_dram) = std::thread::scope(
+            |scope| -> Result<(Duration, Dram)> {
+                // ---- prefetch lane: reads the store snapshot ----
+                let walker_f = walker.clone();
+                let fetch_handle = scope.spawn(move || {
+                    let packed = snap_packed;
+                    let mut fetcher =
+                        Fetcher::with_source(&packed, Box::new(snap_payload));
+                    let mut dram = Dram::default().with_trace();
+                    let mut busy = Duration::ZERO;
+                    for w in walker_f.iter() {
+                        let t0 = Instant::now();
+                        let win = fetcher.fetch_window(
+                            &mut dram, w.y0, w.y1, w.x0, w.x1, w.c0, w.c1,
+                        );
+                        busy += t0.elapsed();
+                        if tx.send(win).is_err() {
+                            break;
+                        }
+                    }
+                    (busy, dram)
+                });
+
+                // ---- compute lane: convolve, ReLU, stream to store ----
+                let mut acc: Vec<f32> = Vec::new();
+                for ty in 0..walker.n_ty {
+                    let oy0 = ty * tile.th;
+                    let oy1 = (oy0 + tile.th).min(out_h);
+                    for tx_i in 0..walker.n_tx {
+                        let ox0 = tx_i * tile.tw;
+                        let ox1 = (ox0 + tile.tw).min(out_w);
+                        acc.clear();
+                        acc.resize((oy1 - oy0) * (ox1 - ox0) * layer.c_out, 0.0);
+                        for _tcg in 0..walker.n_tcg {
+                            let win = rx.recv().context("prefetch lane died")?;
+                            let t0 = Instant::now();
+                            accumulate_tile(layer, weights, &win, &mut acc, oy0, oy1, ox0, ox1);
+                            metrics.compute_busy += t0.elapsed();
+                        }
+                        let t0 = Instant::now();
+                        for v in &mut acc {
+                            *v = v.max(0.0);
+                        }
+                        writer.write_tile(oy0, oy1, ox0, ox1, 0, layer.c_out, &acc);
+                        metrics.compute_busy += t0.elapsed();
+                        metrics.tiles += 1;
+                    }
+                }
+                drop(rx);
+                let (busy, dram) = fetch_handle.join().expect("prefetch lane panicked");
+                Ok((busy, dram))
+            },
+        )?;
+
+        let report = writer.finish()?;
+        // Wall clock covers the pipeline itself; the trace replay below
+        // is post-hoc simulator bookkeeping and must not skew
+        // tiles_per_sec / overlap_efficiency.
+        metrics.wall = wall_start.elapsed();
+        metrics.fetch_busy = fetch_busy;
+        metrics.absorb_dram(&fetch_dram);
+        metrics.absorb_dram(&report.dram);
+        metrics.writeback_payload_bits = report.payload_bits;
+        metrics.writeback_meta_bits = report.metadata_bits;
+        metrics.peak_staged_words = report.peak_staged_words as u64;
+
+        // Replay both lanes' accesses at their real store addresses
+        // through the row-buffer model — the store makes these genuine,
+        // scattered, arena-assigned addresses rather than every map
+        // starting at 0.
+        let mut timed = TimedDram::new(DramTiming::default());
+        for trace in [fetch_dram.trace(), report.dram.trace()].into_iter().flatten() {
+            for a in trace {
+                timed.read(a.addr_words, a.words);
+            }
+        }
+        metrics.row_hits = timed.row_hits;
+        metrics.row_misses = timed.row_misses;
+        metrics.dram_cycles = timed.cycles;
+        Ok(metrics)
+    }
+
+    /// Run a whole stack store-resident: the dense input image is packed
+    /// once into `store`, then every layer reads its input from the
+    /// store and streams its output back compressed — the packed output
+    /// of layer N *is* the packed input of layer N+1, and no dense
+    /// intermediate map ever materialises. Consumed inputs are freed,
+    /// exercising the arena's reuse path. Tensors are named
+    /// `<prefix>0..=<prefix>N`; the final activation stays resident.
+    pub fn run_network_in_store(
+        &self,
+        store: &mut TensorStore,
+        layers: &[(ConvLayer, Weights)],
+        input: FeatureMap,
+        prefix: &str,
+    ) -> Result<Vec<PipelineMetrics>> {
+        if layers.is_empty() {
+            bail!("run_network_in_store: empty layer stack");
+        }
+        let packed = self.pack(&layers[0].0, &input).context("packing network input")?;
+        store.insert_packed(&format!("{prefix}0"), &packed)?;
+        let mut per_layer = Vec::with_capacity(layers.len());
+        for (i, (layer, weights)) in layers.iter().enumerate() {
+            let next = layers.get(i + 1).map(|(l, _)| l);
+            let div = self.output_division(next, layer.out_h(), layer.out_w(), layer.c_out)?;
+            let in_name = format!("{prefix}{i}");
+            let out_name = format!("{prefix}{}", i + 1);
+            let m = self.run_layer_store(store, &in_name, &out_name, layer, weights, div)?;
+            per_layer.push(m);
+            store.remove(&in_name)?;
+        }
+        Ok(per_layer)
+    }
+
+    /// Run a whole stack through a fresh [`TensorStore`] and fetch the
+    /// final activation dense. Every intermediate map lives only as
+    /// compressed store-resident storage.
     pub fn run_network(
         &self,
         layers: &[(ConvLayer, Weights)],
         input: FeatureMap,
     ) -> Result<(FeatureMap, Vec<PipelineMetrics>)> {
-        let mut fm = input;
-        let mut per_layer = Vec::with_capacity(layers.len());
-        for (layer, weights) in layers {
-            let packed = self.pack(layer, &fm).context("packing layer input")?;
-            let (out, m) = self.run_layer(layer, weights, &packed)?;
-            per_layer.push(m);
-            fm = out;
-        }
-        Ok((fm, per_layer))
+        let mut store = TensorStore::new();
+        let per_layer = self.run_network_in_store(&mut store, layers, input, "act")?;
+        let mut dram = Dram::default();
+        let out = store.fetch_dense(&format!("act{}", layers.len()), &mut dram)?;
+        Ok((out, per_layer))
     }
 }
 
@@ -259,6 +440,58 @@ mod tests {
             let (out, _) = runner.run_layer(&layer, &w, &packed).unwrap();
             assert_fm_close(&out, &direct_conv_relu(&layer, &w, &fm), 0.02);
         }
+    }
+
+    /// Store-resident chaining: intermediates are freed as consumed,
+    /// write-back traffic is accounted exactly, staging never holds the
+    /// whole map, and the timed replay sees real addresses.
+    #[test]
+    fn store_chain_frees_intermediates_and_accounts_writeback() {
+        let l1 = ConvLayer::new(1, 1, 40, 40, 16, 16);
+        let l2 = ConvLayer::new(1, 1, 40, 40, 16, 8);
+        let layers =
+            vec![(l1, Weights::random(&l1, 4)), (l2, Weights::random(&l2, 5))];
+        let input = generate(40, 40, 16, SparsityParams::clustered(0.5, 6));
+        let runner = LayerRunner::new(cfg());
+        let mut store = crate::store::TensorStore::new();
+        let per_layer =
+            runner.run_network_in_store(&mut store, &layers, input, "act").unwrap();
+        assert_eq!(per_layer.len(), 2);
+        // Only the final activation remains resident.
+        assert_eq!(store.names(), vec!["act2".to_string()]);
+        store.arena().check().unwrap();
+        for m in &per_layer {
+            assert!(m.writeback_payload_bits > 0);
+            assert!(m.writeback_meta_bits > 0);
+            assert!(m.metadata_write_words > 0, "producer-side index traffic accounted");
+            assert!(m.row_hits + m.row_misses > 0, "timed replay ran");
+            // The streaming writer's staging stays well under the dense
+            // intermediate it replaces (40x40x16 = 25600 words).
+            assert!(
+                (m.peak_staged_words as usize) < 40 * 40 * 16,
+                "staging {} should not reach the dense map",
+                m.peak_staged_words
+            );
+        }
+    }
+
+    /// `run_network` (store-backed) still matches the dense oracle and
+    /// a store-resident intermediate fetched back equals what the dense
+    /// path would have produced (bf16).
+    #[test]
+    fn store_chain_matches_dense_oracle() {
+        let l1 = ConvLayer::new(1, 1, 24, 24, 8, 8);
+        let l2 = ConvLayer::new(0, 1, 24, 24, 8, 8);
+        let layers =
+            vec![(l1, Weights::random(&l1, 7)), (l2, Weights::random(&l2, 8))];
+        let input = generate(24, 24, 8, SparsityParams::clustered(0.5, 9));
+        let runner = LayerRunner::new(cfg());
+        let (out, _) = runner.run_network(&layers, input.clone()).unwrap();
+        let mut fm = input;
+        for (l, w) in &layers {
+            fm = direct_conv_relu(l, w, &fm);
+        }
+        assert_fm_close(&out, &fm, 0.05);
     }
 
     #[test]

@@ -5,12 +5,13 @@ use crate::compress::hwmodel::{decode_block, DecoderConfig};
 use crate::compress::Scheme;
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
-use crate::config::zoo::Network;
+use crate::config::zoo::{full_conv_stack, Network};
 use crate::sim::access::access_study;
 use crate::sim::metacache::{metadata_cache_study, TileOrder};
-use crate::sim::network::run_network_bandwidth;
+use crate::sim::network::{depth_density, run_network_bandwidth, writeback_cost};
+use crate::store::{StoreWriter, TensorStore};
 use crate::tensor::sparsity::{generate, SparsityParams};
-use crate::tiling::division::DivisionMode;
+use crate::tiling::division::{Division, DivisionMode};
 use crate::util::table::Table;
 
 /// Whole-network fetch + write-back traffic per division mode.
@@ -32,6 +33,67 @@ pub fn network_table(scheme: Scheme) -> Table {
             cell(DivisionMode::Uniform { edge: 8 }),
             cell(DivisionMode::Uniform { edge: 4 }),
         ]);
+    }
+    t
+}
+
+/// Functional vs. analytic producer-side write-back, per network: each
+/// intermediate map (same synthesis seed as [`network_table`]) is
+/// streamed through the [`StoreWriter`] in 8-row tile bands, and the
+/// report's exact bits are set against `sim::network::writeback_cost`'s
+/// closed form. The Match column must read `exact` everywhere — the
+/// functional store and the analytic simulator are one model.
+pub fn store_compare_table(scheme: Scheme) -> Table {
+    let hw = Platform::EyerissLargeTile.hardware();
+    let mode = DivisionMode::GrateTile { n: 8 };
+    let mut t = Table::new(&format!(
+        "Store write-back: functional (streamed) vs analytic bits ({}, GrateTile mod 8, Eyeriss)",
+        scheme.name()
+    ))
+    .header(vec![
+        "Network",
+        "Map",
+        "Functional payload+meta bits",
+        "Analytic payload+meta bits",
+        "Meta %",
+        "Match",
+    ]);
+    for net in Network::all() {
+        let stack = full_conv_stack(net);
+        let n = stack.len();
+        for (i, layer) in stack.iter().enumerate().skip(1).take(2) {
+            let density = depth_density(net, i, n);
+            let fm = generate(
+                layer.h,
+                layer.w,
+                layer.c_in,
+                SparsityParams::clustered(density, 17 ^ (i as u64) << 8),
+            );
+            let Ok((payload, meta)) = writeback_cost(&hw, layer, &fm, mode, scheme) else {
+                continue;
+            };
+            let tile = hw.tile_for_layer(layer);
+            let div = Division::build(mode, layer, &tile, &hw, fm.h, fm.w, fm.c)
+                .expect("writeback_cost built the same division");
+            let mut store = TensorStore::new();
+            let mut w = StoreWriter::new(&mut store, "t", div, scheme);
+            for y0 in (0..fm.h).step_by(8) {
+                let y1 = (y0 + 8).min(fm.h);
+                let band = fm.extract_block(y0, 0, 0, y1 - y0, fm.w, fm.c);
+                w.write_tile(y0, y1, 0, fm.w, 0, fm.c, &band);
+            }
+            let rep = w.finish().expect("full map streamed");
+            let functional = rep.writeback_bits();
+            let analytic = payload + meta;
+            t.row(vec![
+                net.name().to_string(),
+                format!("conv{i} {}x{}x{}", fm.h, fm.w, fm.c),
+                functional.to_string(),
+                analytic.to_string(),
+                format!("{:.2}", meta as f64 / payload as f64 * 100.0),
+                if functional == analytic { "exact".into() } else { "MISMATCH".to_string() },
+            ]);
+        }
     }
     t
 }
@@ -150,6 +212,14 @@ pub fn roofline_table(scheme: Scheme) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn store_compare_table_is_exact_everywhere() {
+        let csv = store_compare_table(Scheme::Bitmask).render_csv();
+        assert!(csv.lines().count() > 4, "{csv}");
+        assert!(!csv.contains("MISMATCH"), "{csv}");
+        assert!(csv.contains("exact"));
+    }
 
     #[test]
     fn access_table_has_all_applicable_modes() {

@@ -38,11 +38,53 @@ impl DenseWindow {
     }
 }
 
+/// Where a fetch reads its compressed words from. The layout
+/// (`PackedFeatureMap`) describes *where* each sub-tensor lives; the
+/// payload source is *what* is stored there — an in-memory pack, a
+/// snapshot of the store's simulated DRAM, or a `.grate` container
+/// segment on disk. Addresses are 16-bit-word addresses in whatever
+/// space the layout's `addr_words` were assigned in.
+pub trait PayloadSource: Send {
+    /// Append `n_words` payload words starting at `addr_words` to `out`.
+    fn read_words(&mut self, addr_words: u64, n_words: usize, out: &mut Vec<u16>);
+}
+
+/// Contiguous in-memory payload (a `Packer`-materialised map, address 0
+/// = first payload word).
+pub struct SlicePayload<'a>(pub &'a [u16]);
+
+impl PayloadSource for SlicePayload<'_> {
+    fn read_words(&mut self, addr_words: u64, n_words: usize, out: &mut Vec<u16>) {
+        let a = addr_words as usize;
+        out.extend_from_slice(&self.0[a..a + n_words]);
+    }
+}
+
+/// Scattered extents of a larger address space (a tensor-store
+/// snapshot): `(base_addr, words)` sorted by base. A sub-tensor read
+/// never crosses an extent, because every extent holds whole metadata
+/// blocks.
+pub struct SegmentPayload {
+    pub segs: Vec<(u64, Vec<u16>)>,
+}
+
+impl PayloadSource for SegmentPayload {
+    fn read_words(&mut self, addr_words: u64, n_words: usize, out: &mut Vec<u16>) {
+        let i = self.segs.partition_point(|s| s.0 <= addr_words);
+        assert!(i > 0, "address {addr_words} below every payload segment");
+        let (base, words) = &self.segs[i - 1];
+        let off = (addr_words - base) as usize;
+        out.extend_from_slice(&words[off..off + n_words]);
+    }
+}
+
 /// Fetches windows from a packed feature map.
 pub struct Fetcher<'a> {
     packed: &'a PackedFeatureMap,
     codec: Box<dyn Compressor>,
     scratch: Vec<f32>,
+    comp_words: Vec<u16>,
+    source: Box<dyn PayloadSource + 'a>,
 }
 
 impl<'a> Fetcher<'a> {
@@ -51,7 +93,24 @@ impl<'a> Fetcher<'a> {
             packed.payload.is_some(),
             "fetcher requires a payload-packed map (pack with with_payload=true)"
         );
-        Self { packed, codec: packed.scheme.build(), scratch: Vec::new() }
+        let payload = packed.payload.as_ref().unwrap().as_slice();
+        Self::with_source(packed, Box::new(SlicePayload(payload)))
+    }
+
+    /// Read through an explicit payload source (store snapshot, `.grate`
+    /// container segment, ...); `packed.addr_words` must be addresses in
+    /// the source's space.
+    pub fn with_source(
+        packed: &'a PackedFeatureMap,
+        source: Box<dyn PayloadSource + 'a>,
+    ) -> Self {
+        Self {
+            packed,
+            codec: packed.scheme.build(),
+            scratch: Vec::new(),
+            comp_words: Vec::new(),
+            source,
+        }
     }
 
     /// Fetch a clipped window, decompressing every intersecting
@@ -73,21 +132,26 @@ impl<'a> Fetcher<'a> {
         assert!(y1 <= div.fm_h && x1 <= div.fm_w && c1 <= div.fm_c);
         let (wh, ww, wc) = (y1 - y0, x1 - x0, c1 - c0);
         let mut out = vec![0.0f32; wh * ww * wc];
-        let payload = self.packed.payload.as_ref().unwrap();
 
         // Metadata reads: one record per touched block, once per fetch.
-        let mut touched_blocks: Vec<usize> = Vec::new();
-        let subs = div.intersecting(y0, y1, x0, x1, c0, c1);
-        for &r in &subs {
-            let b = div.block_linear(r);
-            if !touched_blocks.contains(&b) {
-                touched_blocks.push(b);
+        // The touched blocks form an axis-aligned box (block ids are
+        // non-decreasing along each axis), so walk the block ranges
+        // directly instead of deduplicating per sub-tensor (the old
+        // `touched_blocks.contains` scan was O(touched²)).
+        let yr = Division::covering(&div.ys, y0, y1);
+        let xr = Division::covering(&div.xs, x0, x1);
+        let cg0 = c0 / div.cd;
+        let cg1 = c1.div_ceil(div.cd).min(div.n_cgroups);
+        if !yr.is_empty() && !xr.is_empty() && cg0 < cg1 {
+            let n_by = div.block_of_y[yr.end - 1] - div.block_of_y[yr.start] + 1;
+            let n_bx = div.block_of_x[xr.end - 1] - div.block_of_x[xr.start] + 1;
+            for _ in 0..n_by * n_bx * (cg1 - cg0) {
                 dram.account_bits(Stream::MetadataRead, div.meta_bits_per_block as u64);
             }
         }
 
-        for r in subs {
-            self.fetch_subtensor(dram, payload, r, &mut out, y0, y1, x0, x1, c0, c1);
+        for r in div.intersecting(y0, y1, x0, x1, c0, c1) {
+            self.fetch_subtensor(dram, r, &mut out, y0, y1, x0, x1, c0, c1);
         }
         DenseWindow { y0, y1, x0, x1, c0, c1, data: out }
     }
@@ -96,7 +160,6 @@ impl<'a> Fetcher<'a> {
     fn fetch_subtensor(
         &mut self,
         dram: &mut Dram,
-        payload: &[u16],
         r: SubTensorRef,
         out: &mut [f32],
         y0: usize,
@@ -121,11 +184,14 @@ impl<'a> Fetcher<'a> {
         let n = sy.len * sx.len * cd;
         self.scratch.clear();
         self.scratch.resize(n, 0.0);
+        self.comp_words.clear();
+        self.source.read_words(addr, size as usize, &mut self.comp_words);
         let comp = CompressedBlock {
             n_elems: n,
-            words: payload[addr as usize..(addr + size) as usize].to_vec(),
+            words: std::mem::take(&mut self.comp_words),
         };
         self.codec.decompress(&comp, &mut self.scratch);
+        self.comp_words = comp.words;
 
         // Copy the intersection into the window buffer.
         let iy0 = sy.start.max(y0);
@@ -245,6 +311,40 @@ mod tests {
         assert!(
             d2.lines_of(Stream::FeatureRead) > d1.lines_of(Stream::FeatureRead)
         );
+    }
+
+    /// Reading through a scattered-segment source is identical to the
+    /// contiguous in-memory path.
+    #[test]
+    fn segment_source_matches_slice_source() {
+        let (fm, packed) = packed_map(DivisionMode::GrateTile { n: 8 }, Scheme::Zrlc);
+        let payload = packed.payload.as_ref().unwrap();
+        // One segment per metadata block (extents hold whole blocks),
+        // rebased to a scattered address space.
+        let rebase = 1024u64;
+        let mut ptrs: Vec<u64> =
+            packed.metadata.records.iter().map(|r| r.pointer_words).collect();
+        ptrs.push(payload.len() as u64);
+        let segs: Vec<(u64, Vec<u16>)> = ptrs
+            .windows(2)
+            .map(|w| (rebase + w[0], payload[w[0] as usize..w[1] as usize].to_vec()))
+            .collect();
+        let mut rebased = packed.clone();
+        rebased.payload = None;
+        for a in &mut rebased.addr_words {
+            *a += rebase;
+        }
+        let mut fetcher =
+            Fetcher::with_source(&rebased, Box::new(SegmentPayload { segs }));
+        let mut dram = Dram::default();
+        let win = fetcher.fetch_window(&mut dram, 3, 20, 1, 17, 0, 16);
+        for y in 3..20 {
+            for x in 1..17 {
+                for ch in 0..16 {
+                    assert_eq!(win.get(y, x, ch), fm.get(y, x, ch));
+                }
+            }
+        }
     }
 
     #[test]

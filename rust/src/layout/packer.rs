@@ -36,7 +36,10 @@ pub struct PackedFeatureMap {
     /// Total storage footprint in words (end of the last sub-tensor,
     /// line-rounded for aligned modes).
     pub total_words: u64,
-    words_per_line: usize,
+    /// Line geometry the addresses were assigned under (crate-visible so
+    /// the store's streaming writer and the container reader can
+    /// assemble layouts without re-packing).
+    pub(crate) words_per_line: usize,
 }
 
 impl PackedFeatureMap {
@@ -83,6 +86,11 @@ impl PackedFeatureMap {
     /// Storage footprint in cache lines.
     pub fn total_lines(&self) -> u64 {
         (self.total_words as usize).div_ceil(self.words_per_line) as u64
+    }
+
+    /// Line geometry the map was packed under.
+    pub fn line_words(&self) -> usize {
+        self.words_per_line
     }
 
     /// Compression ratio vs. the dense map (< 1 is smaller).

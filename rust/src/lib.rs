@@ -8,10 +8,11 @@
 //! ## Layer map
 //!
 //! * **L3 (this crate)** — GrateTile division ([`tiling`]), compressed
-//!   memory layout with Fig. 7 metadata ([`layout`]), the DRAM bandwidth
-//!   simulator ([`memsim`], [`sim`]), the accelerator coordinator
-//!   ([`coordinator`]), a systolic power model ([`power`]), and the
-//!   evaluation harness ([`harness`]).
+//!   memory layout with Fig. 7 metadata ([`layout`]), the tensor store
+//!   with its streaming write path and `.grate` container ([`store`]),
+//!   the DRAM bandwidth simulator ([`memsim`], [`sim`]), the accelerator
+//!   coordinator ([`coordinator`]), a systolic power model ([`power`]),
+//!   and the evaluation harness ([`harness`]).
 //! * **L2/L1 (build time)** — `python/compile/` lowers a JAX CNN (with a
 //!   Pallas conv kernel) to HLO text once; [`runtime`] loads and executes
 //!   it via PJRT so the e2e example runs on *real* ReLU sparsity.
@@ -26,6 +27,7 @@ pub mod memsim;
 pub mod power;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod tensor;
 pub mod tiling;
 pub mod util;

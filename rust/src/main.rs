@@ -7,6 +7,7 @@
 //! gratetile ablation --codecs|--whole-channel|--sweep|--dilated
 //! gratetile e2e [--mode grate8] [--requests 4]       # PJRT end-to-end
 //! gratetile serve --workers 4 --requests 32          # serving driver
+//! gratetile store pack|inspect|serve|compare         # .grate containers
 //! ```
 
 use gratetile::cli::Cli;
@@ -99,6 +100,7 @@ fn run(cli: &Cli) -> Result<()> {
             }
         }
         "network" => emit(cli, "network", harness::network_table(scheme)),
+        "store" => cmd_store(cli, scheme)?,
         "access" => emit(cli, "access", harness::access_table()),
         "metacache" => emit(cli, "metacache", harness::metacache_table()),
         "datapath" => emit(cli, "datapath", harness::codec_datapath_table()),
@@ -237,6 +239,118 @@ fn cmd_e2e(cli: &Cli, scheme: Scheme) -> Result<()> {
     Ok(())
 }
 
+/// The tensor-store toolbox: pack feature maps into a `.grate`
+/// container, inspect/verify one, serve inference from one, or compare
+/// the functional write path against the analytic simulator.
+fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
+    use gratetile::layout::Packer;
+    use gratetile::store::Container;
+    use gratetile::tiling::Division;
+
+    let action = cli.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match action {
+        "pack" => {
+            let out = Path::new(cli.opt_or("out", "store.grate"));
+            let h = cli.opt_usize("h", 32);
+            let w = cli.opt_usize("w", 32);
+            let c = cli.opt_usize("c", 16);
+            let count = cli.opt_usize("count", 4);
+            let density = cli.opt_f64("density", 0.4);
+            let seed = cli.opt_usize("seed", 7) as u64;
+            let mode = parse_mode(cli.opt_or("mode", "grate8"))?;
+            let hw = Platform::NvidiaSmallTile.hardware();
+            // Pack for a 3x3 s=1 consumer of each map.
+            let layer = ConvLayer::new(1, 1, h, w, c, c);
+            let tile = hw.tile_for_layer(&layer);
+            let div = Division::build(mode, &layer, &tile, &hw, h, w, c)
+                .map_err(|e| err!("{e}"))?;
+            let packer = Packer::new(hw, scheme);
+            let packs: Vec<(String, _)> = (0..count)
+                .map(|i| {
+                    let fm =
+                        generate(h, w, c, SparsityParams::clustered(density, seed + i as u64));
+                    (format!("req{i}"), packer.pack(&fm, &div, true))
+                })
+                .collect();
+            let refs: Vec<(String, &_)> =
+                packs.iter().map(|(n, p)| (n.clone(), p)).collect();
+            Container::write(out, &refs)?;
+            let dense_words = (h * w * c * count) as u64;
+            let packed_words: u64 = packs.iter().map(|(_, p)| p.total_words).sum();
+            println!(
+                "packed {count} x {h}x{w}x{c} (d={density}) as {} under {} + {}: {} -> {} words ({:.1}%)",
+                out.display(),
+                mode.name(),
+                scheme.name(),
+                dense_words,
+                packed_words,
+                packed_words as f64 / dense_words as f64 * 100.0
+            );
+            Ok(())
+        }
+        "inspect" => {
+            let path = cli
+                .positional
+                .get(1)
+                .map(|s| Path::new(s.as_str()))
+                .ok_or_else(|| err!("usage: store inspect <file.grate>"))?;
+            let c = Container::open(path)?;
+            c.verify()?;
+            let mut t = Table::new(&format!("{} — {} tensors, checksums OK", path.display(), c.entries.len()))
+                .header(vec!["Tensor", "Shape", "Mode", "Scheme", "Payload words", "Ratio %", "Meta bits"]);
+            for e in &c.entries {
+                let (h, w, ch) = e.shape();
+                t.row(vec![
+                    e.name.clone(),
+                    format!("{h}x{w}x{ch}"),
+                    e.packed.division.mode.name(),
+                    e.packed.scheme.name().to_string(),
+                    e.payload_words.to_string(),
+                    format!("{:.1}", e.packed.compression_ratio() * 100.0),
+                    e.packed.metadata.total_bits().to_string(),
+                ]);
+            }
+            emit(cli, "store_inspect", t);
+            Ok(())
+        }
+        "serve" => {
+            let path = cli
+                .positional
+                .get(1)
+                .map(|s| Path::new(s.as_str()))
+                .ok_or_else(|| err!("usage: store serve <file.grate>"))?;
+            let workers = cli.opt_usize("workers", 2);
+            let c = Container::open(path)?;
+            let first = c
+                .entries
+                .first()
+                .ok_or_else(|| err!("{}: empty container", path.display()))?;
+            let (h, w, ch) = first.shape();
+            drop(c);
+            // A small demo net matched to the stored maps' shape.
+            let l1 = ConvLayer::new(1, 1, h, w, ch, 16);
+            let l2 = ConvLayer::new(1, 2, h, w, 16, 8);
+            let layers = vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))];
+            let server = Server::new(
+                ServerConfig {
+                    pipeline: PipelineConfig::new(Platform::NvidiaSmallTile.hardware()),
+                    workers,
+                    queue_depth: workers * 2,
+                },
+                layers,
+            );
+            let report = server.serve_container(path)?;
+            println!("{}", report.summary());
+            Ok(())
+        }
+        "compare" => {
+            emit(cli, "store_compare", harness::store_compare_table(scheme));
+            Ok(())
+        }
+        other => bail!("unknown store action '{other}' (pack/inspect/serve/compare)"),
+    }
+}
+
 /// Serving driver: leader + workers over the pipeline.
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let workers = cli.opt_usize("workers", 4);
@@ -284,6 +398,11 @@ Analysis:
                       or config-file driven [--config layers.ini]
   ablation            extra studies        [--codecs --whole-channel --sweep --dilated]
   network             whole-network read+write traffic per mode
+  store pack          synthesize + pack maps into a .grate container
+                      [--out --h --w --c --count --density --mode --scheme]
+  store inspect F     verify checksums, list a container's tensors
+  store serve F       serve inference from a container  [--workers]
+  store compare       functional vs analytic write-back bits per network
   access              DRAM transaction/row-buffer efficiency study
   metacache           metadata SRAM-cache absorption study
   datapath            codec decode datapath cycle model

@@ -2,21 +2,27 @@
 
 use crate::config::hardware::WORDS_PER_LINE;
 
-/// Traffic streams, matching the Fig. 1 power-breakdown categories.
+/// Traffic streams, matching the Fig. 1 power-breakdown categories plus
+/// the producer-side index stream (the paper bounds GrateTile metadata
+/// at 0.6% of feature traffic — written as well as read).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
     FeatureRead,
     WeightRead,
     OutputWrite,
     MetadataRead,
+    MetadataWrite,
 }
 
+const N_STREAMS: usize = 5;
+
 impl Stream {
-    pub const ALL: [Stream; 4] = [
+    pub const ALL: [Stream; N_STREAMS] = [
         Stream::FeatureRead,
         Stream::WeightRead,
         Stream::OutputWrite,
         Stream::MetadataRead,
+        Stream::MetadataWrite,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -25,6 +31,7 @@ impl Stream {
             Stream::WeightRead => "weight_read",
             Stream::OutputWrite => "output_write",
             Stream::MetadataRead => "metadata_read",
+            Stream::MetadataWrite => "metadata_write",
         }
     }
 
@@ -34,6 +41,7 @@ impl Stream {
             Stream::WeightRead => 1,
             Stream::OutputWrite => 2,
             Stream::MetadataRead => 3,
+            Stream::MetadataWrite => 4,
         }
     }
 }
@@ -54,8 +62,8 @@ pub struct Access {
 #[derive(Debug, Clone)]
 pub struct Dram {
     words_per_line: u64,
-    lines: [u64; 4],
-    words: [u64; 4],
+    lines: [u64; N_STREAMS],
+    words: [u64; N_STREAMS],
     trace: Option<Vec<Access>>,
 }
 
@@ -68,7 +76,12 @@ impl Default for Dram {
 impl Dram {
     pub fn new(words_per_line: usize) -> Self {
         assert!(words_per_line > 0);
-        Self { words_per_line: words_per_line as u64, lines: [0; 4], words: [0; 4], trace: None }
+        Self {
+            words_per_line: words_per_line as u64,
+            lines: [0; N_STREAMS],
+            words: [0; N_STREAMS],
+            trace: None,
+        }
     }
 
     /// Enable trace recording (tests/debugging).
@@ -136,8 +149,8 @@ impl Dram {
     }
 
     pub fn reset(&mut self) {
-        self.lines = [0; 4];
-        self.words = [0; 4];
+        self.lines = [0; N_STREAMS];
+        self.words = [0; N_STREAMS];
         if let Some(t) = &mut self.trace {
             t.clear();
         }
@@ -188,5 +201,17 @@ mod tests {
         let mut d = Dram::new(8);
         d.account_bits(Stream::MetadataRead, 48);
         assert_eq!(d.words_of(Stream::MetadataRead), 3);
+    }
+
+    #[test]
+    fn metadata_write_is_a_distinct_stream() {
+        let mut d = Dram::new(8);
+        d.account_bits(Stream::MetadataWrite, 48);
+        d.access(Stream::OutputWrite, 0, 8);
+        assert_eq!(d.words_of(Stream::MetadataWrite), 3);
+        assert_eq!(d.words_of(Stream::MetadataRead), 0);
+        assert_eq!(d.total_lines(), 2);
+        assert_eq!(Stream::ALL.len(), 5);
+        assert_eq!(Stream::MetadataWrite.name(), "metadata_write");
     }
 }

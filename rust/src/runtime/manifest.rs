@@ -7,7 +7,13 @@
 //! # comments and blank lines ignored
 //! artifact <name> <file> in=<d0>x<d1>x...xf32 outs=<n>
 //! layer <model> <idx> h=<h> w=<w> c=<c>
+//! container <name> <file.grate>
 //! ```
+//!
+//! `container` lines register `.grate` tensor-store files (see
+//! [`crate::store::container`]) alongside the compiled artifacts, so a
+//! deployment manifest can name both the model and the packed
+//! activation sets it serves from.
 
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
@@ -31,6 +37,8 @@ pub struct ArtifactEntry {
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
     pub entries: HashMap<String, ArtifactEntry>,
+    /// Registered `.grate` container files, by name.
+    pub containers: HashMap<String, PathBuf>,
     pub dir: PathBuf,
 }
 
@@ -45,7 +53,11 @@ impl Manifest {
 
     /// Parse manifest text (exposed for tests).
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
-        let mut m = Manifest { entries: HashMap::new(), dir: dir.to_path_buf() };
+        let mut m = Manifest {
+            entries: HashMap::new(),
+            containers: HashMap::new(),
+            dir: dir.to_path_buf(),
+        };
         for (ln, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -109,6 +121,11 @@ impl Manifest {
                         .layer_shapes
                         .push((h, w, c));
                 }
+                Some("container") => {
+                    let name = parts.next().ok_or_else(|| err!("line {ln}: container name"))?;
+                    let file = parts.next().ok_or_else(|| err!("line {ln}: container file"))?;
+                    m.containers.insert(name.to_string(), dir.join(file));
+                }
                 Some(other) => bail!("line {ln}: unknown directive {other}"),
                 None => {}
             }
@@ -121,6 +138,15 @@ impl Manifest {
             .get(name)
             .ok_or_else(|| err!("artifact '{name}' not in manifest (have: {:?})",
                 self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    /// Path of a registered `.grate` container.
+    pub fn container(&self, name: &str) -> Result<&Path> {
+        self.containers
+            .get(name)
+            .map(|p| p.as_path())
+            .ok_or_else(|| err!("container '{name}' not in manifest (have: {:?})",
+                self.containers.keys().collect::<Vec<_>>()))
     }
 }
 
@@ -135,6 +161,7 @@ layer cnn 0 h=32 w=32 c=8
 layer cnn 1 h=32 w=32 c=16
 
 artifact stats compress.hlo.txt in=512xf32 outs=2
+container acts acts.grate
 ";
 
     #[test]
@@ -148,6 +175,8 @@ artifact stats compress.hlo.txt in=512xf32 outs=2
         let st = m.get("stats").unwrap();
         assert_eq!(st.input_dims, vec![512]);
         assert_eq!(st.n_outputs, 2);
+        assert_eq!(m.container("acts").unwrap(), Path::new("/tmp/a/acts.grate"));
+        assert!(m.container("nope").is_err());
     }
 
     #[test]

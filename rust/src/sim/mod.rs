@@ -30,6 +30,6 @@ pub use experiment::{
 };
 pub use pricer::{price_naive, LayerPricer, WalkCost};
 pub use metacache::{metadata_cache_study, MetaCacheStudy, TileOrder};
-pub use network::{run_network_bandwidth, NetworkReport};
+pub use network::{run_network_bandwidth, writeback_cost, NetworkReport};
 pub use report::LayerBandwidth;
 pub use walker::TileWalker;

@@ -1,0 +1,271 @@
+//! Line-aligned arena allocator over the simulated DRAM address space.
+//!
+//! The paper stores sub-tensors "in aligned addresses" (§III-C); a
+//! deployment that keeps every intermediate map compressed needs a real
+//! allocator on top of that rule, because compressed sizes change on
+//! every rewrite (a map's activations differ request to request). The
+//! arena hands out cache-line-aligned extents from one word-addressed
+//! space, keeps a sorted coalescing free list, and reuses freed space
+//! first-fit — so a long-running server's address space stays bounded
+//! by its live compressed footprint, not its allocation history.
+//!
+//! All sizes are in 16-bit words; every extent starts and ends on a
+//! line boundary (`words_per_line` words). Invariants (property-tested
+//! in `tests/property.rs`):
+//!
+//! * live extents never overlap each other or the free list;
+//! * `live_words + free_words == end_words` at all times;
+//! * adjacent free extents are always coalesced.
+
+use crate::util::round_up;
+use std::collections::BTreeMap;
+
+/// A line-aligned extent allocator with a coalescing free list.
+#[derive(Debug, Clone)]
+pub struct Arena {
+    words_per_line: usize,
+    /// Sorted, coalesced free extents `(addr_words, len_words)`.
+    free: Vec<(u64, u64)>,
+    /// Live extents `addr -> len` (for invariant checks and stats).
+    live: BTreeMap<u64, u64>,
+    /// End of the address space in words (high-water mark).
+    end_words: u64,
+    /// Counters.
+    pub allocs: u64,
+    pub frees: u64,
+}
+
+impl Default for Arena {
+    fn default() -> Self {
+        Self::new(crate::config::hardware::WORDS_PER_LINE)
+    }
+}
+
+impl Arena {
+    pub fn new(words_per_line: usize) -> Self {
+        assert!(words_per_line > 0);
+        Self {
+            words_per_line,
+            free: Vec::new(),
+            live: BTreeMap::new(),
+            end_words: 0,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    pub fn words_per_line(&self) -> usize {
+        self.words_per_line
+    }
+
+    fn lines(&self, words: u64) -> u64 {
+        round_up(words as usize, self.words_per_line) as u64
+    }
+
+    /// Allocate an extent of at least `words` words (rounded up to whole
+    /// lines). First-fit from the free list, else grows the space.
+    /// Returns the line-aligned word address.
+    pub fn alloc(&mut self, words: u64) -> u64 {
+        let need = self.lines(words.max(1));
+        self.allocs += 1;
+        // First fit.
+        for i in 0..self.free.len() {
+            let (addr, len) = self.free[i];
+            if len >= need {
+                if len == need {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (addr + need, len - need);
+                }
+                self.live.insert(addr, need);
+                return addr;
+            }
+        }
+        // Grow.
+        let addr = self.end_words;
+        self.end_words += need;
+        self.live.insert(addr, need);
+        addr
+    }
+
+    /// Free a previously allocated extent by address. Panics on a
+    /// double-free or an address that was never allocated.
+    pub fn free(&mut self, addr: u64) {
+        let len = self.live.remove(&addr).expect("arena: free of unallocated address");
+        self.frees += 1;
+        // Insert sorted, then coalesce with both neighbours.
+        let i = self.free.partition_point(|&(a, _)| a < addr);
+        self.free.insert(i, (addr, len));
+        // Coalesce right.
+        if i + 1 < self.free.len() && self.free[i].0 + self.free[i].1 == self.free[i + 1].0 {
+            self.free[i].1 += self.free[i + 1].1;
+            self.free.remove(i + 1);
+        }
+        // Coalesce left.
+        if i > 0 && self.free[i - 1].0 + self.free[i - 1].1 == self.free[i].0 {
+            self.free[i - 1].1 += self.free[i].1;
+            self.free.remove(i);
+        }
+    }
+
+    /// Reallocate: free `addr` and allocate `new_words` (the compressed
+    /// size changed on rewrite). The freed extent is eligible for the
+    /// new allocation, so an in-place or shrinking rewrite reuses its
+    /// own space.
+    pub fn realloc(&mut self, addr: u64, new_words: u64) -> u64 {
+        self.free(addr);
+        self.alloc(new_words)
+    }
+
+    /// Words currently allocated (line-rounded).
+    pub fn live_words(&self) -> u64 {
+        self.live.values().sum()
+    }
+
+    /// Words currently on the free list.
+    pub fn free_words(&self) -> u64 {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+
+    /// Total address-space size in words (high-water mark).
+    pub fn end_words(&self) -> u64 {
+        self.end_words
+    }
+
+    /// Number of live extents.
+    pub fn live_extents(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Fraction of the address space currently live (1.0 = no holes).
+    pub fn utilization(&self) -> f64 {
+        if self.end_words == 0 {
+            return 1.0;
+        }
+        self.live_words() as f64 / self.end_words as f64
+    }
+
+    /// Check every structural invariant; returns a description of the
+    /// first violation, if any.
+    pub fn check(&self) -> Result<(), String> {
+        // Live extents: line-aligned, in-bounds, non-overlapping.
+        let mut prev_end = 0u64;
+        for (&addr, &len) in &self.live {
+            if addr % self.words_per_line as u64 != 0 {
+                return Err(format!("live extent at {addr} not line-aligned"));
+            }
+            if len % self.words_per_line as u64 != 0 {
+                return Err(format!("live extent len {len} not line-granular"));
+            }
+            if addr < prev_end {
+                return Err(format!("live extents overlap at {addr}"));
+            }
+            prev_end = addr + len;
+        }
+        if prev_end > self.end_words {
+            return Err(format!("live extent past end {prev_end} > {}", self.end_words));
+        }
+        // Free list: sorted, coalesced, disjoint from live.
+        for w in self.free.windows(2) {
+            let ((a0, l0), (a1, _)) = (w[0], w[1]);
+            if a0 + l0 > a1 {
+                return Err(format!("free extents overlap at {a1}"));
+            }
+            if a0 + l0 == a1 {
+                return Err(format!("free extents not coalesced at {a1}"));
+            }
+        }
+        for &(addr, len) in &self.free {
+            // Any live extent starting inside [addr, addr+len)?
+            if self.live.range(addr..addr + len).next().is_some() {
+                return Err(format!("free extent at {addr} overlaps a live extent"));
+            }
+            // Any live extent covering addr?
+            if let Some((&la, &ll)) = self.live.range(..addr).next_back() {
+                if la + ll > addr {
+                    return Err(format!("live extent at {la} overlaps free extent at {addr}"));
+                }
+            }
+        }
+        // Accounting closes.
+        if self.live_words() + self.free_words() != self.end_words {
+            return Err(format!(
+                "accounting leak: live {} + free {} != end {}",
+                self.live_words(),
+                self.free_words(),
+                self.end_words
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_line_aligned_and_rounded() {
+        let mut a = Arena::new(8);
+        let p = a.alloc(3);
+        assert_eq!(p % 8, 0);
+        let q = a.alloc(9);
+        assert_eq!(q, 8); // 3 words consumed one full line
+        assert_eq!(a.end_words(), 8 + 16);
+        a.check().unwrap();
+    }
+
+    #[test]
+    fn free_coalesces_and_is_reused() {
+        let mut a = Arena::new(8);
+        let p0 = a.alloc(8);
+        let p1 = a.alloc(8);
+        let p2 = a.alloc(8);
+        a.free(p0);
+        a.free(p2);
+        a.check().unwrap();
+        assert_eq!(a.free_words(), 16);
+        a.free(p1); // middle free must merge all three into one extent
+        a.check().unwrap();
+        assert_eq!(a.free_words(), 24);
+        // A 24-word alloc now fits without growing.
+        let end = a.end_words();
+        let r = a.alloc(24);
+        assert_eq!(r, 0);
+        assert_eq!(a.end_words(), end);
+        a.check().unwrap();
+    }
+
+    #[test]
+    fn realloc_reuses_own_space_when_shrinking() {
+        let mut a = Arena::new(8);
+        let p = a.alloc(64);
+        let _other = a.alloc(8);
+        let q = a.realloc(p, 32);
+        assert_eq!(q, p, "shrink should land first-fit in its own hole");
+        a.check().unwrap();
+        assert_eq!(a.free_words(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "unallocated")]
+    fn double_free_panics() {
+        let mut a = Arena::new(8);
+        let p = a.alloc(8);
+        a.free(p);
+        a.free(p);
+    }
+
+    #[test]
+    fn utilization_and_counters() {
+        let mut a = Arena::new(8);
+        assert_eq!(a.utilization(), 1.0);
+        let p = a.alloc(8);
+        let _q = a.alloc(8);
+        a.free(p);
+        assert!((a.utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(a.allocs, 2);
+        assert_eq!(a.frees, 1);
+        assert_eq!(a.live_extents(), 1);
+    }
+}

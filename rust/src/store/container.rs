@@ -1,0 +1,672 @@
+//! The `.grate` container: a versioned on-disk format for packed
+//! feature maps, supporting random-access window reads.
+//!
+//! ```text
+//! ┌────────────────────────────────────────────────────────────┐
+//! │ header   magic "GRTC" · u32 version · u32 n_tensors        │
+//! │          u64 toc_len · u64 toc_fnv1a64                     │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ TOC      per tensor: name · scheme · full division ·       │
+//! │          sizes/addr tables · Fig. 7 block records ·        │
+//! │          payload (offset, words, fnv1a64)                  │
+//! ├────────────────────────────────────────────────────────────┤
+//! │ payload  one 16-byte-aligned segment per tensor,           │
+//! │ segments little-endian u16 words, block-raster layout      │
+//! └────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! The TOC is small and loaded eagerly (checksum-verified); payloads
+//! stay on disk. [`Container::fetch_window`] reads only the compressed
+//! sub-tensors a window touches, via a seeking [`PayloadSource`] — the
+//! on-disk analogue of the paper's "compressed yet randomly accessible"
+//! claim. Addresses in a container tensor are relative to its payload
+//! segment and identical to a fresh `Packer` layout (canonical form),
+//! so `serve → fetch` round-trips bit-exactly against the in-memory
+//! path.
+
+use crate::compress::Scheme;
+use crate::layout::fetcher::{DenseWindow, Fetcher, PayloadSource};
+use crate::layout::metadata::{BlockRecord, MetadataTable};
+use crate::layout::packer::PackedFeatureMap;
+use crate::memsim::Dram;
+use crate::tensor::FeatureMap;
+use crate::tiling::division::{Division, DivisionMode, Seg};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"GRTC";
+const VERSION: u32 = 1;
+const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8;
+
+/// FNV-1a 64-bit (dependency-free checksum).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---- byte-level encode/decode helpers -------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn usize32(&mut self, v: usize) {
+        self.u32(v as u32);
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.at + n > self.buf.len() {
+            bail!("container: truncated TOC at byte {}", self.at);
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn usize32(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+}
+
+fn scheme_tag(s: Scheme) -> u8 {
+    match s {
+        Scheme::Bitmask => 0,
+        Scheme::Zrlc => 1,
+        Scheme::Dictionary => 2,
+        Scheme::Raw => 3,
+    }
+}
+
+fn scheme_from_tag(t: u8) -> Result<Scheme> {
+    Ok(match t {
+        0 => Scheme::Bitmask,
+        1 => Scheme::Zrlc,
+        2 => Scheme::Dictionary,
+        3 => Scheme::Raw,
+        other => bail!("container: unknown scheme tag {other}"),
+    })
+}
+
+fn encode_division(e: &mut Enc, d: &Division) {
+    let (tag, param) = match d.mode {
+        DivisionMode::Uniform { edge } => (0u8, edge as u32),
+        DivisionMode::GrateTile { n } => (1, n as u32),
+        DivisionMode::WholeMap => (2, 0),
+    };
+    e.u8(tag);
+    e.u32(param);
+    e.usize32(d.fm_h);
+    e.usize32(d.fm_w);
+    e.usize32(d.fm_c);
+    e.usize32(d.cd);
+    e.usize32(d.n_cgroups);
+    for segs in [&d.ys, &d.xs] {
+        e.usize32(segs.len());
+        for s in segs {
+            e.usize32(s.start);
+            e.usize32(s.len);
+        }
+    }
+    for blocks in [&d.block_of_y, &d.block_of_x] {
+        e.usize32(blocks.len());
+        for &b in blocks {
+            e.usize32(b);
+        }
+    }
+    e.usize32(d.n_blocks_y);
+    e.usize32(d.n_blocks_x);
+    e.usize32(d.meta_bits_per_block);
+    e.u8(d.compact as u8);
+}
+
+fn decode_division(dec: &mut Dec) -> Result<Division> {
+    let tag = dec.u8()?;
+    let param = dec.u32()? as usize;
+    let mode = match tag {
+        0 => DivisionMode::Uniform { edge: param },
+        1 => DivisionMode::GrateTile { n: param },
+        2 => DivisionMode::WholeMap,
+        other => bail!("container: unknown division tag {other}"),
+    };
+    let fm_h = dec.usize32()?;
+    let fm_w = dec.usize32()?;
+    let fm_c = dec.usize32()?;
+    let cd = dec.usize32()?;
+    let n_cgroups = dec.usize32()?;
+    let mut axes: Vec<Vec<Seg>> = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let n = dec.usize32()?;
+        let mut segs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let start = dec.usize32()?;
+            let len = dec.usize32()?;
+            segs.push(Seg { start, len });
+        }
+        axes.push(segs);
+    }
+    let xs = axes.pop().unwrap();
+    let ys = axes.pop().unwrap();
+    let mut blockmaps: Vec<Vec<usize>> = Vec::with_capacity(2);
+    for _ in 0..2 {
+        let n = dec.usize32()?;
+        let mut b = Vec::with_capacity(n);
+        for _ in 0..n {
+            b.push(dec.usize32()?);
+        }
+        blockmaps.push(b);
+    }
+    let block_of_x = blockmaps.pop().unwrap();
+    let block_of_y = blockmaps.pop().unwrap();
+    let n_blocks_y = dec.usize32()?;
+    let n_blocks_x = dec.usize32()?;
+    let meta_bits_per_block = dec.usize32()?;
+    let compact = dec.u8()? != 0;
+    if ys.len() != block_of_y.len() || xs.len() != block_of_x.len() {
+        bail!("container: axis/block table length mismatch");
+    }
+    Ok(Division {
+        mode,
+        fm_h,
+        fm_w,
+        fm_c,
+        ys,
+        xs,
+        cd,
+        n_cgroups,
+        block_of_y,
+        block_of_x,
+        n_blocks_y,
+        n_blocks_x,
+        meta_bits_per_block,
+        compact,
+    })
+}
+
+// ---- the container --------------------------------------------------
+
+/// One tensor's TOC entry: the full layout plus where its payload lives
+/// in the file.
+#[derive(Debug, Clone)]
+pub struct ContainerEntry {
+    pub name: String,
+    /// Layout with payload-segment-relative addresses; `payload: None`.
+    pub packed: PackedFeatureMap,
+    /// Absolute file offset of the payload segment (16-byte aligned).
+    pub payload_offset: u64,
+    pub payload_words: u64,
+    pub payload_checksum: u64,
+}
+
+impl ContainerEntry {
+    pub fn shape(&self) -> (usize, usize, usize) {
+        let d = &self.packed.division;
+        (d.fm_h, d.fm_w, d.fm_c)
+    }
+}
+
+/// An opened `.grate` file: eager TOC, on-demand payload.
+#[derive(Debug)]
+pub struct Container {
+    pub path: PathBuf,
+    pub entries: Vec<ContainerEntry>,
+}
+
+/// Seeking payload source over one payload segment of the file.
+pub struct FilePayload {
+    file: File,
+    base_bytes: u64,
+}
+
+impl PayloadSource for FilePayload {
+    fn read_words(&mut self, addr_words: u64, n_words: usize, out: &mut Vec<u16>) {
+        self.file
+            .seek(SeekFrom::Start(self.base_bytes + addr_words * 2))
+            .expect("container payload seek");
+        let mut buf = vec![0u8; n_words * 2];
+        self.file.read_exact(&mut buf).expect("container payload read");
+        out.extend(buf.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])));
+    }
+}
+
+fn encode_entry(e: &mut Enc, name: &str, p: &PackedFeatureMap, offset: u64, checksum: u64) {
+    e.u16(name.len() as u16);
+    e.bytes(name.as_bytes());
+    e.u8(scheme_tag(p.scheme));
+    encode_division(e, &p.division);
+    e.usize32(p.sizes_words.len());
+    for &s in &p.sizes_words {
+        e.u32(s);
+    }
+    for &s in &p.sizes_bits {
+        e.u32(s);
+    }
+    for &a in &p.addr_words {
+        e.u64(a);
+    }
+    e.usize32(p.metadata.records.len());
+    for r in &p.metadata.records {
+        e.u64(r.pointer_words);
+        e.u16(r.sizes_words.len() as u16);
+        for &s in &r.sizes_words {
+            e.u32(s);
+        }
+    }
+    e.usize32(p.metadata.bits_per_record);
+    e.u64(p.total_words);
+    e.usize32(p.line_words());
+    e.u64(offset);
+    e.u64(p.payload.as_ref().map(|v| v.len() as u64).unwrap_or(0));
+    e.u64(checksum);
+}
+
+fn decode_entry(dec: &mut Dec) -> Result<ContainerEntry> {
+    let name_len = dec.u16()? as usize;
+    let name = String::from_utf8(dec.take(name_len)?.to_vec())
+        .map_err(|e| err!("container: bad tensor name: {e}"))?;
+    let scheme = scheme_from_tag(dec.u8()?)?;
+    let division = decode_division(dec)?;
+    let n = dec.usize32()?;
+    if n != division.n_subtensors() {
+        bail!("container '{name}': {n} sizes for {} sub-tensors", division.n_subtensors());
+    }
+    let mut sizes_words = Vec::with_capacity(n);
+    for _ in 0..n {
+        sizes_words.push(dec.u32()?);
+    }
+    let mut sizes_bits = Vec::with_capacity(n);
+    for _ in 0..n {
+        sizes_bits.push(dec.u32()?);
+    }
+    let mut addr_words = Vec::with_capacity(n);
+    for _ in 0..n {
+        addr_words.push(dec.u64()?);
+    }
+    let n_rec = dec.usize32()?;
+    if n_rec != division.n_blocks() {
+        bail!("container '{name}': {n_rec} records for {} blocks", division.n_blocks());
+    }
+    let mut records = Vec::with_capacity(n_rec);
+    for _ in 0..n_rec {
+        let pointer_words = dec.u64()?;
+        let k = dec.u16()? as usize;
+        let mut sizes = Vec::with_capacity(k);
+        for _ in 0..k {
+            sizes.push(dec.u32()?);
+        }
+        records.push(BlockRecord { pointer_words, sizes_words: sizes });
+    }
+    let bits_per_record = dec.usize32()?;
+    let total_words = dec.u64()?;
+    let words_per_line = dec.usize32()?;
+    let payload_offset = dec.u64()?;
+    let payload_words = dec.u64()?;
+    let payload_checksum = dec.u64()?;
+    Ok(ContainerEntry {
+        name,
+        packed: PackedFeatureMap {
+            division,
+            scheme,
+            sizes_words,
+            sizes_bits,
+            addr_words,
+            metadata: MetadataTable { records, bits_per_record },
+            payload: None,
+            total_words,
+            words_per_line,
+        },
+        payload_offset,
+        payload_words,
+        payload_checksum,
+    })
+}
+
+fn words_to_bytes(words: &[u16]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(words.len() * 2);
+    for &w in words {
+        b.extend_from_slice(&w.to_le_bytes());
+    }
+    b
+}
+
+impl Container {
+    /// Write `entries` (payload-carrying packed maps) to `path`.
+    pub fn write(path: &Path, entries: &[(String, &PackedFeatureMap)]) -> Result<()> {
+        for (name, p) in entries {
+            if p.payload.is_none() {
+                bail!("container write: tensor '{name}' has no payload");
+            }
+        }
+        // Pass 1 with zero offsets fixes the TOC length (offsets are
+        // fixed-width), pass 2 fills the real ones.
+        let toc_len = {
+            let mut e = Enc(Vec::new());
+            for (name, p) in entries {
+                encode_entry(&mut e, name, p, 0, 0);
+            }
+            e.0.len() as u64
+        };
+        let mut offset = (HEADER_BYTES + toc_len).div_ceil(16) * 16;
+        let mut toc = Enc(Vec::new());
+        let mut payloads: Vec<(u64, Vec<u8>)> = Vec::with_capacity(entries.len());
+        for (name, p) in entries {
+            let bytes = words_to_bytes(p.payload.as_ref().unwrap());
+            encode_entry(&mut toc, name, p, offset, fnv1a64(&bytes));
+            let next = (offset + bytes.len() as u64).div_ceil(16) * 16;
+            payloads.push((offset, bytes));
+            offset = next;
+        }
+        debug_assert_eq!(toc.0.len() as u64, toc_len);
+
+        let mut f = File::create(path)
+            .with_context(|| format!("creating container {}", path.display()))?;
+        let mut header = Enc(Vec::new());
+        header.bytes(MAGIC);
+        header.u32(VERSION);
+        header.u32(entries.len() as u32);
+        header.u64(toc_len);
+        header.u64(fnv1a64(&toc.0));
+        f.write_all(&header.0)?;
+        f.write_all(&toc.0)?;
+        for (off, bytes) in payloads {
+            let pos = f.stream_position()?;
+            if pos < off {
+                f.write_all(&vec![0u8; (off - pos) as usize])?;
+            }
+            f.write_all(&bytes)?;
+        }
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Open a container, parsing and checksum-verifying the TOC;
+    /// payloads stay on disk.
+    pub fn open(path: &Path) -> Result<Container> {
+        let mut f = File::open(path)
+            .with_context(|| format!("opening container {}", path.display()))?;
+        let mut header = vec![0u8; HEADER_BYTES as usize];
+        f.read_exact(&mut header).context("container header")?;
+        let mut dec = Dec { buf: &header, at: 0 };
+        if dec.take(4)? != MAGIC {
+            bail!("{}: not a .grate container (bad magic)", path.display());
+        }
+        let version = dec.u32()?;
+        if version != VERSION {
+            bail!("{}: unsupported container version {version}", path.display());
+        }
+        let n_tensors = dec.u32()? as usize;
+        let toc_len = dec.u64()? as usize;
+        let toc_sum = dec.u64()?;
+        let mut toc = vec![0u8; toc_len];
+        f.read_exact(&mut toc).context("container TOC")?;
+        if fnv1a64(&toc) != toc_sum {
+            bail!("{}: TOC checksum mismatch (corrupt container)", path.display());
+        }
+        let mut dec = Dec { buf: &toc, at: 0 };
+        let mut entries = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            entries.push(decode_entry(&mut dec)?);
+        }
+        Ok(Container { path: path.to_path_buf(), entries })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ContainerEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                err!(
+                    "container {}: no tensor '{name}' (have: {:?})",
+                    self.path.display(),
+                    self.entries.iter().map(|e| e.name.as_str()).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Reusable random-access reader over one tensor: a single opened
+    /// file handle serving any number of window fetches. Use this in
+    /// hot paths (window-per-tile consumers); [`Container::fetch_window`]
+    /// is the one-shot convenience that opens per call.
+    pub fn reader(&self, name: &str) -> Result<Fetcher<'_>> {
+        let entry = self.entry(name)?;
+        let file = File::open(&self.path)
+            .with_context(|| format!("reopening {}", self.path.display()))?;
+        // Reject truncated payload segments up front, so the seeking
+        // source's reads cannot run off the end of the file mid-fetch
+        // (the TOC checksum does not cover payload length).
+        let need = entry.payload_offset + entry.payload_words * 2;
+        let have = file.metadata().map(|m| m.len()).unwrap_or(0);
+        if have < need {
+            bail!(
+                "container {}: payload of '{name}' truncated ({have} < {need} bytes)",
+                self.path.display()
+            );
+        }
+        let source = FilePayload { file, base_bytes: entry.payload_offset };
+        Ok(Fetcher::with_source(&entry.packed, Box::new(source)))
+    }
+
+    /// Random-access window read straight off the file: only the
+    /// touched compressed sub-tensors are read and decompressed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fetch_window(
+        &self,
+        name: &str,
+        dram: &mut Dram,
+        y0: usize,
+        y1: usize,
+        x0: usize,
+        x1: usize,
+        c0: usize,
+        c1: usize,
+    ) -> Result<DenseWindow> {
+        let mut fetcher = self.reader(name)?;
+        Ok(fetcher.fetch_window(dram, y0, y1, x0, x1, c0, c1))
+    }
+
+    /// Fetch a whole tensor dense.
+    pub fn fetch_dense(&self, name: &str, dram: &mut Dram) -> Result<FeatureMap> {
+        let e = self.entry(name)?;
+        let (h, w, c) = e.shape();
+        let win = self.fetch_window(name, dram, 0, h, 0, w, 0, c)?;
+        Ok(FeatureMap::from_vec(h, w, c, win.data))
+    }
+
+    /// Load one tensor's payload fully, returning an in-memory packed
+    /// map (for inserting into a [`crate::store::TensorStore`]).
+    pub fn read_tensor(&self, name: &str) -> Result<PackedFeatureMap> {
+        let e = self.entry(name)?;
+        let mut f = File::open(&self.path)?;
+        f.seek(SeekFrom::Start(e.payload_offset))?;
+        let mut bytes = vec![0u8; e.payload_words as usize * 2];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("payload of '{name}'"))?;
+        if fnv1a64(&bytes) != e.payload_checksum {
+            bail!("container tensor '{name}': payload checksum mismatch");
+        }
+        let words: Vec<u16> =
+            bytes.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])).collect();
+        let mut p = e.packed.clone();
+        p.payload = Some(words);
+        Ok(p)
+    }
+
+    /// Verify every payload checksum (full-file scan).
+    pub fn verify(&self) -> Result<()> {
+        for e in &self.entries {
+            let _ = self.read_tensor(&e.name)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+    use crate::config::layer::{ConvLayer, TileShape};
+    use crate::layout::packer::Packer;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gratetile-{name}-{}", std::process::id()));
+        p
+    }
+
+    fn packed(mode: DivisionMode, scheme: Scheme, seed: u64) -> (FeatureMap, PackedFeatureMap) {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let tile = TileShape::new(8, 8, 8);
+        let division = Division::build(mode, &layer, &tile, &hw, 24, 24, 16).unwrap();
+        let fm = generate(24, 24, 16, SparsityParams::clustered(0.4, seed));
+        let p = Packer::new(hw, scheme).pack(&fm, &division, true);
+        (fm, p)
+    }
+
+    #[test]
+    fn write_open_fetch_roundtrip() {
+        let path = tmp("roundtrip.grate");
+        let (fm_a, p_a) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 1);
+        let (fm_b, p_b) = packed(DivisionMode::Uniform { edge: 1 }, Scheme::Zrlc, 2);
+        Container::write(
+            &path,
+            &[("a".to_string(), &p_a), ("b".to_string(), &p_b)],
+        )
+        .unwrap();
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.entries.len(), 2);
+        c.verify().unwrap();
+        // Random-access partial window, off-disk.
+        let mut dram = Dram::default();
+        let win = c.fetch_window("a", &mut dram, 5, 14, 3, 17, 0, 8).unwrap();
+        for y in 5..14 {
+            for x in 3..17 {
+                for ch in 0..8 {
+                    assert_eq!(win.get(y, x, ch), fm_a.get(y, x, ch));
+                }
+            }
+        }
+        // Whole-map dense fetch of the compact-packed tensor.
+        let got = c.fetch_dense("b", &mut dram).unwrap();
+        assert_eq!(got.as_slice(), fm_b.as_slice());
+        // In-memory reload matches the original pack bit for bit.
+        let re = c.read_tensor("a").unwrap();
+        assert_eq!(re.payload, p_a.payload);
+        assert_eq!(re.sizes_words, p_a.sizes_words);
+        assert_eq!(re.addr_words, p_a.addr_words);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_toc_is_rejected() {
+        let path = tmp("corrupt.grate");
+        let (_, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 3);
+        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[HEADER_BYTES as usize + 4] ^= 0xFF; // flip a TOC byte
+        std::fs::write(&path, &bytes).unwrap();
+        let e = Container::open(&path).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_payload_fails_verify_but_opens() {
+        let path = tmp("corrupt-payload.grate");
+        let (_, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 4);
+        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        let c = Container::open(&path).unwrap();
+        let off = c.entry("t").unwrap().payload_offset as usize;
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let c = Container::open(&path).unwrap(); // TOC still fine
+        assert!(c.verify().is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_payload_rejected_before_fetch() {
+        let path = tmp("truncated.grate");
+        let (_, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 5);
+        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        let c = Container::open(&path).unwrap();
+        let cut = c.entry("t").unwrap().payload_offset as usize + 16;
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let c = Container::open(&path).unwrap(); // TOC intact
+        let mut dram = Dram::default();
+        let e = c.fetch_window("t", &mut dram, 0, 8, 0, 8, 0, 8).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reader_serves_many_windows_from_one_handle() {
+        let path = tmp("reader.grate");
+        let (fm, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 6);
+        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        let c = Container::open(&path).unwrap();
+        let mut fetcher = c.reader("t").unwrap();
+        let mut dram = Dram::default();
+        for (y0, y1, x0, x1) in [(0, 9, 0, 9), (7, 17, 7, 17), (15, 24, 15, 24)] {
+            let win = fetcher.fetch_window(&mut dram, y0, y1, x0, x1, 0, 16);
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    for ch in 0..16 {
+                        assert_eq!(win.get(y, x, ch), fm.get(y, x, ch));
+                    }
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("magic.grate");
+        std::fs::write(&path, b"NOPE....????????????????????").unwrap();
+        let e = Container::open(&path).unwrap_err();
+        assert!(e.to_string().contains("magic"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,29 @@
+//! The tensor store: compressed, randomly accessible feature-map
+//! storage with a real write path (paper §I — GrateTile keeps feature
+//! maps "in a compressed yet randomly accessible format"; this module
+//! is the storage engine a whole-network deployment of that claim
+//! needs).
+//!
+//! * [`arena`] — a line-aligned extent allocator with a coalescing free
+//!   list over one simulated DRAM address space; compressed sizes change
+//!   on every rewrite, so freed space is reused first-fit.
+//! * [`tensor_store`] — multiple named packed maps resident in that
+//!   space, with absolute addresses feeding the fetch path and the
+//!   DRAM timing model.
+//! * [`writer`] — streaming tile-granular write-back: sub-tensors are
+//!   compressed the moment the compute lane completes them, blocks are
+//!   allocated and committed with their Fig. 7 records as they fill —
+//!   no dense intermediate map ever materialises.
+//! * [`container`] — the versioned `.grate` on-disk format (header +
+//!   checksummed TOC + aligned payload segments) with random-access
+//!   window reads off the file.
+
+pub mod arena;
+pub mod container;
+pub mod tensor_store;
+pub mod writer;
+
+pub use arena::Arena;
+pub use container::{Container, ContainerEntry};
+pub use tensor_store::{StoredTensor, TensorStore};
+pub use writer::{StoreWriter, WriteReport};

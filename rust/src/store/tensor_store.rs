@@ -1,0 +1,316 @@
+//! The tensor store: multiple named packed feature maps in one
+//! simulated DRAM address space.
+//!
+//! A deployed GrateTile system keeps every live feature map compressed
+//! in DRAM; the store models that memory: an [`Arena`] hands out
+//! line-aligned extents, `mem` is the word-addressed DRAM image, and
+//! each tensor is a [`PackedFeatureMap`] layout whose `addr_words` are
+//! *absolute* store addresses — so the fetch path and the timing model
+//! see real, scattered addresses instead of every map starting at 0.
+//!
+//! Tensors enter the store either wholesale ([`TensorStore::insert_packed`],
+//! a `Packer`-materialised map copied into one extent) or streamed
+//! block-by-block by the [`crate::store::writer::StoreWriter`] as a
+//! layer's compute lane produces output tiles.
+
+use super::arena::Arena;
+use crate::config::hardware::WORDS_PER_LINE;
+use crate::layout::fetcher::{Fetcher, SegmentPayload};
+use crate::layout::metadata::MetadataTable;
+use crate::layout::packer::PackedFeatureMap;
+use crate::memsim::Dram;
+use crate::tensor::FeatureMap;
+use crate::tiling::division::SubTensorRef;
+use crate::util::error::Result;
+use crate::util::round_up;
+use crate::{bail, err};
+use std::collections::HashMap;
+
+/// One tensor resident in the store.
+#[derive(Debug, Clone)]
+pub struct StoredTensor {
+    /// Layout with absolute store addresses; `payload` is always `None`
+    /// (the words live in the store's DRAM image).
+    pub packed: PackedFeatureMap,
+    /// Arena extents `(base_addr, line-rounded words)` backing the
+    /// tensor, sorted by base.
+    pub extents: Vec<(u64, u64)>,
+}
+
+impl StoredTensor {
+    /// Map shape `(h, w, c)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        let d = &self.packed.division;
+        (d.fm_h, d.fm_w, d.fm_c)
+    }
+}
+
+/// Multiple named compressed tensors in one simulated DRAM space.
+#[derive(Debug, Clone, Default)]
+pub struct TensorStore {
+    pub(crate) arena: Arena,
+    pub(crate) mem: Vec<u16>,
+    pub(crate) tensors: HashMap<String, StoredTensor>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn ensure_mem(&mut self, end_words: u64) {
+        if self.mem.len() < end_words as usize {
+            self.mem.resize(end_words as usize, 0);
+        }
+    }
+
+    /// Copy a payload-packed map into the store under `name` as one
+    /// contiguous extent, rebasing its addresses. Replaces (and frees)
+    /// any tensor previously stored under the name.
+    pub fn insert_packed(&mut self, name: &str, packed: &PackedFeatureMap) -> Result<u64> {
+        let payload = packed
+            .payload
+            .as_ref()
+            .ok_or_else(|| err!("store insert '{name}': map has no payload"))?;
+        self.remove_if_present(name);
+        let len = round_up(packed.total_words.max(1) as usize, WORDS_PER_LINE) as u64;
+        let base = self.arena.alloc(len);
+        self.ensure_mem(base + len);
+        self.mem[base as usize..base as usize + payload.len()].copy_from_slice(payload);
+        let mut stored = packed.clone();
+        stored.payload = None;
+        for a in &mut stored.addr_words {
+            *a += base;
+        }
+        for r in &mut stored.metadata.records {
+            r.pointer_words += base;
+        }
+        self.tensors
+            .insert(name.to_string(), StoredTensor { packed: stored, extents: vec![(base, len)] });
+        Ok(base)
+    }
+
+    /// Remove `name`, returning its extents to the arena's free list.
+    pub fn remove(&mut self, name: &str) -> Result<()> {
+        if !self.remove_if_present(name) {
+            bail!("store remove: no tensor '{name}'");
+        }
+        Ok(())
+    }
+
+    pub(crate) fn remove_if_present(&mut self, name: &str) -> bool {
+        match self.tensors.remove(name) {
+            Some(t) => {
+                for &(base, _) in &t.extents {
+                    self.arena.free(base);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&StoredTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    /// Tensor names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut n: Vec<String> = self.tensors.keys().cloned().collect();
+        n.sort();
+        n
+    }
+
+    /// Allocator view (live/free/footprint stats).
+    pub fn arena(&self) -> &Arena {
+        &self.arena
+    }
+
+    /// Owned snapshot of one tensor — its absolute-address layout plus
+    /// the payload words of its extents — for a reader running
+    /// concurrently with writes to *other* tensors (the pipeline's
+    /// prefetch lane).
+    pub fn snapshot(&self, name: &str) -> Result<(PackedFeatureMap, SegmentPayload)> {
+        let t = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| err!("store snapshot: no tensor '{name}'"))?;
+        let segs = t
+            .extents
+            .iter()
+            .map(|&(base, len)| {
+                let end = ((base + len) as usize).min(self.mem.len());
+                (base, self.mem[base as usize..end].to_vec())
+            })
+            .collect();
+        Ok((t.packed.clone(), SegmentPayload { segs }))
+    }
+
+    /// Fetch a tensor fully dense (traffic accounted on `dram`).
+    pub fn fetch_dense(&self, name: &str, dram: &mut Dram) -> Result<FeatureMap> {
+        let (packed, payload) = self.snapshot(name)?;
+        let (h, w, c) = (packed.division.fm_h, packed.division.fm_w, packed.division.fm_c);
+        let mut fetcher = Fetcher::with_source(&packed, Box::new(payload));
+        let win = fetcher.fetch_window(dram, 0, h, 0, w, 0, c);
+        Ok(FeatureMap::from_vec(h, w, c, win.data))
+    }
+
+    /// Re-pack a stored tensor into a contiguous, payload-carrying map
+    /// (block-raster order, addresses starting at 0) — the canonical
+    /// form the `.grate` container serialises.
+    pub fn export(&self, name: &str) -> Result<PackedFeatureMap> {
+        let t = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| err!("store export: no tensor '{name}'"))?;
+        let src = &t.packed;
+        let div = &src.division;
+        let wpl = src.line_words();
+        let n = div.n_subtensors();
+        let mut addr_words = vec![0u64; n];
+        let mut payload: Vec<u16> = Vec::with_capacity(src.total_words as usize);
+        let mut records = Vec::with_capacity(div.n_blocks());
+        let mut cursor: u64 = 0;
+        for by in 0..div.n_blocks_y {
+            let yr = div.y_segs_of_block(by);
+            for bx in 0..div.n_blocks_x {
+                let xr = div.x_segs_of_block(bx);
+                for icg in 0..div.n_cgroups {
+                    if !div.compact {
+                        cursor = round_up(cursor as usize, wpl) as u64;
+                    }
+                    let pointer_words = cursor;
+                    let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                    for iy in yr.clone() {
+                        for ix in xr.clone() {
+                            let li = div.linear(SubTensorRef { iy, ix, icg });
+                            let size = src.sizes_words[li] as usize;
+                            if !div.compact {
+                                cursor = round_up(cursor as usize, wpl) as u64;
+                            }
+                            addr_words[li] = cursor;
+                            let at = src.addr_words[li] as usize;
+                            let end = cursor as usize + size;
+                            if payload.len() < end {
+                                payload.resize(end, 0);
+                            }
+                            payload[cursor as usize..end]
+                                .copy_from_slice(&self.mem[at..at + size]);
+                            cursor += size as u64;
+                            rec_sizes.push(size as u32);
+                        }
+                    }
+                    records.push(crate::layout::metadata::BlockRecord {
+                        pointer_words,
+                        sizes_words: rec_sizes,
+                    });
+                }
+            }
+        }
+        let total_words =
+            if div.compact { cursor } else { round_up(cursor as usize, wpl) as u64 };
+        Ok(PackedFeatureMap {
+            division: div.clone(),
+            scheme: src.scheme,
+            sizes_words: src.sizes_words.clone(),
+            sizes_bits: src.sizes_bits.clone(),
+            addr_words,
+            metadata: MetadataTable {
+                records,
+                bits_per_record: div.meta_bits_per_block,
+            },
+            payload: Some(payload),
+            total_words,
+            words_per_line: wpl,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Scheme;
+    use crate::config::hardware::Platform;
+    use crate::config::layer::{ConvLayer, TileShape};
+    use crate::layout::packer::Packer;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+    use crate::tiling::division::{Division, DivisionMode};
+
+    fn packed(seed: u64) -> (FeatureMap, PackedFeatureMap) {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let tile = TileShape::new(8, 8, 8);
+        let division =
+            Division::build(DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, 24, 24, 16)
+                .unwrap();
+        let fm = generate(24, 24, 16, SparsityParams::clustered(0.4, seed));
+        let p = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, true);
+        (fm, p)
+    }
+
+    #[test]
+    fn insert_fetch_roundtrip_at_rebased_addresses() {
+        let mut store = TensorStore::new();
+        let (fm_a, p_a) = packed(1);
+        let (fm_b, p_b) = packed(2);
+        let base_a = store.insert_packed("a", &p_a).unwrap();
+        let base_b = store.insert_packed("b", &p_b).unwrap();
+        assert_ne!(base_a, base_b, "tensors share one address space");
+        for (name, fm) in [("a", &fm_a), ("b", &fm_b)] {
+            let mut dram = Dram::default();
+            let got = store.fetch_dense(name, &mut dram).unwrap();
+            assert_eq!(got.as_slice(), fm.as_slice(), "{name}");
+        }
+        store.arena.check().unwrap();
+    }
+
+    #[test]
+    fn remove_frees_and_space_is_reused() {
+        let mut store = TensorStore::new();
+        let (_, p) = packed(3);
+        store.insert_packed("x", &p).unwrap();
+        let end = store.arena.end_words();
+        store.remove("x").unwrap();
+        assert_eq!(store.arena.live_words(), 0);
+        // Re-inserting reuses the freed extent, not new space.
+        store.insert_packed("y", &p).unwrap();
+        assert_eq!(store.arena.end_words(), end);
+        store.arena.check().unwrap();
+        assert!(store.remove("x").is_err());
+    }
+
+    #[test]
+    fn export_is_canonical_contiguous_pack() {
+        let mut store = TensorStore::new();
+        let (_, p) = packed(4);
+        // Push the tensor past address 0 so export really rebases.
+        let (_, filler) = packed(5);
+        store.insert_packed("filler", &filler).unwrap();
+        store.insert_packed("t", &p).unwrap();
+        let ex = store.export("t").unwrap();
+        assert_eq!(ex.sizes_words, p.sizes_words);
+        assert_eq!(ex.addr_words, p.addr_words, "canonical layout matches the packer's");
+        assert_eq!(ex.total_words, p.total_words);
+        assert_eq!(ex.payload.as_ref().unwrap(), p.payload.as_ref().unwrap());
+        let recs_ex: Vec<u64> =
+            ex.metadata.records.iter().map(|r| r.pointer_words).collect();
+        let recs_p: Vec<u64> =
+            p.metadata.records.iter().map(|r| r.pointer_words).collect();
+        assert_eq!(recs_ex, recs_p);
+    }
+
+    #[test]
+    fn replacing_a_name_frees_the_old_extent() {
+        let mut store = TensorStore::new();
+        let (_, p) = packed(6);
+        store.insert_packed("t", &p).unwrap();
+        let live_once = store.arena.live_words();
+        store.insert_packed("t", &p).unwrap();
+        assert_eq!(store.arena.live_words(), live_once, "no leak on replace");
+        store.arena.check().unwrap();
+    }
+}

@@ -1,0 +1,415 @@
+//! Streaming tile-granular write-back: compress and store a layer's
+//! output *as it is produced*, never materialising a dense intermediate
+//! map.
+//!
+//! The compute lane hands the writer each finished output tile. The
+//! writer scatters the tile into per-sub-tensor staging buffers (the
+//! division is the one the *consumer* of this map will fetch under);
+//! the moment a sub-tensor is fully covered it is compressed and its
+//! staging freed, and the moment every sub-tensor of a Fig. 7 metadata
+//! block is compressed the block is allocated from the store's arena,
+//! its payload committed at real line-aligned addresses, its metadata
+//! record emitted, and the DRAM write traffic accounted
+//! ([`Stream::OutputWrite`] for payload lines, [`Stream::MetadataWrite`]
+//! for the index).
+//!
+//! Accounting is bit-exact with the analytic producer model: the padded
+//! payload bits equal `PackedFeatureMap::total_words × 16` of a
+//! stop-the-world re-pack of the same map, and the metadata bits equal
+//! `Division::total_meta_bits` — asserted by `tests/store_roundtrip.rs`
+//! against `sim::network::writeback_cost`.
+
+use super::tensor_store::{StoredTensor, TensorStore};
+use crate::compress::{Compressor, Scheme};
+use crate::layout::metadata::{BlockRecord, MetadataTable};
+use crate::layout::packer::PackedFeatureMap;
+use crate::memsim::{Dram, Stream};
+use crate::tensor::dense::bf16_quantise;
+use crate::tiling::division::{Division, SubTensorRef};
+use crate::util::error::Result;
+use crate::util::round_up;
+use crate::bail;
+
+/// What one streamed write produced.
+#[derive(Debug, Clone)]
+pub struct WriteReport {
+    /// Payload bits written, line-padded for aligned divisions — equals
+    /// the analytic `total_words × 16`.
+    pub payload_bits: u64,
+    /// Metadata bits written (`n_blocks × bits_per_record`).
+    pub metadata_bits: u64,
+    /// High-water mark of dense staging, in words; bounded by a few
+    /// tile rows, not the map (the "no dense intermediate" guarantee).
+    pub peak_staged_words: usize,
+    pub blocks: usize,
+    pub subtensors: usize,
+    /// Traffic with per-access trace (real addresses, for the timing
+    /// model replay).
+    pub dram: Dram,
+}
+
+impl WriteReport {
+    /// Total producer-side bits (payload + index).
+    pub fn writeback_bits(&self) -> u64 {
+        self.payload_bits + self.metadata_bits
+    }
+}
+
+/// Streams one tensor into a [`TensorStore`], tile by tile.
+pub struct StoreWriter<'s> {
+    store: &'s mut TensorStore,
+    name: String,
+    division: Division,
+    scheme: Scheme,
+    codec: Box<dyn Compressor>,
+    wpl: usize,
+    /// Dense staging per sub-tensor, allocated on first touch, freed on
+    /// compression.
+    staging: Vec<Option<Vec<f32>>>,
+    filled: Vec<u32>,
+    /// Compressed payloads awaiting their block's completion.
+    pending: Vec<Option<Vec<u16>>>,
+    sizes_words: Vec<u32>,
+    sizes_bits: Vec<u32>,
+    addr_words: Vec<u64>,
+    records: Vec<Option<BlockRecord>>,
+    block_remaining: Vec<u32>,
+    extents: Vec<(u64, u64)>,
+    dram: Dram,
+    payload_bits: u64,
+    meta_bits: u64,
+    staged_words: usize,
+    peak_staged_words: usize,
+    completed_subs: usize,
+}
+
+impl<'s> StoreWriter<'s> {
+    /// Start streaming tensor `name` under `division` (built for the
+    /// map's consumer) and `scheme`.
+    pub fn new(
+        store: &'s mut TensorStore,
+        name: &str,
+        division: Division,
+        scheme: Scheme,
+    ) -> Self {
+        let n = division.n_subtensors();
+        let mut block_remaining = vec![0u32; division.n_blocks()];
+        for iy in 0..division.ys.len() {
+            for ix in 0..division.xs.len() {
+                for icg in 0..division.n_cgroups {
+                    block_remaining[division.block_linear(SubTensorRef { iy, ix, icg })] += 1;
+                }
+            }
+        }
+        let wpl = store.arena.words_per_line();
+        Self {
+            store,
+            name: name.to_string(),
+            codec: scheme.build(),
+            scheme,
+            wpl,
+            staging: vec![None; n],
+            filled: vec![0; n],
+            pending: vec![None; n],
+            sizes_words: vec![0; n],
+            sizes_bits: vec![0; n],
+            addr_words: vec![0; n],
+            records: vec![None; division.n_blocks()],
+            block_remaining,
+            division,
+            extents: Vec::new(),
+            dram: Dram::default().with_trace(),
+            payload_bits: 0,
+            meta_bits: 0,
+            staged_words: 0,
+            peak_staged_words: 0,
+            completed_subs: 0,
+        }
+    }
+
+    /// Write one output tile `[y0,y1) × [x0,x1) × [c0,c1)`; `data` is
+    /// the tile in row-major (y, x, c) order. Tiles must partition the
+    /// map (each element written exactly once); values are
+    /// bf16-quantised on ingest like every stored map.
+    pub fn write_tile(
+        &mut self,
+        y0: usize,
+        y1: usize,
+        x0: usize,
+        x1: usize,
+        c0: usize,
+        c1: usize,
+        data: &[f32],
+    ) {
+        debug_assert_eq!(data.len(), (y1 - y0) * (x1 - x0) * (c1 - c0));
+        let (tw, tc) = (x1 - x0, c1 - c0);
+        for r in self.division.intersecting(y0, y1, x0, x1, c0, c1) {
+            let li = self.division.linear(r);
+            let sy = self.division.ys[r.iy];
+            let sx = self.division.xs[r.ix];
+            let scg0 = r.icg * self.division.cd;
+            let cd = self.division.cg_depth(r.icg);
+            let n = sy.len * sx.len * cd;
+            if self.staging[li].is_none() {
+                self.staging[li] = Some(vec![0.0; n]);
+                self.staged_words += n;
+                self.peak_staged_words = self.peak_staged_words.max(self.staged_words);
+            }
+            let buf = self.staging[li].as_mut().unwrap();
+            let iy0 = sy.start.max(y0);
+            let iy1 = sy.end().min(y1);
+            let ix0 = sx.start.max(x0);
+            let ix1 = sx.end().min(x1);
+            let ic0 = scg0.max(c0);
+            let ic1 = (scg0 + cd).min(c1);
+            let mut copied = 0u32;
+            for y in iy0..iy1 {
+                for x in ix0..ix1 {
+                    for ch in ic0..ic1 {
+                        let src = ((y - y0) * tw + (x - x0)) * tc + (ch - c0);
+                        let dst = ((y - sy.start) * sx.len + (x - sx.start)) * cd + (ch - scg0);
+                        buf[dst] = bf16_quantise(data[src]);
+                        copied += 1;
+                    }
+                }
+            }
+            self.filled[li] += copied;
+            debug_assert!(self.filled[li] as usize <= n, "element written twice");
+            if self.filled[li] as usize == n {
+                self.complete_subtensor(li, r);
+            }
+        }
+    }
+
+    /// A sub-tensor is fully covered: compress it, free its staging,
+    /// and commit its block if it was the last one outstanding.
+    fn complete_subtensor(&mut self, li: usize, r: SubTensorRef) {
+        let buf = self.staging[li].take().expect("sub-tensor completed twice");
+        self.staged_words -= buf.len();
+        let comp = self.codec.compress(&buf);
+        self.sizes_words[li] = comp.words.len() as u32;
+        self.sizes_bits[li] = self.codec.compressed_bits(&buf) as u32;
+        self.pending[li] = Some(comp.words);
+        self.completed_subs += 1;
+        let b = self.division.block_linear(r);
+        self.block_remaining[b] -= 1;
+        if self.block_remaining[b] == 0 {
+            self.complete_block(b);
+        }
+    }
+
+    /// Every sub-tensor of metadata block `b` is compressed: allocate
+    /// the block's extent, commit payloads at line-aligned addresses in
+    /// raster order (the Fig. 7b two-step layout), emit the record, and
+    /// account the write traffic.
+    fn complete_block(&mut self, b: usize) {
+        let (by, bx, icg) = self.division.block_coords(b);
+        let yr = self.division.y_segs_of_block(by);
+        let xr = self.division.x_segs_of_block(bx);
+        // Extent size: line-padded per sub-tensor for aligned modes,
+        // word-compact otherwise.
+        let mut extent = 0u64;
+        for iy in yr.clone() {
+            for ix in xr.clone() {
+                let li = self.division.linear(SubTensorRef { iy, ix, icg });
+                let sz = self.sizes_words[li] as u64;
+                extent += if self.division.compact {
+                    sz
+                } else {
+                    round_up(sz as usize, self.wpl) as u64
+                };
+            }
+        }
+        let alloc_len = round_up(extent.max(1) as usize, self.wpl) as u64;
+        let base = self.store.arena.alloc(alloc_len);
+        self.store.ensure_mem(base + alloc_len);
+        let mut cursor = base;
+        let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+        for iy in yr {
+            for ix in xr.clone() {
+                let li = self.division.linear(SubTensorRef { iy, ix, icg });
+                let words = self.pending[li].take().expect("block completed twice");
+                if !self.division.compact {
+                    cursor = round_up(cursor as usize, self.wpl) as u64;
+                }
+                self.addr_words[li] = cursor;
+                self.store.mem[cursor as usize..cursor as usize + words.len()]
+                    .copy_from_slice(&words);
+                let padded = if self.division.compact {
+                    words.len() as u64
+                } else {
+                    round_up(words.len(), self.wpl) as u64
+                };
+                self.dram.access(Stream::OutputWrite, cursor, padded);
+                self.payload_bits += padded * 16;
+                cursor += words.len() as u64;
+                rec_sizes.push(words.len() as u32);
+            }
+        }
+        self.records[b] = Some(BlockRecord { pointer_words: base, sizes_words: rec_sizes });
+        self.meta_bits += self.division.meta_bits_per_block as u64;
+        self.dram
+            .account_bits(Stream::MetadataWrite, self.division.meta_bits_per_block as u64);
+        self.extents.push((base, alloc_len));
+    }
+
+    /// Finish the stream: every sub-tensor must have been written.
+    /// Installs the tensor in the store (replacing any previous tensor
+    /// of the same name) and returns the write report.
+    pub fn finish(self) -> Result<WriteReport> {
+        let n = self.division.n_subtensors();
+        if self.completed_subs != n {
+            bail!(
+                "store writer '{}': {} of {n} sub-tensors never fully written",
+                self.name,
+                n - self.completed_subs
+            );
+        }
+        let StoreWriter {
+            store,
+            name,
+            division,
+            scheme,
+            wpl,
+            sizes_words,
+            sizes_bits,
+            addr_words,
+            records,
+            block_remaining,
+            mut extents,
+            dram,
+            payload_bits,
+            meta_bits,
+            peak_staged_words,
+            ..
+        } = self;
+        let records: Vec<BlockRecord> =
+            records.into_iter().map(|r| r.expect("block not committed")).collect();
+        let bits_per_record = division.meta_bits_per_block;
+        let packed = PackedFeatureMap {
+            division,
+            scheme,
+            sizes_words,
+            sizes_bits,
+            addr_words,
+            metadata: MetadataTable { records, bits_per_record },
+            payload: None,
+            total_words: payload_bits / 16,
+            words_per_line: wpl,
+        };
+        extents.sort_unstable();
+        store.remove_if_present(&name);
+        store.tensors.insert(name, StoredTensor { packed, extents });
+        Ok(WriteReport {
+            payload_bits,
+            metadata_bits: meta_bits,
+            peak_staged_words,
+            blocks: block_remaining.len(),
+            subtensors: n,
+            dram,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+    use crate::config::layer::{ConvLayer, TileShape};
+    use crate::layout::packer::Packer;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+    use crate::tensor::FeatureMap;
+    use crate::tiling::division::DivisionMode;
+
+    fn division(mode: DivisionMode, h: usize, w: usize, c: usize) -> Division {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, h, w, c, c);
+        let tile = TileShape::new(8, 8, 8);
+        Division::build(mode, &layer, &tile, &hw, h, w, c).unwrap()
+    }
+
+    /// Stream a map through the writer in 8×8 output tiles and compare
+    /// against a stop-the-world pack of the same map: identical sizes,
+    /// identical padded footprint, identical fetched contents.
+    #[test]
+    fn streamed_write_matches_monolithic_pack() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        for mode in [
+            DivisionMode::GrateTile { n: 8 },
+            DivisionMode::Uniform { edge: 4 },
+            DivisionMode::Uniform { edge: 1 },
+        ] {
+            for scheme in [Scheme::Bitmask, Scheme::Zrlc] {
+                let fm = generate(24, 24, 16, SparsityParams::clustered(0.45, 7));
+                let div = division(mode, 24, 24, 16);
+                let reference = Packer::new(hw, scheme).pack(&fm, &div, true);
+
+                let mut store = TensorStore::new();
+                let mut w = StoreWriter::new(&mut store, "t", div.clone(), scheme);
+                for ty in 0..3 {
+                    for tx in 0..3 {
+                        let (y0, x0) = (ty * 8, tx * 8);
+                        let block = fm.extract_block(y0, x0, 0, 8, 8, 16);
+                        w.write_tile(y0, y0 + 8, x0, x0 + 8, 0, 16, &block);
+                    }
+                }
+                let report = w.finish().unwrap();
+                let t = store.get("t").unwrap();
+                assert_eq!(t.packed.sizes_words, reference.sizes_words, "{mode:?} {scheme:?}");
+                assert_eq!(t.packed.total_words, reference.total_words);
+                assert_eq!(report.metadata_bits, div.total_meta_bits());
+                assert_eq!(report.payload_bits, reference.total_words * 16);
+                assert!(report.peak_staged_words > 0);
+                store.arena.check().unwrap();
+
+                let mut dram = Dram::default();
+                let got = store.fetch_dense("t", &mut dram).unwrap();
+                assert_eq!(got.as_slice(), fm.as_slice(), "{mode:?} {scheme:?}");
+            }
+        }
+    }
+
+    /// Interleave a reader of tensor A with a streamed write of tensor B
+    /// in the same store: addresses never collide.
+    #[test]
+    fn write_alongside_resident_tensor() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let fm_a = generate(24, 24, 16, SparsityParams::clustered(0.5, 1));
+        let fm_b = generate(24, 24, 16, SparsityParams::clustered(0.3, 2));
+        let div = division(DivisionMode::GrateTile { n: 8 }, 24, 24, 16);
+        let mut store = TensorStore::new();
+        let packed_a = Packer::new(hw, Scheme::Bitmask).pack(&fm_a, &div, true);
+        store.insert_packed("a", &packed_a).unwrap();
+        let (snap_a, seg_a) = store.snapshot("a").unwrap();
+
+        let mut w = StoreWriter::new(&mut store, "b", div.clone(), Scheme::Bitmask);
+        let mut fetcher = crate::layout::Fetcher::with_source(&snap_a, Box::new(seg_a));
+        let mut dram = Dram::default();
+        for ty in 0..3 {
+            for tx in 0..3 {
+                let (y0, x0) = (ty * 8, tx * 8);
+                // Reader and writer interleaved.
+                let _ = fetcher.fetch_window(&mut dram, y0, y0 + 8, x0, x0 + 8, 0, 16);
+                let block = fm_b.extract_block(y0, x0, 0, 8, 8, 16);
+                w.write_tile(y0, y0 + 8, x0, x0 + 8, 0, 16, &block);
+            }
+        }
+        w.finish().unwrap();
+        store.arena.check().unwrap();
+        let mut d2 = Dram::default();
+        assert_eq!(store.fetch_dense("a", &mut d2).unwrap().as_slice(), fm_a.as_slice());
+        assert_eq!(store.fetch_dense("b", &mut d2).unwrap().as_slice(), fm_b.as_slice());
+    }
+
+    #[test]
+    fn incomplete_write_errors() {
+        let div = division(DivisionMode::GrateTile { n: 8 }, 24, 24, 16);
+        let mut store = TensorStore::new();
+        let mut w = StoreWriter::new(&mut store, "t", div, Scheme::Bitmask);
+        let fm = FeatureMap::zeros(24, 24, 16);
+        let block = fm.extract_block(0, 0, 0, 8, 8, 16);
+        w.write_tile(0, 8, 0, 8, 0, 16, &block);
+        let e = w.finish().unwrap_err();
+        assert!(e.to_string().contains("never fully written"), "{e}");
+    }
+}

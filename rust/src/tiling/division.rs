@@ -328,6 +328,31 @@ impl Division {
             + r.icg
     }
 
+    /// Index range into `ys` of the segments owned by metadata block row
+    /// `by` (`block_of_y` is non-decreasing, so this is a binary search).
+    pub fn y_segs_of_block(&self, by: usize) -> std::ops::Range<usize> {
+        let first = self.block_of_y.partition_point(|&b| b < by);
+        let last = self.block_of_y.partition_point(|&b| b <= by);
+        first..last
+    }
+
+    /// Index range into `xs` of the segments owned by block column `bx`.
+    pub fn x_segs_of_block(&self, bx: usize) -> std::ops::Range<usize> {
+        let first = self.block_of_x.partition_point(|&b| b < bx);
+        let last = self.block_of_x.partition_point(|&b| b <= bx);
+        first..last
+    }
+
+    /// Decompose a linear block id (as produced by
+    /// [`Division::block_linear`]) into `(by, bx, icg)`.
+    pub fn block_coords(&self, b: usize) -> (usize, usize, usize) {
+        debug_assert!(b < self.n_blocks());
+        let icg = b % self.n_cgroups;
+        let bx = (b / self.n_cgroups) % self.n_blocks_x;
+        let by = b / (self.n_cgroups * self.n_blocks_x);
+        (by, bx, icg)
+    }
+
     /// Indices of segments on `axis` intersecting `[lo, hi)`.
     /// Returns an index range into `ys`/`xs`.
     pub fn covering(segs: &[Seg], lo: usize, hi: usize) -> std::ops::Range<usize> {
@@ -482,6 +507,39 @@ mod tests {
         let d = build(DivisionMode::WholeMap);
         assert_eq!(d.n_subtensors(), 8);
         assert_eq!(d.n_blocks(), 8);
+    }
+
+    #[test]
+    fn block_segment_ranges_partition_axes() {
+        for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 4 }] {
+            let d = build(mode);
+            let mut seen = 0usize;
+            for by in 0..d.n_blocks_y {
+                let r = d.y_segs_of_block(by);
+                assert_eq!(r.start, seen, "{mode:?} block {by}");
+                assert!(!r.is_empty());
+                for iy in r.clone() {
+                    assert_eq!(d.block_of_y[iy], by);
+                }
+                seen = r.end;
+            }
+            assert_eq!(seen, d.ys.len());
+        }
+    }
+
+    #[test]
+    fn block_coords_invert_block_linear() {
+        let d = build(DivisionMode::GrateTile { n: 8 });
+        for iy in 0..d.ys.len() {
+            for ix in 0..d.xs.len() {
+                for icg in 0..d.n_cgroups {
+                    let r = SubTensorRef { iy, ix, icg };
+                    let b = d.block_linear(r);
+                    let (by, bx, cg) = d.block_coords(b);
+                    assert_eq!((by, bx, cg), (d.block_of_y[iy], d.block_of_x[ix], icg));
+                }
+            }
+        }
     }
 
     #[test]

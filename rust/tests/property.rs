@@ -8,6 +8,7 @@ use gratetile::config::layer::ConvLayer;
 use gratetile::layout::{Fetcher, Packer};
 use gratetile::memsim::Dram;
 use gratetile::sim::experiment::{run_layer, run_layer_naive};
+use gratetile::store::{Arena, Container, StoreWriter, TensorStore};
 use gratetile::tensor::sparsity::{generate, SparsityParams};
 use gratetile::tiling::division::{Division, DivisionMode};
 use gratetile::util::proptest_lite::forall_res;
@@ -37,10 +38,11 @@ fn gen_scenario(r: &mut SplitMix64) -> Scenario {
         4 => DivisionMode::Uniform { edge: 4 },
         _ => DivisionMode::Uniform { edge: 1 },
     };
-    let scheme = match r.below(3) {
+    let scheme = match r.below(4) {
         0 => Scheme::Bitmask,
         1 => Scheme::Zrlc,
-        _ => Scheme::Dictionary,
+        2 => Scheme::Dictionary,
+        _ => Scheme::Raw,
     };
     Scenario {
         layer: ConvLayer { k, s, d, h, w, c_in: c, c_out: c },
@@ -193,6 +195,128 @@ fn prop_bandwidth_bounds() {
                     r.fetched_bits
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+/// The full storage chain round-trips bit-exactly for every (geometry,
+/// division mode, codec, density): pack → store write (streamed in
+/// randomized tile bands) → container serialize → reopen →
+/// `fetch_window` against the dense reference, across all Table III
+/// modes, ragged shapes and all four codecs.
+#[test]
+fn prop_store_container_roundtrip() {
+    forall_res(0x570E, 18, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()), // N/A combinations are fine
+        };
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+
+        // Stream the map into a store in bands whose height depends on
+        // the seed (exercises partial sub-tensor staging).
+        let mut store = TensorStore::new();
+        let mut writer = StoreWriter::new(&mut store, "t", division, sc.scheme);
+        let band = 1 + (sc.seed % 11) as usize;
+        let mut y0 = 0;
+        while y0 < h {
+            let y1 = (y0 + band).min(h);
+            let data = fm.extract_block(y0, 0, 0, y1 - y0, w, c);
+            writer.write_tile(y0, y1, 0, w, 0, c, &data);
+            y0 = y1;
+        }
+        let report = writer.finish().map_err(|e| e.to_string())?;
+        if report.subtensors == 0 {
+            return Err("empty division".into());
+        }
+        store.arena().check()?;
+
+        // Serialize, reopen, fetch a random window off the file.
+        let exported = store.export("t").map_err(|e| e.to_string())?;
+        let mut path = std::env::temp_dir();
+        path.push(format!("gratetile-prop-{}-{}.grate", std::process::id(), sc.seed));
+        Container::write(&path, &[("t".to_string(), &exported)])
+            .map_err(|e| e.to_string())?;
+        let cont = Container::open(&path).map_err(|e| e.to_string())?;
+        let mut rng = SplitMix64::new(sc.seed ^ 0xC0);
+        let (wy0, wy1) = {
+            let a = rng.below(h);
+            (a, (a + 1 + rng.below(h - a)).min(h))
+        };
+        let (wx0, wx1) = {
+            let a = rng.below(w);
+            (a, (a + 1 + rng.below(w - a)).min(w))
+        };
+        let mut dram = Dram::default();
+        let win = cont
+            .fetch_window("t", &mut dram, wy0, wy1, wx0, wx1, 0, c)
+            .map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        for y in wy0..wy1 {
+            for x in wx0..wx1 {
+                for ch in 0..c {
+                    if win.get(y, x, ch) != fm.get(y, x, ch) {
+                        return Err(format!(
+                            "container mismatch at ({y},{x},{ch}) mode={} scheme={}",
+                            sc.mode.name(),
+                            sc.scheme.name()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Arena invariants under randomized size churn: line alignment, no
+/// overlap, exact accounting, coalescing — through alloc/free/realloc
+/// storms with skewed size distributions.
+#[test]
+fn prop_arena_invariants_under_churn() {
+    forall_res(0xA11C, 40, |r: &mut SplitMix64| r.next_u64(), |&seed| {
+        let mut rng = SplitMix64::new(seed);
+        let mut arena = Arena::new(8);
+        let mut live: Vec<(u64, u64)> = Vec::new(); // (addr, requested words)
+        for step in 0..300 {
+            let roll = rng.next_f64();
+            if live.is_empty() || roll < 0.5 {
+                let words = 1 + rng.below(500) as u64;
+                let addr = arena.alloc(words);
+                if addr % 8 != 0 {
+                    return Err(format!("step {step}: unaligned alloc at {addr}"));
+                }
+                // No overlap with any live extent (by requested size).
+                for &(a, l) in &live {
+                    let l = l.div_ceil(8) * 8;
+                    if addr < a + l && a < addr + words.div_ceil(8) * 8 {
+                        return Err(format!("step {step}: overlap {addr} vs ({a},{l})"));
+                    }
+                }
+                live.push((addr, words));
+            } else if roll < 0.8 {
+                let i = rng.below(live.len());
+                let (addr, _) = live.swap_remove(i);
+                arena.free(addr);
+            } else {
+                let i = rng.below(live.len());
+                let words = 1 + rng.below(700) as u64;
+                let addr = arena.realloc(live[i].0, words);
+                live[i] = (addr, words);
+            }
+            arena.check().map_err(|e| format!("step {step}: {e}"))?;
+        }
+        // Drain: everything freed coalesces back to one extent.
+        for (addr, _) in live.drain(..) {
+            arena.free(addr);
+        }
+        arena.check()?;
+        if arena.live_words() != 0 {
+            return Err("leak after drain".into());
         }
         Ok(())
     });
