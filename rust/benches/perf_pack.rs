@@ -1,13 +1,32 @@
-//! Perf bench: the packer hot path (compress + address assignment).
-//! §Perf target: ≥ 1 GB/s single-core feature-map packing (sizes-only).
+//! Perf bench: the pack→fetch data plane, measuring the plan/execute
+//! engine against the seed packer it replaced (kept as
+//! `Packer::pack_reference`, the bit-exact oracle).
+//!
+//! §Perf acceptance (EXPERIMENTS.md, asserted below):
+//!
+//! * scan-free sizing: engine ≥ 2× the oracle on a single thread
+//!   (sizes-only ZRLC pack of vgg_conv1_2-sized 224×224×64);
+//! * parallel execute: > 1× going from 1 to 2 workers (the CI smoke
+//!   gate), and ≥ 3× over the oracle at 8 workers on machines that
+//!   have them;
+//! * bit-exactness: engine output (sizes, bits, addresses, records,
+//!   payload) identical to the oracle in the same run, for
+//!   grate8/uniform8/uniform1 × all four codecs;
+//! * window-decode fast path: a partial window decodes fewer words
+//!   than whole-sub-tensor decoding.
+//!
+//! Results append to `results/bench.csv` and land machine-readable in
+//! `BENCH_PACK.json` at the repo root (CI uploads it as an artifact).
 
 use gratetile::compress::Scheme;
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::{ConvLayer, TileShape};
-use gratetile::layout::Packer;
+use gratetile::layout::{Fetcher, Packer};
+use gratetile::memsim::Dram;
 use gratetile::tensor::sparsity::{generate, SparsityParams};
 use gratetile::tiling::{Division, DivisionMode};
 use gratetile::util::benchkit::Bencher;
+use gratetile::util::parallel::set_threads;
 
 fn main() {
     let hw = Platform::NvidiaSmallTile.hardware();
@@ -15,24 +34,146 @@ fn main() {
     let tile = TileShape::new(8, 16, 8);
     let fm = generate(224, 224, 64, SparsityParams::clustered(0.37, 42));
     let bytes = (fm.words() * 2) as u64;
+    let grate = Division::build(DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, 224, 224, 64)
+        .unwrap();
     let mut b = Bencher::new();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
+    // ---- Plan phase: scan-free sizing vs the oracle's triple scan ----
+    // ZRLC sizes-only is the honest comparison: the seed gathers every
+    // block and token-scans it twice; the engine streams one fused
+    // stats pass per sub-tensor.
+    let zrlc = Packer::new(hw, Scheme::Zrlc);
+    set_threads(1);
+    b.bench_bytes("pack/grate8/zrlc/sizes/oracle", bytes, || {
+        zrlc.pack_reference(&fm, &grate, false).total_words
+    });
+    b.bench_bytes("pack/grate8/zrlc/sizes/engine@1", bytes, || {
+        zrlc.pack(&fm, &grate, false).total_words
+    });
+    let plan_speedup = b
+        .report_speedup("pack/grate8/zrlc/sizes/engine@1", "pack/grate8/zrlc/sizes/oracle")
+        .unwrap();
+
+    // ---- Execute phase: parallel payload materialisation ----
+    let bitmask = Packer::new(hw, Scheme::Bitmask);
+    b.bench_bytes("pack/grate8/bitmask/payload/oracle", bytes, || {
+        bitmask.pack_reference(&fm, &grate, true).total_words
+    });
+    b.bench_bytes("pack/grate8/bitmask/payload/engine@1", bytes, || {
+        bitmask.pack(&fm, &grate, true).total_words
+    });
+    set_threads(2);
+    b.bench_bytes("pack/grate8/bitmask/payload/engine@2", bytes, || {
+        bitmask.pack(&fm, &grate, true).total_words
+    });
+    let scale2 = b
+        .speedup("pack/grate8/bitmask/payload/engine@2", "pack/grate8/bitmask/payload/engine@1")
+        .unwrap();
+    println!("pack/grate8/bitmask/payload 2-worker scaling      {scale2:>10.2}x");
+    let mut speedup8 = None;
+    if cores >= 8 {
+        set_threads(8);
+        b.bench_bytes("pack/grate8/bitmask/payload/engine@8", bytes, || {
+            bitmask.pack(&fm, &grate, true).total_words
+        });
+        speedup8 = b.report_speedup(
+            "pack/grate8/bitmask/payload/engine@8",
+            "pack/grate8/bitmask/payload/oracle",
+        );
+    }
+    set_threads(0);
+
+    // ---- The classic mode sweep (perf trajectory continuity) ----
     for (label, mode) in [
         ("grate8", DivisionMode::GrateTile { n: 8 }),
         ("uniform8", DivisionMode::Uniform { edge: 8 }),
         ("uniform1", DivisionMode::Uniform { edge: 1 }),
     ] {
         let division = Division::build(mode, &layer, &tile, &hw, 224, 224, 64).unwrap();
-        for (suffix, scheme) in [("bitmask", Scheme::Bitmask), ("zrlc", Scheme::Zrlc)] {
-            let packer = Packer::new(hw, scheme);
-            b.bench_bytes(&format!("pack/{label}/{suffix}/sizes_only"), bytes, || {
-                packer.pack(&fm, &division, false).total_words
-            });
-        }
         let packer = Packer::new(hw, Scheme::Bitmask);
-        b.bench_bytes(&format!("pack/{label}/bitmask/with_payload"), bytes, || {
-            packer.pack(&fm, &division, true).total_words
+        b.bench_bytes(&format!("pack/{label}/bitmask/sizes_only"), bytes, || {
+            packer.pack(&fm, &division, false).total_words
         });
     }
+
+    // ---- Bit-exactness: engine == oracle in this very run ----
+    for (label, mode) in [
+        ("grate8", DivisionMode::GrateTile { n: 8 }),
+        ("uniform8", DivisionMode::Uniform { edge: 8 }),
+        ("uniform1", DivisionMode::Uniform { edge: 1 }),
+    ] {
+        let division = Division::build(mode, &layer, &tile, &hw, 224, 224, 64).unwrap();
+        for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw] {
+            let packer = Packer::new(hw, scheme);
+            let oracle = packer.pack_reference(&fm, &division, true);
+            let engine = packer.pack(&fm, &division, true);
+            assert_eq!(oracle.sizes_words, engine.sizes_words, "{label}/{scheme:?} sizes");
+            assert_eq!(oracle.sizes_bits, engine.sizes_bits, "{label}/{scheme:?} bits");
+            assert_eq!(oracle.addr_words, engine.addr_words, "{label}/{scheme:?} addrs");
+            assert_eq!(oracle.total_words, engine.total_words, "{label}/{scheme:?} total");
+            assert_eq!(oracle.payload, engine.payload, "{label}/{scheme:?} payload");
+            for (ra, rb) in oracle.metadata.records.iter().zip(&engine.metadata.records) {
+                assert_eq!(ra.pointer_words, rb.pointer_words, "{label}/{scheme:?} pointer");
+                assert_eq!(ra.sizes_words, rb.sizes_words, "{label}/{scheme:?} record");
+            }
+        }
+    }
+    println!("bit-exactness: engine == oracle on 3 modes x 4 codecs   OK");
+
+    // ---- Window-decode fast path: partial < full ----
+    {
+        let division =
+            Division::build(DivisionMode::Uniform { edge: 8 }, &layer, &tile, &hw, 224, 224, 64)
+                .unwrap();
+        let packed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, true);
+        let (y0, y1, x0, x1, c0, c1) = (0usize, 10usize, 0usize, 10usize, 0usize, 8usize);
+        let touched: u64 = packed
+            .division
+            .intersecting(y0, y1, x0, x1, c0, c1)
+            .iter()
+            .map(|&r| packed.division.subtensor_words(r) as u64)
+            .sum();
+        let mut fetcher = Fetcher::new(&packed);
+        let mut dram = Dram::default();
+        let _ = fetcher.fetch_window(&mut dram, y0, y1, x0, x1, c0, c1);
+        assert!(
+            fetcher.decoded_words() < touched,
+            "partial-window fast path decoded {} of {touched} touched words",
+            fetcher.decoded_words()
+        );
+        println!(
+            "fetch fast path: partial window decoded {} of {} touched words   OK",
+            fetcher.decoded_words(),
+            touched
+        );
+        b.bench_items("fetch/uniform8/bitmask/partial_window", touched, || {
+            let mut d = Dram::default();
+            fetcher.fetch_window(&mut d, y0, y1, x0, x1, c0, c1).data.len()
+        });
+    }
+
+    // ---- Acceptance gates ----
+    assert!(
+        plan_speedup >= 2.0,
+        "§Perf acceptance: scan-free sizing must be ≥ 2x the seed packer \
+         single-threaded, measured {plan_speedup:.2}x"
+    );
+    assert!(
+        scale2 > 1.0,
+        "§Perf acceptance: parallel execute must scale > 1x on 2 workers, \
+         measured {scale2:.2}x"
+    );
+    if let Some(s8) = speedup8 {
+        assert!(
+            s8 >= 3.0,
+            "§Perf acceptance: engine at 8 workers must be ≥ 3x the seed \
+             packer, measured {s8:.2}x"
+        );
+    } else {
+        println!("(8-worker gate skipped: {cores} cores available)");
+    }
+
     b.write_csv("perf_pack");
+    b.write_json("perf_pack", "../BENCH_PACK.json");
 }

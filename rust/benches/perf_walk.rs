@@ -70,4 +70,5 @@ fn main() {
         }
     }
     b.write_csv("perf_walk");
+    b.write_json("perf_walk", "../BENCH_WALK.json");
 }

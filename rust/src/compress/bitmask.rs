@@ -5,6 +5,7 @@
 //! Size is exactly `ceil(n/16) + nnz` words, which makes the simulator's
 //! fast path a popcount-free nonzero count.
 
+use super::stats::{nnz_of, BlockStats};
 use super::{CompressedBlock, Compressor, CodecCost, Scheme};
 use crate::tensor::dense::{bf16_bits, bf16_from_bits};
 use crate::util::ceil_div;
@@ -37,8 +38,65 @@ impl Compressor for Bitmask {
         assert_eq!(out.len(), comp.n_elems);
         let mask_words = ceil_div(comp.n_elems, 16);
         let (mask, values) = comp.words.split_at(mask_words);
+        // Word-at-a-time: zero-fill the 16-element chunk, then scatter
+        // only the set bits (trailing_zeros walk) — all-zero mask words
+        // cost one branch instead of 16.
         let mut vi = 0;
-        for (i, o) in out.iter_mut().enumerate() {
+        for (wi, &m) in mask.iter().enumerate() {
+            let base = wi * 16;
+            let lim = (comp.n_elems - base).min(16);
+            let chunk = &mut out[base..base + lim];
+            chunk.fill(0.0);
+            let mut bits = m;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                chunk[b] = bf16_from_bits(values[vi]);
+                vi += 1;
+                bits &= bits - 1;
+            }
+        }
+    }
+
+    fn compressed_words(&self, block: &[f32]) -> usize {
+        ceil_div(block.len(), 16) + nnz_of(block)
+    }
+
+    fn compressed_bits(&self, block: &[f32]) -> usize {
+        // Exact: one mask bit per element + 16 bits per nonzero.
+        block.len() + nnz_of(block) * 16
+    }
+
+    fn compressed_sizes(&self, block: &[f32]) -> (usize, usize) {
+        let (n, nnz) = (block.len(), nnz_of(block));
+        (ceil_div(n, 16) + nnz, n + nnz * 16)
+    }
+
+    fn compress_with_bits(&self, block: &[f32]) -> (CompressedBlock, usize) {
+        // nnz falls out of the payload length — no second scan.
+        let comp = self.compress(block);
+        let nnz = comp.words.len() - ceil_div(block.len(), 16);
+        (comp, block.len() + nnz * 16)
+    }
+
+    fn sizes_from_stats(&self, s: &BlockStats) -> Option<(usize, usize)> {
+        Some((ceil_div(s.n_elems, 16) + s.nnz, s.n_elems + s.nnz * 16))
+    }
+
+    fn decompress_span(&self, comp: &CompressedBlock, start: usize, out: &mut [f32]) -> bool {
+        debug_assert!(start + out.len() <= comp.n_elems);
+        let mask_words = ceil_div(comp.n_elems, 16);
+        let (mask, values) = comp.words.split_at(mask_words);
+        // Value cursor = popcount of the mask bits before `start`.
+        let mut vi = 0usize;
+        for &m in &mask[..start / 16] {
+            vi += m.count_ones() as usize;
+        }
+        let rem = start % 16;
+        if rem > 0 {
+            vi += (mask[start / 16] & ((1u16 << rem) - 1)).count_ones() as usize;
+        }
+        for (j, o) in out.iter_mut().enumerate() {
+            let i = start + j;
             if mask[i / 16] >> (i % 16) & 1 == 1 {
                 *o = bf16_from_bits(values[vi]);
                 vi += 1;
@@ -46,17 +104,7 @@ impl Compressor for Bitmask {
                 *o = 0.0;
             }
         }
-    }
-
-    fn compressed_words(&self, block: &[f32]) -> usize {
-        let nnz = block.iter().filter(|&&v| v != 0.0).count();
-        ceil_div(block.len(), 16) + nnz
-    }
-
-    fn compressed_bits(&self, block: &[f32]) -> usize {
-        // Exact: one mask bit per element + 16 bits per nonzero.
-        let nnz = block.iter().filter(|&&v| v != 0.0).count();
-        block.len() + nnz * 16
+        true
     }
 
     fn cost(&self) -> CodecCost {
@@ -104,6 +152,22 @@ mod tests {
             Bitmask.decompress(&c, &mut out);
             assert_eq!(out, blk, "len {len}");
             assert_eq!(c.compressed_words(), Bitmask.compressed_words(&blk));
+        }
+    }
+
+    #[test]
+    fn span_decode_matches_full_decode() {
+        let mut rng = SplitMix64::new(9);
+        for len in [64usize, 100, 511] {
+            let blk = random_block(&mut rng, len, 0.35);
+            let c = Bitmask.compress(&blk);
+            let mut full = vec![0.0; len];
+            Bitmask.decompress(&c, &mut full);
+            for (start, n) in [(0usize, len), (1, len - 1), (17, 10), (len - 1, 1), (33, 0)] {
+                let mut out = vec![9.0f32; n];
+                assert!(Bitmask.decompress_span(&c, start, &mut out));
+                assert_eq!(out, &full[start..start + n], "len {len} start {start} n {n}");
+            }
         }
     }
 

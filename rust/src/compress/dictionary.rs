@@ -8,6 +8,7 @@
 //! — on such blocks VQ is counter-productive.
 
 use super::bits::{words_for_bits, BitReader, BitWriter};
+use super::stats::BlockStats;
 use super::{CodecCost, CompressedBlock, Compressor, Scheme};
 use crate::tensor::dense::{bf16_bits, bf16_from_bits};
 
@@ -127,6 +128,57 @@ impl Compressor for Dictionary {
             }
             None => 16 + block.len() * 16,
         }
+    }
+
+    fn compressed_sizes(&self, block: &[f32]) -> (usize, usize) {
+        if block.is_empty() {
+            return (0, 0);
+        }
+        // One dictionary build feeds both sizes (the default would
+        // build it twice).
+        match self.build_dict(block) {
+            Some(dict) => {
+                let (len, ib) = (dict.len(), Self::index_bits(dict.len()));
+                (1 + len + words_for_bits(block.len() * ib), 16 + len * 16 + block.len() * ib)
+            }
+            None => (1 + block.len(), 16 + block.len() * 16),
+        }
+    }
+
+    fn compress_with_bits(&self, block: &[f32]) -> (CompressedBlock, usize) {
+        // The header word already says which branch the block took.
+        let comp = self.compress(block);
+        let n = block.len();
+        let bits = if n == 0 {
+            0
+        } else if comp.words[0] == RAW_MARKER {
+            16 + n * 16
+        } else {
+            let len = comp.words[0] as usize;
+            16 + len * 16 + n * Self::index_bits(len)
+        };
+        (comp, bits)
+    }
+
+    fn sizes_from_stats(&self, s: &BlockStats) -> Option<(usize, usize)> {
+        if s.n_elems == 0 {
+            return Some((0, 0));
+        }
+        // `distinct` saturates at cap + 1, which is exactly the raw
+        // fallback condition of `build_dict`.
+        if s.distinct <= self.max_entries {
+            let ib = Self::index_bits(s.distinct);
+            Some((
+                1 + s.distinct + words_for_bits(s.n_elems * ib),
+                16 + s.distinct * 16 + s.n_elems * ib,
+            ))
+        } else {
+            Some((1 + s.n_elems, 16 + s.n_elems * 16))
+        }
+    }
+
+    fn stats_dict_cap(&self) -> usize {
+        self.max_entries
     }
 
     fn cost(&self) -> CodecCost {

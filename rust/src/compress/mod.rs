@@ -21,12 +21,14 @@ pub mod cost;
 pub mod dictionary;
 pub mod hwmodel;
 pub mod raw;
+pub mod stats;
 pub mod zrlc;
 
 pub use bitmask::Bitmask;
 pub use cost::CodecCost;
 pub use dictionary::Dictionary;
 pub use raw::RawDense;
+pub use stats::{BlockStats, DistinctTracker, StatsAcc};
 pub use zrlc::Zrlc;
 
 /// A compressed sub-tensor: an opaque word payload plus element count.
@@ -106,6 +108,44 @@ pub trait Compressor: Send + Sync {
     /// Default: `compressed_words × 16`.
     fn compressed_bits(&self, block: &[f32]) -> usize {
         self.compressed_words(block) * 16
+    }
+
+    /// Both exact sizes — `(words, idealised bits)` — in one scan where
+    /// the codec can manage it. Callers that need both (the reference
+    /// packer, size audits) go through here instead of paying two
+    /// independent block scans.
+    fn compressed_sizes(&self, block: &[f32]) -> (usize, usize) {
+        (self.compressed_words(block), self.compressed_bits(block))
+    }
+
+    /// Compress and report the idealised bit size of the same block in
+    /// a single pass (the streaming writer's hot path; the default pays
+    /// an extra sizing scan).
+    fn compress_with_bits(&self, block: &[f32]) -> (CompressedBlock, usize) {
+        let bits = self.compressed_bits(block);
+        (self.compress(block), bits)
+    }
+
+    /// Exact `(words, bits)` from fused single-pass [`BlockStats`] —
+    /// the packing engine's scan-free sizing. `None` means the codec
+    /// cannot size from stats and the planner falls back to a block
+    /// gather + [`Compressor::compressed_sizes`].
+    fn sizes_from_stats(&self, _stats: &BlockStats) -> Option<(usize, usize)> {
+        None
+    }
+
+    /// Dictionary capacity the stats pass must track distinct values up
+    /// to for [`Compressor::sizes_from_stats`] to be exact; 0 = distinct
+    /// tracking not needed (skips the tracker entirely).
+    fn stats_dict_cap(&self) -> usize {
+        0
+    }
+
+    /// Decode only elements `[start, start + out.len())` of `comp` —
+    /// the fetcher's partial-window fast path. Returns `false` when the
+    /// codec cannot random-access its stream (caller decodes fully).
+    fn decompress_span(&self, _comp: &CompressedBlock, _start: usize, _out: &mut [f32]) -> bool {
+        false
     }
 
     /// Hardware cost proxy for the §V codec comparison.

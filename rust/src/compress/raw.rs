@@ -1,5 +1,6 @@
 //! Identity "codec": the uncompressed baseline.
 
+use super::stats::BlockStats;
 use super::{CodecCost, CompressedBlock, Compressor, Scheme};
 use crate::tensor::dense::{bf16_bits, bf16_from_bits};
 
@@ -28,6 +29,26 @@ impl Compressor for RawDense {
 
     fn compressed_words(&self, block: &[f32]) -> usize {
         block.len()
+    }
+
+    fn compressed_sizes(&self, block: &[f32]) -> (usize, usize) {
+        (block.len(), block.len() * 16)
+    }
+
+    fn compress_with_bits(&self, block: &[f32]) -> (CompressedBlock, usize) {
+        (self.compress(block), block.len() * 16)
+    }
+
+    fn sizes_from_stats(&self, s: &BlockStats) -> Option<(usize, usize)> {
+        Some((s.n_elems, s.n_elems * 16))
+    }
+
+    fn decompress_span(&self, comp: &CompressedBlock, start: usize, out: &mut [f32]) -> bool {
+        debug_assert!(start + out.len() <= comp.n_elems);
+        for (o, &w) in out.iter_mut().zip(&comp.words[start..]) {
+            *o = bf16_from_bits(w);
+        }
+        true
     }
 
     fn cost(&self) -> CodecCost {

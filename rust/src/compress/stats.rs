@@ -1,0 +1,231 @@
+//! Fused single-pass block statistics — the planner's size substrate.
+//!
+//! Every codec's *exact* compressed size is a closed-form function of a
+//! handful of per-block statistics: the element count, the nonzero count
+//! (bitmask), the zero-run token structure (ZRLC) and the distinct-value
+//! count up to the dictionary capacity (dictionary; raw needs nothing).
+//! [`StatsAcc`] computes all of them in **one** streaming pass over the
+//! block — fed row by row straight from the feature map, without ever
+//! materialising the block — and [`Compressor::sizes_from_stats`]
+//! turns the result into `(words, bits)` per codec. This is what makes
+//! the packing engine's plan phase scan-free: the seed packer re-walked
+//! each block up to three times (gather, `compressed_bits`,
+//! `compressed_words`); the planner walks it once.
+//!
+//! The per-codec formulas are cross-checked against the real codecs on
+//! random blocks by the tests below and by `tests/property.rs`.
+//!
+//! [`Compressor::sizes_from_stats`]: super::Compressor::sizes_from_stats
+
+use super::zrlc::MAX_RUN;
+use crate::tensor::dense::bf16_bits;
+
+/// One block's fused statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockStats {
+    /// Total elements scanned.
+    pub n_elems: usize,
+    /// Nonzero elements (`v != 0.0`; −0.0 counts as zero, exactly like
+    /// the bitmask/ZRLC codecs).
+    pub nnz: usize,
+    /// ZRLC token count (value tokens + long-run fillers; trailing
+    /// zeros are free) — [`super::Zrlc`]'s exact token structure.
+    pub zrlc_tokens: usize,
+    /// Distinct bf16 bit patterns, saturating at `dict_cap + 1` (the
+    /// dictionary-overflow marker). 0 when distinct tracking was off.
+    pub distinct: usize,
+}
+
+/// Reusable distinct-bf16-value tracker: a generation-stamped table over
+/// the 2^16 bf16 bit patterns, so per-block resets are O(1) instead of
+/// an O(2^16) clear. One per worker thread; ~256 KiB.
+#[derive(Debug)]
+pub struct DistinctTracker {
+    marks: Vec<u32>,
+    generation: u32,
+}
+
+impl Default for DistinctTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DistinctTracker {
+    pub fn new() -> Self {
+        Self { marks: vec![0; 1 << 16], generation: 0 }
+    }
+
+    /// Start a new block (invalidates all previous marks in O(1)).
+    fn begin(&mut self) {
+        if self.generation == u32::MAX {
+            self.marks.fill(0);
+            self.generation = 0;
+        }
+        self.generation += 1;
+    }
+
+    /// Mark `bits` seen; returns true the first time per block.
+    fn insert(&mut self, bits: u16) -> bool {
+        let m = &mut self.marks[bits as usize];
+        if *m == self.generation {
+            false
+        } else {
+            *m = self.generation;
+            true
+        }
+    }
+}
+
+/// Streaming accumulator for [`BlockStats`]: feed the block's elements
+/// in storage order (any slice granularity), then [`StatsAcc::finish`].
+pub struct StatsAcc<'t> {
+    n: usize,
+    nnz: usize,
+    tokens: usize,
+    run: u32,
+    distinct: usize,
+    dict_cap: usize,
+    tracker: Option<&'t mut DistinctTracker>,
+}
+
+impl<'t> StatsAcc<'t> {
+    /// `dict_cap` > 0 enables distinct tracking (requires `tracker`),
+    /// saturating at `dict_cap + 1`; 0 skips it entirely.
+    pub fn new(dict_cap: usize, mut tracker: Option<&'t mut DistinctTracker>) -> Self {
+        if let Some(t) = tracker.as_mut() {
+            t.begin();
+        }
+        Self { n: 0, nnz: 0, tokens: 0, run: 0, distinct: 0, dict_cap, tracker }
+    }
+
+    /// Feed the next `slice` of the block (in element order).
+    pub fn feed(&mut self, slice: &[f32]) {
+        let track = self.dict_cap > 0;
+        for &v in slice {
+            if v == 0.0 {
+                self.run += 1;
+            } else {
+                self.nnz += 1;
+                // Long runs spend one (MAX_RUN, 0) filler per MAX_RUN+1
+                // zeros, then the value token — Zrlc::token_count.
+                self.tokens += (self.run / (MAX_RUN + 1)) as usize + 1;
+                self.run = 0;
+            }
+            if track && self.distinct <= self.dict_cap {
+                if let Some(t) = self.tracker.as_mut() {
+                    if t.insert(bf16_bits(v)) {
+                        self.distinct += 1;
+                    }
+                }
+            }
+        }
+        self.n += slice.len();
+    }
+
+    pub fn finish(self) -> BlockStats {
+        BlockStats {
+            n_elems: self.n,
+            nnz: self.nnz,
+            zrlc_tokens: self.tokens,
+            distinct: self.distinct,
+        }
+    }
+}
+
+/// Nonzero count of a block — the one shared definition the bitmask
+/// sizing formulas go through (`compressed_words` / `compressed_bits`
+/// used to each run their own scan).
+pub fn nnz_of(block: &[f32]) -> usize {
+    block.iter().filter(|&&v| v != 0.0).count()
+}
+
+/// Convenience: full-block stats in one pass (planner uses the
+/// streaming [`StatsAcc`] directly to avoid materialising blocks).
+pub fn scan(block: &[f32], dict_cap: usize, tracker: Option<&mut DistinctTracker>) -> BlockStats {
+    let mut acc = StatsAcc::new(dict_cap, tracker);
+    acc.feed(block);
+    acc.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::random_block;
+    use crate::compress::{Bitmask, Compressor, Dictionary, RawDense, Zrlc};
+    use crate::util::SplitMix64;
+
+    /// THE stats contract: for random blocks at every density, the
+    /// stats-derived sizes equal each codec's real compressed sizes.
+    #[test]
+    fn sizes_from_stats_match_codecs() {
+        let mut rng = SplitMix64::new(0x57A7);
+        let mut tracker = DistinctTracker::new();
+        let codecs: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Bitmask),
+            Box::new(Zrlc),
+            Box::new(Dictionary::default()),
+            Box::new(Dictionary { max_entries: 8 }),
+            Box::new(RawDense),
+        ];
+        for trial in 0..200 {
+            let len = 1 + (rng.below(700));
+            let density = rng.next_f64();
+            let blk = random_block(&mut rng, len, density);
+            for codec in &codecs {
+                let stats = scan(&blk, codec.stats_dict_cap(), Some(&mut tracker));
+                let Some((words, bits)) = codec.sizes_from_stats(&stats) else {
+                    panic!("{:?} cannot size from stats", codec.scheme());
+                };
+                assert_eq!(
+                    words,
+                    codec.compressed_words(&blk),
+                    "trial {trial} {:?} words (len {len} d {density:.2})",
+                    codec.scheme()
+                );
+                assert_eq!(
+                    bits,
+                    codec.compressed_bits(&blk),
+                    "trial {trial} {:?} bits",
+                    codec.scheme()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_feed_is_slice_granularity_independent() {
+        let mut rng = SplitMix64::new(0xFEED);
+        let blk = random_block(&mut rng, 513, 0.3);
+        let mut tracker = DistinctTracker::new();
+        let whole = scan(&blk, 256, Some(&mut tracker));
+        let mut acc = StatsAcc::new(256, Some(&mut tracker));
+        for chunk in blk.chunks(7) {
+            acc.feed(chunk);
+        }
+        assert_eq!(acc.finish(), whole);
+    }
+
+    #[test]
+    fn distinct_saturates_at_cap_plus_one() {
+        let blk: Vec<f32> = (1..100).map(|i| i as f32).collect();
+        let mut tracker = DistinctTracker::new();
+        let s = scan(&blk, 8, Some(&mut tracker));
+        assert_eq!(s.distinct, 9);
+        // A fresh generation starts clean.
+        let s2 = scan(&[1.0, 1.0, 2.0], 8, Some(&mut tracker));
+        assert_eq!(s2.distinct, 2);
+    }
+
+    #[test]
+    fn negative_zero_is_a_zero_but_a_distinct_dict_value() {
+        let blk = [0.0f32, -0.0, 1.0];
+        let mut tracker = DistinctTracker::new();
+        let s = scan(&blk, 256, Some(&mut tracker));
+        assert_eq!(s.nnz, 1);
+        assert_eq!(s.zrlc_tokens, 1);
+        // +0.0, -0.0 and 1.0 are three distinct bf16 patterns — exactly
+        // what Dictionary::build_dict sees.
+        assert_eq!(s.distinct, 3);
+    }
+}

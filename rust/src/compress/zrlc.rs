@@ -7,12 +7,15 @@
 //! 16-bit words.
 
 use super::bits::{words_for_bits, BitReader, BitWriter};
+use super::stats::BlockStats;
 use super::{CodecCost, CompressedBlock, Compressor, Scheme};
 use crate::tensor::dense::{bf16_bits, bf16_from_bits};
 
-const RUN_BITS: usize = 5;
-const MAX_RUN: u32 = (1 << RUN_BITS) - 1; // 31
-const TOKEN_BITS: usize = RUN_BITS + 16;
+/// Run-length field width (public: the fused stats pass reproduces the
+/// token structure, see [`super::stats`]).
+pub const RUN_BITS: usize = 5;
+pub const MAX_RUN: u32 = (1 << RUN_BITS) - 1; // 31
+pub const TOKEN_BITS: usize = RUN_BITS + 16;
 
 /// The ZRLC codec (stateless).
 #[derive(Debug, Clone, Copy, Default)]
@@ -35,16 +38,14 @@ impl Zrlc {
         }
         tokens
     }
-}
 
-impl Compressor for Zrlc {
-    fn scheme(&self) -> Scheme {
-        Scheme::Zrlc
-    }
-
-    fn compress(&self, block: &[f32]) -> CompressedBlock {
+    /// Encode `block`, returning the payload and the token count (the
+    /// single-pass substrate of both `compress` and
+    /// `compress_with_bits`).
+    fn encode(block: &[f32]) -> (Vec<u16>, usize) {
         let mut w = BitWriter::new();
         let mut run = 0u32;
+        let mut tokens = 0usize;
         for &v in block {
             if v == 0.0 {
                 // Buffer the run; fillers are only spent when a value
@@ -57,14 +58,27 @@ impl Compressor for Zrlc {
                     // (consumes MAX_RUN + 1 zeros total).
                     w.write(MAX_RUN, RUN_BITS);
                     w.write(0, 16);
+                    tokens += 1;
                     run -= MAX_RUN + 1;
                 }
                 w.write(run, RUN_BITS);
                 w.write(bf16_bits(v) as u32, 16);
+                tokens += 1;
                 run = 0;
             }
         }
-        CompressedBlock { n_elems: block.len(), words: w.finish() }
+        (w.finish(), tokens)
+    }
+}
+
+impl Compressor for Zrlc {
+    fn scheme(&self) -> Scheme {
+        Scheme::Zrlc
+    }
+
+    fn compress(&self, block: &[f32]) -> CompressedBlock {
+        let (words, _) = Self::encode(block);
+        CompressedBlock { n_elems: block.len(), words }
     }
 
     fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
@@ -94,6 +108,21 @@ impl Compressor for Zrlc {
 
     fn compressed_bits(&self, block: &[f32]) -> usize {
         Self::token_count(block) * TOKEN_BITS
+    }
+
+    fn compressed_sizes(&self, block: &[f32]) -> (usize, usize) {
+        let bits = Self::token_count(block) * TOKEN_BITS;
+        (words_for_bits(bits), bits)
+    }
+
+    fn compress_with_bits(&self, block: &[f32]) -> (CompressedBlock, usize) {
+        let (words, tokens) = Self::encode(block);
+        (CompressedBlock { n_elems: block.len(), words }, tokens * TOKEN_BITS)
+    }
+
+    fn sizes_from_stats(&self, s: &BlockStats) -> Option<(usize, usize)> {
+        let bits = s.zrlc_tokens * TOKEN_BITS;
+        Some((words_for_bits(bits), bits))
     }
 
     fn cost(&self) -> CodecCost {

@@ -28,8 +28,15 @@ use crate::store::{StoreWriter, TensorStore};
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, DivisionMode};
 use crate::util::error::{Context, Result};
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{channel, sync_channel};
 use std::time::{Duration, Instant};
+
+/// Decoded-sub-tensor LRU capacity for the prefetch lane's fetcher:
+/// big enough for the halo sub-tensors two adjacent tile windows share,
+/// small enough to stay within an on-chip-buffer-ish footprint. Purely
+/// a software-speed knob — traffic accounting is cache-invariant
+/// (property-tested in `layout::fetcher`).
+const DECODE_CACHE_SUBTENSORS: usize = 32;
 
 /// Pipeline configuration.
 #[derive(Debug, Clone, Copy)]
@@ -83,16 +90,23 @@ impl LayerRunner {
 
         let depth = self.cfg.prefetch_depth.max(1);
         let (tx, rx) = sync_channel::<DenseWindow>(depth);
+        // Return lane: spent window buffers flow back to the fetcher's
+        // pool, so the steady-state pipeline allocates nothing per tile.
+        let (back_tx, back_rx) = channel::<DenseWindow>();
 
         let (fetch_busy, fetch_dram) = std::thread::scope(
             |scope| -> Result<(Duration, Dram)> {
                 // ---- prefetch lane ----
                 let walker_f = walker.clone();
                 let fetch_handle = scope.spawn(move || {
-                    let mut fetcher = Fetcher::new(packed);
+                    let mut fetcher =
+                        Fetcher::new(packed).with_cache(DECODE_CACHE_SUBTENSORS);
                     let mut dram = Dram::default();
                     let mut busy = Duration::ZERO;
                     for w in walker_f.iter() {
+                        while let Ok(spent) = back_rx.try_recv() {
+                            fetcher.recycle(spent);
+                        }
                         let t0 = Instant::now();
                         let win = fetcher.fetch_window(
                             &mut dram, w.y0, w.y1, w.x0, w.x1, w.c0, w.c1,
@@ -122,6 +136,7 @@ impl LayerRunner {
                             let t0 = Instant::now();
                             accumulate_tile(layer, weights, &win, &mut acc, oy0, oy1, ox0, ox1);
                             metrics.compute_busy += t0.elapsed();
+                            let _ = back_tx.send(win); // best-effort recycle
                         }
                         // ReLU + writeback.
                         let t0 = Instant::now();
@@ -216,6 +231,7 @@ impl LayerRunner {
 
         let depth = self.cfg.prefetch_depth.max(1);
         let (tx, rx) = sync_channel::<DenseWindow>(depth);
+        let (back_tx, back_rx) = channel::<DenseWindow>();
 
         let (fetch_busy, fetch_dram) = std::thread::scope(
             |scope| -> Result<(Duration, Dram)> {
@@ -223,11 +239,14 @@ impl LayerRunner {
                 let walker_f = walker.clone();
                 let fetch_handle = scope.spawn(move || {
                     let packed = snap_packed;
-                    let mut fetcher =
-                        Fetcher::with_source(&packed, Box::new(snap_payload));
+                    let mut fetcher = Fetcher::with_source(&packed, Box::new(snap_payload))
+                        .with_cache(DECODE_CACHE_SUBTENSORS);
                     let mut dram = Dram::default().with_trace();
                     let mut busy = Duration::ZERO;
                     for w in walker_f.iter() {
+                        while let Ok(spent) = back_rx.try_recv() {
+                            fetcher.recycle(spent);
+                        }
                         let t0 = Instant::now();
                         let win = fetcher.fetch_window(
                             &mut dram, w.y0, w.y1, w.x0, w.x1, w.c0, w.c1,
@@ -255,6 +274,7 @@ impl LayerRunner {
                             let t0 = Instant::now();
                             accumulate_tile(layer, weights, &win, &mut acc, oy0, oy1, ox0, ox1);
                             metrics.compute_busy += t0.elapsed();
+                            let _ = back_tx.send(win); // best-effort recycle
                         }
                         let t0 = Instant::now();
                         for v in &mut acc {

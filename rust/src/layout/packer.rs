@@ -7,13 +7,41 @@
 //! II footnote a). Blocks are laid out in raster order — (block_y,
 //! block_x, channel-group) — with the block pointer addressing the first
 //! sub-tensor, exactly the two-step access structure of Fig. 7b.
+//!
+//! ## The plan/execute engine (§Perf, DESIGN.md §Packing engine)
+//!
+//! [`Packer::pack`] is a two-phase engine:
+//!
+//! * **Plan** — one fused stats pass per sub-tensor (streamed straight
+//!   off the feature map, no block gather) feeds every codec's exact
+//!   closed-form size ([`Compressor::sizes_from_stats`]); a serial
+//!   O(sub-tensors) prefix walk then assigns every final address and
+//!   emits the Fig. 7 records. No compression has happened yet, and no
+//!   block has been scanned more than once.
+//! * **Execute** (`with_payload` only) — the payload buffer is
+//!   preallocated at its exact final size and split into disjoint
+//!   per-block slices; sub-tensors compress **in parallel**
+//!   ([`crate::util::parallel::par_for_each_init`]) directly into their
+//!   planned slices. Output is bit-identical for every worker count,
+//!   and identical to the seed packer.
+//!
+//! [`Packer::pack_reference`] keeps the seed's serial
+//! gather → size → compress → cursor walk as the property-tested oracle
+//! (`tests/property.rs::prop_engine_matches_seed_packer`,
+//! `benches/perf_pack.rs` asserts both bit-exactness and the speedup).
 
 use super::metadata::{BlockRecord, MetadataTable};
-use crate::compress::Scheme;
+use crate::compress::{Compressor, DistinctTracker, Scheme, StatsAcc};
 use crate::config::hardware::Hardware;
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, SubTensorRef};
+use crate::util::parallel::{par_for_each_init, par_map_init};
 use crate::util::round_up;
+
+/// Below this many feature-map elements the engine stays on one thread:
+/// the map packs in well under a millisecond and worker spawn would
+/// dominate (suite sweeps also already parallelise across layers).
+const PAR_MIN_ELEMS: usize = 1 << 16;
 
 /// A fully packed feature map: per-sub-tensor compressed sizes and
 /// addresses, block metadata, and (optionally) the compressed payload.
@@ -100,6 +128,59 @@ impl PackedFeatureMap {
     }
 }
 
+/// Sub-tensor geometry by linear index: `(y seg, x seg, c0, depth)`.
+#[inline]
+fn geom(
+    division: &Division,
+    li: usize,
+) -> (crate::tiling::division::Seg, crate::tiling::division::Seg, usize, usize) {
+    let r = division.subtensor_coords(li);
+    (
+        division.ys[r.iy],
+        division.xs[r.ix],
+        r.icg * division.cd,
+        division.cg_depth(r.icg),
+    )
+}
+
+/// Per-worker scratch for the plan phase: the distinct-value tracker
+/// (dictionary codec only) and a gather buffer for the stats-less
+/// fallback.
+struct PlanScratch {
+    tracker: Option<DistinctTracker>,
+    block: Vec<f32>,
+}
+
+/// Plan-phase output: exact per-sub-tensor sizes.
+struct SizePlan {
+    words: Vec<u32>,
+    bits: Vec<u32>,
+}
+
+/// One metadata block's payload extent and its sub-tensors
+/// `(linear index, absolute word address)` in raster order — the unit
+/// of the parallel execute phase.
+struct BlockSpan {
+    start: u64,
+    end: u64,
+    subs: Vec<(usize, u64)>,
+}
+
+/// Address-assignment output: the full layout, ready for execution.
+struct AddressPlan {
+    addr_words: Vec<u64>,
+    records: Vec<BlockRecord>,
+    spans: Vec<BlockSpan>,
+    /// Line-rounded storage footprint (aligned modes).
+    total_words: u64,
+    /// End of the last written word — the *unpadded* cursor. The seed
+    /// packer's payload vec ends exactly here (its `resize` only ever
+    /// reaches the last write), so the engine's payload must too for
+    /// byte-equality; `total_words` only rounds the *accounted*
+    /// footprint up to a whole line.
+    payload_words: u64,
+}
+
 /// Packs feature maps under a division + compression scheme.
 pub struct Packer {
     pub hw: Hardware,
@@ -111,9 +192,11 @@ impl Packer {
         Self { hw, scheme }
     }
 
-    /// Pack `fm` under `division`. `with_payload` materialises the
-    /// compressed byte stream (needed by the fetch/decompress path; the
-    /// bandwidth simulator only needs sizes).
+    /// Pack `fm` under `division` with the plan/execute engine.
+    /// `with_payload` materialises the compressed byte stream (needed by
+    /// the fetch/decompress path; the bandwidth simulator only needs
+    /// sizes). Bit-exact with [`Packer::pack_reference`] and
+    /// deterministic for every worker count.
     pub fn pack(
         &self,
         fm: &FeatureMap,
@@ -125,12 +208,44 @@ impl Packer {
             (division.fm_h, division.fm_w, division.fm_c),
             "division was built for a different map shape"
         );
-        // Perf fast path (§Perf, EXPERIMENTS.md): bitmask sizes depend
-        // only on per-sub-tensor nonzero counts, which one linear pass
-        // over the map computes without any block extraction.
-        if self.scheme == Scheme::Bitmask && !with_payload {
-            return self.pack_bitmask_sizes(fm, division);
+        let codec = self.scheme.build();
+        let parallel = fm.words() >= PAR_MIN_ELEMS;
+        let plan = plan_sizes(fm, division, &*codec, parallel);
+        let wpl = self.hw.words_per_line;
+        let layout = assign_addresses(division, &plan.words, wpl, with_payload);
+        let payload = with_payload
+            .then(|| execute_payload(fm, division, &*codec, &plan.words, &layout, parallel));
+        PackedFeatureMap {
+            division: division.clone(),
+            scheme: self.scheme,
+            sizes_words: plan.words,
+            sizes_bits: plan.bits,
+            addr_words: layout.addr_words,
+            metadata: MetadataTable {
+                records: layout.records,
+                bits_per_record: division.meta_bits_per_block,
+            },
+            payload,
+            total_words: layout.total_words,
+            words_per_line: wpl,
         }
+    }
+
+    /// The seed packer, kept verbatim as the engine's oracle: serial
+    /// raster walk, per-block gather, per-codec sizing scans, growing
+    /// cursor. Property tests and `benches/perf_pack.rs` hold
+    /// [`Packer::pack`] bit-exact to (and faster than) this.
+    pub fn pack_reference(
+        &self,
+        fm: &FeatureMap,
+        division: &Division,
+        with_payload: bool,
+    ) -> PackedFeatureMap {
+        assert_eq!(
+            (fm.h, fm.w, fm.c),
+            (division.fm_h, division.fm_w, division.fm_c),
+            "division was built for a different map shape"
+        );
         let codec = self.scheme.build();
         let n = division.n_subtensors();
         let mut sizes_words = vec![0u32; n];
@@ -145,16 +260,10 @@ impl Packer {
 
         // Raster order over metadata blocks; sub-tensors inside a block
         // in (y, x) raster order — the Fig. 7b layout.
-        let seg_range = |block_of: &[usize], bid: usize| -> std::ops::Range<usize> {
-            let first = block_of.partition_point(|&b| b < bid);
-            let last = block_of.partition_point(|&b| b <= bid);
-            first..last
-        };
-
         for by in 0..division.n_blocks_y {
-            let yr = seg_range(&division.block_of_y, by);
+            let yr = division.y_segs_of_block(by);
             for bx in 0..division.n_blocks_x {
-                let xr = seg_range(&division.block_of_x, bx);
+                let xr = division.x_segs_of_block(bx);
                 for icg in 0..division.n_cgroups {
                     // Block start: line-aligned pointer (Fig. 7).
                     if !division.compact {
@@ -228,112 +337,175 @@ impl Packer {
     }
 }
 
-impl Packer {
-    /// Sizes-only bitmask packing in two allocation-light passes:
-    /// (1) one sweep over the map accumulating nonzeros per sub-tensor
-    /// via per-coordinate segment lookup tables, (2) the usual
-    /// block-raster address assignment reading those counts.
-    fn pack_bitmask_sizes(&self, fm: &FeatureMap, division: &Division) -> PackedFeatureMap {
-        let n = division.n_subtensors();
-        let mut nnz = vec![0u32; n];
+/// Plan phase: exact `(words, bits)` for every sub-tensor from one fused
+/// stats pass each, streamed row-by-row straight off the feature map —
+/// no gather, no per-codec re-scan.
+fn plan_sizes(
+    fm: &FeatureMap,
+    division: &Division,
+    codec: &dyn Compressor,
+    parallel: bool,
+) -> SizePlan {
+    let n = division.n_subtensors();
+    let dict_cap = codec.stats_dict_cap();
+    let data = fm.as_slice();
 
-        // Coordinate -> segment index lookups.
-        let mut seg_of_y = vec![0u32; fm.h];
-        for (iy, s) in division.ys.iter().enumerate() {
-            for y in s.start..s.end() {
-                seg_of_y[y] = iy as u32;
+    let size_one = |st: &mut PlanScratch, li: usize| -> (u32, u32) {
+        let (sy, sx, c0, cdep) = geom(division, li);
+        let mut acc = StatsAcc::new(dict_cap, st.tracker.as_mut());
+        for y in sy.start..sy.end() {
+            let row = y * fm.w;
+            for x in sx.start..sx.end() {
+                let px = (row + x) * fm.c + c0;
+                acc.feed(&data[px..px + cdep]);
             }
         }
-        let mut seg_of_x = vec![0u32; fm.w];
-        for (ix, s) in division.xs.iter().enumerate() {
-            for x in s.start..s.end() {
-                seg_of_x[x] = ix as u32;
+        match codec.sizes_from_stats(&acc.finish()) {
+            Some((w, b)) => (w as u32, b as u32),
+            None => {
+                // Stats-blind codec: gather once, size both in one scan.
+                fm.extract_block_into(sy.start, sx.start, c0, sy.len, sx.len, cdep, &mut st.block);
+                let (w, b) = codec.compressed_sizes(&st.block);
+                (w as u32, b as u32)
             }
         }
+    };
+    let init = || PlanScratch {
+        tracker: (dict_cap > 0).then(DistinctTracker::new),
+        block: Vec::new(),
+    };
 
-        // Pass 1: count nonzeros per (iy, ix, icg).
-        let data = fm.as_slice();
-        let nxs = division.xs.len();
-        let ncg = division.n_cgroups;
-        let cd = division.cd;
-        for y in 0..fm.h {
-            let iy = seg_of_y[y] as usize;
-            let row_base = y * fm.w;
-            for x in 0..fm.w {
-                let ix = seg_of_x[x] as usize;
-                let px = (row_base + x) * fm.c;
-                let sub_base = (iy * nxs + ix) * ncg;
-                for icg in 0..ncg {
-                    let c0 = icg * cd;
-                    let c1 = (c0 + cd).min(fm.c);
-                    let mut cnt = 0u32;
-                    for &v in &data[px + c0..px + c1] {
-                        cnt += (v != 0.0) as u32;
-                    }
-                    nnz[sub_base + icg] += cnt;
+    let sizes: Vec<(u32, u32)> = if parallel && n > 1 {
+        let idxs: Vec<usize> = (0..n).collect();
+        par_map_init(&idxs, init, |st, _, &li| size_one(st, li))
+    } else {
+        let mut st = init();
+        (0..n).map(|li| size_one(&mut st, li)).collect()
+    };
+    SizePlan {
+        words: sizes.iter().map(|s| s.0).collect(),
+        bits: sizes.iter().map(|s| s.1).collect(),
+    }
+}
+
+/// Serial prefix walk over the block raster: with every size known, all
+/// final addresses, records and the total footprint follow in O(n)
+/// arithmetic — the seed's cursor discipline without any compression or
+/// `resize` churn on the walk.
+fn assign_addresses(
+    division: &Division,
+    sizes_words: &[u32],
+    wpl: usize,
+    want_spans: bool,
+) -> AddressPlan {
+    let n = division.n_subtensors();
+    let mut addr_words = vec![0u64; n];
+    let mut records: Vec<BlockRecord> = Vec::with_capacity(division.n_blocks());
+    let mut spans: Vec<BlockSpan> =
+        Vec::with_capacity(if want_spans { division.n_blocks() } else { 0 });
+    let mut cursor: u64 = 0;
+
+    for by in 0..division.n_blocks_y {
+        let yr = division.y_segs_of_block(by);
+        for bx in 0..division.n_blocks_x {
+            let xr = division.x_segs_of_block(bx);
+            for icg in 0..division.n_cgroups {
+                if !division.compact {
+                    cursor = round_up(cursor as usize, wpl) as u64;
                 }
-            }
-        }
-
-        // Pass 2: sizes + block-raster addresses + records.
-        let mut sizes_words = vec![0u32; n];
-        let mut sizes_bits = vec![0u32; n];
-        let mut addr_words = vec![0u64; n];
-        let mut records: Vec<BlockRecord> = Vec::with_capacity(division.n_blocks());
-        let wpl = self.hw.words_per_line;
-        let mut cursor: u64 = 0;
-        let seg_range = |block_of: &[usize], bid: usize| -> std::ops::Range<usize> {
-            let first = block_of.partition_point(|&b| b < bid);
-            let last = block_of.partition_point(|&b| b <= bid);
-            first..last
-        };
-        for by in 0..division.n_blocks_y {
-            let yr = seg_range(&division.block_of_y, by);
-            for bx in 0..division.n_blocks_x {
-                let xr = seg_range(&division.block_of_x, bx);
-                for icg in 0..ncg {
-                    if !division.compact {
-                        cursor = crate::util::round_up(cursor as usize, wpl) as u64;
-                    }
-                    let pointer_words = cursor;
-                    let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
-                    for iy in yr.clone() {
-                        for ix in xr.clone() {
-                            let r = SubTensorRef { iy, ix, icg };
-                            let li = division.linear(r);
-                            let elems = division.subtensor_words(r);
-                            let z = nnz[li];
-                            sizes_words[li] = elems.div_ceil(16) as u32 + z;
-                            sizes_bits[li] = elems as u32 + z * 16;
-                            if !division.compact {
-                                cursor = crate::util::round_up(cursor as usize, wpl) as u64;
-                            }
-                            addr_words[li] = cursor;
-                            cursor += sizes_words[li] as u64;
-                            rec_sizes.push(sizes_words[li]);
+                let pointer_words = cursor;
+                let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                let mut subs = Vec::with_capacity(if want_spans { yr.len() * xr.len() } else { 0 });
+                for iy in yr.clone() {
+                    for ix in xr.clone() {
+                        let li = division.linear(SubTensorRef { iy, ix, icg });
+                        if !division.compact {
+                            cursor = round_up(cursor as usize, wpl) as u64;
                         }
+                        addr_words[li] = cursor;
+                        if want_spans {
+                            subs.push((li, cursor));
+                        }
+                        cursor += sizes_words[li] as u64;
+                        rec_sizes.push(sizes_words[li]);
                     }
-                    records.push(BlockRecord { pointer_words, sizes_words: rec_sizes });
+                }
+                records.push(BlockRecord { pointer_words, sizes_words: rec_sizes });
+                if want_spans {
+                    spans.push(BlockSpan { start: pointer_words, end: cursor, subs });
                 }
             }
-        }
-        let total_words = if division.compact {
-            cursor
-        } else {
-            crate::util::round_up(cursor as usize, wpl) as u64
-        };
-        PackedFeatureMap {
-            division: division.clone(),
-            scheme: self.scheme,
-            sizes_words,
-            sizes_bits,
-            addr_words,
-            metadata: MetadataTable { records, bits_per_record: division.meta_bits_per_block },
-            payload: None,
-            total_words,
-            words_per_line: wpl,
         }
     }
+
+    let total_words =
+        if division.compact { cursor } else { round_up(cursor as usize, wpl) as u64 };
+    AddressPlan { addr_words, records, spans, total_words, payload_words: cursor }
+}
+
+/// Execute phase: compress every sub-tensor into its planned slice. The
+/// payload is preallocated at its exact final size and split into
+/// disjoint per-block `&mut` chunks, so blocks materialise in parallel
+/// with no synchronisation and bit-identical output for any worker
+/// count. Alignment gaps stay zero, exactly like the reference packer's
+/// `resize` fill.
+fn execute_payload(
+    fm: &FeatureMap,
+    division: &Division,
+    codec: &dyn Compressor,
+    sizes_words: &[u32],
+    layout: &AddressPlan,
+    parallel: bool,
+) -> Vec<u16> {
+    struct BlockTask<'p, 's> {
+        base: u64,
+        out: &'p mut [u16],
+        subs: &'s [(usize, u64)],
+    }
+
+    // Sized to the last written word (NOT the line-rounded total): the
+    // reference packer's payload ends exactly at its final write, and
+    // byte-equality with it is asserted.
+    let mut payload = vec![0u16; layout.payload_words as usize];
+    let mut tasks: Vec<BlockTask> = Vec::with_capacity(layout.spans.len());
+    let mut rest = payload.as_mut_slice();
+    let mut consumed = 0u64;
+    for span in &layout.spans {
+        let tail = std::mem::take(&mut rest);
+        // Alignment gap between blocks stays zeroed.
+        let (_gap, tail) = tail.split_at_mut((span.start - consumed) as usize);
+        let (chunk, tail) = tail.split_at_mut((span.end - span.start) as usize);
+        tasks.push(BlockTask { base: span.start, out: chunk, subs: &span.subs });
+        rest = tail;
+        consumed = span.end;
+    }
+
+    let work = |scratch: &mut Vec<f32>, task: &mut BlockTask| {
+        for &(li, addr) in task.subs {
+            let (sy, sx, c0, cdep) = geom(division, li);
+            fm.extract_block_into(sy.start, sx.start, c0, sy.len, sx.len, cdep, scratch);
+            let comp = codec.compress(scratch);
+            assert_eq!(
+                comp.words.len() as u32,
+                sizes_words[li],
+                "planner sized sub-tensor {li} wrong (scheme {:?})",
+                codec.scheme()
+            );
+            let off = (addr - task.base) as usize;
+            task.out[off..off + comp.words.len()].copy_from_slice(&comp.words);
+        }
+    };
+
+    if parallel && tasks.len() > 1 {
+        par_for_each_init(&mut tasks, Vec::<f32>::new, |scratch, _, t| work(scratch, t));
+    } else {
+        let mut scratch = Vec::new();
+        for t in &mut tasks {
+            work(&mut scratch, t);
+        }
+    }
+    drop(tasks);
+    payload
 }
 
 #[cfg(test)]
@@ -399,6 +571,43 @@ mod tests {
         assert_eq!(a.addr_words, b.addr_words);
         assert_eq!(a.total_words, b.total_words);
         assert!(b.payload.is_some());
+    }
+
+    /// The engine's defining invariant at unit scale: identical output
+    /// to the seed oracle for every mode × scheme, payload included.
+    #[test]
+    fn engine_matches_reference_packer() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        for mode in [
+            DivisionMode::GrateTile { n: 8 },
+            DivisionMode::Uniform { edge: 4 },
+            DivisionMode::Uniform { edge: 1 },
+            DivisionMode::WholeMap,
+        ] {
+            for scheme in
+                [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw]
+            {
+                let (fm, div, _) = setup(mode, 0.4);
+                let packer = Packer::new(hw, scheme);
+                let a = packer.pack_reference(&fm, &div, true);
+                let b = packer.pack(&fm, &div, true);
+                let tag = format!("{mode:?} {scheme:?}");
+                assert_eq!(a.sizes_words, b.sizes_words, "{tag} sizes_words");
+                assert_eq!(a.sizes_bits, b.sizes_bits, "{tag} sizes_bits");
+                assert_eq!(a.addr_words, b.addr_words, "{tag} addr_words");
+                assert_eq!(a.total_words, b.total_words, "{tag} total_words");
+                assert_eq!(a.payload, b.payload, "{tag} payload");
+                assert_eq!(
+                    a.metadata.records.len(),
+                    b.metadata.records.len(),
+                    "{tag} record count"
+                );
+                for (ra, rb) in a.metadata.records.iter().zip(&b.metadata.records) {
+                    assert_eq!(ra.pointer_words, rb.pointer_words, "{tag} pointer");
+                    assert_eq!(ra.sizes_words, rb.sizes_words, "{tag} record sizes");
+                }
+            }
+        }
     }
 
     #[test]

@@ -44,6 +44,14 @@ fn bandwidth_report(
 /// touched block per tile). Evaluated by the prefix-sum
 /// [`LayerPricer`] — O(tiles) after packing — and bit-exact with the
 /// naive reference walk ([`run_layer_naive`], property-tested).
+///
+/// Packing goes through the plan/execute engine (`layout::packer`,
+/// DESIGN.md §Packing engine): sizes-only packs are one fused stats
+/// pass per sub-tensor, parallelised for large maps. Inside a suite
+/// sweep the units are already fanned across workers, and the pool
+/// marks its worker threads so any nested engine fan-out runs inline
+/// (`util::parallel`, no workers² oversubscription); either way
+/// results are worker-count invariant.
 pub fn run_layer(
     hw: &Hardware,
     layer: &ConvLayer,

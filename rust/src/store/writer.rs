@@ -186,9 +186,12 @@ impl<'s> StoreWriter<'s> {
     fn complete_subtensor(&mut self, li: usize, r: SubTensorRef) {
         let buf = self.staging[li].take().expect("sub-tensor completed twice");
         self.staged_words -= buf.len();
-        let comp = self.codec.compress(&buf);
+        // Single pass: the codec reports the idealised bit size of the
+        // same encode (the old compress + compressed_bits re-scanned
+        // every block).
+        let (comp, bits) = self.codec.compress_with_bits(&buf);
         self.sizes_words[li] = comp.words.len() as u32;
-        self.sizes_bits[li] = self.codec.compressed_bits(&buf) as u32;
+        self.sizes_bits[li] = bits as u32;
         self.pending[li] = Some(comp.words);
         self.completed_subs += 1;
         let b = self.division.block_linear(r);

@@ -322,6 +322,16 @@ impl Division {
         (r.iy * self.xs.len() + r.ix) * self.n_cgroups + r.icg
     }
 
+    /// Inverse of [`Division::linear`] (the packing engine iterates
+    /// sub-tensors by linear index).
+    pub fn subtensor_coords(&self, li: usize) -> SubTensorRef {
+        debug_assert!(li < self.n_subtensors());
+        let icg = li % self.n_cgroups;
+        let ix = (li / self.n_cgroups) % self.xs.len();
+        let iy = li / (self.n_cgroups * self.xs.len());
+        SubTensorRef { iy, ix, icg }
+    }
+
     /// Linear index of the metadata block owning sub-tensor `r`.
     pub fn block_linear(&self, r: SubTensorRef) -> usize {
         (self.block_of_y[r.iy] * self.n_blocks_x + self.block_of_x[r.ix]) * self.n_cgroups
@@ -537,6 +547,19 @@ mod tests {
                     let b = d.block_linear(r);
                     let (by, bx, cg) = d.block_coords(b);
                     assert_eq!((by, bx, cg), (d.block_of_y[iy], d.block_of_x[ix], icg));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subtensor_coords_inverts_linear() {
+        let d = build(DivisionMode::GrateTile { n: 8 });
+        for iy in 0..d.ys.len() {
+            for ix in 0..d.xs.len() {
+                for icg in 0..d.n_cgroups {
+                    let r = SubTensorRef { iy, ix, icg };
+                    assert_eq!(d.subtensor_coords(d.linear(r)), r);
                 }
             }
         }

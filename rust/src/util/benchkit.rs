@@ -188,6 +188,44 @@ impl Bencher {
         Some(s)
     }
 
+    /// Write collected samples as a machine-readable JSON array
+    /// (best-effort, overwrites): one object per sample with name,
+    /// median/mean/σ, throughput annotations and the git revision —
+    /// the `BENCH_PACK.json` / `BENCH_WALK.json` perf-trajectory
+    /// artifacts CI uploads per commit. Hand-rolled JSON: the crate is
+    /// dependency-free.
+    pub fn write_json(&self, bench_name: &str, path: &str) {
+        let rev = git_rev();
+        let mut s = String::from("[\n");
+        for (i, smp) in self.samples.iter().enumerate() {
+            let gbs = smp
+                .throughput_gbs()
+                .map(|g| format!("{g:.4}"))
+                .unwrap_or_else(|| "null".into());
+            let items = smp
+                .items_per_iter
+                .map(|n| (n as f64 / (smp.median_ns * 1e-9)).round().to_string())
+                .unwrap_or_else(|| "null".into());
+            s.push_str(&format!(
+                "  {{\"bench\": \"{}\", \"name\": \"{}\", \"iters\": {}, \
+                 \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"stddev_ns\": {:.1}, \
+                 \"throughput_gbs\": {}, \"items_per_s\": {}, \"git_rev\": \"{}\"}}{}\n",
+                json_escape(bench_name),
+                json_escape(&smp.name),
+                smp.iters,
+                smp.median_ns,
+                smp.mean_ns,
+                smp.stddev_ns,
+                gbs,
+                items,
+                json_escape(&rev),
+                if i + 1 < self.samples.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("]\n");
+        let _ = std::fs::write(path, s);
+    }
+
     /// Append collected samples to `results/bench.csv` (best-effort).
     pub fn write_csv(&self, bench_name: &str) {
         let _ = std::fs::create_dir_all("results");
@@ -201,6 +239,33 @@ impl Bencher {
             let _ = f.write_all(body.as_bytes());
         }
     }
+}
+
+/// Current short git revision (best-effort; "unknown" off-repo).
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -241,6 +306,34 @@ mod tests {
         assert!((b.speedup("slow", "fast").unwrap() - 1.0 / 7.0).abs() < 1e-12);
         assert!(b.speedup("fast", "missing").is_none());
         assert_eq!(b.report_speedup("fast", "slow"), b.speedup("fast", "slow"));
+    }
+
+    #[test]
+    fn json_emission_is_parseable_shape() {
+        std::env::set_var("BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.bench_bytes("json \"quoted\"/case", 1024, || 1 + 1);
+        b.bench("plain", || 2 + 2);
+        let mut path = std::env::temp_dir();
+        path.push(format!("gratetile-benchkit-{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        b.write_json("unit", &path);
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(body.starts_with("[\n"));
+        assert!(body.trim_end().ends_with(']'));
+        assert_eq!(body.matches("\"git_rev\"").count(), 2);
+        assert!(body.contains("json \\\"quoted\\\"/case"));
+        assert!(body.contains("\"items_per_s\": null"));
+        // Exactly one comma-separated boundary between the two objects.
+        assert_eq!(body.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("tab\tend"), "tab\\u0009end");
+        assert_eq!(json_escape("plain"), "plain");
     }
 
     #[test]

@@ -11,6 +11,14 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// CLI; the `GRATETILE_THREADS` env var is consulted when unset.
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
+std::thread_local! {
+    /// True on threads spawned by this module's pools. Nested sweeps
+    /// (a suite unit's pack calling back into `par_map_init`) then run
+    /// inline instead of oversubscribing the machine with workers² —
+    /// results are identical either way, only scheduling changes.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
 /// Set the worker-thread count for all subsequent parallel sweeps
 /// (0 restores auto detection).
 pub fn set_threads(n: usize) {
@@ -21,7 +29,7 @@ pub fn set_threads(n: usize) {
 /// else `GRATETILE_THREADS`, else the machine's available parallelism —
 /// never more workers than items.
 pub fn threads_for(n_items: usize) -> usize {
-    if n_items <= 1 {
+    if n_items <= 1 || IN_POOL_WORKER.with(|c| c.get()) {
         return 1;
     }
     let configured = match THREAD_OVERRIDE.load(Ordering::Relaxed) {
@@ -45,10 +53,25 @@ pub fn par_map<T: Sync, R: Send>(
     items: &[T],
     f: impl Fn(usize, &T) -> R + Sync,
 ) -> Vec<R> {
+    par_map_init(items, || (), |_, i, t| f(i, t))
+}
+
+/// [`par_map`] with per-worker scratch state: `init` runs once per
+/// worker thread and the resulting state is threaded through every unit
+/// that worker pulls. The packing engine uses this for its per-thread
+/// [`crate::compress::DistinctTracker`] and gather buffers — reusable
+/// scratch that must not be shared across workers and is too expensive
+/// to build per item.
+pub fn par_map_init<T: Sync, R: Send, S>(
+    items: &[T],
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, usize, &T) -> R + Sync,
+) -> Vec<R> {
     let n = items.len();
     let workers = threads_for(n);
     if workers == 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        let mut state = init();
+        return items.iter().enumerate().map(|(i, t)| f(&mut state, i, t)).collect();
     }
 
     let cursor = AtomicUsize::new(0);
@@ -57,13 +80,15 @@ pub fn par_map<T: Sync, R: Send>(
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    let mut state = init();
                     let mut out = Vec::new();
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        out.push((i, f(i, &items[i])));
+                        out.push((i, f(&mut state, i, &items[i])));
                     }
                     out
                 })
@@ -83,6 +108,43 @@ pub fn par_map<T: Sync, R: Send>(
         .into_iter()
         .map(|s| s.expect("par_map produced no result for an index"))
         .collect()
+}
+
+/// Mutate every item of `items` in place on a scoped worker pool, with
+/// per-worker scratch state. Items are statically partitioned into one
+/// contiguous chunk per worker (the packing engine's execute phase hands
+/// each worker disjoint preallocated payload slices of near-equal
+/// size, so work-stealing buys nothing there). Results are written only
+/// through each item's own `&mut`, so the outcome is identical for
+/// every worker count.
+pub fn par_for_each_init<T: Send, S>(
+    items: &mut [T],
+    init: impl Fn() -> S + Sync,
+    f: impl Fn(&mut S, usize, &mut T) + Sync,
+) {
+    let n = items.len();
+    let workers = threads_for(n);
+    if workers == 1 {
+        let mut state = init();
+        for (i, t) in items.iter_mut().enumerate() {
+            f(&mut state, i, t);
+        }
+        return;
+    }
+
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, part) in items.chunks_mut(chunk).enumerate() {
+            let (init, f) = (&init, &f);
+            s.spawn(move || {
+                IN_POOL_WORKER.with(|c| c.set(true));
+                let mut state = init();
+                for (j, t) in part.iter_mut().enumerate() {
+                    f(&mut state, ci * chunk + j, t);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -118,6 +180,58 @@ mod tests {
         assert!(threads_for(100) >= 1);
         assert_eq!(threads_for(1), 1);
         assert_eq!(threads_for(0), 1);
+    }
+
+    #[test]
+    fn nested_pools_run_inline() {
+        let items: Vec<usize> = (0..16).collect();
+        let out = par_map(&items, |_, &x| {
+            // On a pool worker, a nested sweep must not fan out again.
+            if IN_POOL_WORKER.with(|c| c.get()) {
+                assert_eq!(threads_for(1000), 1);
+            }
+            let inner: Vec<usize> = (0..50).collect();
+            par_map(&inner, |_, &y| y).iter().sum::<usize>() + x
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 1225 + i);
+        }
+    }
+
+    #[test]
+    fn par_map_init_state_is_per_worker() {
+        // Each worker's counter counts only its own units; the grand
+        // total across results equals n regardless of distribution.
+        let items: Vec<u32> = (0..97).collect();
+        let out = par_map_init(
+            &items,
+            || 0usize,
+            |seen, i, &x| {
+                *seen += 1;
+                assert_eq!(i as u32, x);
+                (*seen, x)
+            },
+        );
+        assert_eq!(out.len(), 97);
+        for (i, (seen, x)) in out.iter().enumerate() {
+            assert!(*seen >= 1);
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    // NOTE: worker-count determinism is asserted by the integration
+    // property tests (tests/property.rs) in their own process — unit
+    // tests here must not toggle the global override concurrently with
+    // `threads_for_respects_override`.
+    #[test]
+    fn par_for_each_init_mutates_every_item_once() {
+        let mut items: Vec<u64> = (0..233).collect();
+        par_for_each_init(&mut items, || 1u64, |one, i, t| {
+            *t = *t * 2 + *one + i as u64;
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, (i as u64) * 3 + 1);
+        }
     }
 
     #[test]

@@ -53,6 +53,153 @@ fn gen_scenario(r: &mut SplitMix64) -> Scenario {
     }
 }
 
+/// The plan/execute packing engine is bit-exact with the seed packer
+/// (kept as `pack_reference`) for every (geometry, mode, codec,
+/// density): sizes, idealised bits, addresses, metadata records, total
+/// footprint AND the payload bytes.
+#[test]
+fn prop_engine_matches_seed_packer() {
+    forall_res(0xEC0DE, 40, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        let packer = Packer::new(hw, sc.scheme);
+        let oracle = packer.pack_reference(&fm, &division, true);
+        let engine = packer.pack(&fm, &division, true);
+        let tag = format!("{} {}", sc.mode.name(), sc.scheme.name());
+        if oracle.sizes_words != engine.sizes_words {
+            return Err(format!("{tag}: sizes_words diverge"));
+        }
+        if oracle.sizes_bits != engine.sizes_bits {
+            return Err(format!("{tag}: sizes_bits diverge"));
+        }
+        if oracle.addr_words != engine.addr_words {
+            return Err(format!("{tag}: addr_words diverge"));
+        }
+        if oracle.total_words != engine.total_words {
+            return Err(format!("{tag}: total_words diverge"));
+        }
+        if oracle.payload != engine.payload {
+            return Err(format!("{tag}: payload bytes diverge"));
+        }
+        if oracle.metadata.records.len() != engine.metadata.records.len() {
+            return Err(format!("{tag}: record counts diverge"));
+        }
+        for (i, (a, b)) in
+            oracle.metadata.records.iter().zip(&engine.metadata.records).enumerate()
+        {
+            if a.pointer_words != b.pointer_words || a.sizes_words != b.sizes_words {
+                return Err(format!("{tag}: record {i} diverges"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Packing is deterministic in the worker count: `--jobs 1/2/8`
+/// produce byte-identical packs (the engine writes into planned
+/// disjoint slices, so scheduling cannot reorder anything). Uses a map
+/// large enough to actually engage the parallel path.
+#[test]
+fn prop_pack_deterministic_across_jobs() {
+    use gratetile::util::parallel::set_threads;
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let layer = ConvLayer::new(1, 1, 64, 64, 32, 32);
+    let tile = hw.tile_for_layer(&layer);
+    let fm = generate(64, 64, 32, SparsityParams::clustered(0.4, 77));
+    for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 1 }] {
+        let division = Division::build(mode, &layer, &tile, &hw, 64, 64, 32).unwrap();
+        for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary] {
+            let packer = Packer::new(hw, scheme);
+            set_threads(1);
+            let one = packer.pack(&fm, &division, true);
+            let mut packs = Vec::new();
+            for jobs in [2usize, 8] {
+                set_threads(jobs);
+                packs.push((jobs, packer.pack(&fm, &division, true)));
+            }
+            set_threads(0);
+            for (jobs, p) in &packs {
+                assert_eq!(p.sizes_words, one.sizes_words, "{mode:?} {scheme:?} jobs {jobs}");
+                assert_eq!(p.sizes_bits, one.sizes_bits, "{mode:?} {scheme:?} jobs {jobs}");
+                assert_eq!(p.addr_words, one.addr_words, "{mode:?} {scheme:?} jobs {jobs}");
+                assert_eq!(p.payload, one.payload, "{mode:?} {scheme:?} jobs {jobs}");
+                assert_eq!(p.total_words, one.total_words, "{mode:?} {scheme:?} jobs {jobs}");
+            }
+        }
+    }
+}
+
+/// The fetcher's software fast paths (decoded-sub-tensor LRU, popcount
+/// row-skipped partial decode) never change what a window contains or
+/// what traffic the simulator accounts: cache-on and cache-off reads
+/// are identical in data AND in DRAM words, for random windows over
+/// random scenarios.
+#[test]
+fn prop_fetch_lru_and_span_invariant() {
+    forall_res(0xCACE, 30, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        let packed = Packer::new(hw, sc.scheme).pack(&fm, &division, true);
+        let mut plain = Fetcher::new(&packed);
+        let mut cached = Fetcher::new(&packed).with_cache(8);
+        let mut d_plain = Dram::default();
+        let mut d_cached = Dram::default();
+        let mut rng = SplitMix64::new(sc.seed ^ 0xFA57);
+        for _ in 0..6 {
+            let y0 = rng.below(h);
+            let y1 = (y0 + 1 + rng.below(h - y0)).min(h);
+            let x0 = rng.below(w);
+            let x1 = (x0 + 1 + rng.below(w - x0)).min(w);
+            let a = plain.fetch_window(&mut d_plain, y0, y1, x0, x1, 0, c);
+            let b = cached.fetch_window(&mut d_cached, y0, y1, x0, x1, 0, c);
+            if a != b {
+                return Err(format!(
+                    "window ({y0},{y1})x({x0},{x1}) differs with LRU on ({} {})",
+                    sc.mode.name(),
+                    sc.scheme.name()
+                ));
+            }
+            // Ground truth: the dense map.
+            for y in y0..y1 {
+                for x in x0..x1 {
+                    for ch in 0..c {
+                        if a.get(y, x, ch) != fm.get(y, x, ch) {
+                            return Err(format!(
+                                "mismatch vs dense at ({y},{x},{ch}) ({} {})",
+                                sc.mode.name(),
+                                sc.scheme.name()
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        use gratetile::memsim::Stream;
+        for s in [Stream::FeatureRead, Stream::MetadataRead] {
+            if d_plain.words_of(s) != d_cached.words_of(s) {
+                return Err(format!(
+                    "{s:?} traffic diverges with LRU on: {} vs {}",
+                    d_plain.words_of(s),
+                    d_cached.words_of(s)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Lossless storage: packing then fetching the whole map returns the
 /// exact bf16 feature map, for every (geometry, mode, codec, density).
 #[test]
