@@ -1,0 +1,113 @@
+//! Perf bench: the discrete-event serving simulator.
+//!
+//! §Perf acceptance (EXPERIMENTS.md, asserted below):
+//!
+//! * determinism: the simulated `ServerReport` bytes are identical for
+//!   functional passes run with 1, 2 and 8 host workers — the report
+//!   depends on the seed, never on `--jobs` or host load;
+//! * worker scaling: simulated makespan strictly improves going from
+//!   1 to 2 simulated accelerator workers (> 1× simulated throughput);
+//! * bank-conflict sensitivity: on a DRAM-bound configuration, fewer
+//!   banks never simulate faster (1 bank ≥ 8 banks in cycles);
+//! * host speed: the timing pass (`simulate`) re-prices a request set
+//!   without re-running the functional pass, so config sweeps are cheap.
+//!
+//! Results append to `results/bench.csv` and land machine-readable in
+//! `BENCH_SERVE.json` at the repo root (CI uploads it per commit).
+
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::coordinator::simserver::{simulate, SimServer, SimServerConfig};
+use gratetile::coordinator::{PipelineConfig, Weights};
+use gratetile::util::benchkit::Bencher;
+use gratetile::util::parallel::set_threads;
+
+fn main() {
+    let mut b = Bencher::new();
+    let l1 = ConvLayer::new(1, 1, 32, 32, 8, 16);
+    let l2 = ConvLayer::new(1, 2, 32, 32, 16, 16);
+    let l3 = ConvLayer::new(1, 1, 16, 16, 16, 8);
+    let layers = vec![
+        (l1, Weights::random(&l1, 1)),
+        (l2, Weights::random(&l2, 2)),
+        (l3, Weights::random(&l3, 3)),
+    ];
+    let pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+    let mut cfg = SimServerConfig::new(pipeline);
+    cfg.workers = 1;
+    let server = SimServer::new(cfg, layers);
+    let n = if b.is_quick() { 8 } else { 16 };
+    let reqs = server.synthetic_requests(n, 0.4, 7);
+
+    // ---- Determinism across host worker counts ----
+    set_threads(1);
+    let traces = server.functional_pass(&reqs).expect("functional pass @1");
+    let r1 = simulate(&cfg, &traces);
+    for jobs in [2usize, 8] {
+        set_threads(jobs);
+        let tj = server.functional_pass(&reqs).expect("functional pass");
+        let rj = simulate(&cfg, &tj);
+        assert_eq!(
+            r1.render(),
+            rj.render(),
+            "simulated report must be byte-identical at --jobs {jobs}"
+        );
+    }
+    set_threads(0);
+    println!("serve/report determinism across jobs 1/2/8       byte-identical");
+
+    // ---- Host speed: functional pass and timing pass ----
+    b.bench_items("serve/functional_pass", n as u64, || {
+        server.functional_pass(&reqs).expect("functional pass").len()
+    });
+    let mut c2 = cfg;
+    c2.workers = 2;
+    b.bench_items("serve/simulate@w2", n as u64, || {
+        simulate(&c2, &traces).makespan_cycles
+    });
+
+    // ---- Simulated worker scaling ----
+    let m1 = simulate(&cfg, &traces).makespan_cycles;
+    let m2 = simulate(&c2, &traces).makespan_cycles;
+    let mut c4 = cfg;
+    c4.workers = 4;
+    let m4 = simulate(&c4, &traces).makespan_cycles;
+    let scale2 = m1 as f64 / m2 as f64;
+    let scale4 = m1 as f64 / m4 as f64;
+    println!("serve/sim worker scaling 1->2                    {scale2:>10.2}x  ({m1} -> {m2} cycles)");
+    println!("serve/sim worker scaling 1->4                    {scale4:>10.2}x  ({m1} -> {m4} cycles)");
+    assert!(
+        scale2 > 1.0,
+        "2 simulated workers must beat 1: {m1} -> {m2} cycles"
+    );
+
+    // ---- Bank-conflict sensitivity (DRAM-bound variant) ----
+    // Traces carry raw MACs, so the DRAM-bound re-sweep needs no new
+    // functional pass: just widen the PE array at simulate time.
+    let mut cfg_dram = cfg;
+    cfg_dram.pe_lanes = 1 << 30; // compute ≈ 1 cycle/layer
+    cfg_dram.workers = 2;
+    let mut by_banks = Vec::new();
+    for banks in [1usize, 4, 8, 16] {
+        let mut c = cfg_dram;
+        c.timing.n_banks = banks;
+        let r = simulate(&c, &traces);
+        println!(
+            "serve/sim banks={banks:<2} makespan {:>12} cycles  row-hit {:>5.1}%",
+            r.makespan_cycles,
+            r.row_hit_rate() * 100.0
+        );
+        by_banks.push((banks, r.makespan_cycles));
+    }
+    let cycles_of = |n: usize| by_banks.iter().find(|(b, _)| *b == n).unwrap().1;
+    assert!(
+        cycles_of(1) >= cycles_of(8),
+        "more banks must not simulate slower: 1 bank {} vs 8 banks {}",
+        cycles_of(1),
+        cycles_of(8)
+    );
+
+    b.write_csv("perf_serve");
+    b.write_json("perf_serve", "../BENCH_SERVE.json");
+    println!("perf_serve: all acceptance asserts passed");
+}

@@ -117,9 +117,37 @@ impl PipelineMetrics {
     }
 }
 
+/// Nearest-rank index of percentile `p` over `n` sorted samples,
+/// clamped to the valid domain: `NaN` and `p < 0` select the minimum,
+/// `p > 1` the maximum. Both serving reports ([`crate::coordinator::ServerReport`]
+/// and the simulator's) index through this, so an out-of-range `p` can
+/// never panic an index computation.
+pub fn percentile_index(n: usize, p: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
+    // p <= 1 ⇒ (n-1)·p rounds to at most n-1: always in bounds.
+    (((n - 1) as f64) * p).round() as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_index_clamps_domain() {
+        assert_eq!(percentile_index(0, 0.5), 0);
+        assert_eq!(percentile_index(1, f64::NAN), 0);
+        assert_eq!(percentile_index(5, -3.0), 0);
+        assert_eq!(percentile_index(5, 0.0), 0);
+        assert_eq!(percentile_index(5, 0.5), 2);
+        assert_eq!(percentile_index(5, 1.0), 4);
+        assert_eq!(percentile_index(5, 17.0), 4);
+        assert_eq!(percentile_index(5, f64::NAN), 0);
+        assert_eq!(percentile_index(5, f64::INFINITY), 4);
+        assert_eq!(percentile_index(5, f64::NEG_INFINITY), 0);
+    }
 
     #[test]
     fn overlap_efficiency_bounds() {

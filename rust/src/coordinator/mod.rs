@@ -14,14 +14,24 @@
 //!
 //! [`server`] wraps the pipeline in a request-serving leader/worker
 //! topology (bounded queue, N worker threads, latency percentiles) for
-//! the `serve` example.
+//! the `serve` example — host wall-clock, nondeterministic timings.
+//!
+//! [`simserver`] is the deterministic counterpart: a discrete-event,
+//! virtual-clock serving simulator that replays the functional pass's
+//! per-layer traces through one shared, bank-contended DRAM and reports
+//! in *simulated cycles* — byte-stable for a given seed regardless of
+//! host load or `--jobs` (the golden-fixture serving surface).
 
 pub mod conv;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
+pub mod simserver;
 
 pub use conv::{direct_conv_relu, Weights};
 pub use metrics::PipelineMetrics;
-pub use pipeline::{LayerRunner, PipelineConfig};
+pub use pipeline::{LayerRunner, LayerTrace, PipelineConfig};
 pub use server::{Server, ServerConfig, ServerReport};
+pub use simserver::{
+    simulate, Priority, SimRequest, SimServer, SimServerConfig, SimServerReport,
+};

@@ -22,7 +22,7 @@ use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::layout::fetcher::{DenseWindow, Fetcher};
 use crate::layout::packer::{PackedFeatureMap, Packer};
-use crate::memsim::{Dram, DramTiming, Stream, TimedDram};
+use crate::memsim::{Access, Dram, DramTiming, Stream, TimedDram};
 use crate::sim::walker::TileWalker;
 use crate::store::{StoreWriter, TensorStore};
 use crate::tensor::FeatureMap;
@@ -51,6 +51,34 @@ pub struct PipelineConfig {
 impl PipelineConfig {
     pub fn new(hw: Hardware) -> Self {
         Self { hw, mode: DivisionMode::GrateTile { n: 8 }, scheme: Scheme::Bitmask, prefetch_depth: 2 }
+    }
+}
+
+/// One layer's DRAM trace from the functional pass, at real store
+/// addresses: the prefetch lane's reads followed by the streaming
+/// writer's payload/metadata writes. This is the interface between the
+/// functional pass and any timing pass — the wall-clock replay in
+/// [`LayerRunner::run_layer_store`] and the discrete-event serving
+/// simulator ([`crate::coordinator::simserver`]) both consume it.
+#[derive(Debug, Clone, Default)]
+pub struct LayerTrace {
+    /// Prefetch-lane accesses (feature + metadata reads), in tile
+    /// schedule order — deterministic for a given packed input.
+    pub fetch: Vec<Access>,
+    /// Writer accesses (payload commits + index records), in block
+    /// completion order.
+    pub write: Vec<Access>,
+}
+
+impl LayerTrace {
+    /// All accesses in replay order (reads, then write-back).
+    pub fn iter(&self) -> impl Iterator<Item = &Access> {
+        self.fetch.iter().chain(self.write.iter())
+    }
+
+    /// Total words moved by the trace.
+    pub fn words(&self) -> u64 {
+        self.iter().map(|a| a.words).sum()
     }
 }
 
@@ -211,6 +239,40 @@ impl LayerRunner {
         weights: &Weights,
         out_division: Division,
     ) -> Result<PipelineMetrics> {
+        let (mut metrics, trace) =
+            self.run_layer_store_traced(store, input, output, layer, weights, out_division)?;
+        Self::replay_timed(&mut metrics, &trace);
+        Ok(metrics)
+    }
+
+    /// Post-hoc solo replay of a layer's trace through the row-buffer
+    /// model (uncontended; the serving simulator replays the same traces
+    /// through a *shared* [`crate::memsim::SharedDram`] instead).
+    fn replay_timed(metrics: &mut PipelineMetrics, trace: &LayerTrace) {
+        let mut timed = TimedDram::new(DramTiming::default());
+        for a in trace.iter() {
+            timed.read(a.addr_words, a.words);
+        }
+        metrics.row_hits = timed.row_hits;
+        metrics.row_misses = timed.row_misses;
+        metrics.dram_cycles = timed.cycles;
+    }
+
+    /// The functional pass of [`LayerRunner::run_layer_store`], decoupled
+    /// from any timing model: runs the layer store-to-store and returns
+    /// the metrics plus the layer's [`LayerTrace`] at real store
+    /// addresses. The trace depends only on the packed input, the tile
+    /// schedule and the arena layout — never on host load or worker
+    /// scheduling — so timing passes over it are deterministic.
+    pub fn run_layer_store_traced(
+        &self,
+        store: &mut TensorStore,
+        input: &str,
+        output: &str,
+        layer: &ConvLayer,
+        weights: &Weights,
+        out_division: Division,
+    ) -> Result<(PipelineMetrics, LayerTrace)> {
         let tile = self.cfg.hw.tile_for_layer(layer);
         let walker = TileWalker::new(*layer, tile);
         let (out_h, out_w) = (layer.out_h(), layer.out_w());
@@ -292,9 +354,9 @@ impl LayerRunner {
         )?;
 
         let report = writer.finish()?;
-        // Wall clock covers the pipeline itself; the trace replay below
-        // is post-hoc simulator bookkeeping and must not skew
-        // tiles_per_sec / overlap_efficiency.
+        // Wall clock covers the pipeline itself; post-hoc timing
+        // replays over the returned trace (replay_timed, the serving
+        // simulator) must not skew tiles_per_sec / overlap_efficiency.
         metrics.wall = wall_start.elapsed();
         metrics.fetch_busy = fetch_busy;
         metrics.absorb_dram(&fetch_dram);
@@ -303,20 +365,14 @@ impl LayerRunner {
         metrics.writeback_meta_bits = report.metadata_bits;
         metrics.peak_staged_words = report.peak_staged_words as u64;
 
-        // Replay both lanes' accesses at their real store addresses
-        // through the row-buffer model — the store makes these genuine,
-        // scattered, arena-assigned addresses rather than every map
-        // starting at 0.
-        let mut timed = TimedDram::new(DramTiming::default());
-        for trace in [fetch_dram.trace(), report.dram.trace()].into_iter().flatten() {
-            for a in trace {
-                timed.read(a.addr_words, a.words);
-            }
-        }
-        metrics.row_hits = timed.row_hits;
-        metrics.row_misses = timed.row_misses;
-        metrics.dram_cycles = timed.cycles;
-        Ok(metrics)
+        // Both lanes' accesses at their real store addresses — the store
+        // makes these genuine, scattered, arena-assigned addresses
+        // rather than every map starting at 0.
+        let trace = LayerTrace {
+            fetch: fetch_dram.trace().map(<[Access]>::to_vec).unwrap_or_default(),
+            write: report.dram.trace().map(<[Access]>::to_vec).unwrap_or_default(),
+        };
+        Ok((metrics, trace))
     }
 
     /// Run a whole stack store-resident: the dense input image is packed
@@ -333,6 +389,27 @@ impl LayerRunner {
         input: FeatureMap,
         prefix: &str,
     ) -> Result<Vec<PipelineMetrics>> {
+        Ok(self
+            .run_network_in_store_traced(store, layers, input, prefix)?
+            .into_iter()
+            .map(|(mut m, trace)| {
+                Self::replay_timed(&mut m, &trace);
+                m
+            })
+            .collect())
+    }
+
+    /// [`LayerRunner::run_network_in_store`] without the solo timed
+    /// replay: returns each layer's metrics *and* its trace, so a caller
+    /// (the serving simulator) can replay the whole request under shared
+    /// contention instead.
+    pub fn run_network_in_store_traced(
+        &self,
+        store: &mut TensorStore,
+        layers: &[(ConvLayer, Weights)],
+        input: FeatureMap,
+        prefix: &str,
+    ) -> Result<Vec<(PipelineMetrics, LayerTrace)>> {
         if layers.is_empty() {
             bail!("run_network_in_store: empty layer stack");
         }
@@ -344,7 +421,8 @@ impl LayerRunner {
             let div = self.output_division(next, layer.out_h(), layer.out_w(), layer.c_out)?;
             let in_name = format!("{prefix}{i}");
             let out_name = format!("{prefix}{}", i + 1);
-            let m = self.run_layer_store(store, &in_name, &out_name, layer, weights, div)?;
+            let m =
+                self.run_layer_store_traced(store, &in_name, &out_name, layer, weights, div)?;
             per_layer.push(m);
             store.remove(&in_name)?;
         }
@@ -364,6 +442,25 @@ impl LayerRunner {
         let mut dram = Dram::default();
         let out = store.fetch_dense(&format!("act{}", layers.len()), &mut dram)?;
         Ok((out, per_layer))
+    }
+
+    /// Run a whole stack through a fresh store and return the dense
+    /// output, the per-layer metrics AND the per-layer traces. A fresh
+    /// store means the arena assigns the same addresses for the same
+    /// request every time — the traces (and anything priced from them)
+    /// are bit-deterministic regardless of how many requests run
+    /// concurrently.
+    pub fn run_network_traced(
+        &self,
+        layers: &[(ConvLayer, Weights)],
+        input: FeatureMap,
+    ) -> Result<(FeatureMap, Vec<PipelineMetrics>, Vec<LayerTrace>)> {
+        let mut store = TensorStore::new();
+        let pairs = self.run_network_in_store_traced(&mut store, layers, input, "act")?;
+        let mut dram = Dram::default();
+        let out = store.fetch_dense(&format!("act{}", layers.len()), &mut dram)?;
+        let (metrics, traces) = pairs.into_iter().unzip();
+        Ok((out, metrics, traces))
     }
 }
 
@@ -512,6 +609,30 @@ mod tests {
             fm = direct_conv_relu(l, w, &fm);
         }
         assert_fm_close(&out, &fm, 0.05);
+    }
+
+    /// The functional/timing decoupling: traces are exposed, non-empty,
+    /// and bit-identical across repeated functional passes of the same
+    /// request (fresh store ⇒ same arena addresses every time).
+    #[test]
+    fn traced_run_is_deterministic_and_matches_store_path() {
+        let l1 = ConvLayer::new(1, 1, 24, 24, 8, 8);
+        let layers = vec![(l1, Weights::random(&l1, 3))];
+        let input = generate(24, 24, 8, SparsityParams::clustered(0.5, 4));
+        let runner = LayerRunner::new(cfg());
+        let (out_a, metrics, traces) =
+            runner.run_network_traced(&layers, input.clone()).unwrap();
+        assert_eq!(traces.len(), 1);
+        assert!(!traces[0].fetch.is_empty(), "prefetch lane must trace");
+        assert!(!traces[0].write.is_empty(), "writer must trace");
+        assert!(traces[0].words() > 0);
+        // The traced variant skips the solo replay; metrics still carry
+        // the functional traffic.
+        assert!(metrics[0].feature_lines > 0);
+        let (out_b, _, traces2) = runner.run_network_traced(&layers, input).unwrap();
+        assert_eq!(traces[0].fetch, traces2[0].fetch);
+        assert_eq!(traces[0].write, traces2[0].write);
+        assert_eq!(out_a.as_slice(), out_b.as_slice());
     }
 
     #[test]

@@ -51,14 +51,16 @@ impl ServerReport {
         self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
+    /// Nearest-rank latency percentile. `p` is clamped to `[0, 1]`
+    /// (NaN selects the minimum), so callers can never panic the index
+    /// computation with an out-of-domain fraction.
     pub fn percentile(&self, p: f64) -> Duration {
         if self.latencies.is_empty() {
             return Duration::ZERO;
         }
         let mut l = self.latencies.clone();
         l.sort_unstable();
-        let idx = ((l.len() as f64 - 1.0) * p).round() as usize;
-        l[idx]
+        l[super::metrics::percentile_index(l.len(), p)]
     }
 
     pub fn summary(&self) -> String {
@@ -266,6 +268,47 @@ mod tests {
         assert_eq!(report.completed, 3);
         assert!(report.total_feature_bytes > 0);
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The percentile bugfix: out-of-domain `p` (negative, > 1, NaN,
+    /// infinite) must clamp instead of indexing out of bounds, and the
+    /// empty / single-sample paths stay well defined.
+    #[test]
+    fn percentile_clamps_out_of_domain_p() {
+        let empty = ServerReport {
+            completed: 0,
+            wall: Duration::ZERO,
+            latencies: Vec::new(),
+            total_feature_bytes: 0,
+        };
+        for p in [-1.0, 0.0, 0.5, 1.0, 2.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(empty.percentile(p), Duration::ZERO);
+        }
+
+        let one = ServerReport {
+            completed: 1,
+            wall: Duration::from_millis(5),
+            latencies: vec![Duration::from_millis(3)],
+            total_feature_bytes: 1,
+        };
+        for p in [-1.0, 0.0, 0.5, 1.0, 7.5, f64::NAN, f64::NEG_INFINITY] {
+            assert_eq!(one.percentile(p), Duration::from_millis(3), "p={p}");
+        }
+
+        let many = ServerReport {
+            completed: 3,
+            wall: Duration::from_millis(9),
+            latencies: vec![
+                Duration::from_millis(9),
+                Duration::from_millis(1),
+                Duration::from_millis(5),
+            ],
+            total_feature_bytes: 1,
+        };
+        assert_eq!(many.percentile(-3.0), Duration::from_millis(1));
+        assert_eq!(many.percentile(0.5), Duration::from_millis(5));
+        assert_eq!(many.percentile(42.0), Duration::from_millis(9));
+        assert_eq!(many.percentile(f64::NAN), Duration::from_millis(1));
     }
 
     #[test]

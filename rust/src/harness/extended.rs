@@ -6,6 +6,8 @@ use crate::compress::Scheme;
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::config::zoo::{full_conv_stack, Network};
+use crate::coordinator::simserver::{simulate, SimServer, SimServerConfig};
+use crate::coordinator::{PipelineConfig, Weights};
 use crate::sim::access::access_study;
 use crate::sim::metacache::{metadata_cache_study, TileOrder};
 use crate::sim::network::{depth_density, run_network_bandwidth, writeback_cost};
@@ -183,6 +185,61 @@ pub fn codec_datapath_table() -> Table {
     t
 }
 
+/// Serve-scaling study: the discrete-event serving simulator swept over
+/// workers × queue depth × input density. One functional pass per
+/// density produces the request traces; every (workers, queue) cell
+/// re-simulates the *same* traces under a fresh bank-contended DRAM, so
+/// the table isolates scheduling/contention effects from data effects.
+/// All quantities are simulated cycles — the table is deterministic and
+/// golden-filed (`tests/golden.rs`).
+pub fn serve_scaling_table() -> Table {
+    let l1 = ConvLayer::new(1, 1, 24, 24, 8, 16);
+    let l2 = ConvLayer::new(1, 2, 24, 24, 16, 8);
+    let layers = vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))];
+    let base = SimServerConfig::new(PipelineConfig::new(
+        Platform::NvidiaSmallTile.hardware(),
+    ));
+    let server = SimServer::new(base, layers);
+    let mut t = Table::new(
+        "Serve scaling — discrete-event simulator, 2-layer 24x24 net, 12 requests (simulated cycles)",
+    )
+    .header(vec![
+        "Density",
+        "Workers",
+        "Queue",
+        "Makespan kcyc",
+        "Req/Mcyc",
+        "p50 kcyc",
+        "p99 kcyc",
+        "Queue p99 kcyc",
+        "Row hit %",
+    ]);
+    for &density in &[0.25, 0.6] {
+        let reqs = server.synthetic_requests(12, density, 11);
+        let traces = server.functional_pass(&reqs).expect("functional pass");
+        for &workers in &[1usize, 2, 4] {
+            for &queue in &[2usize, 8] {
+                let mut cfg = base;
+                cfg.workers = workers;
+                cfg.queue_depth = queue;
+                let r = simulate(&cfg, &traces);
+                t.row(vec![
+                    format!("{density:.2}"),
+                    workers.to_string(),
+                    queue.to_string(),
+                    format!("{:.1}", r.makespan_cycles as f64 / 1e3),
+                    format!("{:.2}", r.throughput_rpmc()),
+                    format!("{:.1}", r.latency_percentile(0.50) as f64 / 1e3),
+                    format!("{:.1}", r.latency_percentile(0.99) as f64 / 1e3),
+                    format!("{:.1}", r.queue_percentile(0.99) as f64 / 1e3),
+                    format!("{:.1}", r.row_hit_rate() * 100.0),
+                ]);
+            }
+        }
+    }
+    t
+}
+
 /// Roofline: compute/memory bound per benchmark layer and the runtime
 /// speedup GrateTile's bandwidth saving buys.
 pub fn roofline_table(scheme: Scheme) -> Table {
@@ -248,6 +305,34 @@ mod tests {
             .map(|l| l.rsplit(',').next().unwrap().trim_end_matches('x').parse().unwrap())
             .fold(1.0, f64::max);
         assert!(best > 1.3, "best speedup {best}");
+    }
+
+    #[test]
+    fn serve_scaling_more_workers_never_slower() {
+        let csv = serve_scaling_table().render_csv();
+        // 2 densities x 3 worker counts x 2 queue depths + header.
+        assert_eq!(csv.lines().count(), 13, "{csv}");
+        // Within one (density, queue) slice, makespan is non-increasing
+        // in the worker count.
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        for density in ["0.25", "0.60"] {
+            for queue in ["2", "8"] {
+                let makespans: Vec<f64> = rows
+                    .iter()
+                    .filter(|r| r[0] == density && r[2] == queue)
+                    .map(|r| r[3].parse().unwrap())
+                    .collect();
+                assert_eq!(makespans.len(), 3);
+                assert!(
+                    makespans[0] >= makespans[1] && makespans[1] >= makespans[2],
+                    "d={density} q={queue}: {makespans:?}"
+                );
+            }
+        }
     }
 
     #[test]

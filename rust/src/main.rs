@@ -6,7 +6,8 @@
 //! gratetile sweep --density 0.37 --scheme bitmask    # one-layer sweep
 //! gratetile ablation --codecs|--whole-channel|--sweep|--dilated
 //! gratetile e2e [--mode grate8] [--requests 4]       # PJRT end-to-end
-//! gratetile serve --workers 4 --requests 32          # serving driver
+//! gratetile serve --workers 4 --requests 32          # serving simulator (--wall for host time)
+//! gratetile servescale                               # serve-scaling study table
 //! gratetile store pack|inspect|serve|compare         # .grate containers
 //! ```
 
@@ -16,8 +17,11 @@ use gratetile::{bail, err};
 use gratetile::compress::Scheme;
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
-use gratetile::coordinator::{LayerRunner, PipelineConfig, Server, ServerConfig, Weights};
+use gratetile::coordinator::{
+    LayerRunner, PipelineConfig, Server, ServerConfig, SimServer, SimServerConfig, Weights,
+};
 use gratetile::harness;
+use gratetile::memsim::DramTiming;
 use gratetile::runtime::{Engine, Manifest};
 use gratetile::sim::experiment::run_layer;
 use gratetile::tensor::sparsity::{generate, SparsityParams};
@@ -108,6 +112,7 @@ fn run(cli: &Cli) -> Result<()> {
         "sweep" => cmd_sweep(cli, scheme)?,
         "e2e" => cmd_e2e(cli, scheme)?,
         "serve" => cmd_serve(cli)?,
+        "servescale" => emit(cli, "serve_scaling", harness::serve_scaling_table()),
         "" | "help" | "--help" => print_help(),
         other => {
             print_help();
@@ -351,11 +356,15 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
     }
 }
 
-/// Serving driver: leader + workers over the pipeline.
+/// Serving driver. Default (and `--sim`): the deterministic
+/// discrete-event simulator — reports in simulated cycles, byte-stable
+/// for a given seed regardless of host load or `--jobs`. `--wall` keeps
+/// the original host wall-clock leader/worker topology.
 fn cmd_serve(cli: &Cli) -> Result<()> {
     let workers = cli.opt_usize("workers", 4);
     let requests = cli.opt_usize("requests", 16);
     let density = cli.opt_f64("density", 0.5);
+    let seed = cli.opt_usize("seed", 7) as u64;
     let l1 = ConvLayer::new(1, 1, 32, 32, 8, 16);
     let l2 = ConvLayer::new(1, 2, 32, 32, 16, 16);
     let l3 = ConvLayer::new(1, 1, 16, 16, 16, 8);
@@ -364,17 +373,29 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         (l2, Weights::random(&l2, 2)),
         (l3, Weights::random(&l3, 3)),
     ];
-    let server = Server::new(
-        ServerConfig {
-            pipeline: PipelineConfig::new(Platform::NvidiaSmallTile.hardware()),
-            workers,
-            queue_depth: workers * 2,
-        },
-        layers,
-    );
-    let inputs = server.synthetic_requests(requests, density, 7);
+    let pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+    if cli.has_flag("wall") {
+        let server = Server::new(
+            ServerConfig { pipeline, workers, queue_depth: workers * 2 },
+            layers,
+        );
+        let inputs = server.synthetic_requests(requests, density, seed);
+        let report = server.serve(inputs)?;
+        println!("{}", report.summary());
+        return Ok(());
+    }
+    let mut cfg = SimServerConfig::new(pipeline);
+    cfg.workers = workers;
+    cfg.queue_depth = cli.opt_usize("queue-depth", workers * 2);
+    cfg.batch = cli.opt_usize("batch", 1);
+    cfg.timing =
+        DramTiming { n_banks: cli.opt_usize("banks", 8), ..DramTiming::default() };
+    cfg.pe_lanes = cli.opt_usize("lanes", 32) as u64;
+    cfg.arrival_gap = cli.opt_usize("arrival-gap", 0) as u64;
+    let server = SimServer::new(cfg, layers);
+    let inputs = server.synthetic_requests(requests, density, seed);
     let report = server.serve(inputs)?;
-    println!("{}", report.summary());
+    print!("{}", report.render());
     Ok(())
 }
 
@@ -410,7 +431,12 @@ Analysis:
 
 End to end:
   e2e                 PJRT CNN -> GrateTile pipeline  [--mode --scheme --requests]
-  serve               leader/worker serving driver    [--workers --requests --density]
+  serve               serving driver. Default --sim: deterministic discrete-event
+                      simulator in simulated cycles (byte-stable per seed)
+                      [--workers --requests --density --seed --queue-depth
+                       --batch --banks --lanes --arrival-gap]; --wall: host
+                      wall-clock leader/worker topology
+  servescale          serve-scaling study: workers x queue x density, simulated
 
 Common flags: --markdown (emit GFM tables); --jobs N (suite worker threads,
 default: all cores, also via GRATETILE_THREADS); all tables also land in

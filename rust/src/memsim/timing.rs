@@ -115,6 +115,131 @@ impl TimedDram {
     }
 }
 
+/// Bank-contended DRAM shared by every simulated worker of the serving
+/// simulator ([`crate::coordinator::simserver`]).
+///
+/// [`TimedDram`] answers "how many cycles would this trace take alone";
+/// `SharedDram` answers "when does this transfer *finish* given what
+/// everyone else has already queued". Each request is issued at an
+/// explicit **virtual** cycle (`now`) and split into line transfers;
+/// a line starts when both its bank is free (`busy_until`) and the
+/// request has been issued (`now + t_cmd`), pays the open-page row
+/// hit/miss cost, and extends its bank's reservation. Distinct banks
+/// proceed in parallel — the bank-level parallelism that makes "more
+/// banks ⇒ fewer cycles" under concurrent traffic. Requests are
+/// serviced strictly in call order (FCFS at transaction granularity);
+/// the serving simulator's event loop orders the callers, granting
+/// same-cycle requestors round-robin.
+///
+/// Every line's service cycles are charged to its bank's occupancy
+/// counter, so `sum(bank_busy_cycles) == transfer_cycles` always —
+/// the conservation invariant `tests/property.rs` asserts.
+#[derive(Debug, Clone)]
+pub struct SharedDram {
+    timing: DramTiming,
+    open_rows: Vec<Option<u64>>,
+    /// Cycle each bank's current reservation ends.
+    busy_until: Vec<u64>,
+    /// Total transfer cycles charged per bank (occupancy).
+    bank_busy_cycles: Vec<u64>,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub lines: u64,
+    pub requests: u64,
+    /// Sum of all per-line service cycles across banks.
+    pub transfer_cycles: u64,
+}
+
+impl SharedDram {
+    /// `n_banks` is clamped to at least 1 (a zero-bank geometry would
+    /// divide by zero in the address mapping — reachable from
+    /// `gratetile serve --banks 0`).
+    pub fn new(mut timing: DramTiming) -> Self {
+        timing.n_banks = timing.n_banks.max(1);
+        Self {
+            timing,
+            open_rows: vec![None; timing.n_banks],
+            busy_until: vec![0; timing.n_banks],
+            bank_busy_cycles: vec![0; timing.n_banks],
+            row_hits: 0,
+            row_misses: 0,
+            lines: 0,
+            requests: 0,
+            transfer_cycles: 0,
+        }
+    }
+
+    pub fn timing(&self) -> DramTiming {
+        self.timing
+    }
+
+    /// Same line-interleaved mapping as [`TimedDram`].
+    fn map(&self, byte_addr: u64) -> (usize, u64) {
+        let line = byte_addr / 16;
+        let bank = (line % self.timing.n_banks as u64) as usize;
+        let row = byte_addr / self.timing.row_bytes as u64 / self.timing.n_banks as u64;
+        (bank, row)
+    }
+
+    /// Service a transfer of `words` 16-bit words at word address
+    /// `addr_words`, issued at virtual cycle `now`; returns the
+    /// completion cycle. Zero-word transfers complete immediately.
+    pub fn service(&mut self, now: u64, addr_words: u64, words: u64) -> u64 {
+        if words == 0 {
+            return now;
+        }
+        self.requests += 1;
+        // All lines of one transaction are issued together after the
+        // command/addressing overhead; bank queues then serialise them.
+        let issue = now + self.timing.t_cmd;
+        let mut done = issue;
+        let first_line = addr_words / WORDS_PER_LINE as u64;
+        let last_line = (addr_words + words - 1) / WORDS_PER_LINE as u64;
+        for line in first_line..=last_line {
+            let (bank, row) = self.map(line * 16);
+            let cost = if self.open_rows[bank] == Some(row) {
+                self.row_hits += 1;
+                self.timing.t_ccd
+            } else {
+                self.row_misses += 1;
+                self.open_rows[bank] = Some(row);
+                self.timing.t_ccd + self.timing.t_rp_rcd
+            };
+            let start = issue.max(self.busy_until[bank]);
+            let finish = start + cost;
+            self.busy_until[bank] = finish;
+            self.bank_busy_cycles[bank] += cost;
+            self.transfer_cycles += cost;
+            self.lines += 1;
+            done = done.max(finish);
+        }
+        done
+    }
+
+    /// Per-bank occupancy (total transfer cycles charged to each bank).
+    pub fn bank_busy_cycles(&self) -> &[u64] {
+        &self.bank_busy_cycles
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+
+    /// Occupancy of the busiest bank over `horizon` cycles (0 when the
+    /// horizon is empty).
+    pub fn peak_bank_utilisation(&self, horizon: u64) -> f64 {
+        if horizon == 0 {
+            return 0.0;
+        }
+        self.bank_busy_cycles.iter().copied().max().unwrap_or(0) as f64 / horizon as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +285,77 @@ mod tests {
         let mut d = TimedDram::new(DramTiming::default());
         d.read(0, 8);
         assert!(d.efficiency() > 0.0 && d.efficiency() <= 1.0);
+    }
+
+    #[test]
+    fn shared_zero_words_completes_immediately() {
+        let mut d = SharedDram::new(DramTiming::default());
+        assert_eq!(d.service(123, 40, 0), 123);
+        assert_eq!(d.lines, 0);
+        assert_eq!(d.transfer_cycles, 0);
+        assert_eq!(d.requests, 0);
+    }
+
+    #[test]
+    fn shared_zero_banks_clamps_instead_of_panicking() {
+        let mut d = SharedDram::new(DramTiming { n_banks: 0, ..DramTiming::default() });
+        assert_eq!(d.timing().n_banks, 1);
+        let done = d.service(0, 0, 8);
+        assert!(done > 0);
+        assert_eq!(d.bank_busy_cycles().len(), 1);
+    }
+
+    #[test]
+    fn shared_single_line_pays_cmd_and_miss() {
+        let t = DramTiming::default();
+        let mut d = SharedDram::new(t);
+        let done = d.service(10, 0, 8);
+        // Cold bank: command + activate + transfer.
+        assert_eq!(done, 10 + t.t_cmd + t.t_ccd + t.t_rp_rcd);
+        assert_eq!(d.row_misses, 1);
+        // Same line again from the open row: hit, queued behind nothing.
+        let done2 = d.service(done, 0, 8);
+        assert_eq!(done2, done + t.t_cmd + t.t_ccd);
+        assert_eq!(d.row_hits, 1);
+    }
+
+    #[test]
+    fn shared_same_bank_contention_serialises() {
+        // Two transfers issued at the same cycle to the SAME line queue
+        // on one bank; to different banks they overlap.
+        let t = DramTiming::default();
+        let mut d = SharedDram::new(t);
+        let a = d.service(0, 0, 8); // line 0 -> bank 0
+        let b = d.service(0, 0, 8); // same bank: starts after `a`
+        assert_eq!(b, a + t.t_ccd, "hit queued behind the first transfer");
+        let mut d2 = SharedDram::new(t);
+        let a2 = d2.service(0, 0, 8); // bank 0
+        let b2 = d2.service(0, 8, 8); // line 1 -> bank 1: parallel
+        assert_eq!(a2, b2, "distinct banks service concurrently");
+    }
+
+    #[test]
+    fn shared_bank_occupancy_conserves_transfer_cycles() {
+        let mut d = SharedDram::new(DramTiming::default());
+        let mut now = 0;
+        for i in 0..50u64 {
+            now = d.service(now, i * 37, 1 + (i % 40));
+        }
+        assert_eq!(d.bank_busy_cycles().iter().sum::<u64>(), d.transfer_cycles);
+        assert_eq!(d.row_hits + d.row_misses, d.lines);
+        assert!(d.peak_bank_utilisation(now) <= 1.0);
+        assert_eq!(d.peak_bank_utilisation(0), 0.0);
+    }
+
+    #[test]
+    fn shared_single_bank_serialises_everything() {
+        let timing = DramTiming { n_banks: 1, ..DramTiming::default() };
+        let mut d = SharedDram::new(timing);
+        let a = d.service(0, 0, 16); // 2 lines, both bank 0
+        // With one bank every line queues; completion covers the sum of
+        // both line costs.
+        assert!(a >= timing.t_cmd + 2 * timing.t_ccd + timing.t_rp_rcd);
+        assert_eq!(d.bank_busy_cycles().len(), 1);
+        assert_eq!(d.bank_busy_cycles()[0], d.transfer_cycles);
     }
 }

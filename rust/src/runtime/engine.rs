@@ -1,14 +1,15 @@
 //! The PJRT execution engine: compile-once, execute-many.
 //!
 //! The real engine wraps the `xla` crate's PJRT CPU client and is gated
-//! behind the `pjrt` cargo feature, because the offline build image has
-//! no crates.io access (see DESIGN.md §Runtime: enabling the feature
-//! requires adding the vendored `xla` dependency to `Cargo.toml`). The
-//! default build compiles a stub with the same API whose methods return
-//! clean, actionable errors, so the simulator, harness and tests are
-//! fully usable without the PJRT toolchain.
+//! behind the `pjrt-xla` cargo feature, because the offline build image
+//! has no crates.io access (see DESIGN.md §Runtime: enabling that
+//! feature requires adding the vendored `xla` dependency to
+//! `Cargo.toml`). Every other build — the default AND the plain `pjrt`
+//! feature (CI's feature-matrix leg) — compiles a stub with the same
+//! API whose methods return clean, actionable errors, so the simulator,
+//! harness and tests are fully usable without the PJRT toolchain.
 
-#[cfg(feature = "pjrt")]
+#[cfg(feature = "pjrt-xla")]
 mod imp {
     use crate::runtime::manifest::ArtifactEntry;
     use crate::tensor::FeatureMap;
@@ -147,7 +148,7 @@ mod imp {
     }
 }
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(feature = "pjrt-xla"))]
 mod imp {
     use crate::bail;
     use crate::runtime::manifest::ArtifactEntry;
@@ -156,7 +157,7 @@ mod imp {
     use std::path::Path;
 
     const HINT: &str =
-        "this build has no PJRT runtime — rebuild with `--features pjrt` \
+        "this build has no PJRT runtime — rebuild with `--features pjrt-xla` \
          (requires the offline `xla` crate; see DESIGN.md §Runtime)";
 
     /// Stub engine: same API as the PJRT-backed one, clean errors for
@@ -171,7 +172,7 @@ mod imp {
         }
 
         pub fn platform(&self) -> String {
-            "cpu (stub; enable the `pjrt` feature for real PJRT)".to_string()
+            "cpu (stub; enable the `pjrt-xla` feature for real PJRT)".to_string()
         }
 
         pub fn load_hlo(&self, path: &Path) -> Result<LoadedModel> {
@@ -195,7 +196,27 @@ mod imp {
         pub name: String,
     }
 
+    /// Stub stand-in for `xla::Literal` (never constructed): keeps
+    /// `run_literals` call sites — `tests/runtime_smoke.rs` under the
+    /// plain `pjrt` feature — type-checking without the vendored crate.
+    pub struct Literal {
+        _priv: (),
+    }
+
+    impl Literal {
+        pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+            bail!("stub literal holds no data: {HINT}");
+        }
+    }
+
     impl LoadedModel {
+        pub fn run_literals(
+            &self,
+            _inputs: &[(&[f32], &[usize])],
+        ) -> Result<Vec<Literal>> {
+            bail!("cannot execute {}: {HINT}", self.name);
+        }
+
         pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
             bail!("cannot execute {}: {HINT}", self.name);
         }

@@ -41,9 +41,18 @@ const MAGIC: &[u8; 4] = b"GRTC";
 const VERSION: u32 = 1;
 const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8;
 
-/// FNV-1a 64-bit (dependency-free checksum).
+/// FNV-1a 64-bit offset basis (seed for [`fnv1a64_continue`]).
+pub const FNV1A64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64-bit (dependency-free checksum), one-shot.
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    fnv1a64_continue(FNV1A64_OFFSET, bytes)
+}
+
+/// Continue an FNV-1a 64-bit digest from state `h` — the chaining form
+/// incremental hashers (the serving simulator's output checksum) fold
+/// over.
+pub fn fnv1a64_continue(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);

@@ -1,0 +1,151 @@
+//! Golden-report regression suite + determinism tests.
+//!
+//! The serving simulator and the harness tables are deterministic pure
+//! functions of their seeds, so their rendered bytes are assertable
+//! artifacts: any unintended change to cycle accounting, traffic
+//! pricing or formatting shows up as a byte diff against the fixtures
+//! in `tests/golden/` (see its README; re-bless with
+//! `GRATETILE_BLESS=1`). The determinism tests additionally pin the
+//! *contract* that makes golden-filing sound: the simulated
+//! `ServerReport` is byte-identical across host worker counts
+//! (`--jobs` 1/2/8) and across runs with the same seed.
+
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::coordinator::simserver::{SimServer, SimServerConfig};
+use gratetile::coordinator::{PipelineConfig, Weights};
+use gratetile::harness;
+use gratetile::util::parallel::set_threads;
+use std::path::{Path, PathBuf};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// Compare `actual` against the checked-in fixture `name`, blessing it
+/// when `GRATETILE_BLESS=1` or when the fixture does not exist yet.
+/// Mismatches panic with the first differing lines and re-bless
+/// instructions.
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_dir().join(name);
+    let bless = std::env::var("GRATETILE_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, actual).unwrap();
+        eprintln!("golden: blessed {} ({} bytes)", path.display(), actual.len());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    if expected == actual {
+        return;
+    }
+    let mut msg = format!("golden mismatch against {}\n", path.display());
+    let exp: Vec<&str> = expected.lines().collect();
+    let act: Vec<&str> = actual.lines().collect();
+    let mut shown = 0;
+    for i in 0..exp.len().max(act.len()) {
+        let e = exp.get(i).copied();
+        let a = act.get(i).copied();
+        if e != a {
+            msg.push_str(&format!(
+                "  line {}:\n    expected: {}\n    actual:   {}\n",
+                i + 1,
+                e.unwrap_or("<missing>"),
+                a.unwrap_or("<missing>")
+            ));
+            shown += 1;
+            if shown == 3 {
+                msg.push_str("  ... (further differences elided)\n");
+                break;
+            }
+        }
+    }
+    msg.push_str(
+        "if the new output is intended, re-bless with \
+         `GRATETILE_BLESS=1 cargo test --test golden` and commit the diff",
+    );
+    panic!("{msg}");
+}
+
+fn tiny_net() -> Vec<(ConvLayer, Weights)> {
+    let l1 = ConvLayer::new(1, 1, 16, 16, 8, 8);
+    let l2 = ConvLayer::new(1, 2, 16, 16, 8, 8);
+    vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))]
+}
+
+fn sim_server() -> SimServer {
+    let cfg =
+        SimServerConfig::new(PipelineConfig::new(Platform::NvidiaSmallTile.hardware()));
+    SimServer::new(cfg, tiny_net())
+}
+
+/// The headline golden: the simulated serving report, bytes and all.
+#[test]
+fn golden_sim_serve_report() {
+    let server = sim_server();
+    let report = server.serve(server.synthetic_requests(6, 0.5, 7)).unwrap();
+    check_golden("serve_report.txt", &report.render());
+}
+
+/// ISSUE acceptance: the simulated report is byte-identical across
+/// host worker counts — `--jobs` ∈ {1, 2, 8} — cycles, per-request
+/// latencies and feature bytes included.
+#[test]
+fn sim_serve_report_identical_across_jobs() {
+    let server = sim_server();
+    let reqs = server.synthetic_requests(8, 0.45, 21);
+    let mut renders = Vec::new();
+    for jobs in [1usize, 2, 8] {
+        set_threads(jobs);
+        let report = server.serve(reqs.clone()).unwrap();
+        renders.push((jobs, report.render()));
+    }
+    set_threads(0);
+    for (jobs, r) in &renders[1..] {
+        assert_eq!(
+            r, &renders[0].1,
+            "report bytes diverge between --jobs 1 and --jobs {jobs}"
+        );
+    }
+}
+
+/// Same seed ⇒ same bytes across independent runs; different seed ⇒
+/// different simulated outcome (the report really depends on the data).
+#[test]
+fn sim_serve_report_seed_determinism() {
+    let server = sim_server();
+    let a = server.serve(server.synthetic_requests(5, 0.5, 33)).unwrap();
+    let b = server.serve(server.synthetic_requests(5, 0.5, 33)).unwrap();
+    assert_eq!(a.render(), b.render());
+    let c = server.serve(server.synthetic_requests(5, 0.5, 34)).unwrap();
+    assert_ne!(
+        a.render(),
+        c.render(),
+        "a different request seed must change the report"
+    );
+}
+
+/// Harness tables: the §V codec ablation ...
+#[test]
+fn golden_ablation_codecs() {
+    check_golden("ablation_codecs.csv", &harness::ablation_codecs().render_csv());
+}
+
+/// ... the DRAM access-efficiency study (timed LPDDR4-class model) ...
+#[test]
+fn golden_access_table() {
+    check_golden("access.csv", &harness::access_table().render_csv());
+}
+
+/// ... the metadata SRAM-cache absorption study ...
+#[test]
+fn golden_metacache_table() {
+    check_golden("metacache.csv", &harness::metacache_table().render_csv());
+}
+
+/// ... and the serve-scaling study driven by the simulator itself.
+#[test]
+fn golden_serve_scaling_table() {
+    check_golden("serve_scaling.csv", &harness::serve_scaling_table().render_csv());
+}

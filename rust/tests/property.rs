@@ -6,8 +6,9 @@ use gratetile::compress::{Compressor, Scheme};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::layout::{Fetcher, Packer};
-use gratetile::memsim::Dram;
+use gratetile::memsim::{Dram, DramTiming, SharedDram};
 use gratetile::sim::experiment::{run_layer, run_layer_naive};
+use gratetile::sim::{metadata_cache_study, TileOrder};
 use gratetile::store::{Arena, Container, StoreWriter, TensorStore};
 use gratetile::tensor::sparsity::{generate, SparsityParams};
 use gratetile::tiling::division::{Division, DivisionMode};
@@ -503,6 +504,202 @@ fn codec_adversarial_payloads() {
             );
         }
     }
+}
+
+/// Bank-arbiter conservation on the serving simulator's shared DRAM:
+/// for any geometry, timing and traffic pattern, every transfer cycle
+/// is charged to exactly one bank (`sum(bank occupancy) == total
+/// transfer cycles`), every line is either a row hit or a row miss,
+/// and completion times respect issue order and the command overhead.
+#[test]
+fn prop_shared_dram_bank_conservation() {
+    forall_res(
+        0xBA2B,
+        60,
+        |r: &mut SplitMix64| r.next_u64(),
+        |&seed| {
+            let mut rng = SplitMix64::new(seed);
+            let timing = DramTiming {
+                n_banks: [1, 2, 4, 8, 16][rng.below(5)],
+                row_bytes: 1024 << rng.below(3),
+                t_ccd: 1 + rng.below(8) as u64,
+                t_rp_rcd: rng.below(50) as u64,
+                t_cmd: rng.below(12) as u64,
+            };
+            let mut d = SharedDram::new(timing);
+            let mut now = 0u64;
+            for step in 0..200 {
+                let addr = rng.below(1 << 20) as u64;
+                let words = rng.below(120) as u64; // includes 0-word requests
+                let done = d.service(now, addr, words);
+                if words == 0 {
+                    if done != now {
+                        return Err(format!("step {step}: empty transfer took time"));
+                    }
+                } else {
+                    if done < now + timing.t_cmd + timing.t_ccd {
+                        return Err(format!(
+                            "step {step}: completion {done} before cmd+transfer"
+                        ));
+                    }
+                    // Sometimes chain (request streams), sometimes issue
+                    // concurrently at the same virtual cycle.
+                    if rng.chance(0.5) {
+                        now = done;
+                    } else if rng.chance(0.3) {
+                        now += rng.below(64) as u64;
+                    }
+                }
+            }
+            let occupancy: u64 = d.bank_busy_cycles().iter().sum();
+            if occupancy != d.transfer_cycles {
+                return Err(format!(
+                    "occupancy {occupancy} != transfer cycles {}",
+                    d.transfer_cycles
+                ));
+            }
+            if d.row_hits + d.row_misses != d.lines {
+                return Err(format!(
+                    "hits {} + misses {} != lines {}",
+                    d.row_hits, d.row_misses, d.lines
+                ));
+            }
+            if d.bank_busy_cycles().len() != timing.n_banks {
+                return Err("bank occupancy vector has wrong arity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Metadata-cache study: the tile *order* (spatial-major vs
+/// channel-major) reorders the record stream but touches exactly the
+/// same records per window — the requested (no-cache) metadata traffic
+/// is order-invariant; only the absorbed fraction may differ.
+#[test]
+fn prop_metacache_tile_order_traffic_invariant() {
+    forall_res(0x7173, 16, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        let cache_bytes = 512 << (sc.seed % 4);
+        let sm = metadata_cache_study(
+            &hw, &sc.layer, &fm, sc.mode, cache_bytes, TileOrder::SpatialMajor,
+        );
+        let cm = metadata_cache_study(
+            &hw, &sc.layer, &fm, sc.mode, cache_bytes, TileOrder::ChannelMajor,
+        );
+        match (sm, cm) {
+            (Ok(s), Ok(c)) => {
+                if s.requested_bits != c.requested_bits {
+                    return Err(format!(
+                        "{}: requested bits depend on tile order: {} vs {}",
+                        sc.mode.name(),
+                        s.requested_bits,
+                        c.requested_bits
+                    ));
+                }
+                if s.dram_bits > s.requested_bits || c.dram_bits > c.requested_bits {
+                    return Err("cache manufactured traffic".into());
+                }
+                Ok(())
+            }
+            (Err(a), Err(b)) if a == b => Ok(()),
+            (a, b) => Err(format!("applicability mismatch {a:?} vs {b:?}")),
+        }
+    });
+}
+
+/// Pricer edge geometries, directed at the boundaries the uniform
+/// random scenarios rarely hit: strides larger than the processing
+/// tile, 1×1(-ish) feature maps, and maps whose last window clips just
+/// past a tile boundary. The prefix-sum pricer must stay bit-exact
+/// with the naive oracle on all of them (and fail applicability
+/// identically).
+#[test]
+fn prop_pricer_edge_geometries() {
+    forall_res(
+        0xED6E,
+        30,
+        |r: &mut SplitMix64| {
+            let (k, s, h, w, c) = match r.below(3) {
+                // Stride exceeds every tile edge (tiles are <= 16 wide).
+                0 => (
+                    r.below(3),
+                    17 + r.below(8),
+                    24 + r.below(40),
+                    24 + r.below(40),
+                    8,
+                ),
+                // Degenerate 1x1 .. 3x3 maps.
+                1 => (r.below(2), 1 + r.below(2), 1 + r.below(3), 1 + r.below(3), 8 * (1 + r.below(2))),
+                // Clipped just past a tile boundary on both axes.
+                _ => (
+                    1 + r.below(2),
+                    1 + r.below(2),
+                    8 * (1 + r.below(4)) + 1 + r.below(6),
+                    16 * (1 + r.below(2)) + 1 + r.below(6),
+                    8,
+                ),
+            };
+            let scheme = match r.below(4) {
+                0 => Scheme::Bitmask,
+                1 => Scheme::Zrlc,
+                2 => Scheme::Dictionary,
+                _ => Scheme::Raw,
+            };
+            Scenario {
+                layer: ConvLayer { k, s, d: 1, h, w, c_in: c, c_out: c },
+                mode: DivisionMode::GrateTile { n: 8 }, // swept below
+                scheme,
+                density: r.next_f64(),
+                seed: r.next_u64(),
+            }
+        },
+        |sc| {
+            let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+            let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+            for platform in [Platform::NvidiaSmallTile, Platform::EyerissLargeTile] {
+                let hw = platform.hardware();
+                for mode in DivisionMode::table3_modes() {
+                    let fast = run_layer(&hw, &sc.layer, &fm, mode, sc.scheme);
+                    let slow = run_layer_naive(&hw, &sc.layer, &fm, mode, sc.scheme);
+                    match (fast, slow) {
+                        (Ok(f), Ok(s)) => {
+                            if (f.fetched_bits, f.metadata_bits, f.baseline_bits)
+                                != (s.fetched_bits, s.metadata_bits, s.baseline_bits)
+                            {
+                                return Err(format!(
+                                    "{} {} k={} s={} {h}x{w}x{c}: pricer ({}, {}, {}) != naive ({}, {}, {})",
+                                    hw.name,
+                                    mode.name(),
+                                    sc.layer.k,
+                                    sc.layer.s,
+                                    f.fetched_bits,
+                                    f.metadata_bits,
+                                    f.baseline_bits,
+                                    s.fetched_bits,
+                                    s.metadata_bits,
+                                    s.baseline_bits,
+                                ));
+                            }
+                        }
+                        (Err(a), Err(b)) if a == b => {}
+                        (f, s) => {
+                            return Err(format!(
+                                "{} {} k={} s={} {h}x{w}x{c}: applicability mismatch {f:?} vs {s:?}",
+                                hw.name,
+                                mode.name(),
+                                sc.layer.k,
+                                sc.layer.s,
+                            ))
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 /// The mod-reduction property at the full-division level: a mod-4
