@@ -37,7 +37,7 @@ fn main() -> gratetile::util::error::Result<()> {
     let (h, w, c) = (entry.input_dims[0], entry.input_dims[1], entry.input_dims[2]);
     let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
     cfg.mode = DivisionMode::GrateTile { n: 8 };
-    cfg.scheme = Scheme::Bitmask;
+    cfg.policy = Scheme::Bitmask.into();
     let runner = LayerRunner::new(cfg);
 
     let mut t = Table::new("E2E — JAX/Pallas CNN activations through the GrateTile pipeline")
@@ -65,8 +65,8 @@ fn main() -> gratetile::util::error::Result<()> {
 
         for (li, fm) in fms.iter().enumerate() {
             let layer = ConvLayer::new(1, 1, fm.h, fm.w, fm.c, fm.c);
-            let grate = run_layer(&cfg.hw, &layer, fm, DivisionMode::GrateTile { n: 8 }, cfg.scheme)?;
-            let uni = run_layer(&cfg.hw, &layer, fm, DivisionMode::Uniform { edge: 8 }, cfg.scheme)?;
+            let grate = run_layer(&cfg.hw, &layer, fm, DivisionMode::GrateTile { n: 8 }, cfg.policy)?;
+            let uni = run_layer(&cfg.hw, &layer, fm, DivisionMode::Uniform { edge: 8 }, cfg.policy)?;
 
             // Run the actual pipeline and verify against the dense oracle.
             let weights = Weights::random(&layer, 100 + li as u64);

@@ -18,7 +18,7 @@
 //! Results append to `results/bench.csv` and land machine-readable in
 //! `BENCH_PACK.json` at the repo root (CI uploads it as an artifact).
 
-use gratetile::compress::Scheme;
+use gratetile::compress::{CodecPolicy, Registry, Scheme};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::{ConvLayer, TileShape};
 use gratetile::layout::{Fetcher, Packer};
@@ -83,6 +83,42 @@ fn main() {
         );
     }
     set_threads(0);
+
+    // ---- Adaptive planning overhead (ISSUE 5 CI gate) ----
+    // Sizes-only packs time exactly the plan phase. The adaptive pass
+    // runs ONE fused stats scan tracking the union of every codec's
+    // needs (the same scan the dictionary codec already pays) plus four
+    // closed-form evaluations, so it must stay within 10% of the most
+    // demanding fixed codec's plan. BENCH_ADAPT.json records the
+    // trajectory.
+    let mut ba = Bencher::new();
+    set_threads(1);
+    let mut worst_fixed = f64::MIN;
+    for scheme in Registry::global().schemes() {
+        let packer = Packer::new(hw, scheme);
+        let s = ba.bench_bytes(
+            &format!("plan/grate8/{}/sizes@1", scheme.name()),
+            bytes,
+            || packer.pack(&fm, &grate, false).total_words,
+        );
+        worst_fixed = worst_fixed.max(s.median_ns);
+    }
+    let auto_packer = Packer::new(hw, CodecPolicy::Adaptive);
+    let auto_ns = ba
+        .bench_bytes("plan/grate8/auto/sizes@1", bytes, || {
+            auto_packer.pack(&fm, &grate, false).total_words
+        })
+        .median_ns;
+    set_threads(0);
+    let overhead = auto_ns / worst_fixed;
+    println!("plan/grate8 adaptive vs worst fixed codec          {overhead:>10.2}x");
+    assert!(
+        overhead < 1.10,
+        "ISSUE 5 acceptance: adaptive planning must add <10% plan-phase \
+         overhead vs fixed (worst fixed codec baseline), measured {overhead:.2}x"
+    );
+    ba.write_csv("perf_adapt");
+    ba.write_json("perf_adapt", "../BENCH_ADAPT.json");
 
     // ---- The classic mode sweep (perf trajectory continuity) ----
     for (label, mode) in [

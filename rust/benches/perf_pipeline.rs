@@ -23,7 +23,7 @@ fn main() {
     for depth in [1usize, 2, 4] {
         let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
         cfg.mode = DivisionMode::GrateTile { n: 8 };
-        cfg.scheme = Scheme::Bitmask;
+        cfg.policy = Scheme::Bitmask.into();
         cfg.prefetch_depth = depth;
         let runner = LayerRunner::new(cfg);
         let packed = runner.pack(&layer, &fm).unwrap();
@@ -43,7 +43,7 @@ fn main() {
     {
         let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
         cfg.mode = DivisionMode::GrateTile { n: 8 };
-        cfg.scheme = Scheme::Bitmask;
+        cfg.policy = Scheme::Bitmask.into();
         let runner = LayerRunner::new(cfg);
         let mut last = None;
         b.bench("pipeline/56x56x32/store-chain", || {

@@ -21,6 +21,7 @@ pub mod cost;
 pub mod dictionary;
 pub mod hwmodel;
 pub mod raw;
+pub mod registry;
 pub mod stats;
 pub mod zrlc;
 
@@ -28,6 +29,7 @@ pub use bitmask::Bitmask;
 pub use cost::CodecCost;
 pub use dictionary::Dictionary;
 pub use raw::RawDense;
+pub use registry::{CodecPolicy, Registry, RegistryEntry, TAG_BITS};
 pub use stats::{BlockStats, DistinctTracker, StatsAcc};
 pub use zrlc::Zrlc;
 
@@ -56,25 +58,26 @@ pub enum Scheme {
 }
 
 impl Scheme {
+    /// Canonical name — delegates to the [`Registry`], the single
+    /// name ⇄ codec table.
     pub fn name(&self) -> &'static str {
-        match self {
-            Scheme::Bitmask => "bitmask",
-            Scheme::Zrlc => "zrlc",
-            Scheme::Dictionary => "dictionary",
-            Scheme::Raw => "raw",
-        }
+        Registry::global().name_of(*self)
     }
 
+    /// Parse a codec name — the registry's parser, `Option`-shaped for
+    /// historical callers. New code should use [`Registry::parse`]
+    /// (which lists valid names on failure) or
+    /// [`Registry::parse_policy`] (which also accepts `auto`).
     pub fn parse(s: &str) -> Option<Scheme> {
-        match s {
-            "bitmask" => Some(Scheme::Bitmask),
-            "zrlc" => Some(Scheme::Zrlc),
-            "dictionary" | "dict" => Some(Scheme::Dictionary),
-            "raw" => Some(Scheme::Raw),
-            _ => None,
-        }
+        Registry::global().parse(s).ok()
     }
 
+    /// Construct a boxed instance of this scheme's codec (historical
+    /// API; each variant boxes the same configuration the registry's
+    /// shared instance uses — `Dictionary::default()` is the 256-entry
+    /// registry dictionary). Hot paths should prefer
+    /// [`Registry::compressor`], which hands out
+    /// `&'static dyn Compressor` without allocating.
     pub fn build(&self) -> Box<dyn Compressor> {
         match self {
             Scheme::Bitmask => Box::new(Bitmask),

@@ -1,0 +1,295 @@
+//! The codec registry and per-sub-tensor codec policy.
+//!
+//! GrateTile stores sub-tensors "in a compressed yet randomly accessible
+//! format" — nothing in that contract requires every sub-tensor of a
+//! layer to use the *same* codec. This module is the one place the crate
+//! knows which codecs exist:
+//!
+//! * [`Registry`] maps codec **name ⇄ on-format tag ⇄ compressor**. The
+//!   tag is the stable 2-bit identifier ([`TAG_BITS`]) written into
+//!   Fig. 7 block records and the `.grate` v2 TOC; the table order *is*
+//!   the tag assignment, so a new codec plugs in by appending one
+//!   [`RegistryEntry`] (and a [`Scheme`] variant) here — nothing outside
+//!   `compress/` enumerates codecs.
+//! * [`CodecPolicy`] is what every layer of the crate (packer, store
+//!   writer, fetcher, pricer, harness, CLI) is parameterised over:
+//!   `Fixed(scheme)` — one codec for the whole map (the historical
+//!   behaviour) — or `Adaptive` — pick the cheapest codec per
+//!   sub-tensor, paying [`TAG_BITS`] per record slot of indexing
+//!   overhead (the same trade the paper makes for its index).
+//!
+//! Adaptive selection is a pure function of the per-codec exact
+//! `(words, bits)` sizes ([`Registry::select`]): aligned divisions pay
+//! line-rounded words, so the key is `(words, bits)`; the compact
+//! Uniform 1×1×8 baseline pays idealised bits, so the key flips to
+//! `(bits, words)`. Ties resolve to the lowest tag, which makes the
+//! choice deterministic and identical across the packing engine, the
+//! seed-oracle packer and the streaming store writer (property-tested).
+
+use super::{Bitmask, Compressor, Dictionary, RawDense, Scheme, Zrlc};
+use crate::err;
+use crate::util::error::Result;
+
+/// On-format codec tag width in bits (2 bits address all 4 codecs; the
+/// registry asserts it never outgrows this).
+pub const TAG_BITS: usize = 2;
+
+/// One registered codec: its enum id, canonical name, accepted aliases
+/// and the shared compressor instance.
+pub struct RegistryEntry {
+    pub scheme: Scheme,
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub codec: &'static dyn Compressor,
+}
+
+static BITMASK: Bitmask = Bitmask;
+static ZRLC: Zrlc = Zrlc;
+static DICTIONARY: Dictionary = Dictionary { max_entries: 256 };
+static RAW: RawDense = RawDense;
+
+/// The registry table. **Order is the stable on-format tag**: bitmask=0,
+/// zrlc=1, dictionary=2, raw=3 (matching the `.grate` v1 scheme byte).
+static ENTRIES: [RegistryEntry; 4] = [
+    RegistryEntry { scheme: Scheme::Bitmask, name: "bitmask", aliases: &[], codec: &BITMASK },
+    RegistryEntry { scheme: Scheme::Zrlc, name: "zrlc", aliases: &[], codec: &ZRLC },
+    RegistryEntry {
+        scheme: Scheme::Dictionary,
+        name: "dictionary",
+        aliases: &["dict"],
+        codec: &DICTIONARY,
+    },
+    RegistryEntry { scheme: Scheme::Raw, name: "raw", aliases: &[], codec: &RAW },
+];
+
+static GLOBAL: Registry = Registry { entries: &ENTRIES };
+
+/// Name ⇄ tag ⇄ compressor lookup over the registered codecs.
+pub struct Registry {
+    entries: &'static [RegistryEntry],
+}
+
+impl Registry {
+    /// The process-wide registry of built-in codecs.
+    pub fn global() -> &'static Registry {
+        debug_assert!(ENTRIES.len() <= 1 << TAG_BITS, "registry outgrew the 2-bit tag");
+        &GLOBAL
+    }
+
+    /// All registered codecs, in tag order.
+    pub fn entries(&self) -> &'static [RegistryEntry] {
+        self.entries
+    }
+
+    /// All registered scheme ids, in tag order.
+    pub fn schemes(&self) -> Vec<Scheme> {
+        self.entries.iter().map(|e| e.scheme).collect()
+    }
+
+    /// Stable on-format tag of a scheme (its registry position).
+    pub fn tag_of(&self, scheme: Scheme) -> u8 {
+        self.entries
+            .iter()
+            .position(|e| e.scheme == scheme)
+            .expect("every Scheme variant is registered") as u8
+    }
+
+    /// Scheme for an on-format tag; errors on out-of-range tags (corrupt
+    /// container / record data).
+    pub fn scheme_of_tag(&self, tag: u8) -> Result<Scheme> {
+        self.entries
+            .get(tag as usize)
+            .map(|e| e.scheme)
+            .ok_or_else(|| err!("unknown codec tag {tag} (registry has {})", self.entries.len()))
+    }
+
+    /// The shared compressor instance for a scheme.
+    pub fn compressor(&self, scheme: Scheme) -> &'static dyn Compressor {
+        self.entries[self.tag_of(scheme) as usize].codec
+    }
+
+    /// The compressor for an (already validated) on-format tag.
+    pub fn compressor_of_tag(&self, tag: u8) -> &'static dyn Compressor {
+        self.entries[tag as usize].codec
+    }
+
+    /// Canonical name of a scheme.
+    pub fn name_of(&self, scheme: Scheme) -> &'static str {
+        self.entries[self.tag_of(scheme) as usize].name
+    }
+
+    /// Comma-separated valid codec names (for error messages / help).
+    pub fn valid_names(&self) -> String {
+        let names: Vec<&str> = self.entries.iter().map(|e| e.name).collect();
+        names.join(", ")
+    }
+
+    /// THE codec-name parser — the single one the CLI, the manifest and
+    /// the harness all go through. Unknown names list the valid codecs.
+    pub fn parse(&self, s: &str) -> Result<Scheme> {
+        self.entries
+            .iter()
+            .find(|e| e.name == s || e.aliases.contains(&s))
+            .map(|e| e.scheme)
+            .ok_or_else(|| err!("unknown codec '{s}' (valid: {}, auto)", self.valid_names()))
+    }
+
+    /// Parse a codec *policy*: a codec name for `Fixed`, or
+    /// `auto`/`adaptive` for per-sub-tensor selection.
+    pub fn parse_policy(&self, s: &str) -> Result<CodecPolicy> {
+        match s {
+            "auto" | "adaptive" => Ok(CodecPolicy::Adaptive),
+            other => self.parse(other).map(CodecPolicy::Fixed),
+        }
+    }
+
+    /// Largest distinct-value capacity any registered codec needs for
+    /// exact [`Compressor::sizes_from_stats`] sizing — the adaptive plan
+    /// pass tracks this once and sizes every codec from the same stats.
+    pub fn max_stats_dict_cap(&self) -> usize {
+        self.entries.iter().map(|e| e.codec.stats_dict_cap()).max().unwrap_or(0)
+    }
+
+    /// Whether any registered codec cannot size itself from `stats`
+    /// alone (and would need the gathered block in
+    /// [`Registry::sizes_from`]). Currently always false; exists so
+    /// lazy-gathering callers stay correct when a stats-blind codec is
+    /// registered.
+    pub fn any_stats_blind(&self, stats: &crate::compress::BlockStats) -> bool {
+        self.entries.iter().any(|e| e.codec.sizes_from_stats(stats).is_none())
+    }
+
+    /// THE adaptive sizing substrate: every registered codec's exact
+    /// `(words, bits)` for one sub-tensor, in tag order, written into
+    /// `out`. Sizes come from the fused `stats`; a stats-blind codec
+    /// falls back to `block` (the gathered elements — pass `None` only
+    /// when [`Registry::any_stats_blind`] is false). The packing
+    /// engine's plan pass and the streaming store writer both select
+    /// through here + [`Registry::select`], so the two can never drift
+    /// (the seed-oracle packer deliberately keeps its own
+    /// `compressed_sizes`-based path as the independent cross-check).
+    pub fn sizes_from(
+        &self,
+        stats: &crate::compress::BlockStats,
+        block: Option<&[f32]>,
+        out: &mut Vec<(usize, usize)>,
+    ) {
+        out.clear();
+        for e in self.entries {
+            out.push(e.codec.sizes_from_stats(stats).unwrap_or_else(|| {
+                e.codec
+                    .compressed_sizes(block.expect("stats-blind codec needs the gathered block"))
+            }));
+        }
+    }
+
+    /// Pick the cheapest codec for one sub-tensor: `sizes[tag]` is each
+    /// registered codec's exact `(words, bits)`. Aligned divisions pay
+    /// words (line-rounded, monotone in words) so the key is
+    /// `(words, bits)`; the compact baseline pays idealised bits so the
+    /// key is `(bits, words)`. Ties take the lowest tag. Returns the
+    /// winning tag.
+    pub fn select(&self, sizes: &[(usize, usize)], compact: bool) -> u8 {
+        debug_assert_eq!(sizes.len(), self.entries.len());
+        let key = |&(w, b): &(usize, usize)| if compact { (b, w) } else { (w, b) };
+        sizes
+            .iter()
+            .enumerate()
+            // min_by_key keeps the FIRST minimum — lowest tag on ties.
+            .min_by_key(|&(_, wb)| key(wb))
+            .map(|(i, _)| i as u8)
+            .expect("registry is never empty")
+    }
+}
+
+/// Which codec(s) a map is packed with — the parameter every storage
+/// and pricing entry point takes (replacing the bare [`Scheme`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecPolicy {
+    /// One codec for every sub-tensor (no tag overhead).
+    Fixed(Scheme),
+    /// Per-sub-tensor cheapest codec; each Fig. 7 record slot carries a
+    /// [`TAG_BITS`]-bit codec tag, accounted as metadata traffic.
+    Adaptive,
+}
+
+impl CodecPolicy {
+    /// Display/CLI name (`auto` for adaptive, the codec name otherwise).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecPolicy::Fixed(s) => Registry::global().name_of(*s),
+            CodecPolicy::Adaptive => "auto",
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, CodecPolicy::Adaptive)
+    }
+}
+
+impl From<Scheme> for CodecPolicy {
+    fn from(s: Scheme) -> CodecPolicy {
+        CodecPolicy::Fixed(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_stable_and_roundtrip() {
+        let r = Registry::global();
+        // The on-format contract: these exact tags are written to disk.
+        assert_eq!(r.tag_of(Scheme::Bitmask), 0);
+        assert_eq!(r.tag_of(Scheme::Zrlc), 1);
+        assert_eq!(r.tag_of(Scheme::Dictionary), 2);
+        assert_eq!(r.tag_of(Scheme::Raw), 3);
+        for s in r.schemes() {
+            assert_eq!(r.scheme_of_tag(r.tag_of(s)).unwrap(), s);
+            assert_eq!(r.compressor(s).scheme(), s);
+        }
+        assert!(r.scheme_of_tag(4).is_err());
+        assert!(r.entries().len() <= 1 << TAG_BITS);
+    }
+
+    #[test]
+    fn parse_names_aliases_and_policy() {
+        let r = Registry::global();
+        for s in r.schemes() {
+            assert_eq!(r.parse(r.name_of(s)).unwrap(), s);
+            assert_eq!(r.parse_policy(r.name_of(s)).unwrap(), CodecPolicy::Fixed(s));
+        }
+        assert_eq!(r.parse("dict").unwrap(), Scheme::Dictionary);
+        assert_eq!(r.parse_policy("auto").unwrap(), CodecPolicy::Adaptive);
+        assert_eq!(r.parse_policy("adaptive").unwrap(), CodecPolicy::Adaptive);
+        let e = r.parse("nope").unwrap_err().to_string();
+        assert!(e.contains("bitmask") && e.contains("raw") && e.contains("auto"), "{e}");
+        assert!(r.parse_policy("nope").is_err());
+    }
+
+    #[test]
+    fn select_minimises_the_paid_cost() {
+        let r = Registry::global();
+        // Aligned: words dominate, bits break ties.
+        assert_eq!(r.select(&[(9, 144), (12, 100), (9, 100), (20, 10)], false), 2);
+        // Compact: bits dominate.
+        assert_eq!(r.select(&[(9, 144), (12, 100), (9, 100), (20, 10)], true), 3);
+        // Ties resolve to the lowest tag (deterministic).
+        assert_eq!(r.select(&[(5, 80), (5, 80), (5, 80), (5, 80)], false), 0);
+    }
+
+    #[test]
+    fn policy_names_and_conversion() {
+        assert_eq!(CodecPolicy::Adaptive.name(), "auto");
+        assert_eq!(CodecPolicy::from(Scheme::Zrlc), CodecPolicy::Fixed(Scheme::Zrlc));
+        assert_eq!(CodecPolicy::Fixed(Scheme::Bitmask).name(), "bitmask");
+        assert!(CodecPolicy::Adaptive.is_adaptive());
+        assert!(!CodecPolicy::Fixed(Scheme::Raw).is_adaptive());
+    }
+
+    #[test]
+    fn max_stats_dict_cap_is_dictionarys() {
+        assert_eq!(Registry::global().max_stats_dict_cap(), 256);
+    }
+}

@@ -17,7 +17,7 @@
 use super::conv::{accumulate_tile, Weights};
 use super::metrics::PipelineMetrics;
 use crate::bail;
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::layout::fetcher::{DenseWindow, Fetcher};
@@ -43,14 +43,21 @@ const DECODE_CACHE_SUBTENSORS: usize = 32;
 pub struct PipelineConfig {
     pub hw: Hardware,
     pub mode: DivisionMode,
-    pub scheme: Scheme,
+    /// Codec policy for every packed/streamed map (fixed codec or
+    /// per-sub-tensor adaptive selection).
+    pub policy: CodecPolicy,
     /// Prefetch queue depth; 2 = classic double buffering.
     pub prefetch_depth: usize,
 }
 
 impl PipelineConfig {
     pub fn new(hw: Hardware) -> Self {
-        Self { hw, mode: DivisionMode::GrateTile { n: 8 }, scheme: Scheme::Bitmask, prefetch_depth: 2 }
+        Self {
+            hw,
+            mode: DivisionMode::GrateTile { n: 8 },
+            policy: CodecPolicy::Fixed(crate::compress::Scheme::Bitmask),
+            prefetch_depth: 2,
+        }
     }
 }
 
@@ -98,7 +105,7 @@ impl LayerRunner {
         let division =
             Division::build(self.cfg.mode, layer, &tile, &self.cfg.hw, fm.h, fm.w, fm.c)
                 .context("building division")?;
-        Ok(Packer::new(self.cfg.hw, self.cfg.scheme).pack(fm, &division, true))
+        Ok(Packer::new(self.cfg.hw, self.cfg.policy).pack(fm, &division, true))
     }
 
     /// Run one layer over a packed input; returns the ReLU'd output map
@@ -289,7 +296,7 @@ impl LayerRunner {
                 );
             }
         }
-        let mut writer = StoreWriter::new(store, output, out_division, self.cfg.scheme);
+        let mut writer = StoreWriter::new(store, output, out_division, self.cfg.policy);
 
         let depth = self.cfg.prefetch_depth.max(1);
         let (tx, rx) = sync_channel::<DenseWindow>(depth);

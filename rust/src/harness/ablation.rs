@@ -2,7 +2,7 @@
 //! codec cost/benefit, the whole-channel limitation (§IV-B(3)), and a
 //! modulus × compressor × sparsity sensitivity sweep.
 
-use crate::compress::Scheme;
+use crate::compress::{CodecPolicy, Registry, Scheme};
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::config::zoo::{network_layers, Network};
@@ -12,7 +12,9 @@ use crate::tiling::division::DivisionMode;
 use crate::util::table::Table;
 
 /// §V codec comparison: compression on the suite's operating point plus
-/// the hardware cost proxy.
+/// the hardware cost proxy, with the per-sub-tensor adaptive policy
+/// (`--codec auto`) as the final row (no single datapath cost applies —
+/// an adaptive fetcher provisions every decoder).
 pub fn ablation_codecs() -> Table {
     let mut t = Table::new("Ablation — compression codecs (§V)")
         .header(vec![
@@ -25,18 +27,19 @@ pub fn ablation_codecs() -> Table {
         ]);
     let hw = Platform::EyerissLargeTile.hardware();
     let layer = ConvLayer::new(1, 1, 56, 56, 64, 64);
-    for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw] {
-        let saving = |d: f64| {
-            let fm = generate(56, 56, 64, SparsityParams::clustered(d, 31));
-            run_layer(&hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, scheme)
-                .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
-                .unwrap_or("N/A".into())
-        };
-        let cost = scheme.build().cost();
+    let saving = |policy: CodecPolicy, d: f64| {
+        let fm = generate(56, 56, 64, SparsityParams::clustered(d, 31));
+        run_layer(&hw, &layer, &fm, DivisionMode::GrateTile { n: 8 }, policy)
+            .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
+            .unwrap_or("N/A".into())
+    };
+    for scheme in Registry::global().schemes() {
+        let policy = CodecPolicy::Fixed(scheme);
+        let cost = Registry::global().compressor(scheme).cost();
         t.row(vec![
             scheme.name().to_string(),
-            saving(0.37),
-            saving(0.15),
+            saving(policy, 0.37),
+            saving(policy, 0.15),
             format!("{:.1}", cost.decode_words_per_cycle(8)),
             format!("{:.1}", cost.area_gates(8) as f64 / 1000.0),
             if cost.area_gates(8) == 0 {
@@ -46,6 +49,14 @@ pub fn ablation_codecs() -> Table {
             },
         ]);
     }
+    t.row(vec![
+        "auto".to_string(),
+        saving(CodecPolicy::Adaptive, 0.37),
+        saving(CodecPolicy::Adaptive, 0.15),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
     t
 }
 
@@ -144,10 +155,31 @@ mod tests {
     use super::*;
 
     #[test]
-    fn codec_ablation_has_all_codecs() {
+    fn codec_ablation_has_all_codecs_and_auto() {
         let csv = ablation_codecs().render_csv();
-        for name in ["bitmask", "zrlc", "dictionary", "raw"] {
+        for name in ["bitmask", "zrlc", "dictionary", "raw", "auto"] {
             assert!(csv.contains(name), "{csv}");
+        }
+        // The auto row's saving must track the best fixed codec at both
+        // densities: its payload is the per-sub-tensor min, and the tag
+        // overhead is ~0.1pp of baseline at this geometry (plus up to
+        // 0.1pp of display rounding on each side).
+        let rows: Vec<Vec<f64>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| {
+                l.split(',')
+                    .skip(1)
+                    .take(2)
+                    .map(|v| v.parse().unwrap_or(f64::NAN))
+                    .collect()
+            })
+            .collect();
+        let auto = rows.last().unwrap();
+        for fixed in &rows[..rows.len() - 1] {
+            for (&a, &f) in auto.iter().zip(fixed) {
+                assert!(a >= f - 0.3, "auto {auto:?} vs fixed {fixed:?}");
+            }
         }
     }
 

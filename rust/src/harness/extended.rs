@@ -2,7 +2,7 @@
 //! DRAM access efficiency, metadata caching, and the codec datapath.
 
 use crate::compress::hwmodel::{decode_block, DecoderConfig};
-use crate::compress::Scheme;
+use crate::compress::{CodecPolicy, Scheme};
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::config::zoo::{full_conv_stack, Network};
@@ -17,16 +17,17 @@ use crate::tiling::division::{Division, DivisionMode};
 use crate::util::table::Table;
 
 /// Whole-network fetch + write-back traffic per division mode.
-pub fn network_table(scheme: Scheme) -> Table {
+pub fn network_table(policy: impl Into<CodecPolicy>) -> Table {
+    let policy = policy.into();
     let hw = Platform::EyerissLargeTile.hardware();
     let mut t = Table::new(&format!(
         "Whole-network DRAM traffic saving ({} compression, Eyeriss, read+write)",
-        scheme.name()
+        policy.name()
     ))
     .header(vec!["Network", "GrateTile mod 8 %", "Uniform 8x8x8 %", "Uniform 4x4x8 %"]);
     for net in Network::all() {
         let cell = |mode| {
-            let r = run_network_bandwidth(&hw, net, mode, scheme, 17);
+            let r = run_network_bandwidth(&hw, net, mode, policy, 17);
             format!("{:.1}", r.total_saving() * 100.0)
         };
         t.row(vec![
@@ -45,12 +46,13 @@ pub fn network_table(scheme: Scheme) -> Table {
 /// report's exact bits are set against `sim::network::writeback_cost`'s
 /// closed form. The Match column must read `exact` everywhere — the
 /// functional store and the analytic simulator are one model.
-pub fn store_compare_table(scheme: Scheme) -> Table {
+pub fn store_compare_table(policy: impl Into<CodecPolicy>) -> Table {
+    let policy = policy.into();
     let hw = Platform::EyerissLargeTile.hardware();
     let mode = DivisionMode::GrateTile { n: 8 };
     let mut t = Table::new(&format!(
         "Store write-back: functional (streamed) vs analytic bits ({}, GrateTile mod 8, Eyeriss)",
-        scheme.name()
+        policy.name()
     ))
     .header(vec![
         "Network",
@@ -71,14 +73,14 @@ pub fn store_compare_table(scheme: Scheme) -> Table {
                 layer.c_in,
                 SparsityParams::clustered(density, 17 ^ (i as u64) << 8),
             );
-            let Ok((payload, meta)) = writeback_cost(&hw, layer, &fm, mode, scheme) else {
+            let Ok((payload, meta)) = writeback_cost(&hw, layer, &fm, mode, policy) else {
                 continue;
             };
             let tile = hw.tile_for_layer(layer);
             let div = Division::build(mode, layer, &tile, &hw, fm.h, fm.w, fm.c)
                 .expect("writeback_cost built the same division");
             let mut store = TensorStore::new();
-            let mut w = StoreWriter::new(&mut store, "t", div, scheme);
+            let mut w = StoreWriter::new(&mut store, "t", div, policy);
             for y0 in (0..fm.h).step_by(8) {
                 let y1 = (y0 + 8).min(fm.h);
                 let band = fm.extract_block(y0, 0, 0, y1 - y0, fm.w, fm.c);
@@ -242,9 +244,10 @@ pub fn serve_scaling_table() -> Table {
 
 /// Roofline: compute/memory bound per benchmark layer and the runtime
 /// speedup GrateTile's bandwidth saving buys.
-pub fn roofline_table(scheme: Scheme) -> Table {
+pub fn roofline_table(policy: impl Into<CodecPolicy>) -> Table {
     use crate::power::{roofline, Machine};
     use crate::sim::experiment::suite_feature_maps;
+    let policy = policy.into();
     let machine = Machine::default();
     let hw = Platform::EyerissLargeTile.hardware();
     let mut t = Table::new(
@@ -253,7 +256,7 @@ pub fn roofline_table(scheme: Scheme) -> Table {
     .header(vec!["Layer", "Bound (dense)", "Feature saving %", "Speedup"]);
     for (b, fm) in suite_feature_maps() {
         if let Ok(r) =
-            roofline(&machine, &hw, &b.layer, fm, DivisionMode::GrateTile { n: 8 }, scheme)
+            roofline(&machine, &hw, &b.layer, fm, DivisionMode::GrateTile { n: 8 }, policy)
         {
             t.row(vec![
                 format!("{} {}", b.network.name(), b.name),
@@ -273,6 +276,17 @@ mod tests {
     #[test]
     fn store_compare_table_is_exact_everywhere() {
         let csv = store_compare_table(Scheme::Bitmask).render_csv();
+        assert!(csv.lines().count() > 4, "{csv}");
+        assert!(!csv.contains("MISMATCH"), "{csv}");
+        assert!(csv.contains("exact"));
+    }
+
+    /// Adaptive functional == analytic, tag bits included: the streamed
+    /// writer's per-sub-tensor codec choices and 2-bit record tags must
+    /// land on exactly the closed form's bits for every network map.
+    #[test]
+    fn store_compare_table_is_exact_under_adaptive() {
+        let csv = store_compare_table(CodecPolicy::Adaptive).render_csv();
         assert!(csv.lines().count() > 4, "{csv}");
         assert!(!csv.contains("MISMATCH"), "{csv}");
         assert!(csv.contains("exact"));

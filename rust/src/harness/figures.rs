@@ -1,6 +1,6 @@
 //! Figures 1, 8 and 9 of the paper.
 
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Platform;
 use crate::config::zoo::Network;
 use crate::power::{network_power, ArrayConfig, EnergyTable};
@@ -43,18 +43,19 @@ pub fn fig1() -> Table {
 
 /// Fig. 8: overall (geomean) bandwidth reduction per division mode on
 /// both platforms, with the optimal (zero-fraction) line.
-pub fn fig8(scheme: Scheme) -> Table {
+pub fn fig8(policy: impl Into<CodecPolicy>) -> Table {
+    let policy = policy.into();
     let modes = DivisionMode::table3_modes();
     let mut t = Table::new(&format!(
         "Fig. 8 — Overall bandwidth reduction (geomean, {} compression, with metadata)",
-        scheme.name()
+        policy.name()
     ))
     .header(vec!["Division mode", "NVIDIA %", "Eyeriss %"]);
     let hws = [
         Platform::NvidiaSmallTile.hardware(),
         Platform::EyerissLargeTile.hardware(),
     ];
-    let suites = run_suites(&hws, &modes, scheme);
+    let suites = run_suites(&hws, &modes, policy);
     let fmt = |v: Option<f64>| v.map(|x| format!("{:.1}", x * 100.0)).unwrap_or("N/A".into());
     for (i, mode) in modes.iter().enumerate() {
         t.row(vec![
@@ -72,9 +73,10 @@ pub fn fig8(scheme: Scheme) -> Table {
 }
 
 /// Fig. 9a/b: per-layer bandwidth reduction breakdown for one platform.
-pub fn fig9(platform: Platform, scheme: Scheme) -> Table {
+pub fn fig9(platform: Platform, policy: impl Into<CodecPolicy>) -> Table {
+    let policy = policy.into();
     let modes = DivisionMode::table3_modes();
-    let suite = run_suite_shared(&platform.hardware(), &modes, scheme);
+    let suite = run_suite_shared(&platform.hardware(), &modes, policy);
     let sub = match platform {
         Platform::NvidiaSmallTile => "a) small tile platform (NVIDIA Volta)",
         Platform::EyerissLargeTile => "b) large tile platform (Eyeriss)",
@@ -83,7 +85,7 @@ pub fn fig9(platform: Platform, scheme: Scheme) -> Table {
     header.extend(modes.iter().map(|m| m.name()));
     let mut t = Table::new(&format!(
         "Fig. 9{sub} — per-layer bandwidth reduction ({}, with metadata)",
-        scheme.name()
+        policy.name()
     ))
     .header(header);
     for (li, layer_name) in suite.layers.iter().enumerate() {

@@ -1,6 +1,6 @@
 //! Tables I–III of the paper.
 
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::layout::metadata::{metadata_bits_per_kb, metadata_overhead_fraction};
@@ -61,10 +61,11 @@ pub fn table2() -> Table {
 
 /// Table III: bandwidth saved with/without metadata overhead on both
 /// platforms, full benchmark suite.
-pub fn table3(scheme: Scheme) -> Table {
+pub fn table3(policy: impl Into<CodecPolicy>) -> Table {
+    let policy = policy.into();
     let mut t = Table::new(&format!(
         "Table III — Impact of metadata on bandwidth reduction ({} compression)",
-        scheme.name()
+        policy.name()
     ))
     .header(vec![
         "Division mode",
@@ -79,7 +80,7 @@ pub fn table3(scheme: Scheme) -> Table {
         Platform::NvidiaSmallTile.hardware(),
         Platform::EyerissLargeTile.hardware(),
     ];
-    let suites = run_suites(&hws, &modes, scheme);
+    let suites = run_suites(&hws, &modes, policy);
     let fmt = |v: Option<f64>| {
         v.map(|x| format!("{:.1}", x * 100.0)).unwrap_or_else(|| "N/A (a)".into())
     };

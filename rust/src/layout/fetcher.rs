@@ -17,7 +17,7 @@
 //!
 //! * **Popcount row-skipping** — a window that covers a sub-tensor only
 //!   partially (uniform divisions split windows, Fig. 3a) decodes just
-//!   the covered rows via [`Compressor::decompress_span`]: the bitmask
+//!   the covered rows via [`crate::compress::Compressor::decompress_span`]: the bitmask
 //!   codec skips to any element in O(mask words) by popcounting the
 //!   mask prefix. [`Fetcher::decoded_words`] exposes the saving.
 //! * **Decoded-sub-tensor LRU** ([`Fetcher::with_cache`]) — tiled
@@ -38,7 +38,7 @@
 //! per window.
 
 use super::packer::PackedFeatureMap;
-use crate::compress::{CompressedBlock, Compressor};
+use crate::compress::CompressedBlock;
 use crate::memsim::{Dram, Stream};
 use crate::tiling::division::{Division, Seg, SubTensorRef};
 
@@ -155,10 +155,13 @@ impl DecodedCache {
     }
 }
 
-/// Fetches windows from a packed feature map.
+/// Fetches windows from a packed feature map. The codec of each
+/// sub-tensor comes from the map's [`crate::compress::CodecPolicy`] —
+/// a mixed-codec (adaptive) map decodes each sub-tensor with the codec
+/// its 2-bit record tag names, via the shared
+/// [`crate::compress::Registry`] (no per-fetch allocation).
 pub struct Fetcher<'a> {
     packed: &'a PackedFeatureMap,
-    codec: Box<dyn Compressor>,
     scratch: Vec<f32>,
     comp_words: Vec<u16>,
     source: Box<dyn PayloadSource + 'a>,
@@ -189,7 +192,6 @@ impl<'a> Fetcher<'a> {
     ) -> Self {
         Self {
             packed,
-            codec: packed.scheme.build(),
             scratch: Vec::new(),
             comp_words: Vec::new(),
             source,
@@ -251,7 +253,10 @@ impl<'a> Fetcher<'a> {
         // The touched blocks form an axis-aligned box (block ids are
         // non-decreasing along each axis), so walk the block ranges
         // directly instead of deduplicating per sub-tensor (the old
-        // `touched_blocks.contains` scan was O(touched²)).
+        // `touched_blocks.contains` scan was O(touched²)). The record
+        // width is policy-aware: adaptive maps pay the 2-bit codec tags
+        // as part of each record read.
+        let record_bits = self.packed.record_bits() as u64;
         let yr = Division::covering(&div.ys, y0, y1);
         let xr = Division::covering(&div.xs, x0, x1);
         let cg0 = c0 / div.cd;
@@ -260,7 +265,7 @@ impl<'a> Fetcher<'a> {
             let n_by = div.block_of_y[yr.end - 1] - div.block_of_y[yr.start] + 1;
             let n_bx = div.block_of_x[xr.end - 1] - div.block_of_x[xr.start] + 1;
             for _ in 0..n_by * n_bx * (cg1 - cg0) {
-                dram.account_bits(Stream::MetadataRead, div.meta_bits_per_block as u64);
+                dram.account_bits(Stream::MetadataRead, record_bits);
             }
         }
 
@@ -285,6 +290,7 @@ impl<'a> Fetcher<'a> {
     ) {
         let div: &Division = &self.packed.division;
         let li = div.linear(r);
+        let codec = self.packed.compressor_of(li);
         let addr = self.packed.addr_words[li];
         let size = self.packed.sizes_words[li] as u64;
         // The whole compressed sub-tensor moves (not randomly accessible
@@ -344,7 +350,7 @@ impl<'a> Fetcher<'a> {
             'rows: for y in iy0..iy1 {
                 for x in ix0..ix1 {
                     let start = ((y - sy.start) * sx.len + (x - sx.start)) * cd + (ic0 - scg0);
-                    if !self.codec.decompress_span(&comp, start, &mut self.scratch[..run]) {
+                    if !codec.decompress_span(&comp, start, &mut self.scratch[..run]) {
                         // Codec cannot random-access its stream (first
                         // call, nothing decoded yet) — full decode below.
                         fast = false;
@@ -363,7 +369,7 @@ impl<'a> Fetcher<'a> {
 
         self.scratch.clear();
         self.scratch.resize(n, 0.0);
-        self.codec.decompress(&comp, &mut self.scratch);
+        codec.decompress(&comp, &mut self.scratch);
         self.decoded_words += n as u64;
         copy_intersection(
             &self.scratch,

@@ -66,6 +66,27 @@ pub struct BlockRecord {
     /// Compressed sizes (words) of the block's sub-tensors in raster
     /// order (y-major, then x, for the block's segment ranges).
     pub sizes_words: Vec<u32>,
+    /// Per-sub-tensor codec tags (registry ids), parallel to
+    /// `sizes_words` — present only under
+    /// [`crate::compress::CodecPolicy::Adaptive`] (empty = the map's
+    /// uniform codec applies).
+    pub codec_tags: Vec<u8>,
+}
+
+/// Record width in bits for a division under a codec policy: the Fig. 7
+/// base record plus, in adaptive mode, one
+/// [`crate::compress::TAG_BITS`]-bit codec tag per record slot (the
+/// record format is fixed-width, so every record pays the division's
+/// maximum slot count, exactly like the base size fields). This is the
+/// single constant the packer, store writer, fetcher and pricer all
+/// account metadata traffic with.
+pub fn record_bits_for(division: &Division, policy: crate::compress::CodecPolicy) -> usize {
+    division.meta_bits_per_block
+        + if policy.is_adaptive() {
+            crate::compress::TAG_BITS * division.record_slots()
+        } else {
+            0
+        }
 }
 
 /// The metadata table: one record per (block_y, block_x, cgroup).

@@ -30,8 +30,8 @@
 //! (`tests/property.rs::prop_engine_matches_seed_packer`,
 //! `benches/perf_pack.rs` asserts both bit-exactness and the speedup).
 
-use super::metadata::{BlockRecord, MetadataTable};
-use crate::compress::{Compressor, DistinctTracker, Scheme, StatsAcc};
+use super::metadata::{record_bits_for, BlockRecord, MetadataTable};
+use crate::compress::{CodecPolicy, Compressor, DistinctTracker, Registry, Scheme, StatsAcc};
 use crate::config::hardware::Hardware;
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, SubTensorRef};
@@ -48,7 +48,13 @@ const PAR_MIN_ELEMS: usize = 1 << 16;
 #[derive(Debug, Clone)]
 pub struct PackedFeatureMap {
     pub division: Division,
-    pub scheme: Scheme,
+    /// Codec policy the map was packed under.
+    pub policy: CodecPolicy,
+    /// Per-sub-tensor codec tags (registry ids), indexed by
+    /// `division.linear(ref)`. Empty under `Fixed` (uniform codec);
+    /// in adaptive mode the same tags also sit in every
+    /// [`BlockRecord::codec_tags`] slot (the Fig. 7 on-format home).
+    pub tags: Vec<u8>,
     /// Compressed size in words, indexed by `division.linear(ref)`.
     pub sizes_words: Vec<u32>,
     /// Idealised compressed size in bits (no word padding), same
@@ -126,6 +132,62 @@ impl PackedFeatureMap {
         let dense = (self.division.fm_h * self.division.fm_w * self.division.fm_c) as f64;
         self.total_words as f64 / dense
     }
+
+    /// Codec of one sub-tensor by linear index (the map's uniform codec
+    /// under `Fixed`, the stored 2-bit tag under `Adaptive`).
+    pub fn scheme_of(&self, li: usize) -> Scheme {
+        match self.policy {
+            CodecPolicy::Fixed(s) => s,
+            CodecPolicy::Adaptive => Registry::global().entries()[self.tags[li] as usize].scheme,
+        }
+    }
+
+    /// The registry compressor for one sub-tensor.
+    pub fn compressor_of(&self, li: usize) -> &'static dyn Compressor {
+        match self.policy {
+            CodecPolicy::Fixed(s) => Registry::global().compressor(s),
+            CodecPolicy::Adaptive => Registry::global().compressor_of_tag(self.tags[li]),
+        }
+    }
+
+    /// Metadata record width in bits, codec tags included — what one
+    /// touched block costs to read or write (`metadata.bits_per_record`,
+    /// which the packer/writer set via
+    /// [`super::metadata::record_bits_for`]).
+    pub fn record_bits(&self) -> usize {
+        self.metadata.bits_per_record
+    }
+
+    /// Total metadata bits of the map (records × tag-aware width) — the
+    /// producer-side index cost the analytic model and the streaming
+    /// writer both charge.
+    pub fn meta_total_bits(&self) -> u64 {
+        self.metadata.total_bits()
+    }
+
+    /// Human-readable codec description: the codec name for fixed maps,
+    /// `auto(name:count,...)` with the per-codec sub-tensor histogram
+    /// for adaptive ones.
+    pub fn codec_summary(&self) -> String {
+        match self.policy {
+            CodecPolicy::Fixed(s) => s.name().to_string(),
+            CodecPolicy::Adaptive => {
+                let reg = Registry::global();
+                let mut counts = vec![0usize; reg.entries().len()];
+                for &t in &self.tags {
+                    counts[t as usize] += 1;
+                }
+                let parts: Vec<String> = reg
+                    .entries()
+                    .iter()
+                    .zip(&counts)
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(e, c)| format!("{}:{c}", e.name))
+                    .collect();
+                format!("auto({})", parts.join(","))
+            }
+        }
+    }
 }
 
 /// Sub-tensor geometry by linear index: `(y seg, x seg, c0, depth)`.
@@ -144,17 +206,21 @@ fn geom(
 }
 
 /// Per-worker scratch for the plan phase: the distinct-value tracker
-/// (dictionary codec only) and a gather buffer for the stats-less
-/// fallback.
+/// (dictionary codec only), a gather buffer for the stats-less
+/// fallback, and the per-codec size buffer adaptive selection reuses
+/// across sub-tensors.
 struct PlanScratch {
     tracker: Option<DistinctTracker>,
     block: Vec<f32>,
+    sizes: Vec<(usize, usize)>,
 }
 
-/// Plan-phase output: exact per-sub-tensor sizes.
+/// Plan-phase output: exact per-sub-tensor sizes, plus the winning
+/// codec tag per sub-tensor in adaptive mode (empty otherwise).
 struct SizePlan {
     words: Vec<u32>,
     bits: Vec<u32>,
+    tags: Vec<u8>,
 }
 
 /// One metadata block's payload extent and its sub-tensors
@@ -181,22 +247,25 @@ struct AddressPlan {
     payload_words: u64,
 }
 
-/// Packs feature maps under a division + compression scheme.
+/// Packs feature maps under a division + codec policy.
 pub struct Packer {
     pub hw: Hardware,
-    pub scheme: Scheme,
+    pub policy: CodecPolicy,
 }
 
 impl Packer {
-    pub fn new(hw: Hardware, scheme: Scheme) -> Self {
-        Self { hw, scheme }
+    pub fn new(hw: Hardware, policy: impl Into<CodecPolicy>) -> Self {
+        Self { hw, policy: policy.into() }
     }
 
     /// Pack `fm` under `division` with the plan/execute engine.
     /// `with_payload` materialises the compressed byte stream (needed by
     /// the fetch/decompress path; the bandwidth simulator only needs
     /// sizes). Bit-exact with [`Packer::pack_reference`] and
-    /// deterministic for every worker count.
+    /// deterministic for every worker count. Under
+    /// [`CodecPolicy::Adaptive`] the plan pass sizes every registered
+    /// codec from the same fused stats and keeps the per-sub-tensor
+    /// winner — selection is free on top of the existing scan.
     pub fn pack(
         &self,
         fm: &FeatureMap,
@@ -208,22 +277,23 @@ impl Packer {
             (division.fm_h, division.fm_w, division.fm_c),
             "division was built for a different map shape"
         );
-        let codec = self.scheme.build();
         let parallel = fm.words() >= PAR_MIN_ELEMS;
-        let plan = plan_sizes(fm, division, &*codec, parallel);
+        let plan = plan_sizes(fm, division, self.policy, parallel);
         let wpl = self.hw.words_per_line;
-        let layout = assign_addresses(division, &plan.words, wpl, with_payload);
-        let payload = with_payload
-            .then(|| execute_payload(fm, division, &*codec, &plan.words, &layout, parallel));
+        let layout = assign_addresses(division, &plan.words, &plan.tags, wpl, with_payload);
+        let payload = with_payload.then(|| {
+            execute_payload(fm, division, self.policy, &plan, &layout, parallel)
+        });
         PackedFeatureMap {
             division: division.clone(),
-            scheme: self.scheme,
+            policy: self.policy,
+            tags: plan.tags,
             sizes_words: plan.words,
             sizes_bits: plan.bits,
             addr_words: layout.addr_words,
             metadata: MetadataTable {
                 records: layout.records,
-                bits_per_record: division.meta_bits_per_block,
+                bits_per_record: record_bits_for(division, self.policy),
             },
             payload,
             total_words: layout.total_words,
@@ -234,7 +304,11 @@ impl Packer {
     /// The seed packer, kept verbatim as the engine's oracle: serial
     /// raster walk, per-block gather, per-codec sizing scans, growing
     /// cursor. Property tests and `benches/perf_pack.rs` hold
-    /// [`Packer::pack`] bit-exact to (and faster than) this.
+    /// [`Packer::pack`] bit-exact to (and faster than) this. In
+    /// adaptive mode the oracle selects from the *real* codecs'
+    /// `compressed_sizes` — an independent path from the engine's
+    /// stats-derived sizing, so the property tests also pin the two
+    /// sizing substrates against each other.
     pub fn pack_reference(
         &self,
         fm: &FeatureMap,
@@ -246,10 +320,16 @@ impl Packer {
             (division.fm_h, division.fm_w, division.fm_c),
             "division was built for a different map shape"
         );
-        let codec = self.scheme.build();
+        let reg = Registry::global();
+        let adaptive = self.policy.is_adaptive();
+        let fixed_codec = match self.policy {
+            CodecPolicy::Fixed(s) => Some(reg.compressor(s)),
+            CodecPolicy::Adaptive => None,
+        };
         let n = division.n_subtensors();
         let mut sizes_words = vec![0u32; n];
         let mut sizes_bits = vec![0u32; n];
+        let mut tags: Vec<u8> = if adaptive { vec![0; n] } else { Vec::new() };
         let mut addr_words = vec![0u64; n];
         let mut payload: Option<Vec<u16>> = if with_payload { Some(Vec::new()) } else { None };
         let mut records: Vec<BlockRecord> = Vec::with_capacity(division.n_blocks());
@@ -257,6 +337,7 @@ impl Packer {
         let wpl = self.hw.words_per_line;
         let mut cursor: u64 = 0;
         let mut block = Vec::with_capacity(64);
+        let mut sizes_scratch: Vec<(usize, usize)> = Vec::new();
 
         // Raster order over metadata blocks; sub-tensors inside a block
         // in (y, x) raster order — the Fig. 7b layout.
@@ -271,6 +352,11 @@ impl Packer {
                     }
                     let pointer_words = cursor;
                     let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                    let mut rec_tags = Vec::with_capacity(if adaptive {
+                        yr.len() * xr.len()
+                    } else {
+                        0
+                    });
                     for iy in yr.clone() {
                         for ix in xr.clone() {
                             let r = SubTensorRef { iy, ix, icg };
@@ -287,6 +373,24 @@ impl Packer {
                                 &mut block,
                             );
                             let li = division.linear(r);
+                            let codec: &dyn Compressor = match fixed_codec {
+                                Some(c) => c,
+                                None => {
+                                    // Oracle selection: every registered
+                                    // codec's real sizes, then the shared
+                                    // deterministic min rule.
+                                    sizes_scratch.clear();
+                                    sizes_scratch.extend(
+                                        reg.entries()
+                                            .iter()
+                                            .map(|e| e.codec.compressed_sizes(&block)),
+                                    );
+                                    let tag = reg.select(&sizes_scratch, division.compact);
+                                    tags[li] = tag;
+                                    rec_tags.push(tag);
+                                    reg.compressor_of_tag(tag)
+                                }
+                            };
                             sizes_bits[li] = codec.compressed_bits(&block) as u32;
                             if let Some(p) = &mut payload {
                                 let comp = codec.compress(&block);
@@ -314,7 +418,11 @@ impl Packer {
                             rec_sizes.push(sizes_words[li]);
                         }
                     }
-                    records.push(BlockRecord { pointer_words, sizes_words: rec_sizes });
+                    records.push(BlockRecord {
+                        pointer_words,
+                        sizes_words: rec_sizes,
+                        codec_tags: rec_tags,
+                    });
                 }
             }
         }
@@ -322,13 +430,14 @@ impl Packer {
         let total_words = if division.compact { cursor } else { round_up(cursor as usize, wpl) as u64 };
         PackedFeatureMap {
             division: division.clone(),
-            scheme: self.scheme,
+            policy: self.policy,
+            tags,
             sizes_words,
             sizes_bits,
             addr_words,
             metadata: MetadataTable {
                 records,
-                bits_per_record: division.meta_bits_per_block,
+                bits_per_record: record_bits_for(division, self.policy),
             },
             payload,
             total_words,
@@ -339,18 +448,29 @@ impl Packer {
 
 /// Plan phase: exact `(words, bits)` for every sub-tensor from one fused
 /// stats pass each, streamed row-by-row straight off the feature map —
-/// no gather, no per-codec re-scan.
+/// no gather, no per-codec re-scan. Under [`CodecPolicy::Adaptive`] the
+/// same single pass tracks the union of every registered codec's stats
+/// needs (`Registry::max_stats_dict_cap`), every codec's closed-form
+/// size is evaluated from it, and the winner's tag is kept — selection
+/// costs four formula evaluations per sub-tensor, not extra scans.
 fn plan_sizes(
     fm: &FeatureMap,
     division: &Division,
-    codec: &dyn Compressor,
+    policy: CodecPolicy,
     parallel: bool,
 ) -> SizePlan {
+    let reg = Registry::global();
     let n = division.n_subtensors();
-    let dict_cap = codec.stats_dict_cap();
+    let (dict_cap, fixed_codec) = match policy {
+        CodecPolicy::Fixed(s) => {
+            let codec = reg.compressor(s);
+            (codec.stats_dict_cap(), Some(codec))
+        }
+        CodecPolicy::Adaptive => (reg.max_stats_dict_cap(), None),
+    };
     let data = fm.as_slice();
 
-    let size_one = |st: &mut PlanScratch, li: usize| -> (u32, u32) {
+    let size_one = |st: &mut PlanScratch, li: usize| -> (u32, u32, u8) {
         let (sy, sx, c0, cdep) = geom(division, li);
         let mut acc = StatsAcc::new(dict_cap, st.tracker.as_mut());
         for y in sy.start..sy.end() {
@@ -360,22 +480,46 @@ fn plan_sizes(
                 acc.feed(&data[px..px + cdep]);
             }
         }
-        match codec.sizes_from_stats(&acc.finish()) {
-            Some((w, b)) => (w as u32, b as u32),
+        let stats = acc.finish();
+        match fixed_codec {
+            Some(codec) => match codec.sizes_from_stats(&stats) {
+                Some((w, b)) => (w as u32, b as u32, 0),
+                None => {
+                    // Stats-blind codec: gather once, size in one scan.
+                    fm.extract_block_into(
+                        sy.start, sx.start, c0, sy.len, sx.len, cdep, &mut st.block,
+                    );
+                    let (w, b) = codec.compressed_sizes(&st.block);
+                    (w as u32, b as u32, 0)
+                }
+            },
             None => {
-                // Stats-blind codec: gather once, size both in one scan.
-                fm.extract_block_into(sy.start, sx.start, c0, sy.len, sx.len, cdep, &mut st.block);
-                let (w, b) = codec.compressed_sizes(&st.block);
-                (w as u32, b as u32)
+                // Adaptive: size every codec from the shared stats via
+                // the registry's one sizing substrate (a stats-blind
+                // codec would need the gathered block), then the
+                // deterministic min.
+                let block = if reg.any_stats_blind(&stats) {
+                    fm.extract_block_into(
+                        sy.start, sx.start, c0, sy.len, sx.len, cdep, &mut st.block,
+                    );
+                    Some(st.block.as_slice())
+                } else {
+                    None
+                };
+                reg.sizes_from(&stats, block, &mut st.sizes);
+                let tag = reg.select(&st.sizes, division.compact);
+                let (w, b) = st.sizes[tag as usize];
+                (w as u32, b as u32, tag)
             }
         }
     };
     let init = || PlanScratch {
         tracker: (dict_cap > 0).then(DistinctTracker::new),
         block: Vec::new(),
+        sizes: Vec::new(),
     };
 
-    let sizes: Vec<(u32, u32)> = if parallel && n > 1 {
+    let sizes: Vec<(u32, u32, u8)> = if parallel && n > 1 {
         let idxs: Vec<usize> = (0..n).collect();
         par_map_init(&idxs, init, |st, _, &li| size_one(st, li))
     } else {
@@ -385,6 +529,7 @@ fn plan_sizes(
     SizePlan {
         words: sizes.iter().map(|s| s.0).collect(),
         bits: sizes.iter().map(|s| s.1).collect(),
+        tags: if policy.is_adaptive() { sizes.iter().map(|s| s.2).collect() } else { Vec::new() },
     }
 }
 
@@ -395,6 +540,7 @@ fn plan_sizes(
 fn assign_addresses(
     division: &Division,
     sizes_words: &[u32],
+    tags: &[u8],
     wpl: usize,
     want_spans: bool,
 ) -> AddressPlan {
@@ -415,6 +561,8 @@ fn assign_addresses(
                 }
                 let pointer_words = cursor;
                 let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                let mut rec_tags =
+                    Vec::with_capacity(if tags.is_empty() { 0 } else { yr.len() * xr.len() });
                 let mut subs = Vec::with_capacity(if want_spans { yr.len() * xr.len() } else { 0 });
                 for iy in yr.clone() {
                     for ix in xr.clone() {
@@ -428,9 +576,16 @@ fn assign_addresses(
                         }
                         cursor += sizes_words[li] as u64;
                         rec_sizes.push(sizes_words[li]);
+                        if !tags.is_empty() {
+                            rec_tags.push(tags[li]);
+                        }
                     }
                 }
-                records.push(BlockRecord { pointer_words, sizes_words: rec_sizes });
+                records.push(BlockRecord {
+                    pointer_words,
+                    sizes_words: rec_sizes,
+                    codec_tags: rec_tags,
+                });
                 if want_spans {
                     spans.push(BlockSpan { start: pointer_words, end: cursor, subs });
                 }
@@ -452,11 +607,19 @@ fn assign_addresses(
 fn execute_payload(
     fm: &FeatureMap,
     division: &Division,
-    codec: &dyn Compressor,
-    sizes_words: &[u32],
+    policy: CodecPolicy,
+    plan: &SizePlan,
     layout: &AddressPlan,
     parallel: bool,
 ) -> Vec<u16> {
+    let reg = Registry::global();
+    let sizes_words = &plan.words;
+    let codec_of = |li: usize| -> &'static dyn Compressor {
+        match policy {
+            CodecPolicy::Fixed(s) => reg.compressor(s),
+            CodecPolicy::Adaptive => reg.compressor_of_tag(plan.tags[li]),
+        }
+    };
     struct BlockTask<'p, 's> {
         base: u64,
         out: &'p mut [u16],
@@ -484,6 +647,7 @@ fn execute_payload(
         for &(li, addr) in task.subs {
             let (sy, sx, c0, cdep) = geom(division, li);
             fm.extract_block_into(sy.start, sx.start, c0, sy.len, sx.len, cdep, scratch);
+            let codec = codec_of(li);
             let comp = codec.compress(scratch);
             assert_eq!(
                 comp.words.len() as u32,
@@ -574,26 +738,29 @@ mod tests {
     }
 
     /// The engine's defining invariant at unit scale: identical output
-    /// to the seed oracle for every mode × scheme, payload included.
+    /// to the seed oracle for every mode × policy (all fixed codecs AND
+    /// adaptive), payload and codec tags included.
     #[test]
     fn engine_matches_reference_packer() {
         let hw = Platform::NvidiaSmallTile.hardware();
+        let mut policies: Vec<CodecPolicy> =
+            Registry::global().schemes().into_iter().map(CodecPolicy::Fixed).collect();
+        policies.push(CodecPolicy::Adaptive);
         for mode in [
             DivisionMode::GrateTile { n: 8 },
             DivisionMode::Uniform { edge: 4 },
             DivisionMode::Uniform { edge: 1 },
             DivisionMode::WholeMap,
         ] {
-            for scheme in
-                [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary, Scheme::Raw]
-            {
+            for policy in &policies {
                 let (fm, div, _) = setup(mode, 0.4);
-                let packer = Packer::new(hw, scheme);
+                let packer = Packer::new(hw, *policy);
                 let a = packer.pack_reference(&fm, &div, true);
                 let b = packer.pack(&fm, &div, true);
-                let tag = format!("{mode:?} {scheme:?}");
+                let tag = format!("{mode:?} {policy:?}");
                 assert_eq!(a.sizes_words, b.sizes_words, "{tag} sizes_words");
                 assert_eq!(a.sizes_bits, b.sizes_bits, "{tag} sizes_bits");
+                assert_eq!(a.tags, b.tags, "{tag} codec tags");
                 assert_eq!(a.addr_words, b.addr_words, "{tag} addr_words");
                 assert_eq!(a.total_words, b.total_words, "{tag} total_words");
                 assert_eq!(a.payload, b.payload, "{tag} payload");
@@ -605,9 +772,62 @@ mod tests {
                 for (ra, rb) in a.metadata.records.iter().zip(&b.metadata.records) {
                     assert_eq!(ra.pointer_words, rb.pointer_words, "{tag} pointer");
                     assert_eq!(ra.sizes_words, rb.sizes_words, "{tag} record sizes");
+                    assert_eq!(ra.codec_tags, rb.codec_tags, "{tag} record tags");
                 }
             }
         }
+    }
+
+    /// Adaptive selection is per-sub-tensor optimal: every sub-tensor's
+    /// packed size equals the minimum over all fixed codecs' sizes for
+    /// that sub-tensor, so the adaptive payload never exceeds any fixed
+    /// codec's.
+    #[test]
+    fn adaptive_is_per_subtensor_min() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 1 }] {
+            let (fm, div, _) = setup(mode, 0.4);
+            let auto = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &div, false);
+            let fixed: Vec<PackedFeatureMap> = Registry::global()
+                .schemes()
+                .into_iter()
+                .map(|s| Packer::new(hw, s).pack(&fm, &div, false))
+                .collect();
+            for li in 0..div.n_subtensors() {
+                let min_words = fixed.iter().map(|p| p.sizes_words[li]).min().unwrap();
+                let min_bits = fixed.iter().map(|p| p.sizes_bits[li]).min().unwrap();
+                if div.compact {
+                    assert_eq!(auto.sizes_bits[li], min_bits, "sub {li} bits");
+                } else {
+                    assert_eq!(auto.sizes_words[li], min_words, "sub {li} words");
+                }
+            }
+            for p in &fixed {
+                assert!(auto.total_words <= p.total_words, "{mode:?} vs {:?}", p.policy);
+            }
+        }
+    }
+
+    /// Adaptive metadata records carry one tag per slot and the record
+    /// width accounts TAG_BITS per slot on top of the Fig. 7 base.
+    #[test]
+    fn adaptive_records_carry_tags_and_widen() {
+        use crate::compress::TAG_BITS;
+        let (fm, div, _) = setup(DivisionMode::GrateTile { n: 8 }, 0.4);
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let auto = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &div, false);
+        let fixed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &div, false);
+        assert_eq!(
+            auto.record_bits(),
+            fixed.record_bits() + TAG_BITS * div.record_slots()
+        );
+        assert_eq!(auto.tags.len(), div.n_subtensors());
+        for rec in &auto.metadata.records {
+            assert_eq!(rec.codec_tags.len(), rec.sizes_words.len());
+        }
+        // Fixed maps carry no tags at all.
+        assert!(fixed.tags.is_empty());
+        assert!(fixed.metadata.records.iter().all(|r| r.codec_tags.is_empty()));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! gratetile table1|table2|table3|fig1|fig8|fig9      # paper artefacts
-//! gratetile sweep --density 0.37 --scheme bitmask    # one-layer sweep
+//! gratetile sweep --density 0.37 --codec bitmask     # one-layer sweep (--codec auto = adaptive)
 //! gratetile ablation --codecs|--whole-channel|--sweep|--dilated
 //! gratetile e2e [--mode grate8] [--requests 4]       # PJRT end-to-end
 //! gratetile serve --workers 4 --requests 32          # serving simulator (--wall for host time)
@@ -14,7 +14,7 @@
 use gratetile::cli::Cli;
 use gratetile::util::error::Result;
 use gratetile::{bail, err};
-use gratetile::compress::Scheme;
+use gratetile::compress::{CodecPolicy, Registry};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::coordinator::{
@@ -60,33 +60,38 @@ fn parse_mode(s: &str) -> Result<DivisionMode> {
     })
 }
 
-fn parse_scheme(s: &str) -> Result<Scheme> {
-    Scheme::parse(s).ok_or_else(|| err!("unknown scheme '{s}'"))
+/// The one codec-name parser (satisfying ISSUE 5's dedup): the
+/// registry resolves names/aliases and `auto`, and lists the valid
+/// codecs on failure.
+fn parse_policy(s: &str) -> Result<CodecPolicy> {
+    Registry::global().parse_policy(s)
 }
 
 fn run(cli: &Cli) -> Result<()> {
     if let Some(jobs) = cli.opt_parsed::<usize>("jobs") {
         gratetile::util::parallel::set_threads(jobs);
     }
-    let scheme = parse_scheme(cli.opt_or("scheme", "bitmask"))?;
+    // `--codec` is canonical; `--scheme` stays as an alias.
+    let policy =
+        parse_policy(cli.opt("codec").or(cli.opt("scheme")).unwrap_or("bitmask"))?;
     match cli.command.as_str() {
         "table1" => emit(cli, "table1", harness::table1()),
         "table2" => emit(cli, "table2", harness::table2()),
-        "table3" => emit(cli, "table3", harness::table3(scheme)),
+        "table3" => emit(cli, "table3", harness::table3(policy)),
         "fig1" => emit(cli, "fig1", harness::fig1()),
-        "fig8" => emit(cli, "fig8", harness::fig8(scheme)),
+        "fig8" => emit(cli, "fig8", harness::fig8(policy)),
         "fig9" => {
-            emit(cli, "fig9a", harness::fig9(Platform::NvidiaSmallTile, scheme));
-            emit(cli, "fig9b", harness::fig9(Platform::EyerissLargeTile, scheme));
+            emit(cli, "fig9a", harness::fig9(Platform::NvidiaSmallTile, policy));
+            emit(cli, "fig9b", harness::fig9(Platform::EyerissLargeTile, policy));
         }
         "all" => {
             emit(cli, "fig1", harness::fig1());
             emit(cli, "table1", harness::table1());
             emit(cli, "table2", harness::table2());
-            emit(cli, "table3", harness::table3(scheme));
-            emit(cli, "fig8", harness::fig8(scheme));
-            emit(cli, "fig9a", harness::fig9(Platform::NvidiaSmallTile, scheme));
-            emit(cli, "fig9b", harness::fig9(Platform::EyerissLargeTile, scheme));
+            emit(cli, "table3", harness::table3(policy));
+            emit(cli, "fig8", harness::fig8(policy));
+            emit(cli, "fig9a", harness::fig9(Platform::NvidiaSmallTile, policy));
+            emit(cli, "fig9b", harness::fig9(Platform::EyerissLargeTile, policy));
         }
         "ablation" => {
             let all = cli.flags.is_empty();
@@ -103,15 +108,15 @@ fn run(cli: &Cli) -> Result<()> {
                 emit(cli, "ablation_dilated", harness::ablation_dilated());
             }
         }
-        "network" => emit(cli, "network", harness::network_table(scheme)),
-        "store" => cmd_store(cli, scheme)?,
+        "network" => emit(cli, "network", harness::network_table(policy)),
+        "store" => cmd_store(cli, policy)?,
         "access" => emit(cli, "access", harness::access_table()),
         "metacache" => emit(cli, "metacache", harness::metacache_table()),
         "datapath" => emit(cli, "datapath", harness::codec_datapath_table()),
-        "roofline" => emit(cli, "roofline", harness::roofline_table(scheme)),
-        "sweep" => cmd_sweep(cli, scheme)?,
-        "e2e" => cmd_e2e(cli, scheme)?,
-        "serve" => cmd_serve(cli)?,
+        "roofline" => emit(cli, "roofline", harness::roofline_table(policy)),
+        "sweep" => cmd_sweep(cli, policy)?,
+        "e2e" => cmd_e2e(cli, policy)?,
+        "serve" => cmd_serve(cli, policy)?,
         "servescale" => emit(cli, "serve_scaling", harness::serve_scaling_table()),
         "" | "help" | "--help" => print_help(),
         other => {
@@ -124,9 +129,9 @@ fn run(cli: &Cli) -> Result<()> {
 
 /// One-layer bandwidth sweep across division modes. With `--config
 /// <file>` the layers and hardware come from a config file instead.
-fn cmd_sweep(cli: &Cli, scheme: Scheme) -> Result<()> {
+fn cmd_sweep(cli: &Cli, policy: CodecPolicy) -> Result<()> {
     if let Some(path) = cli.opt("config") {
-        return cmd_sweep_config(cli, scheme, Path::new(path));
+        return cmd_sweep_config(cli, policy, Path::new(path));
     }
     let density = cli.opt_f64("density", 0.37);
     let h = cli.opt_usize("h", 56);
@@ -140,12 +145,12 @@ fn cmd_sweep(cli: &Cli, scheme: Scheme) -> Result<()> {
     let mut t = Table::new(&format!(
         "Sweep — {h}x{w}x{c} k={} s={s} density={density} ({})",
         2 * k + 1,
-        scheme.name()
+        policy.name()
     ))
     .header(vec!["Mode", "NVIDIA w/ ovh %", "Eyeriss w/ ovh %"]);
     for mode in DivisionMode::table3_modes() {
         let cell = |p: Platform| {
-            run_layer(&p.hardware(), &layer, &fm, mode, scheme)
+            run_layer(&p.hardware(), &layer, &fm, mode, policy)
                 .map(|r| format!("{:.1}", r.saving_with_meta() * 100.0))
                 .unwrap_or("N/A".into())
         };
@@ -160,11 +165,11 @@ fn cmd_sweep(cli: &Cli, scheme: Scheme) -> Result<()> {
 }
 
 /// Config-file-driven sweep (custom hardware + layers).
-fn cmd_sweep_config(cli: &Cli, scheme: Scheme, path: &Path) -> Result<()> {
+fn cmd_sweep_config(cli: &Cli, policy: CodecPolicy, path: &Path) -> Result<()> {
     use gratetile::config::FileConfig;
     let cfg = FileConfig::load(path)?;
     let hw = cfg.hardware_or(Platform::EyerissLargeTile);
-    let mut t = Table::new(&format!("Config sweep — {} ({})", path.display(), scheme.name()))
+    let mut t = Table::new(&format!("Config sweep — {} ({})", path.display(), policy.name()))
         .header(vec!["Layer".to_string(), "Density".to_string(), "Mode".to_string(), "Saving w/ ovh %".to_string()]);
     for cl in &cfg.layers {
         let fm = generate(
@@ -174,7 +179,7 @@ fn cmd_sweep_config(cli: &Cli, scheme: Scheme, path: &Path) -> Result<()> {
             SparsityParams::clustered(cl.density, 42),
         );
         for mode in DivisionMode::table3_modes() {
-            match run_layer(&hw, &cl.layer, &fm, mode, scheme) {
+            match run_layer(&hw, &cl.layer, &fm, mode, policy) {
                 Ok(r) => {
                     t.row(vec![
                         cl.name.clone(),
@@ -194,7 +199,7 @@ fn cmd_sweep_config(cli: &Cli, scheme: Scheme, path: &Path) -> Result<()> {
 }
 
 /// End-to-end: PJRT CNN → real activations → GrateTile pipeline.
-fn cmd_e2e(cli: &Cli, scheme: Scheme) -> Result<()> {
+fn cmd_e2e(cli: &Cli, policy: CodecPolicy) -> Result<()> {
     let mode = parse_mode(cli.opt_or("mode", "grate8"))?;
     let artifacts = Path::new(cli.opt_or("artifacts", "artifacts")).to_path_buf();
     let n_images = cli.opt_usize("requests", 4);
@@ -208,7 +213,7 @@ fn cmd_e2e(cli: &Cli, scheme: Scheme) -> Result<()> {
     let (h, w, c) = (entry.input_dims[0], entry.input_dims[1], entry.input_dims[2]);
     let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
     cfg.mode = mode;
-    cfg.scheme = scheme;
+    cfg.policy = policy;
     let runner = LayerRunner::new(cfg);
 
     let mut t = Table::new("E2E — real ReLU activations through the GrateTile store")
@@ -226,7 +231,7 @@ fn cmd_e2e(cli: &Cli, scheme: Scheme) -> Result<()> {
         for (li, fm) in fms.iter().enumerate() {
             // Next-layer geometry: a 3x3 s=1 consumer of this map.
             let layer = ConvLayer::new(1, 1, fm.h, fm.w, fm.c, fm.c);
-            let report = run_layer(&cfg.hw, &layer, fm, mode, scheme)?;
+            let report = run_layer(&cfg.hw, &layer, fm, mode, policy)?;
             // And actually run the tiled pipeline on it.
             let weights = Weights::random(&layer, li as u64);
             let packed = runner.pack(&layer, fm)?;
@@ -247,7 +252,7 @@ fn cmd_e2e(cli: &Cli, scheme: Scheme) -> Result<()> {
 /// The tensor-store toolbox: pack feature maps into a `.grate`
 /// container, inspect/verify one, serve inference from one, or compare
 /// the functional write path against the analytic simulator.
-fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
+fn cmd_store(cli: &Cli, policy: CodecPolicy) -> Result<()> {
     use gratetile::layout::Packer;
     use gratetile::store::Container;
     use gratetile::tiling::Division;
@@ -255,7 +260,26 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
     let action = cli.positional.first().map(|s| s.as_str()).unwrap_or("");
     match action {
         "pack" => {
-            let out = Path::new(cli.opt_or("out", "store.grate"));
+            // `--manifest <dir> --name <container>` resolves the output
+            // path and codec policy from the manifest's
+            // `container <name> <file> [codec=...]` line (explicit
+            // `--out` / `--codec` still win) — the deployment manifest
+            // and the CLI share one codec surface.
+            let mut out = std::path::PathBuf::from(cli.opt_or("out", "store.grate"));
+            let mut policy = policy;
+            if let Some(dir) = cli.opt("manifest") {
+                let m = Manifest::load(Path::new(dir))?;
+                let cref = m.container_ref(cli.opt_or("name", "acts"))?;
+                if cli.opt("out").is_none() {
+                    out = cref.path.clone();
+                }
+                if cli.opt("codec").is_none() && cli.opt("scheme").is_none() {
+                    if let Some(p) = cref.policy {
+                        policy = p;
+                    }
+                }
+            }
+            let out = out.as_path();
             let h = cli.opt_usize("h", 32);
             let w = cli.opt_usize("w", 32);
             let c = cli.opt_usize("c", 16);
@@ -269,7 +293,7 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
             let tile = hw.tile_for_layer(&layer);
             let div = Division::build(mode, &layer, &tile, &hw, h, w, c)
                 .map_err(|e| err!("{e}"))?;
-            let packer = Packer::new(hw, scheme);
+            let packer = Packer::new(hw, policy);
             let packs: Vec<(String, _)> = (0..count)
                 .map(|i| {
                     let fm =
@@ -286,7 +310,7 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
                 "packed {count} x {h}x{w}x{c} (d={density}) as {} under {} + {}: {} -> {} words ({:.1}%)",
                 out.display(),
                 mode.name(),
-                scheme.name(),
+                policy.name(),
                 dense_words,
                 packed_words,
                 packed_words as f64 / dense_words as f64 * 100.0
@@ -302,14 +326,14 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
             let c = Container::open(path)?;
             c.verify()?;
             let mut t = Table::new(&format!("{} — {} tensors, checksums OK", path.display(), c.entries.len()))
-                .header(vec!["Tensor", "Shape", "Mode", "Scheme", "Payload words", "Ratio %", "Meta bits"]);
+                .header(vec!["Tensor", "Shape", "Mode", "Codec", "Payload words", "Ratio %", "Meta bits"]);
             for e in &c.entries {
                 let (h, w, ch) = e.shape();
                 t.row(vec![
                     e.name.clone(),
                     format!("{h}x{w}x{ch}"),
                     e.packed.division.mode.name(),
-                    e.packed.scheme.name().to_string(),
+                    e.packed.codec_summary(),
                     e.payload_words.to_string(),
                     format!("{:.1}", e.packed.compression_ratio() * 100.0),
                     e.packed.metadata.total_bits().to_string(),
@@ -349,7 +373,7 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
             Ok(())
         }
         "compare" => {
-            emit(cli, "store_compare", harness::store_compare_table(scheme));
+            emit(cli, "store_compare", harness::store_compare_table(policy));
             Ok(())
         }
         other => bail!("unknown store action '{other}' (pack/inspect/serve/compare)"),
@@ -360,7 +384,7 @@ fn cmd_store(cli: &Cli, scheme: Scheme) -> Result<()> {
 /// discrete-event simulator — reports in simulated cycles, byte-stable
 /// for a given seed regardless of host load or `--jobs`. `--wall` keeps
 /// the original host wall-clock leader/worker topology.
-fn cmd_serve(cli: &Cli) -> Result<()> {
+fn cmd_serve(cli: &Cli, policy: CodecPolicy) -> Result<()> {
     let workers = cli.opt_usize("workers", 4);
     let requests = cli.opt_usize("requests", 16);
     let density = cli.opt_f64("density", 0.5);
@@ -373,7 +397,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         (l2, Weights::random(&l2, 2)),
         (l3, Weights::random(&l3, 3)),
     ];
-    let pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+    let mut pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+    pipeline.policy = policy;
     if cli.has_flag("wall") {
         let server = Server::new(
             ServerConfig { pipeline, workers, queue_depth: workers * 2 },
@@ -415,12 +440,14 @@ Paper artefacts:
   all                 everything above
 
 Analysis:
-  sweep               one-layer sweep      [--h --w --c --k --s --density --scheme]
+  sweep               one-layer sweep      [--h --w --c --k --s --density --codec]
                       or config-file driven [--config layers.ini]
   ablation            extra studies        [--codecs --whole-channel --sweep --dilated]
   network             whole-network read+write traffic per mode
   store pack          synthesize + pack maps into a .grate container
-                      [--out --h --w --c --count --density --mode --scheme]
+                      [--out --h --w --c --count --density --mode --codec]
+                      [--manifest DIR --name N: take out-path + codec from a
+                       manifest 'container N file [codec=...]' line]
   store inspect F     verify checksums, list a container's tensors
   store serve F       serve inference from a container  [--workers]
   store compare       functional vs analytic write-back bits per network
@@ -430,16 +457,18 @@ Analysis:
   roofline            compute/memory bound + runtime speedup per layer
 
 End to end:
-  e2e                 PJRT CNN -> GrateTile pipeline  [--mode --scheme --requests]
+  e2e                 PJRT CNN -> GrateTile pipeline  [--mode --codec --requests]
   serve               serving driver. Default --sim: deterministic discrete-event
                       simulator in simulated cycles (byte-stable per seed)
                       [--workers --requests --density --seed --queue-depth
                        --batch --banks --lanes --arrival-gap]; --wall: host
                       wall-clock leader/worker topology
   servescale          serve-scaling study: workers x queue x density, simulated
+                      (fixed bitmask codec — the golden-filed baseline)
 
-Common flags: --markdown (emit GFM tables); --jobs N (suite worker threads,
-default: all cores, also via GRATETILE_THREADS); all tables also land in
-results/*.csv"
+Common flags: --codec NAME|auto (codec policy: bitmask/zrlc/dictionary/raw, or
+auto = cheapest codec per sub-tensor; --scheme is an alias); --markdown (emit
+GFM tables); --jobs N (suite worker threads, default: all cores, also via
+GRATETILE_THREADS); all tables also land in results/*.csv"
     );
 }

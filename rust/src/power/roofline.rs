@@ -13,7 +13,7 @@
 //!   double-buffering targets).
 
 use super::systolic::{layer_counts, ArrayConfig};
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::sim::experiment::run_layer;
@@ -76,10 +76,10 @@ pub fn roofline(
     layer: &ConvLayer,
     fm: &FeatureMap,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> Result<Roofline, DivisionError> {
     let counts = layer_counts(&machine.array, layer);
-    let report = run_layer(hw, layer, fm, mode, scheme)?;
+    let report = run_layer(hw, layer, fm, mode, policy)?;
     let saving = report.saving_with_meta().max(0.0);
 
     let macs_per_cycle = (machine.array.rows * machine.array.cols) as f64;
@@ -102,6 +102,7 @@ pub fn roofline(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Scheme;
     use crate::config::hardware::Platform;
     use crate::tensor::sparsity::{generate, SparsityParams};
 

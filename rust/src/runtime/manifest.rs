@@ -7,7 +7,7 @@
 //! # comments and blank lines ignored
 //! artifact <name> <file> in=<d0>x<d1>x...xf32 outs=<n>
 //! layer <model> <idx> h=<h> w=<w> c=<c>
-//! container <name> <file.grate>
+//! container <name> <file.grate> [codec=<name>|auto]
 //! ```
 //!
 //! `container` lines register `.grate` tensor-store files (see
@@ -15,6 +15,7 @@
 //! deployment manifest can name both the model and the packed
 //! activation sets it serves from.
 
+use crate::compress::{CodecPolicy, Registry};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
 use std::collections::HashMap;
@@ -33,12 +34,20 @@ pub struct ArtifactEntry {
     pub layer_shapes: Vec<(usize, usize, usize)>,
 }
 
+/// A registered `.grate` container: its path plus the codec policy to
+/// (re-)pack its tensors under (`None` = whatever the file carries).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ContainerRef {
+    pub path: PathBuf,
+    pub policy: Option<CodecPolicy>,
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
     pub entries: HashMap<String, ArtifactEntry>,
     /// Registered `.grate` container files, by name.
-    pub containers: HashMap<String, PathBuf>,
+    pub containers: HashMap<String, ContainerRef>,
     pub dir: PathBuf,
 }
 
@@ -124,7 +133,22 @@ impl Manifest {
                 Some("container") => {
                     let name = parts.next().ok_or_else(|| err!("line {ln}: container name"))?;
                     let file = parts.next().ok_or_else(|| err!("line {ln}: container file"))?;
-                    m.containers.insert(name.to_string(), dir.join(file));
+                    let mut policy = None;
+                    for kv in parts {
+                        if let Some(c) = kv.strip_prefix("codec=") {
+                            // THE codec-name parser (the registry):
+                            // unknown names list the valid codecs.
+                            policy = Some(
+                                Registry::global()
+                                    .parse_policy(c)
+                                    .map_err(|e| err!("line {ln}: {e}"))?,
+                            );
+                        } else {
+                            bail!("line {ln}: unknown container option '{kv}'");
+                        }
+                    }
+                    m.containers
+                        .insert(name.to_string(), ContainerRef { path: dir.join(file), policy });
                 }
                 Some(other) => bail!("line {ln}: unknown directive {other}"),
                 None => {}
@@ -142,9 +166,13 @@ impl Manifest {
 
     /// Path of a registered `.grate` container.
     pub fn container(&self, name: &str) -> Result<&Path> {
+        self.container_ref(name).map(|c| c.path.as_path())
+    }
+
+    /// Full container reference (path + declared codec policy).
+    pub fn container_ref(&self, name: &str) -> Result<&ContainerRef> {
         self.containers
             .get(name)
-            .map(|p| p.as_path())
             .ok_or_else(|| err!("container '{name}' not in manifest (have: {:?})",
                 self.containers.keys().collect::<Vec<_>>()))
     }
@@ -161,7 +189,9 @@ layer cnn 0 h=32 w=32 c=8
 layer cnn 1 h=32 w=32 c=16
 
 artifact stats compress.hlo.txt in=512xf32 outs=2
-container acts acts.grate
+container acts acts.grate codec=auto
+container fixed fixed.grate codec=zrlc
+container plain plain.grate
 ";
 
     #[test]
@@ -176,6 +206,12 @@ container acts acts.grate
         assert_eq!(st.input_dims, vec![512]);
         assert_eq!(st.n_outputs, 2);
         assert_eq!(m.container("acts").unwrap(), Path::new("/tmp/a/acts.grate"));
+        assert_eq!(m.container_ref("acts").unwrap().policy, Some(CodecPolicy::Adaptive));
+        assert_eq!(
+            m.container_ref("fixed").unwrap().policy,
+            Some(CodecPolicy::Fixed(crate::compress::Scheme::Zrlc))
+        );
+        assert_eq!(m.container_ref("plain").unwrap().policy, None);
         assert!(m.container("nope").is_err());
     }
 
@@ -183,6 +219,15 @@ container acts acts.grate
     fn unknown_artifact_errors() {
         let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
         assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_container_codec_lists_valid_names() {
+        let e = Manifest::parse("container a a.grate codec=nope", Path::new("/tmp"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("bitmask") && e.contains("auto"), "{e}");
+        assert!(Manifest::parse("container a a.grate bogus=1", Path::new("/tmp")).is_err());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! sub-tensor reads stream within rows; a fragmented fine division
 //! scatters and thrashes.
 
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::layout::packer::Packer;
@@ -34,11 +34,11 @@ pub fn access_study(
     layer: &ConvLayer,
     fm: &FeatureMap,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> Result<AccessStudy, DivisionError> {
     let tile = hw.tile_for_layer(layer);
     let division = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
-    let packed = Packer::new(*hw, scheme).pack(fm, &division, false);
+    let packed = Packer::new(*hw, policy).pack(fm, &division, false);
     let walker = TileWalker::new(*layer, tile);
     let mut dram = TimedDram::new(DramTiming::default());
 
@@ -62,6 +62,7 @@ pub fn access_study(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Scheme;
     use crate::config::hardware::Platform;
     use crate::tensor::sparsity::{generate, SparsityParams};
 

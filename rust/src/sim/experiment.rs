@@ -4,7 +4,7 @@
 use super::pricer::{price_naive, LayerPricer, WalkCost};
 use super::report::LayerBandwidth;
 use super::walker::TileWalker;
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::config::zoo::BenchLayer;
@@ -57,11 +57,11 @@ pub fn run_layer(
     layer: &ConvLayer,
     fm: &FeatureMap,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> Result<LayerBandwidth, DivisionError> {
     let tile = hw.tile_for_layer(layer);
     let division = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
-    let packed = Packer::new(*hw, scheme).pack(fm, &division, false);
+    let packed = Packer::new(*hw, policy).pack(fm, &division, false);
     let walker = TileWalker::new(*layer, tile);
     let cost = LayerPricer::new(&packed).price(&walker);
     Ok(bandwidth_report(hw, fm, mode, cost, walker.n_tiles()))
@@ -76,11 +76,11 @@ pub fn run_layer_naive(
     layer: &ConvLayer,
     fm: &FeatureMap,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> Result<LayerBandwidth, DivisionError> {
     let tile = hw.tile_for_layer(layer);
     let division = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
-    let packed = Packer::new(*hw, scheme).pack(fm, &division, false);
+    let packed = Packer::new(*hw, policy).pack(fm, &division, false);
     let walker = TileWalker::new(*layer, tile);
     let cost = price_naive(&packed, &walker);
     Ok(bandwidth_report(hw, fm, mode, cost, walker.n_tiles()))
@@ -94,10 +94,10 @@ pub fn run_bench_layer(
     hw: &Hardware,
     bench: &BenchLayer,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
     fm: &FeatureMap,
 ) -> Result<LayerBandwidth, DivisionError> {
-    let mut r = run_layer(hw, &bench.layer, fm, mode, scheme)?;
+    let mut r = run_layer(hw, &bench.layer, fm, mode, policy)?;
     r.network = bench.network.name().to_string();
     r.layer = bench.name.to_string();
     Ok(r)
@@ -126,7 +126,7 @@ pub fn bench_feature_map(bench: &BenchLayer) -> FeatureMap {
 #[derive(Debug, Clone)]
 pub struct SuiteResult {
     pub platform: String,
-    pub scheme: Scheme,
+    pub policy: CodecPolicy,
     pub modes: Vec<DivisionMode>,
     pub layers: Vec<String>,
     pub results: Vec<Vec<Option<LayerBandwidth>>>,
@@ -196,7 +196,7 @@ fn price_suites(
     hws: &[Hardware],
     suite: &[(&BenchLayer, &FeatureMap)],
     modes: &[DivisionMode],
-    scheme: Scheme,
+    policy: CodecPolicy,
 ) -> Vec<SuiteResult> {
     let n_layers = suite.len();
     let units: Vec<(usize, usize, usize)> = (0..hws.len())
@@ -206,7 +206,7 @@ fn price_suites(
         .collect();
     let flat: Vec<Option<LayerBandwidth>> = par_map(&units, |_, &(pi, mi, li)| {
         let (b, fm) = suite[li];
-        run_bench_layer(&hws[pi], b, modes[mi], scheme, fm).ok()
+        run_bench_layer(&hws[pi], b, modes[mi], policy, fm).ok()
     });
 
     let layers: Vec<String> = suite
@@ -217,7 +217,7 @@ fn price_suites(
     hws.iter()
         .map(|hw| SuiteResult {
             platform: hw.name.to_string(),
-            scheme,
+            policy,
             modes: modes.to_vec(),
             layers: layers.clone(),
             results: (0..modes.len())
@@ -233,20 +233,20 @@ fn price_suites(
 pub fn run_suites(
     hws: &[Hardware],
     modes: &[DivisionMode],
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> Vec<SuiteResult> {
     let suite: Vec<(&BenchLayer, &FeatureMap)> =
         suite_feature_maps().iter().map(|(b, fm)| (b, fm)).collect();
-    price_suites(hws, &suite, modes, scheme)
+    price_suites(hws, &suite, modes, policy.into())
 }
 
 /// Run the full (cached) benchmark suite under every mode.
 pub fn run_suite_shared(
     hw: &Hardware,
     modes: &[DivisionMode],
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> SuiteResult {
-    run_suites(std::slice::from_ref(hw), modes, scheme)
+    run_suites(std::slice::from_ref(hw), modes, policy)
         .pop()
         .expect("one platform in, one suite out")
 }
@@ -258,11 +258,11 @@ pub fn run_suite(
     hw: &Hardware,
     benches: &[BenchLayer],
     modes: &[DivisionMode],
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> SuiteResult {
     let fms: Vec<FeatureMap> = par_map(benches, |_, b| bench_feature_map(b));
     let suite: Vec<(&BenchLayer, &FeatureMap)> = benches.iter().zip(&fms).collect();
-    price_suites(std::slice::from_ref(hw), &suite, modes, scheme)
+    price_suites(std::slice::from_ref(hw), &suite, modes, policy.into())
         .pop()
         .expect("one platform in, one suite out")
 }
@@ -270,6 +270,7 @@ pub fn run_suite(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Scheme;
     use crate::config::hardware::Platform;
     use crate::config::zoo::{network_layers, Network};
 
@@ -356,6 +357,30 @@ mod tests {
         let s = run_layer(&hw, &layer, &fm_sparse, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask).unwrap();
         let d = run_layer(&hw, &layer, &fm_dense, DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask).unwrap();
         assert!(s.saving_with_meta() > d.saving_with_meta());
+    }
+
+    /// The adaptive policy prices through the same pipeline and never
+    /// fetches more payload than any fixed codec (per-sub-tensor min),
+    /// while its metadata carries the 2-bit tags on top of the base
+    /// record.
+    #[test]
+    fn adaptive_run_layer_bounds_fixed_codecs() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (layer, fm) = small_fm(0.37);
+        let mode = DivisionMode::GrateTile { n: 8 };
+        let auto = run_layer(&hw, &layer, &fm, mode, CodecPolicy::Adaptive).unwrap();
+        for scheme in crate::compress::Registry::global().schemes() {
+            let fixed = run_layer(&hw, &layer, &fm, mode, scheme).unwrap();
+            assert!(
+                auto.fetched_bits <= fixed.fetched_bits,
+                "auto {} vs {} {}",
+                auto.fetched_bits,
+                scheme.name(),
+                fixed.fetched_bits
+            );
+            assert!(auto.metadata_bits > fixed.metadata_bits, "tags must be accounted");
+            assert_eq!(auto.baseline_bits, fixed.baseline_bits);
+        }
     }
 
     #[test]
@@ -459,7 +484,7 @@ mod tests {
         };
         let suite = SuiteResult {
             platform: "p".into(),
-            scheme: Scheme::Bitmask,
+            policy: CodecPolicy::Fixed(Scheme::Bitmask),
             modes: vec![DivisionMode::GrateTile { n: 16 }, DivisionMode::GrateTile { n: 8 }],
             layers: vec!["a".into(), "b".into()],
             results: vec![

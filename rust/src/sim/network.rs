@@ -9,7 +9,7 @@
 
 use super::experiment::run_layer;
 use super::report::LayerBandwidth;
-use crate::compress::Scheme;
+use crate::compress::CodecPolicy;
 use crate::config::hardware::Hardware;
 use crate::config::zoo::{full_conv_stack, network_layers, Network};
 use crate::layout::packer::Packer;
@@ -82,7 +82,8 @@ pub fn depth_density(net: Network, i: usize, n: usize) -> f64 {
 /// The analytic producer-side cost of writing `fm` back compressed for
 /// its consumer `layer`: `(payload_bits, metadata_bits)` — payload
 /// line-padded exactly like storage, metadata one Fig. 7 record per
-/// block. This is the closed form the functional
+/// block at the policy's record width (adaptive records carry their
+/// 2-bit codec tags). This is the closed form the functional
 /// [`crate::store::StoreWriter`] must (and does, asserted in
 /// `tests/store_roundtrip.rs`) reproduce bit for bit.
 pub fn writeback_cost(
@@ -90,12 +91,12 @@ pub fn writeback_cost(
     layer: &crate::config::layer::ConvLayer,
     fm: &crate::tensor::FeatureMap,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
 ) -> Result<(u64, u64), crate::tiling::division::DivisionError> {
     let tile = hw.tile_for_layer(layer);
     let div = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c)?;
-    let packed = Packer::new(*hw, scheme).pack(fm, &div, false);
-    Ok((packed.total_words * 16, div.total_meta_bits()))
+    let packed = Packer::new(*hw, policy).pack(fm, &div, false);
+    Ok((packed.total_words * 16, packed.meta_total_bits()))
 }
 
 /// Simulate a whole network's feature traffic under one division mode.
@@ -105,9 +106,10 @@ pub fn run_network_bandwidth(
     hw: &Hardware,
     net: Network,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: impl Into<CodecPolicy>,
     seed: u64,
 ) -> NetworkReport {
+    let policy = policy.into();
     let stack = full_conv_stack(net);
     let n = stack.len();
     let mut per_layer = Vec::new();
@@ -124,14 +126,14 @@ pub fn run_network_bandwidth(
             SparsityParams::clustered(density, seed ^ (i as u64) << 8),
         );
         // Consumer side: tiled fetch of this layer's input.
-        if let Ok(mut r) = run_layer(hw, layer, &fm, mode, scheme) {
+        if let Ok(mut r) = run_layer(hw, layer, &fm, mode, policy) {
             r.network = net.name().to_string();
             r.layer = format!("conv{i}");
             per_layer.push(r);
         }
         // Producer side: the previous layer wrote this map compressed
         // (payload and index accounted separately).
-        if let Ok((payload, meta)) = writeback_cost(hw, layer, &fm, mode, scheme) {
+        if let Ok((payload, meta)) = writeback_cost(hw, layer, &fm, mode, policy) {
             writeback_payload_bits += payload;
             writeback_meta_bits += meta;
             writeback_baseline_bits += (fm.words() * 16) as u64;
@@ -151,7 +153,28 @@ pub fn run_network_bandwidth(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Scheme;
     use crate::config::hardware::Platform;
+
+    /// Whole-network adaptive traffic: never more payload than the best
+    /// fixed codec once both sides carry the tag budget, and strictly
+    /// positive index traffic.
+    #[test]
+    fn adaptive_network_never_loses_to_fixed_payload() {
+        let hw = Platform::EyerissLargeTile.hardware();
+        let mode = DivisionMode::GrateTile { n: 8 };
+        let auto = run_network_bandwidth(&hw, Network::AlexNet, mode, CodecPolicy::Adaptive, 9);
+        for scheme in crate::compress::Registry::global().schemes() {
+            let fixed = run_network_bandwidth(&hw, Network::AlexNet, mode, scheme, 9);
+            assert!(
+                auto.writeback_payload_bits <= fixed.writeback_payload_bits,
+                "auto payload vs {}",
+                scheme.name()
+            );
+        }
+        assert!(auto.writeback_meta_bits > 0);
+        assert!(auto.total_saving() > 0.25, "{}", auto.total_saving());
+    }
 
     #[test]
     fn alexnet_network_report() {

@@ -44,6 +44,10 @@ pub struct WalkCost {
 /// over the same map in O(tiles).
 pub struct LayerPricer<'a> {
     division: &'a Division,
+    /// Metadata record width in bits — tag-aware (adaptive maps pay
+    /// their 2-bit codec tags per record slot), taken from the packed
+    /// map so the closed form and the fetcher charge the same constant.
+    record_bits: u64,
     /// `(ny+1) × (nx+1) × (ncg+1)` inclusive prefix sums of
     /// per-sub-tensor fetch bits; entry `(iy, ix, icg)` holds the total
     /// over the box `[0,iy) × [0,ix) × [0,icg)`.
@@ -56,6 +60,7 @@ impl<'a> LayerPricer<'a> {
     /// One O(n_subtensors) pass over `packed`'s cost grid.
     pub fn new(packed: &'a PackedFeatureMap) -> Self {
         let division = &packed.division;
+        let record_bits = packed.record_bits() as u64;
         let ny = division.ys.len();
         let nx = division.xs.len();
         let ncg = division.n_cgroups;
@@ -84,7 +89,7 @@ impl<'a> LayerPricer<'a> {
             }
         }
 
-        Self { division, prefix, nx1, ncg1 }
+        Self { division, record_bits, prefix, nx1, ncg1 }
     }
 
     /// Sum of fetch bits over sub-tensor index box
@@ -149,8 +154,7 @@ impl<'a> LayerPricer<'a> {
         // (ty, tx, tcg) combination occurs once, and both per-window
         // quantities are products of per-axis terms.
         let baseline_bits = 16 * y_words * x_words * c_words;
-        let metadata_bits =
-            div.meta_bits_per_block as u64 * y_blocks * x_blocks * c_groups;
+        let metadata_bits = self.record_bits * y_blocks * x_blocks * c_groups;
 
         // Fetched bits: 8 corner lookups per window.
         let mut fetched_bits = 0u64;
@@ -172,6 +176,7 @@ impl<'a> LayerPricer<'a> {
 /// `benches/perf_walk.rs` can measure the speedup in the same run.
 pub fn price_naive(packed: &PackedFeatureMap, walker: &TileWalker) -> WalkCost {
     let division = &packed.division;
+    let record_bits = packed.record_bits() as u64;
     let mut fetched_bits = 0u64;
     let mut metadata_bits = 0u64;
     let mut baseline_bits = 0u64;
@@ -195,7 +200,7 @@ pub fn price_naive(packed: &PackedFeatureMap, walker: &TileWalker) -> WalkCost {
                     let b = division.block_linear(r);
                     if stamp[b] != tick {
                         stamp[b] = tick;
-                        metadata_bits += division.meta_bits_per_block as u64;
+                        metadata_bits += record_bits;
                     }
                 }
             }

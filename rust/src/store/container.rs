@@ -6,7 +6,8 @@
 //! │ header   magic "GRTC" · u32 version · u32 n_tensors        │
 //! │          u64 toc_len · u64 toc_fnv1a64                     │
 //! ├────────────────────────────────────────────────────────────┤
-//! │ TOC      per tensor: name · scheme · full division ·       │
+//! │ TOC      per tensor: name · codec policy (v2; + packed     │
+//! │          2-bit tag table for adaptive tensors) · division ·│
 //! │          sizes/addr tables · Fig. 7 block records ·        │
 //! │          payload (offset, words, fnv1a64)                  │
 //! ├────────────────────────────────────────────────────────────┤
@@ -24,13 +25,13 @@
 //! so `serve → fetch` round-trips bit-exactly against the in-memory
 //! path.
 
-use crate::compress::Scheme;
+use crate::compress::{CodecPolicy, Registry};
 use crate::layout::fetcher::{DenseWindow, Fetcher, PayloadSource};
 use crate::layout::metadata::{BlockRecord, MetadataTable};
 use crate::layout::packer::PackedFeatureMap;
 use crate::memsim::Dram;
 use crate::tensor::FeatureMap;
-use crate::tiling::division::{Division, DivisionMode, Seg};
+use crate::tiling::division::{Division, DivisionMode, Seg, SubTensorRef};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
 use std::fs::File;
@@ -38,7 +39,12 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"GRTC";
-const VERSION: u32 = 1;
+/// Current write version. v2 added the codec *policy* byte and, for
+/// adaptive tensors, the packed 2-bit codec tag table in the TOC. The
+/// reader accepts v1 (implicit uniform codec from the scheme byte) and
+/// v2.
+const VERSION: u32 = 2;
+const MIN_VERSION: u32 = 1;
 const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8;
 
 /// FNV-1a 64-bit offset basis (seed for [`fnv1a64_continue`]).
@@ -116,23 +122,48 @@ impl<'a> Dec<'a> {
     }
 }
 
-fn scheme_tag(s: Scheme) -> u8 {
-    match s {
-        Scheme::Bitmask => 0,
-        Scheme::Zrlc => 1,
-        Scheme::Dictionary => 2,
-        Scheme::Raw => 3,
+// Codec identifiers on disk are the registry's stable 2-bit tags (the
+// v1 scheme byte used the same assignment, so v1 files parse with the
+// same table — no per-format match arms).
+
+/// Pack per-sub-tensor 2-bit codec tags, four to a byte, low bits
+/// first — the v2 TOC tag table.
+fn pack_tags(tags: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; tags.len().div_ceil(4)];
+    for (i, &t) in tags.iter().enumerate() {
+        debug_assert!(t < 4);
+        out[i / 4] |= (t & 0x3) << ((i % 4) * 2);
     }
+    out
 }
 
-fn scheme_from_tag(t: u8) -> Result<Scheme> {
-    Ok(match t {
-        0 => Scheme::Bitmask,
-        1 => Scheme::Zrlc,
-        2 => Scheme::Dictionary,
-        3 => Scheme::Raw,
-        other => bail!("container: unknown scheme tag {other}"),
-    })
+/// Inverse of [`pack_tags`] for `n` sub-tensors.
+fn unpack_tags(bytes: &[u8], n: usize) -> Vec<u8> {
+    (0..n).map(|i| (bytes[i / 4] >> ((i % 4) * 2)) & 0x3).collect()
+}
+
+/// Rebuild each record's per-slot codec tags from the linear tag table
+/// (records are stored tag-less in the TOC; the block raster walk is
+/// the same one the packer assigns records in).
+fn fill_record_tags(div: &Division, tags: &[u8], records: &mut [BlockRecord]) {
+    let mut bi = 0usize;
+    for by in 0..div.n_blocks_y {
+        let yr = div.y_segs_of_block(by);
+        for bx in 0..div.n_blocks_x {
+            let xr = div.x_segs_of_block(bx);
+            for icg in 0..div.n_cgroups {
+                let rec = &mut records[bi];
+                rec.codec_tags.clear();
+                for iy in yr.clone() {
+                    for ix in xr.clone() {
+                        let li = div.linear(SubTensorRef { iy, ix, icg });
+                        rec.codec_tags.push(tags[li]);
+                    }
+                }
+                bi += 1;
+            }
+        }
+    }
 }
 
 fn encode_division(e: &mut Enc, d: &Division) {
@@ -256,6 +287,8 @@ impl ContainerEntry {
 #[derive(Debug)]
 pub struct Container {
     pub path: PathBuf,
+    /// On-disk format version the file was written with (1 or 2).
+    pub version: u32,
     pub entries: Vec<ContainerEntry>,
 }
 
@@ -276,10 +309,30 @@ impl PayloadSource for FilePayload {
     }
 }
 
-fn encode_entry(e: &mut Enc, name: &str, p: &PackedFeatureMap, offset: u64, checksum: u64) {
+fn encode_entry(
+    e: &mut Enc,
+    version: u32,
+    name: &str,
+    p: &PackedFeatureMap,
+    offset: u64,
+    checksum: u64,
+) {
+    let reg = Registry::global();
     e.u16(name.len() as u16);
     e.bytes(name.as_bytes());
-    e.u8(scheme_tag(p.scheme));
+    match (version, p.policy) {
+        // v1: a bare scheme byte (the registry tag — same assignment).
+        (1, CodecPolicy::Fixed(s)) => e.u8(reg.tag_of(s)),
+        (1, CodecPolicy::Adaptive) => {
+            unreachable!("write_with_version rejects adaptive tensors for v1")
+        }
+        // v2: a policy byte, then the scheme tag for fixed tensors.
+        (_, CodecPolicy::Fixed(s)) => {
+            e.u8(0);
+            e.u8(reg.tag_of(s));
+        }
+        (_, CodecPolicy::Adaptive) => e.u8(1),
+    }
     encode_division(e, &p.division);
     e.usize32(p.sizes_words.len());
     for &s in &p.sizes_words {
@@ -290,6 +343,10 @@ fn encode_entry(e: &mut Enc, name: &str, p: &PackedFeatureMap, offset: u64, chec
     }
     for &a in &p.addr_words {
         e.u64(a);
+    }
+    if version >= 2 && p.policy.is_adaptive() {
+        // The v2 tag table: 2 bits per sub-tensor, packed 4 per byte.
+        e.bytes(&pack_tags(&p.tags));
     }
     e.usize32(p.metadata.records.len());
     for r in &p.metadata.records {
@@ -307,11 +364,21 @@ fn encode_entry(e: &mut Enc, name: &str, p: &PackedFeatureMap, offset: u64, chec
     e.u64(checksum);
 }
 
-fn decode_entry(dec: &mut Dec) -> Result<ContainerEntry> {
+fn decode_entry(dec: &mut Dec, version: u32) -> Result<ContainerEntry> {
+    let reg = Registry::global();
     let name_len = dec.u16()? as usize;
     let name = String::from_utf8(dec.take(name_len)?.to_vec())
         .map_err(|e| err!("container: bad tensor name: {e}"))?;
-    let scheme = scheme_from_tag(dec.u8()?)?;
+    let policy = if version == 1 {
+        // v1: bare scheme byte — an implicit uniform (fixed) codec.
+        CodecPolicy::Fixed(reg.scheme_of_tag(dec.u8()?)?)
+    } else {
+        match dec.u8()? {
+            0 => CodecPolicy::Fixed(reg.scheme_of_tag(dec.u8()?)?),
+            1 => CodecPolicy::Adaptive,
+            other => bail!("container '{name}': unknown codec policy byte {other}"),
+        }
+    };
     let division = decode_division(dec)?;
     let n = dec.usize32()?;
     if n != division.n_subtensors() {
@@ -329,6 +396,16 @@ fn decode_entry(dec: &mut Dec) -> Result<ContainerEntry> {
     for _ in 0..n {
         addr_words.push(dec.u64()?);
     }
+    let tags = if policy.is_adaptive() {
+        let tags = unpack_tags(dec.take(n.div_ceil(4))?, n);
+        for &t in &tags {
+            reg.scheme_of_tag(t)
+                .map_err(|e| err!("container '{name}': corrupt tag table: {e}"))?;
+        }
+        tags
+    } else {
+        Vec::new()
+    };
     let n_rec = dec.usize32()?;
     if n_rec != division.n_blocks() {
         bail!("container '{name}': {n_rec} records for {} blocks", division.n_blocks());
@@ -341,7 +418,10 @@ fn decode_entry(dec: &mut Dec) -> Result<ContainerEntry> {
         for _ in 0..k {
             sizes.push(dec.u32()?);
         }
-        records.push(BlockRecord { pointer_words, sizes_words: sizes });
+        records.push(BlockRecord { pointer_words, sizes_words: sizes, codec_tags: Vec::new() });
+    }
+    if policy.is_adaptive() {
+        fill_record_tags(&division, &tags, &mut records);
     }
     let bits_per_record = dec.usize32()?;
     let total_words = dec.u64()?;
@@ -353,7 +433,8 @@ fn decode_entry(dec: &mut Dec) -> Result<ContainerEntry> {
         name,
         packed: PackedFeatureMap {
             division,
-            scheme,
+            policy,
+            tags,
             sizes_words,
             sizes_bits,
             addr_words,
@@ -377,11 +458,33 @@ fn words_to_bytes(words: &[u16]) -> Vec<u8> {
 }
 
 impl Container {
-    /// Write `entries` (payload-carrying packed maps) to `path`.
+    /// Write `entries` (payload-carrying packed maps) to `path` in the
+    /// current format version.
     pub fn write(path: &Path, entries: &[(String, &PackedFeatureMap)]) -> Result<()> {
+        Self::write_with_version(path, entries, VERSION)
+    }
+
+    /// Write a container pinned to a specific format version (`1` or
+    /// `2`). v1 has no codec-policy byte, so adaptive tensors are
+    /// rejected; this exists so the backward-compat suite can
+    /// materialise genuine v1 fixtures.
+    pub fn write_with_version(
+        path: &Path,
+        entries: &[(String, &PackedFeatureMap)],
+        version: u32,
+    ) -> Result<()> {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            bail!("container write: unsupported version {version}");
+        }
         for (name, p) in entries {
             if p.payload.is_none() {
                 bail!("container write: tensor '{name}' has no payload");
+            }
+            if version == 1 && p.policy.is_adaptive() {
+                bail!(
+                    "container write: tensor '{name}' is adaptive-coded; \
+                     v1 containers only hold uniform-codec tensors"
+                );
             }
         }
         // Pass 1 with zero offsets fixes the TOC length (offsets are
@@ -389,7 +492,7 @@ impl Container {
         let toc_len = {
             let mut e = Enc(Vec::new());
             for (name, p) in entries {
-                encode_entry(&mut e, name, p, 0, 0);
+                encode_entry(&mut e, version, name, p, 0, 0);
             }
             e.0.len() as u64
         };
@@ -398,7 +501,7 @@ impl Container {
         let mut payloads: Vec<(u64, Vec<u8>)> = Vec::with_capacity(entries.len());
         for (name, p) in entries {
             let bytes = words_to_bytes(p.payload.as_ref().unwrap());
-            encode_entry(&mut toc, name, p, offset, fnv1a64(&bytes));
+            encode_entry(&mut toc, version, name, p, offset, fnv1a64(&bytes));
             let next = (offset + bytes.len() as u64).div_ceil(16) * 16;
             payloads.push((offset, bytes));
             offset = next;
@@ -409,7 +512,7 @@ impl Container {
             .with_context(|| format!("creating container {}", path.display()))?;
         let mut header = Enc(Vec::new());
         header.bytes(MAGIC);
-        header.u32(VERSION);
+        header.u32(version);
         header.u32(entries.len() as u32);
         header.u64(toc_len);
         header.u64(fnv1a64(&toc.0));
@@ -427,7 +530,8 @@ impl Container {
     }
 
     /// Open a container, parsing and checksum-verifying the TOC;
-    /// payloads stay on disk.
+    /// payloads stay on disk. Accepts every version back to v1 (which
+    /// carries an implicit uniform codec per tensor).
     pub fn open(path: &Path) -> Result<Container> {
         let mut f = File::open(path)
             .with_context(|| format!("opening container {}", path.display()))?;
@@ -438,7 +542,7 @@ impl Container {
             bail!("{}: not a .grate container (bad magic)", path.display());
         }
         let version = dec.u32()?;
-        if version != VERSION {
+        if !(MIN_VERSION..=VERSION).contains(&version) {
             bail!("{}: unsupported container version {version}", path.display());
         }
         let n_tensors = dec.u32()? as usize;
@@ -452,9 +556,9 @@ impl Container {
         let mut dec = Dec { buf: &toc, at: 0 };
         let mut entries = Vec::with_capacity(n_tensors);
         for _ in 0..n_tensors {
-            entries.push(decode_entry(&mut dec)?);
+            entries.push(decode_entry(&mut dec, version)?);
         }
-        Ok(Container { path: path.to_path_buf(), entries })
+        Ok(Container { path: path.to_path_buf(), version, entries })
     }
 
     pub fn entry(&self, name: &str) -> Result<&ContainerEntry> {
@@ -550,6 +654,7 @@ impl Container {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Scheme;
     use crate::config::hardware::Platform;
     use crate::config::layer::{ConvLayer, TileShape};
     use crate::layout::packer::Packer;
@@ -664,6 +769,95 @@ mod tests {
                     for ch in 0..16 {
                         assert_eq!(win.get(y, x, ch), fm.get(y, x, ch));
                     }
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn packed_policy(
+        mode: DivisionMode,
+        policy: CodecPolicy,
+        seed: u64,
+    ) -> (FeatureMap, PackedFeatureMap) {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let tile = TileShape::new(8, 8, 8);
+        let division = Division::build(mode, &layer, &tile, &hw, 24, 24, 16).unwrap();
+        let fm = generate(24, 24, 16, SparsityParams::clustered(0.4, seed));
+        let p = Packer::new(hw, policy).pack(&fm, &division, true);
+        (fm, p)
+    }
+
+    #[test]
+    fn tag_table_packs_and_unpacks() {
+        let tags: Vec<u8> = (0..13).map(|i| (i % 4) as u8).collect();
+        let bytes = pack_tags(&tags);
+        assert_eq!(bytes.len(), 4); // ceil(13/4)
+        assert_eq!(unpack_tags(&bytes, 13), tags);
+        assert!(pack_tags(&[]).is_empty());
+    }
+
+    /// v1 backward compat: a v1-pinned write (no policy byte) reopens
+    /// with the implicit uniform codec and serves windows bit-exactly.
+    #[test]
+    fn v1_container_still_opens_and_serves() {
+        let path = tmp("v1-compat.grate");
+        let (fm, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Zrlc, 8);
+        Container::write_with_version(&path, &[("t".to_string(), &p)], 1).unwrap();
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.version, 1);
+        c.verify().unwrap();
+        let e = c.entry("t").unwrap();
+        assert_eq!(e.packed.policy, CodecPolicy::Fixed(Scheme::Zrlc));
+        assert!(e.packed.tags.is_empty());
+        let mut dram = Dram::default();
+        let win = c.fetch_window("t", &mut dram, 2, 20, 3, 21, 0, 16).unwrap();
+        for y in 2..20 {
+            for x in 3..21 {
+                for ch in 0..16 {
+                    assert_eq!(win.get(y, x, ch), fm.get(y, x, ch));
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// v1 cannot hold adaptive tensors — the writer refuses instead of
+    /// silently dropping the tag table.
+    #[test]
+    fn v1_write_rejects_adaptive() {
+        let path = tmp("v1-adaptive.grate");
+        let (_, p) = packed_policy(DivisionMode::GrateTile { n: 8 }, CodecPolicy::Adaptive, 9);
+        let e = Container::write_with_version(&path, &[("t".to_string(), &p)], 1).unwrap_err();
+        assert!(e.to_string().contains("adaptive"), "{e}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// v2 adaptive round trip: the packed tag table survives the TOC,
+    /// per-record tags are rebuilt, and mixed-codec windows decode
+    /// bit-exactly off the file.
+    #[test]
+    fn v2_adaptive_roundtrip_with_tag_table() {
+        let path = tmp("v2-adaptive.grate");
+        let (fm, p) = packed_policy(DivisionMode::GrateTile { n: 8 }, CodecPolicy::Adaptive, 10);
+        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.version, 2);
+        c.verify().unwrap();
+        let e = c.entry("t").unwrap();
+        assert_eq!(e.packed.policy, CodecPolicy::Adaptive);
+        assert_eq!(e.packed.tags, p.tags);
+        assert_eq!(e.packed.metadata.bits_per_record, p.metadata.bits_per_record);
+        for (ra, rb) in e.packed.metadata.records.iter().zip(&p.metadata.records) {
+            assert_eq!(ra.codec_tags, rb.codec_tags);
+        }
+        let mut dram = Dram::default();
+        let win = c.fetch_window("t", &mut dram, 0, 24, 0, 24, 0, 16).unwrap();
+        for y in 0..24 {
+            for x in 0..24 {
+                for ch in 0..16 {
+                    assert_eq!(win.get(y, x, ch), fm.get(y, x, ch));
                 }
             }
         }

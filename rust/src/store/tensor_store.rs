@@ -175,6 +175,7 @@ impl TensorStore {
         let mut payload: Vec<u16> = Vec::with_capacity(src.total_words as usize);
         let mut records = Vec::with_capacity(div.n_blocks());
         let mut cursor: u64 = 0;
+        let adaptive = src.policy.is_adaptive();
         for by in 0..div.n_blocks_y {
             let yr = div.y_segs_of_block(by);
             for bx in 0..div.n_blocks_x {
@@ -185,6 +186,8 @@ impl TensorStore {
                     }
                     let pointer_words = cursor;
                     let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+                    let mut rec_tags =
+                        Vec::with_capacity(if adaptive { yr.len() * xr.len() } else { 0 });
                     for iy in yr.clone() {
                         for ix in xr.clone() {
                             let li = div.linear(SubTensorRef { iy, ix, icg });
@@ -202,11 +205,15 @@ impl TensorStore {
                                 .copy_from_slice(&self.mem[at..at + size]);
                             cursor += size as u64;
                             rec_sizes.push(size as u32);
+                            if adaptive {
+                                rec_tags.push(src.tags[li]);
+                            }
                         }
                     }
                     records.push(crate::layout::metadata::BlockRecord {
                         pointer_words,
                         sizes_words: rec_sizes,
+                        codec_tags: rec_tags,
                     });
                 }
             }
@@ -215,13 +222,14 @@ impl TensorStore {
             if div.compact { cursor } else { round_up(cursor as usize, wpl) as u64 };
         Ok(PackedFeatureMap {
             division: div.clone(),
-            scheme: src.scheme,
+            policy: src.policy,
+            tags: src.tags.clone(),
             sizes_words: src.sizes_words.clone(),
             sizes_bits: src.sizes_bits.clone(),
             addr_words,
             metadata: MetadataTable {
                 records,
-                bits_per_record: div.meta_bits_per_block,
+                bits_per_record: src.metadata.bits_per_record,
             },
             payload: Some(payload),
             total_words,

@@ -16,12 +16,14 @@
 //! Accounting is bit-exact with the analytic producer model: the padded
 //! payload bits equal `PackedFeatureMap::total_words × 16` of a
 //! stop-the-world re-pack of the same map, and the metadata bits equal
-//! `Division::total_meta_bits` — asserted by `tests/store_roundtrip.rs`
-//! against `sim::network::writeback_cost`.
+//! `n_blocks × record_bits_for(division, policy)` (which is
+//! `Division::total_meta_bits` under a fixed codec, plus 2 tag bits per
+//! record slot under the adaptive policy) — asserted by
+//! `tests/store_roundtrip.rs` against `sim::network::writeback_cost`.
 
 use super::tensor_store::{StoredTensor, TensorStore};
-use crate::compress::{Compressor, Scheme};
-use crate::layout::metadata::{BlockRecord, MetadataTable};
+use crate::compress::{stats, CodecPolicy, DistinctTracker, Registry};
+use crate::layout::metadata::{record_bits_for, BlockRecord, MetadataTable};
 use crate::layout::packer::PackedFeatureMap;
 use crate::memsim::{Dram, Stream};
 use crate::tensor::dense::bf16_quantise;
@@ -55,13 +57,24 @@ impl WriteReport {
     }
 }
 
-/// Streams one tensor into a [`TensorStore`], tile by tile.
+/// Streams one tensor into a [`TensorStore`], tile by tile. Under
+/// [`CodecPolicy::Adaptive`] every completed sub-tensor is sized for all
+/// registered codecs from one fused stats scan of its staging buffer
+/// and compressed with the winner — the same deterministic selection
+/// rule the packer plans with, so a streamed write stays bit-exact with
+/// a stop-the-world pack of the same map.
 pub struct StoreWriter<'s> {
     store: &'s mut TensorStore,
     name: String,
     division: Division,
-    scheme: Scheme,
-    codec: Box<dyn Compressor>,
+    policy: CodecPolicy,
+    /// Distinct-value tracker for adaptive stats sizing (None when the
+    /// policy needs no distinct tracking).
+    tracker: Option<DistinctTracker>,
+    /// Per-sub-tensor codec tags (adaptive only).
+    tags: Vec<u8>,
+    /// Record width in bits, codec tags included (`record_bits_for`).
+    record_bits: usize,
     wpl: usize,
     /// Dense staging per sub-tensor, allocated on first touch, freed on
     /// compression.
@@ -85,13 +98,14 @@ pub struct StoreWriter<'s> {
 
 impl<'s> StoreWriter<'s> {
     /// Start streaming tensor `name` under `division` (built for the
-    /// map's consumer) and `scheme`.
+    /// map's consumer) and `policy`.
     pub fn new(
         store: &'s mut TensorStore,
         name: &str,
         division: Division,
-        scheme: Scheme,
+        policy: impl Into<CodecPolicy>,
     ) -> Self {
+        let policy = policy.into();
         let n = division.n_subtensors();
         let mut block_remaining = vec![0u32; division.n_blocks()];
         for iy in 0..division.ys.len() {
@@ -102,11 +116,15 @@ impl<'s> StoreWriter<'s> {
             }
         }
         let wpl = store.arena.words_per_line();
+        let needs_tracker =
+            policy.is_adaptive() && Registry::global().max_stats_dict_cap() > 0;
         Self {
             store,
             name: name.to_string(),
-            codec: scheme.build(),
-            scheme,
+            tracker: needs_tracker.then(DistinctTracker::new),
+            tags: if policy.is_adaptive() { vec![0; n] } else { Vec::new() },
+            record_bits: record_bits_for(&division, policy),
+            policy,
             wpl,
             staging: vec![None; n],
             filled: vec![0; n],
@@ -182,14 +200,32 @@ impl<'s> StoreWriter<'s> {
     }
 
     /// A sub-tensor is fully covered: compress it, free its staging,
-    /// and commit its block if it was the last one outstanding.
+    /// and commit its block if it was the last one outstanding. In
+    /// adaptive mode the codec is chosen here — one stats scan of the
+    /// staging buffer sizes every registered codec exactly, and the
+    /// shared deterministic min rule picks the winner the packer's plan
+    /// pass would pick for the same data.
     fn complete_subtensor(&mut self, li: usize, r: SubTensorRef) {
         let buf = self.staging[li].take().expect("sub-tensor completed twice");
         self.staged_words -= buf.len();
+        let reg = Registry::global();
+        let codec = match self.policy {
+            CodecPolicy::Fixed(s) => reg.compressor(s),
+            CodecPolicy::Adaptive => {
+                let stats = stats::scan(&buf, reg.max_stats_dict_cap(), self.tracker.as_mut());
+                let mut sizes = Vec::with_capacity(reg.entries().len());
+                // Same sizing substrate + min rule as the packer's plan
+                // pass — the streamed selection cannot drift from it.
+                reg.sizes_from(&stats, Some(&buf), &mut sizes);
+                let tag = reg.select(&sizes, self.division.compact);
+                self.tags[li] = tag;
+                reg.compressor_of_tag(tag)
+            }
+        };
         // Single pass: the codec reports the idealised bit size of the
         // same encode (the old compress + compressed_bits re-scanned
         // every block).
-        let (comp, bits) = self.codec.compress_with_bits(&buf);
+        let (comp, bits) = codec.compress_with_bits(&buf);
         self.sizes_words[li] = comp.words.len() as u32;
         self.sizes_bits[li] = bits as u32;
         self.pending[li] = Some(comp.words);
@@ -228,6 +264,8 @@ impl<'s> StoreWriter<'s> {
         self.store.ensure_mem(base + alloc_len);
         let mut cursor = base;
         let mut rec_sizes = Vec::with_capacity(yr.len() * xr.len());
+        let mut rec_tags =
+            Vec::with_capacity(if self.policy.is_adaptive() { yr.len() * xr.len() } else { 0 });
         for iy in yr {
             for ix in xr.clone() {
                 let li = self.division.linear(SubTensorRef { iy, ix, icg });
@@ -247,12 +285,20 @@ impl<'s> StoreWriter<'s> {
                 self.payload_bits += padded * 16;
                 cursor += words.len() as u64;
                 rec_sizes.push(words.len() as u32);
+                if self.policy.is_adaptive() {
+                    rec_tags.push(self.tags[li]);
+                }
             }
         }
-        self.records[b] = Some(BlockRecord { pointer_words: base, sizes_words: rec_sizes });
-        self.meta_bits += self.division.meta_bits_per_block as u64;
-        self.dram
-            .account_bits(Stream::MetadataWrite, self.division.meta_bits_per_block as u64);
+        self.records[b] = Some(BlockRecord {
+            pointer_words: base,
+            sizes_words: rec_sizes,
+            codec_tags: rec_tags,
+        });
+        // Tag-aware record width: adaptive records carry their 2-bit
+        // codec tags, and the producer-side index traffic pays for them.
+        self.meta_bits += self.record_bits as u64;
+        self.dram.account_bits(Stream::MetadataWrite, self.record_bits as u64);
         self.extents.push((base, alloc_len));
     }
 
@@ -272,7 +318,9 @@ impl<'s> StoreWriter<'s> {
             store,
             name,
             division,
-            scheme,
+            policy,
+            tags,
+            record_bits,
             wpl,
             sizes_words,
             sizes_bits,
@@ -288,14 +336,14 @@ impl<'s> StoreWriter<'s> {
         } = self;
         let records: Vec<BlockRecord> =
             records.into_iter().map(|r| r.expect("block not committed")).collect();
-        let bits_per_record = division.meta_bits_per_block;
         let packed = PackedFeatureMap {
             division,
-            scheme,
+            policy,
+            tags,
             sizes_words,
             sizes_bits,
             addr_words,
-            metadata: MetadataTable { records, bits_per_record },
+            metadata: MetadataTable { records, bits_per_record: record_bits },
             payload: None,
             total_words: payload_bits / 16,
             words_per_line: wpl,
@@ -317,6 +365,7 @@ impl<'s> StoreWriter<'s> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Scheme;
     use crate::config::hardware::Platform;
     use crate::config::layer::{ConvLayer, TileShape};
     use crate::layout::packer::Packer;
@@ -333,7 +382,8 @@ mod tests {
 
     /// Stream a map through the writer in 8×8 output tiles and compare
     /// against a stop-the-world pack of the same map: identical sizes,
-    /// identical padded footprint, identical fetched contents.
+    /// identical padded footprint, identical codec tags, identical
+    /// fetched contents — for fixed codecs AND the adaptive policy.
     #[test]
     fn streamed_write_matches_monolithic_pack() {
         let hw = Platform::NvidiaSmallTile.hardware();
@@ -342,13 +392,17 @@ mod tests {
             DivisionMode::Uniform { edge: 4 },
             DivisionMode::Uniform { edge: 1 },
         ] {
-            for scheme in [Scheme::Bitmask, Scheme::Zrlc] {
+            for policy in [
+                CodecPolicy::Fixed(Scheme::Bitmask),
+                CodecPolicy::Fixed(Scheme::Zrlc),
+                CodecPolicy::Adaptive,
+            ] {
                 let fm = generate(24, 24, 16, SparsityParams::clustered(0.45, 7));
                 let div = division(mode, 24, 24, 16);
-                let reference = Packer::new(hw, scheme).pack(&fm, &div, true);
+                let reference = Packer::new(hw, policy).pack(&fm, &div, true);
 
                 let mut store = TensorStore::new();
-                let mut w = StoreWriter::new(&mut store, "t", div.clone(), scheme);
+                let mut w = StoreWriter::new(&mut store, "t", div.clone(), policy);
                 for ty in 0..3 {
                     for tx in 0..3 {
                         let (y0, x0) = (ty * 8, tx * 8);
@@ -358,16 +412,24 @@ mod tests {
                 }
                 let report = w.finish().unwrap();
                 let t = store.get("t").unwrap();
-                assert_eq!(t.packed.sizes_words, reference.sizes_words, "{mode:?} {scheme:?}");
+                assert_eq!(t.packed.sizes_words, reference.sizes_words, "{mode:?} {policy:?}");
+                assert_eq!(t.packed.tags, reference.tags, "{mode:?} {policy:?} tags");
                 assert_eq!(t.packed.total_words, reference.total_words);
-                assert_eq!(report.metadata_bits, div.total_meta_bits());
+                assert_eq!(
+                    report.metadata_bits,
+                    reference.meta_total_bits(),
+                    "{mode:?} {policy:?} meta bits"
+                );
+                if !policy.is_adaptive() {
+                    assert_eq!(report.metadata_bits, div.total_meta_bits());
+                }
                 assert_eq!(report.payload_bits, reference.total_words * 16);
                 assert!(report.peak_staged_words > 0);
                 store.arena.check().unwrap();
 
                 let mut dram = Dram::default();
                 let got = store.fetch_dense("t", &mut dram).unwrap();
-                assert_eq!(got.as_slice(), fm.as_slice(), "{mode:?} {scheme:?}");
+                assert_eq!(got.as_slice(), fm.as_slice(), "{mode:?} {policy:?}");
             }
         }
     }

@@ -306,6 +306,29 @@ impl Division {
         self.n_blocks() as u64 * self.meta_bits_per_block as u64
     }
 
+    /// Sub-tensor slots per metadata record: the maximum number of
+    /// sub-tensors any block holds (records are fixed-width, so every
+    /// record carries this many size/tag fields — up to 4 for GrateTile
+    /// blocks, 1 for uniform/whole-map blocks).
+    pub fn record_slots(&self) -> usize {
+        let max_run = |blocks: &[usize]| -> usize {
+            // Block ids are non-decreasing along each axis; the longest
+            // run of one id is that axis's per-block segment maximum.
+            let mut best = 1;
+            let mut cur = 1;
+            for w in blocks.windows(2) {
+                if w[1] == w[0] {
+                    cur += 1;
+                    best = best.max(cur);
+                } else {
+                    cur = 1;
+                }
+            }
+            best
+        };
+        max_run(&self.block_of_y) * max_run(&self.block_of_x)
+    }
+
     /// Channel depth of group `icg` (last group may be partial).
     pub fn cg_depth(&self, icg: usize) -> usize {
         debug_assert!(icg < self.n_cgroups);

@@ -1,0 +1,128 @@
+//! `.grate` container format-compatibility suite (ISSUE 5).
+//!
+//! The v2 format added the codec-policy byte and the adaptive tag
+//! table; the reader must keep accepting v1 containers forever. The v1
+//! fixture in `tests/golden/fixture_v1.grate` is blessed on first run
+//! (the authoring container cannot execute the crate) and byte-pinned
+//! afterwards: later sessions open the *checked-in* bytes, so any
+//! accidental v1-reader regression — or any drift in what v1 bytes we
+//! produce — fails loudly.
+
+use gratetile::compress::{CodecPolicy, Scheme};
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::layout::Packer;
+use gratetile::memsim::Dram;
+use gratetile::store::{Container, TensorStore};
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::tensor::FeatureMap;
+use gratetile::tiling::division::{Division, DivisionMode};
+use std::path::{Path, PathBuf};
+
+fn golden_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The deterministic map every compat test serves: same seed, same
+/// geometry, forever (changing it would orphan the fixture).
+fn fixture_map() -> (FeatureMap, Division) {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+    let tile = hw.tile_for_layer(&layer);
+    let division =
+        Division::build(DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, 24, 24, 16)
+            .unwrap();
+    let fm = generate(24, 24, 16, SparsityParams::clustered(0.4, 77));
+    (fm, division)
+}
+
+/// v1 backward compat against the checked-in fixture: bless the v1
+/// bytes if absent, then open and serve windows bit-exactly against
+/// the deterministic source map.
+#[test]
+fn v1_fixture_opens_and_serves_bit_exactly() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let (fm, division) = fixture_map();
+    let path = golden_dir().join("fixture_v1.grate");
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let packed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, true);
+        Container::write_with_version(&path, &[("act".to_string(), &packed)], 1).unwrap();
+        eprintln!("container_compat: blessed {}", path.display());
+    }
+    // Structural pin on the raw bytes, independent of the reader: a v1
+    // TOC entry is name_len ∥ name ∥ scheme byte ∥ division (tag,
+    // param) with NO policy byte. If the v1 writer ever regressed into
+    // emitting the v2 layout, the freshly blessed fixture would fail
+    // these offsets — so the check bites even on the self-blessed first
+    // run, where reader and writer could otherwise hide each other.
+    let bytes = std::fs::read(&path).unwrap();
+    assert_eq!(&bytes[..4], b"GRTC");
+    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 1, "header version");
+    const HEADER: usize = 28;
+    assert_eq!(u16::from_le_bytes(bytes[HEADER..HEADER + 2].try_into().unwrap()), 3);
+    assert_eq!(&bytes[HEADER + 2..HEADER + 5], b"act");
+    assert_eq!(bytes[HEADER + 5], 0, "scheme byte (bitmask tag) directly after the name");
+    assert_eq!(bytes[HEADER + 6], 1, "GrateTile division tag right after the scheme byte");
+    assert_eq!(
+        u32::from_le_bytes(bytes[HEADER + 7..HEADER + 11].try_into().unwrap()),
+        8,
+        "division modulus parameter"
+    );
+
+    let c = Container::open(&path).unwrap();
+    assert_eq!(c.version, 1, "fixture must stay a genuine v1 file");
+    c.verify().unwrap();
+    let e = c.entry("act").unwrap();
+    assert_eq!(e.packed.policy, CodecPolicy::Fixed(Scheme::Bitmask));
+    assert!(e.packed.tags.is_empty(), "v1 tensors carry no codec tags");
+    let mut dram = Dram::default();
+    for (y0, y1, x0, x1) in [(0, 24, 0, 24), (5, 14, 3, 17), (23, 24, 0, 1)] {
+        let win = c.fetch_window("act", &mut dram, y0, y1, x0, x1, 0, 16).unwrap();
+        for y in y0..y1 {
+            for x in x0..x1 {
+                for ch in 0..16 {
+                    assert_eq!(win.get(y, x, ch), fm.get(y, x, ch), "({y},{x},{ch})");
+                }
+            }
+        }
+    }
+}
+
+/// The satellite round trip: pack v2-adaptive → inspect (TOC/policy/
+/// tags) → serve (window fetches off the file), all bit-exact.
+#[test]
+fn v2_adaptive_pack_inspect_serve_roundtrip() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let (fm, division) = fixture_map();
+    let packed = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &division, true);
+    let mut path = std::env::temp_dir();
+    path.push(format!("gratetile-compat-v2-{}.grate", std::process::id()));
+    Container::write(&path, &[("act".to_string(), &packed)]).unwrap();
+
+    // Inspect: v2 header, adaptive policy, intact tag table + records.
+    let c = Container::open(&path).unwrap();
+    assert_eq!(c.version, 2);
+    c.verify().unwrap();
+    let e = c.entry("act").unwrap();
+    assert_eq!(e.packed.policy, CodecPolicy::Adaptive);
+    assert_eq!(e.packed.tags, packed.tags);
+    assert!(e.packed.codec_summary().starts_with("auto("));
+
+    // Serve: windows off the file, and a store round trip through the
+    // in-memory read path.
+    let mut dram = Dram::default();
+    let win = c.fetch_window("act", &mut dram, 2, 22, 1, 23, 0, 16).unwrap();
+    for y in 2..22 {
+        for x in 1..23 {
+            for ch in 0..16 {
+                assert_eq!(win.get(y, x, ch), fm.get(y, x, ch), "({y},{x},{ch})");
+            }
+        }
+    }
+    let mut store = TensorStore::new();
+    store.insert_packed("act", &c.read_tensor("act").unwrap()).unwrap();
+    let mut d2 = Dram::default();
+    assert_eq!(store.fetch_dense("act", &mut d2).unwrap().as_slice(), fm.as_slice());
+    std::fs::remove_file(&path).ok();
+}

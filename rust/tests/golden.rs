@@ -88,6 +88,20 @@ fn golden_sim_serve_report() {
     check_golden("serve_report.txt", &report.render());
 }
 
+/// The same serving report under `--codec auto`: per-sub-tensor codec
+/// selection flows through the whole store-resident pipeline and the
+/// simulated cycle accounting, deterministically.
+#[test]
+fn golden_sim_serve_report_auto_codec() {
+    use gratetile::compress::CodecPolicy;
+    let mut cfg =
+        SimServerConfig::new(PipelineConfig::new(Platform::NvidiaSmallTile.hardware()));
+    cfg.pipeline.policy = CodecPolicy::Adaptive;
+    let server = SimServer::new(cfg, tiny_net());
+    let report = server.serve(server.synthetic_requests(6, 0.5, 7)).unwrap();
+    check_golden("serve_report_auto.txt", &report.render());
+}
+
 /// ISSUE acceptance: the simulated report is byte-identical across
 /// host worker counts — `--jobs` ∈ {1, 2, 8} — cycles, per-request
 /// latencies and feature bytes included.

@@ -2,7 +2,7 @@
 //! invariants that must hold for *any* layer geometry, sparsity and
 //! division mode, not just the benchmark configurations.
 
-use gratetile::compress::{Compressor, Scheme};
+use gratetile::compress::{CodecPolicy, Compressor, Registry, Scheme};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::layout::{Fetcher, Packer};
@@ -20,7 +20,7 @@ use gratetile::util::SplitMix64;
 struct Scenario {
     layer: ConvLayer,
     mode: DivisionMode,
-    scheme: Scheme,
+    policy: CodecPolicy,
     density: f64,
     seed: u64,
 }
@@ -39,16 +39,17 @@ fn gen_scenario(r: &mut SplitMix64) -> Scenario {
         4 => DivisionMode::Uniform { edge: 4 },
         _ => DivisionMode::Uniform { edge: 1 },
     };
-    let scheme = match r.below(4) {
-        0 => Scheme::Bitmask,
-        1 => Scheme::Zrlc,
-        2 => Scheme::Dictionary,
-        _ => Scheme::Raw,
+    let policy = match r.below(5) {
+        0 => CodecPolicy::Fixed(Scheme::Bitmask),
+        1 => CodecPolicy::Fixed(Scheme::Zrlc),
+        2 => CodecPolicy::Fixed(Scheme::Dictionary),
+        3 => CodecPolicy::Fixed(Scheme::Raw),
+        _ => CodecPolicy::Adaptive,
     };
     Scenario {
         layer: ConvLayer { k, s, d, h, w, c_in: c, c_out: c },
         mode,
-        scheme,
+        policy,
         density: r.next_f64(),
         seed: r.next_u64(),
     }
@@ -69,15 +70,18 @@ fn prop_engine_matches_seed_packer() {
             Err(_) => return Ok(()),
         };
         let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
-        let packer = Packer::new(hw, sc.scheme);
+        let packer = Packer::new(hw, sc.policy);
         let oracle = packer.pack_reference(&fm, &division, true);
         let engine = packer.pack(&fm, &division, true);
-        let tag = format!("{} {}", sc.mode.name(), sc.scheme.name());
+        let tag = format!("{} {}", sc.mode.name(), sc.policy.name());
         if oracle.sizes_words != engine.sizes_words {
             return Err(format!("{tag}: sizes_words diverge"));
         }
         if oracle.sizes_bits != engine.sizes_bits {
             return Err(format!("{tag}: sizes_bits diverge"));
+        }
+        if oracle.tags != engine.tags {
+            return Err(format!("{tag}: codec tags diverge"));
         }
         if oracle.addr_words != engine.addr_words {
             return Err(format!("{tag}: addr_words diverge"));
@@ -115,7 +119,12 @@ fn prop_pack_deterministic_across_jobs() {
     let fm = generate(64, 64, 32, SparsityParams::clustered(0.4, 77));
     for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 1 }] {
         let division = Division::build(mode, &layer, &tile, &hw, 64, 64, 32).unwrap();
-        for scheme in [Scheme::Bitmask, Scheme::Zrlc, Scheme::Dictionary] {
+        for scheme in [
+            CodecPolicy::Fixed(Scheme::Bitmask),
+            CodecPolicy::Fixed(Scheme::Zrlc),
+            CodecPolicy::Fixed(Scheme::Dictionary),
+            CodecPolicy::Adaptive,
+        ] {
             let packer = Packer::new(hw, scheme);
             set_threads(1);
             let one = packer.pack(&fm, &division, true);
@@ -126,6 +135,7 @@ fn prop_pack_deterministic_across_jobs() {
             }
             set_threads(0);
             for (jobs, p) in &packs {
+                assert_eq!(p.tags, one.tags, "{mode:?} {scheme:?} jobs {jobs}");
                 assert_eq!(p.sizes_words, one.sizes_words, "{mode:?} {scheme:?} jobs {jobs}");
                 assert_eq!(p.sizes_bits, one.sizes_bits, "{mode:?} {scheme:?} jobs {jobs}");
                 assert_eq!(p.addr_words, one.addr_words, "{mode:?} {scheme:?} jobs {jobs}");
@@ -152,7 +162,7 @@ fn prop_fetch_lru_and_span_invariant() {
             Err(_) => return Ok(()),
         };
         let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
-        let packed = Packer::new(hw, sc.scheme).pack(&fm, &division, true);
+        let packed = Packer::new(hw, sc.policy).pack(&fm, &division, true);
         let mut plain = Fetcher::new(&packed);
         let mut cached = Fetcher::new(&packed).with_cache(8);
         let mut d_plain = Dram::default();
@@ -169,7 +179,7 @@ fn prop_fetch_lru_and_span_invariant() {
                 return Err(format!(
                     "window ({y0},{y1})x({x0},{x1}) differs with LRU on ({} {})",
                     sc.mode.name(),
-                    sc.scheme.name()
+                    sc.policy.name()
                 ));
             }
             // Ground truth: the dense map.
@@ -180,7 +190,7 @@ fn prop_fetch_lru_and_span_invariant() {
                             return Err(format!(
                                 "mismatch vs dense at ({y},{x},{ch}) ({} {})",
                                 sc.mode.name(),
-                                sc.scheme.name()
+                                sc.policy.name()
                             ));
                         }
                     }
@@ -214,7 +224,7 @@ fn prop_pack_fetch_lossless() {
             Err(_) => return Ok(()), // N/A combinations are fine
         };
         let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
-        let packed = Packer::new(hw, sc.scheme).pack(&fm, &division, true);
+        let packed = Packer::new(hw, sc.policy).pack(&fm, &division, true);
         let mut dram = Dram::default();
         let win = Fetcher::new(&packed).fetch_window(&mut dram, 0, h, 0, w, 0, c);
         for y in 0..h {
@@ -224,7 +234,7 @@ fn prop_pack_fetch_lossless() {
                         return Err(format!(
                             "mismatch at ({y},{x},{ch}) mode={} scheme={}",
                             sc.mode.name(),
-                            sc.scheme.name()
+                            sc.policy.name()
                         ));
                     }
                 }
@@ -279,8 +289,8 @@ fn prop_pricer_matches_naive_walker() {
         for platform in [Platform::NvidiaSmallTile, Platform::EyerissLargeTile] {
             let hw = platform.hardware();
             for mode in DivisionMode::table3_modes() {
-                let fast = run_layer(&hw, &sc.layer, &fm, mode, sc.scheme);
-                let slow = run_layer_naive(&hw, &sc.layer, &fm, mode, sc.scheme);
+                let fast = run_layer(&hw, &sc.layer, &fm, mode, sc.policy);
+                let slow = run_layer_naive(&hw, &sc.layer, &fm, mode, sc.policy);
                 match (fast, slow) {
                     (Ok(f), Ok(s)) => {
                         if (f.fetched_bits, f.metadata_bits, f.baseline_bits)
@@ -323,7 +333,7 @@ fn prop_bandwidth_bounds() {
         let hw = Platform::NvidiaSmallTile.hardware();
         let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
         let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
-        let r = match run_layer(&hw, &sc.layer, &fm, sc.mode, sc.scheme) {
+        let r = match run_layer(&hw, &sc.layer, &fm, sc.mode, sc.policy) {
             Ok(r) => r,
             Err(_) => return Ok(()),
         };
@@ -335,7 +345,7 @@ fn prop_bandwidth_bounds() {
         }
         // A window's fetch can't be smaller than its nonzero payload
         // (bitmask/zrlc/dict all store nonzeros verbatim at >= 16 bits).
-        if sc.scheme == Scheme::Bitmask {
+        if sc.policy == CodecPolicy::Fixed(Scheme::Bitmask) {
             let floor = (r.baseline_bits as f64) * fm.density() * 0.95;
             if (r.fetched_bits as f64) < floor {
                 return Err(format!(
@@ -368,7 +378,7 @@ fn prop_store_container_roundtrip() {
         // Stream the map into a store in bands whose height depends on
         // the seed (exercises partial sub-tensor staging).
         let mut store = TensorStore::new();
-        let mut writer = StoreWriter::new(&mut store, "t", division, sc.scheme);
+        let mut writer = StoreWriter::new(&mut store, "t", division, sc.policy);
         let band = 1 + (sc.seed % 11) as usize;
         let mut y0 = 0;
         while y0 < h {
@@ -411,7 +421,7 @@ fn prop_store_container_roundtrip() {
                         return Err(format!(
                             "container mismatch at ({y},{x},{ch}) mode={} scheme={}",
                             sc.mode.name(),
-                            sc.scheme.name()
+                            sc.policy.name()
                         ));
                     }
                 }
@@ -642,16 +652,17 @@ fn prop_pricer_edge_geometries() {
                     8,
                 ),
             };
-            let scheme = match r.below(4) {
-                0 => Scheme::Bitmask,
-                1 => Scheme::Zrlc,
-                2 => Scheme::Dictionary,
-                _ => Scheme::Raw,
+            let policy = match r.below(5) {
+                0 => CodecPolicy::Fixed(Scheme::Bitmask),
+                1 => CodecPolicy::Fixed(Scheme::Zrlc),
+                2 => CodecPolicy::Fixed(Scheme::Dictionary),
+                3 => CodecPolicy::Fixed(Scheme::Raw),
+                _ => CodecPolicy::Adaptive,
             };
             Scenario {
                 layer: ConvLayer { k, s, d: 1, h, w, c_in: c, c_out: c },
                 mode: DivisionMode::GrateTile { n: 8 }, // swept below
-                scheme,
+                policy,
                 density: r.next_f64(),
                 seed: r.next_u64(),
             }
@@ -662,8 +673,8 @@ fn prop_pricer_edge_geometries() {
             for platform in [Platform::NvidiaSmallTile, Platform::EyerissLargeTile] {
                 let hw = platform.hardware();
                 for mode in DivisionMode::table3_modes() {
-                    let fast = run_layer(&hw, &sc.layer, &fm, mode, sc.scheme);
-                    let slow = run_layer_naive(&hw, &sc.layer, &fm, mode, sc.scheme);
+                    let fast = run_layer(&hw, &sc.layer, &fm, mode, sc.policy);
+                    let slow = run_layer_naive(&hw, &sc.layer, &fm, mode, sc.policy);
                     match (fast, slow) {
                         (Ok(f), Ok(s)) => {
                             if (f.fetched_bits, f.metadata_bits, f.baseline_bits)
@@ -730,4 +741,145 @@ fn prop_mod_reduction_refines_cuts() {
         }
         Ok(())
     });
+}
+
+/// ISSUE 5 satellite (a): for ANY random map, the adaptive policy's
+/// payload+tag bits never exceed the best fixed codec's payload bits
+/// plus the same tag budget — per-sub-tensor min selection can only
+/// win the payload, and the 2-bit tags are charged identically on both
+/// sides of the comparison.
+#[test]
+fn prop_adaptive_payload_never_exceeds_best_fixed() {
+    forall_res(0xADA7, 25, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+        let auto = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &division, false);
+        let auto_fetch: u64 = auto.fetch_bits_grid().iter().sum();
+        let tag_bits = auto.meta_total_bits() - division.total_meta_bits();
+        for scheme in Registry::global().schemes() {
+            let fixed = Packer::new(hw, scheme).pack(&fm, &division, false);
+            let fixed_fetch: u64 = fixed.fetch_bits_grid().iter().sum();
+            // The genuinely asymmetric bound: adaptive pays its real
+            // metadata (base + tags); the fixed side pays base metadata
+            // plus the same tag *budget* — per-sub-tensor min selection
+            // must cover the comparison even so.
+            if auto_fetch + auto.meta_total_bits()
+                > fixed_fetch + fixed.meta_total_bits() + tag_bits
+            {
+                return Err(format!(
+                    "{} {}: adaptive {auto_fetch}+{} > fixed {fixed_fetch}+{}+{tag_bits} ({})",
+                    sc.mode.name(),
+                    sc.density,
+                    auto.meta_total_bits(),
+                    fixed.meta_total_bits(),
+                    scheme.name()
+                ));
+            }
+            if auto.total_words > fixed.total_words {
+                return Err(format!(
+                    "{}: adaptive footprint {} > fixed {} ({})",
+                    sc.mode.name(),
+                    auto.total_words,
+                    fixed.total_words,
+                    scheme.name()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ISSUE 5 satellite (a), strict half: on a mixed-density map (dense
+/// top half, near-empty bottom half) the adaptive policy beats EVERY
+/// fixed codec strictly, even after paying its tag bits — raw wins the
+/// dense sub-tensors, bitmask the sparse ones, and no single codec can
+/// have both.
+#[test]
+fn adaptive_strictly_beats_every_fixed_codec_on_mixed_density_map() {
+    use gratetile::tensor::dense::bf16_quantise;
+    use gratetile::tensor::FeatureMap;
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let layer = ConvLayer::new(1, 1, 64, 64, 16, 16);
+    let tile = hw.tile_for_layer(&layer);
+    let division =
+        Division::build(DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, 64, 64, 16)
+            .unwrap();
+    let mut rng = SplitMix64::new(0x3117);
+    let data: Vec<f32> = (0..64 * 64 * 16)
+        .map(|i| {
+            let y = i / (64 * 16);
+            if y < 32 {
+                // Dense half: every word nonzero, high cardinality.
+                bf16_quantise(rng.next_f32() * 9.0 + 0.5)
+            } else if rng.chance(0.02) {
+                bf16_quantise(rng.next_f32() + 0.25)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let fm = FeatureMap::from_vec(64, 64, 16, data);
+    let auto = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &division, false);
+    let auto_total = auto.total_words * 16 + auto.meta_total_bits();
+    let mut used: Vec<u8> = auto.tags.clone();
+    used.sort_unstable();
+    used.dedup();
+    assert!(used.len() >= 2, "the mixed map must actually mix codecs: {used:?}");
+    for scheme in Registry::global().schemes() {
+        let fixed = Packer::new(hw, scheme).pack(&fm, &division, false);
+        let fixed_total = fixed.total_words * 16 + fixed.meta_total_bits();
+        assert!(
+            auto_total < fixed_total,
+            "adaptive {auto_total} !< fixed {} {fixed_total}",
+            scheme.name()
+        );
+    }
+}
+
+/// ISSUE 5 acceptance: on the standard layer zoo (the Table III
+/// benchmark suite), adaptive total (payload + metadata + tag) bits
+/// never exceed the best fixed codec's total with the same tag budget
+/// charged to both sides.
+#[test]
+fn adaptive_never_exceeds_best_fixed_on_layer_zoo() {
+    use gratetile::config::zoo::benchmark_suite;
+    use gratetile::sim::experiment::bench_feature_map;
+    let hw = Platform::EyerissLargeTile.hardware();
+    let mode = DivisionMode::GrateTile { n: 8 };
+    let mut checked = 0;
+    for bench in benchmark_suite() {
+        let fm = bench_feature_map(&bench);
+        let tile = hw.tile_for_layer(&bench.layer);
+        let Ok(division) =
+            Division::build(mode, &bench.layer, &tile, &hw, fm.h, fm.w, fm.c)
+        else {
+            continue;
+        };
+        let auto = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &division, false);
+        let tag_bits = auto.meta_total_bits() - division.total_meta_bits();
+        let auto_total = auto.total_words * 16 + auto.meta_total_bits();
+        let best_fixed = Registry::global()
+            .schemes()
+            .into_iter()
+            .map(|s| {
+                let p = Packer::new(hw, s).pack(&fm, &division, false);
+                p.total_words * 16 + p.meta_total_bits() + tag_bits
+            })
+            .min()
+            .unwrap();
+        assert!(
+            auto_total <= best_fixed,
+            "{} {}: adaptive {auto_total} > best fixed {best_fixed}",
+            bench.network.name(),
+            bench.name
+        );
+        checked += 1;
+    }
+    assert!(checked >= 15, "zoo coverage too small: {checked}");
 }

@@ -4,7 +4,7 @@
 //! `writeback_cost` exactly, and a `.grate` container round-trips
 //! (write → reopen → serve a window) bit-exactly.
 
-use gratetile::compress::Scheme;
+use gratetile::compress::{CodecPolicy, Scheme};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::coordinator::{LayerRunner, PipelineConfig, Weights};
@@ -21,10 +21,10 @@ fn tmp(name: &str) -> PathBuf {
     p
 }
 
-fn cfg(mode: DivisionMode, scheme: Scheme) -> PipelineConfig {
+fn cfg(mode: DivisionMode, policy: impl Into<CodecPolicy>) -> PipelineConfig {
     let mut c = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
     c.mode = mode;
-    c.scheme = scheme;
+    c.policy = policy.into();
     c
 }
 
@@ -35,9 +35,11 @@ fn cfg(mode: DivisionMode, scheme: Scheme) -> PipelineConfig {
 #[test]
 fn functional_writeback_matches_analytic_bit_exactly() {
     for (mode, scheme) in [
-        (DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask),
-        (DivisionMode::GrateTile { n: 8 }, Scheme::Zrlc),
-        (DivisionMode::Uniform { edge: 4 }, Scheme::Bitmask),
+        (DivisionMode::GrateTile { n: 8 }, CodecPolicy::Fixed(Scheme::Bitmask)),
+        (DivisionMode::GrateTile { n: 8 }, CodecPolicy::Fixed(Scheme::Zrlc)),
+        (DivisionMode::GrateTile { n: 8 }, CodecPolicy::Adaptive),
+        (DivisionMode::Uniform { edge: 4 }, CodecPolicy::Fixed(Scheme::Bitmask)),
+        (DivisionMode::Uniform { edge: 4 }, CodecPolicy::Adaptive),
     ] {
         let l1 = ConvLayer::new(1, 1, 32, 32, 16, 16);
         let l2 = ConvLayer::new(1, 2, 32, 32, 16, 8);
