@@ -1,0 +1,107 @@
+//! §Perf: the GEMM compute backend — zero-skip elision vs the honest
+//! dense baseline (`cargo bench --bench perf_gemm`).
+//!
+//! What this measures and gates (ISSUE 6 acceptance):
+//! * The skip-policy ladder (`dense` → `valueskip` → `zeroskip`) on one
+//!   representative 3x3 layer across the density range. At ≤ 25%
+//!   density the fused zero-skip path must be **≥ 1.5x** faster than
+//!   the no-skip kernel end to end (pack + fetch + kernel).
+//! * On near-dense input (~0.9 density) zero-skip must not regress the
+//!   dense baseline by more than 5% — the gates have to be free when
+//!   there is nothing to skip.
+//! * Every timed configuration is first checked **bit-identical** to
+//!   the `direct_conv_relu` oracle, so the speedup is never bought with
+//!   numerics drift.
+//!
+//! Throughput is reported in dense-equivalent MACs/s (`items/s`): the
+//! skip policies do *less* work for the same result, so their
+//! effective MAC rate rises with sparsity.
+//!
+//! Results append to `results/bench.csv` and land machine-readable in
+//! `BENCH_GEMM.json` at the repo root (git-rev-stamped; CI uploads it
+//! per commit).
+
+use gratetile::compute::{GemmBackend, SkipPolicy};
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::coordinator::conv::{direct_conv_relu, Weights};
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::util::benchkit::Bencher;
+use gratetile::util::parallel::set_threads;
+
+fn main() {
+    let mut b = Bencher::new();
+    // The kernel itself is single-threaded per tile; pin the host pool
+    // so pack-phase parallelism does not blur the kernel comparison.
+    set_threads(1);
+    let hw = Platform::NvidiaSmallTile.hardware();
+
+    // ---- Skip-policy ladder across the density range ----
+    let layer = ConvLayer::new(1, 1, 48, 48, 32, 32);
+    let wts = Weights::random(&layer, 5);
+    for density in [0.10f64, 0.20, 0.50, 0.90] {
+        let fm = generate(48, 48, 32, SparsityParams::clustered(density, 11));
+        let oracle = direct_conv_relu(&layer, &wts, &fm);
+        for skip in SkipPolicy::all() {
+            let be = GemmBackend::new(hw).with_skip(skip);
+            let run = be.conv_relu(&layer, &wts, &fm).unwrap();
+            assert_eq!(
+                run.out.as_slice(),
+                oracle.as_slice(),
+                "bit-exactness vs the direct-conv oracle failed at \
+                 d={density:.2} under {}",
+                skip.name()
+            );
+            let dense_macs = run.stats.dense_macs;
+            b.bench_items(
+                &format!("gemm/48x48x32->32/d{density:.2}/{}", skip.name()),
+                dense_macs,
+                || be.conv_relu(&layer, &wts, &fm).unwrap(),
+            );
+        }
+        let zs = format!("gemm/48x48x32->32/d{density:.2}/zeroskip");
+        let dn = format!("gemm/48x48x32->32/d{density:.2}/dense");
+        let speedup = b.report_speedup(&zs, &dn).unwrap();
+        if density <= 0.25 {
+            assert!(
+                speedup >= 1.5,
+                "§Perf acceptance: zero-skip must be ≥ 1.5x the no-skip \
+                 kernel at d={density:.2}, measured {speedup:.2}x"
+            );
+        }
+        if density >= 0.89 {
+            assert!(
+                speedup >= 1.0 / 1.05,
+                "§Perf acceptance: zero-skip must not regress the dense \
+                 baseline by > 5% on near-dense input (d={density:.2}), \
+                 measured {speedup:.2}x"
+            );
+        }
+    }
+
+    // ---- Strided layer spot check (no gate; trajectory data) ----
+    let strided = ConvLayer::new(1, 2, 48, 48, 32, 32);
+    let swts = Weights::random(&strided, 7);
+    let sfm = generate(48, 48, 32, SparsityParams::clustered(0.2, 13));
+    let soracle = direct_conv_relu(&strided, &swts, &sfm);
+    for skip in [SkipPolicy::Dense, SkipPolicy::ZeroSkip] {
+        let be = GemmBackend::new(hw).with_skip(skip);
+        let run = be.conv_relu(&strided, &swts, &sfm).unwrap();
+        assert_eq!(run.out.as_slice(), soracle.as_slice(), "strided/{}", skip.name());
+        let dense_macs = run.stats.dense_macs;
+        b.bench_items(
+            &format!("gemm/48x48x32->32/s2/d0.20/{}", skip.name()),
+            dense_macs,
+            || be.conv_relu(&strided, &swts, &sfm).unwrap(),
+        );
+    }
+    b.report_speedup(
+        "gemm/48x48x32->32/s2/d0.20/zeroskip",
+        "gemm/48x48x32->32/s2/d0.20/dense",
+    );
+
+    set_threads(0);
+    b.write_csv("perf_gemm");
+    b.write_json("perf_gemm", "../BENCH_GEMM.json");
+    println!("perf_gemm: all acceptance asserts passed");
+}

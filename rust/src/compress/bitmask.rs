@@ -107,6 +107,37 @@ impl Compressor for Bitmask {
         true
     }
 
+    fn span_nonzeros(&self, comp: &CompressedBlock, start: usize, len: usize) -> Option<usize> {
+        debug_assert!(start + len <= comp.n_elems);
+        if len == 0 {
+            return Some(0);
+        }
+        // Popcount over the mask words alone — the value payload after
+        // `mask_words` is never read (the whole point of the query).
+        let mask = &comp.words[..ceil_div(comp.n_elems, 16)];
+        let end = start + len;
+        let (w0, w1) = (start / 16, end.div_ceil(16));
+        let mut nnz = 0usize;
+        for (wi, &m) in mask[w0..w1].iter().enumerate() {
+            let base = (w0 + wi) * 16;
+            let mut bits = m;
+            if base < start {
+                bits &= !((1u16 << (start - base)) - 1);
+            }
+            if base + 16 > end {
+                bits &= (1u16 << (end - base)) - 1;
+            }
+            nnz += bits.count_ones() as usize;
+        }
+        Some(nnz)
+    }
+
+    fn is_all_zero(&self, comp: &CompressedBlock) -> Option<bool> {
+        // O(1): the payload is exactly `mask_words + nnz` long, so an
+        // empty block is one whose payload is the mask alone.
+        Some(comp.words.len() == ceil_div(comp.n_elems, 16))
+    }
+
     fn cost(&self) -> CodecCost {
         // One comparator + mask register per lane; decompression is a
         // prefix-sum scatter. See `cost.rs` for the model.
@@ -177,6 +208,66 @@ mod tests {
         assert_eq!(c.compressed_words(), 0);
         let mut out: Vec<f32> = vec![];
         Bitmask.decompress(&c, &mut out);
+    }
+
+    #[test]
+    fn span_nonzeros_matches_decoded_count() {
+        let mut rng = SplitMix64::new(11);
+        for len in [16usize, 64, 100, 511, 512] {
+            let blk = random_block(&mut rng, len, 0.3);
+            let c = Bitmask.compress(&blk);
+            let mut cases = vec![(0usize, len), (1, len - 1), (len - 1, 1), (5, 0)];
+            if len > 40 {
+                cases.push((17, 23));
+            }
+            for (start, n) in cases {
+                let want = blk[start..start + n].iter().filter(|&&v| v != 0.0).count();
+                assert_eq!(
+                    Bitmask.span_nonzeros(&c, start, n),
+                    Some(want),
+                    "len {len} start {start} n {n}"
+                );
+            }
+            let all_zero = blk.iter().all(|&v| v == 0.0);
+            assert_eq!(Bitmask.is_all_zero(&c), Some(all_zero));
+        }
+    }
+
+    /// ISSUE satellite: the occupancy query is metadata-only — it must
+    /// never touch (let alone decode) the value payload. Proven by
+    /// poisoning every value word after compression: the answers must be
+    /// exactly those of the unpoisoned block.
+    #[test]
+    fn occupancy_query_never_decodes_values() {
+        let mut rng = SplitMix64::new(12);
+        for &d in &[0.0, 0.25, 0.9] {
+            let blk = random_block(&mut rng, 512, d);
+            let clean = Bitmask.compress(&blk);
+            let mut poisoned = clean.clone();
+            let mask_words = ceil_div(poisoned.n_elems, 16);
+            for w in &mut poisoned.words[mask_words..] {
+                *w = 0xDEAD; // garbage bf16 — a decode would see it
+            }
+            assert_eq!(Bitmask.is_all_zero(&poisoned), Bitmask.is_all_zero(&clean));
+            for (start, n) in [(0usize, 512), (3, 77), (500, 12), (511, 1)] {
+                assert_eq!(
+                    Bitmask.span_nonzeros(&poisoned, start, n),
+                    Bitmask.span_nonzeros(&clean, start, n),
+                    "density {d} start {start} n {n}"
+                );
+            }
+        }
+    }
+
+    /// The default-trait codecs have no occupancy index: they must
+    /// answer `None` (conservative), never a wrong `Some`.
+    #[test]
+    fn occupancy_defaults_are_conservative() {
+        use crate::compress::{Compressor, Zrlc};
+        let blk = vec![0.0f32; 64];
+        let c = Zrlc.compress(&blk);
+        assert_eq!(Zrlc.span_nonzeros(&c, 0, 64), None);
+        assert_eq!(Zrlc.is_all_zero(&c), None);
     }
 
     #[test]

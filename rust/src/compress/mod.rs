@@ -151,6 +151,24 @@ pub trait Compressor: Send + Sync {
         false
     }
 
+    /// Count the nonzero elements in `[start, start + len)` from index
+    /// metadata alone — **no value decode, no payload-value access**.
+    /// This is the zero-skip query of the compute backend: an answer of
+    /// `Some(0)` lets a whole im2col row span bypass the GEMM kernel.
+    /// `None` means the codec has no random-access occupancy index and
+    /// the caller must conservatively assume nonzeros.
+    fn span_nonzeros(&self, _comp: &CompressedBlock, _start: usize, _len: usize) -> Option<usize> {
+        None
+    }
+
+    /// Metadata-only all-zero test for a whole compressed sub-tensor
+    /// (`Some(true)` = certainly empty, skip the decode; `None` =
+    /// unknown without decoding). Default delegates to
+    /// [`Compressor::span_nonzeros`] over the full element range.
+    fn is_all_zero(&self, comp: &CompressedBlock) -> Option<bool> {
+        self.span_nonzeros(comp, 0, comp.n_elems).map(|nnz| nnz == 0)
+    }
+
     /// Hardware cost proxy for the §V codec comparison.
     fn cost(&self) -> CodecCost;
 }

@@ -1,0 +1,96 @@
+//! Packed weight layout for the tiled GEMM backend.
+//!
+//! The kernel consumes weights as per-tap `[c_in][c_out]` panels: for a
+//! fixed kernel tap `(ky, kx)` the panel is one contiguous slice whose
+//! rows (one per input channel) are the `c_out`-wide AXPY operands of
+//! the inner loop. [`PackedWeights::prepare`] freezes a layer's weights
+//! into this layout **once per layer** — the hot loop then slices
+//! panels with two multiplies instead of re-deriving the 4-D index per
+//! multiply-accumulate, and the panel rows are the exact cache lines
+//! the microkernel streams.
+
+use crate::config::layer::ConvLayer;
+use crate::coordinator::conv::Weights;
+
+/// Layer weights packed for the GEMM kernel: tap-major contiguous
+/// `[c_in][c_out]` panels.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    pub ks: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    data: Vec<f32>,
+}
+
+impl PackedWeights {
+    /// Pack `weights` for `layer`. The source `[ky][kx][cin][cout]`
+    /// row-major order already has contiguous tap panels, so packing is
+    /// one validated copy; the value of this type is the *contract* (the
+    /// kernel can slice panels blindly) plus the single point where a
+    /// future layout change (padding, blocking, transposition) happens.
+    pub fn prepare(layer: &ConvLayer, weights: &Weights) -> PackedWeights {
+        let ks = layer.kernel_size();
+        assert_eq!(
+            (weights.k, weights.c_in, weights.c_out),
+            (layer.k, layer.c_in, layer.c_out),
+            "weights do not match layer geometry"
+        );
+        assert_eq!(weights.data.len(), ks * ks * layer.c_in * layer.c_out);
+        PackedWeights {
+            ks,
+            c_in: layer.c_in,
+            c_out: layer.c_out,
+            data: weights.data.clone(),
+        }
+    }
+
+    /// The `[c_in][c_out]` panel of tap `(ky, kx)`.
+    #[inline]
+    pub fn tap(&self, ky: usize, kx: usize) -> &[f32] {
+        let panel = self.c_in * self.c_out;
+        let p = (ky * self.ks + kx) * panel;
+        &self.data[p..p + panel]
+    }
+
+    /// The `c_out`-wide AXPY row of input channel `cin` at tap
+    /// `(ky, kx)`.
+    #[inline]
+    pub fn row(&self, ky: usize, kx: usize, cin: usize) -> &[f32] {
+        let tap = self.tap(ky, kx);
+        &tap[cin * self.c_out..(cin + 1) * self.c_out]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panels_match_weight_accessor() {
+        let layer = ConvLayer::new(1, 1, 8, 8, 4, 6);
+        let w = Weights::random(&layer, 3);
+        let pw = PackedWeights::prepare(&layer, &w);
+        for ky in 0..3 {
+            for kx in 0..3 {
+                for cin in 0..4 {
+                    for cout in 0..6 {
+                        assert_eq!(
+                            pw.row(ky, kx, cin)[cout],
+                            w.at(ky, kx, cin, cout),
+                            "({ky},{kx},{cin},{cout})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "geometry")]
+    fn geometry_mismatch_rejected() {
+        let layer = ConvLayer::new(1, 1, 8, 8, 4, 6);
+        let other = ConvLayer::new(1, 1, 8, 8, 8, 6);
+        let w = Weights::random(&other, 1);
+        let _ = PackedWeights::prepare(&layer, &w);
+    }
+}

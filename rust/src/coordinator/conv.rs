@@ -32,6 +32,19 @@ impl Weights {
         Weights { k: layer.k, c_in: layer.c_in, c_out: layer.c_out, data }
     }
 
+    /// Wrap explicit weight data (`[ky][kx][cin][cout]` row-major, the
+    /// same layout jax's HWIO uses — cross-language fixtures load
+    /// through here).
+    pub fn from_vec(layer: &ConvLayer, data: Vec<f32>) -> Weights {
+        let ks = layer.kernel_size();
+        assert_eq!(
+            data.len(),
+            ks * ks * layer.c_in * layer.c_out,
+            "weight data does not match layer geometry"
+        );
+        Weights { k: layer.k, c_in: layer.c_in, c_out: layer.c_out, data }
+    }
+
     #[inline]
     pub fn at(&self, ky: usize, kx: usize, cin: usize, cout: usize) -> f32 {
         let ks = 2 * self.k + 1;

@@ -1,5 +1,6 @@
-//! Pipeline metrics: traffic, timing, overlap.
+//! Pipeline metrics: traffic, timing, overlap, measured compute.
 
+use crate::compute::GemmStats;
 use crate::memsim::{Dram, Stream};
 use std::time::Duration;
 
@@ -31,6 +32,11 @@ pub struct PipelineMetrics {
     pub row_hits: u64,
     pub row_misses: u64,
     pub dram_cycles: u64,
+    /// Measured kernel work from the GEMM compute backend (`macs` =
+    /// executed, `dense_macs` = dense-equivalent on the same in-bounds
+    /// taps). Zero when no compute backend ran — consumers fall back to
+    /// the analytic `ConvLayer::macs()` *estimate* and must label it so.
+    pub gemm: GemmStats,
 }
 
 impl PipelineMetrics {
@@ -56,6 +62,13 @@ impl PipelineMetrics {
         self.row_hits += o.row_hits;
         self.row_misses += o.row_misses;
         self.dram_cycles += o.dram_cycles;
+        self.gemm.merge(&o.gemm);
+    }
+
+    /// Measured MACs when a compute backend ran, else `None` (caller
+    /// falls back to the analytic estimate — and labels it).
+    pub fn measured_macs(&self) -> Option<u64> {
+        (self.gemm.dense_macs > 0).then_some(self.gemm.macs)
     }
 
     /// Total producer-side bits (payload + index) of the streamed write.

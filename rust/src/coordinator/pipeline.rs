@@ -4,20 +4,25 @@
 //!
 //! ```text
 //!   [prefetch thread]        bounded channel          [compute lane]
-//!   metadata lookup  ──►  (depth = double buffer)  ──►  direct conv
-//!   fetch sub-tensors                                    accumulate
-//!   decompress                                           ReLU + store
+//!   metadata lookup  ──►  (depth = double buffer)  ──►  GEMM kernel
+//!   fetch sub-tensors      (window + row index)         zero-skip
+//!   decompress + occupancy                              ReLU + store
 //! ```
 //!
 //! The prefetch thread walks the same tile schedule as the bandwidth
 //! simulator, so the DRAM traffic it accounts matches `sim`'s analytic
-//! numbers; the compute lane proves the fetched data is *correct* by
-//! actually convolving it.
+//! numbers; the compute lane runs the real tiled GEMM backend
+//! ([`crate::compute`]) over the fetched windows — bit-identical to the
+//! direct-conv oracle — and ships **measured** MAC counts out in
+//! [`PipelineMetrics::gemm`]. Under the `ZeroSkip` policy the fetch
+//! lane also ships its per-row occupancy index so proven-zero im2col
+//! rows never reach the kernel.
 
-use super::conv::{accumulate_tile, Weights};
+use super::conv::Weights;
 use super::metrics::PipelineMetrics;
 use crate::bail;
 use crate::compress::CodecPolicy;
+use crate::compute::{gemm_tile, GemmStats, PackedWeights, SkipPolicy};
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::layout::fetcher::{DenseWindow, Fetcher};
@@ -48,6 +53,9 @@ pub struct PipelineConfig {
     pub policy: CodecPolicy,
     /// Prefetch queue depth; 2 = classic double buffering.
     pub prefetch_depth: usize,
+    /// Kernel sparsity policy (see [`SkipPolicy`]); every tier is
+    /// bit-identical in output, they differ only in executed MACs.
+    pub skip: SkipPolicy,
 }
 
 impl PipelineConfig {
@@ -57,6 +65,7 @@ impl PipelineConfig {
             mode: DivisionMode::GrateTile { n: 8 },
             policy: CodecPolicy::Fixed(crate::compress::Scheme::Bitmask),
             prefetch_depth: 2,
+            skip: SkipPolicy::ZeroSkip,
         }
     }
 }
@@ -124,18 +133,24 @@ impl LayerRunner {
         let wall_start = Instant::now();
 
         let depth = self.cfg.prefetch_depth.max(1);
-        let (tx, rx) = sync_channel::<DenseWindow>(depth);
+        let track = self.cfg.skip == SkipPolicy::ZeroSkip;
+        // Windows travel with their row-occupancy index (empty when the
+        // policy does not consume it).
+        let (tx, rx) = sync_channel::<(DenseWindow, Vec<bool>)>(depth);
         // Return lane: spent window buffers flow back to the fetcher's
         // pool, so the steady-state pipeline allocates nothing per tile.
         let (back_tx, back_rx) = channel::<DenseWindow>();
+        let pw = PackedWeights::prepare(layer, weights);
+        let mut gemm = GemmStats::default();
 
         let (fetch_busy, fetch_dram) = std::thread::scope(
             |scope| -> Result<(Duration, Dram)> {
                 // ---- prefetch lane ----
                 let walker_f = walker.clone();
                 let fetch_handle = scope.spawn(move || {
-                    let mut fetcher =
-                        Fetcher::new(packed).with_cache(DECODE_CACHE_SUBTENSORS);
+                    let mut fetcher = Fetcher::new(packed)
+                        .with_cache(DECODE_CACHE_SUBTENSORS)
+                        .with_occupancy(track);
                     let mut dram = Dram::default();
                     let mut busy = Duration::ZERO;
                     for w in walker_f.iter() {
@@ -146,10 +161,11 @@ impl LayerRunner {
                         let win = fetcher.fetch_window(
                             &mut dram, w.y0, w.y1, w.x0, w.x1, w.c0, w.c1,
                         );
+                        let occ = fetcher.row_occupancy().to_vec();
                         busy += t0.elapsed();
                         // Backpressure: blocks when `depth` windows are
                         // already staged.
-                        if tx.send(win).is_err() {
+                        if tx.send((win, occ)).is_err() {
                             break; // compute lane bailed
                         }
                     }
@@ -167,9 +183,13 @@ impl LayerRunner {
                         acc.clear();
                         acc.resize((oy1 - oy0) * (ox1 - ox0) * layer.c_out, 0.0);
                         for _tcg in 0..walker.n_tcg {
-                            let win = rx.recv().context("prefetch lane died")?;
+                            let (win, occ) = rx.recv().context("prefetch lane died")?;
                             let t0 = Instant::now();
-                            accumulate_tile(layer, weights, &win, &mut acc, oy0, oy1, ox0, ox1);
+                            let row_occ = track.then_some(&occ[..]);
+                            gemm_tile(
+                                layer, &pw, &win, row_occ, self.cfg.skip, &mut acc,
+                                oy0, oy1, ox0, ox1, &mut gemm,
+                            );
                             metrics.compute_busy += t0.elapsed();
                             let _ = back_tx.send(win); // best-effort recycle
                         }
@@ -190,6 +210,7 @@ impl LayerRunner {
         )?;
 
         metrics.fetch_busy = fetch_busy;
+        metrics.gemm = gemm;
         metrics.absorb_dram(&fetch_dram);
         let mut out_dram = Dram::default();
         out_dram.access(Stream::OutputWrite, 0, out.words() as u64);
@@ -299,8 +320,11 @@ impl LayerRunner {
         let mut writer = StoreWriter::new(store, output, out_division, self.cfg.policy);
 
         let depth = self.cfg.prefetch_depth.max(1);
-        let (tx, rx) = sync_channel::<DenseWindow>(depth);
+        let track = self.cfg.skip == SkipPolicy::ZeroSkip;
+        let (tx, rx) = sync_channel::<(DenseWindow, Vec<bool>)>(depth);
         let (back_tx, back_rx) = channel::<DenseWindow>();
+        let pw = PackedWeights::prepare(layer, weights);
+        let mut gemm = GemmStats::default();
 
         let (fetch_busy, fetch_dram) = std::thread::scope(
             |scope| -> Result<(Duration, Dram)> {
@@ -309,7 +333,8 @@ impl LayerRunner {
                 let fetch_handle = scope.spawn(move || {
                     let packed = snap_packed;
                     let mut fetcher = Fetcher::with_source(&packed, Box::new(snap_payload))
-                        .with_cache(DECODE_CACHE_SUBTENSORS);
+                        .with_cache(DECODE_CACHE_SUBTENSORS)
+                        .with_occupancy(track);
                     let mut dram = Dram::default().with_trace();
                     let mut busy = Duration::ZERO;
                     for w in walker_f.iter() {
@@ -320,8 +345,9 @@ impl LayerRunner {
                         let win = fetcher.fetch_window(
                             &mut dram, w.y0, w.y1, w.x0, w.x1, w.c0, w.c1,
                         );
+                        let occ = fetcher.row_occupancy().to_vec();
                         busy += t0.elapsed();
-                        if tx.send(win).is_err() {
+                        if tx.send((win, occ)).is_err() {
                             break;
                         }
                     }
@@ -339,9 +365,13 @@ impl LayerRunner {
                         acc.clear();
                         acc.resize((oy1 - oy0) * (ox1 - ox0) * layer.c_out, 0.0);
                         for _tcg in 0..walker.n_tcg {
-                            let win = rx.recv().context("prefetch lane died")?;
+                            let (win, occ) = rx.recv().context("prefetch lane died")?;
                             let t0 = Instant::now();
-                            accumulate_tile(layer, weights, &win, &mut acc, oy0, oy1, ox0, ox1);
+                            let row_occ = track.then_some(&occ[..]);
+                            gemm_tile(
+                                layer, &pw, &win, row_occ, self.cfg.skip, &mut acc,
+                                oy0, oy1, ox0, ox1, &mut gemm,
+                            );
                             metrics.compute_busy += t0.elapsed();
                             let _ = back_tx.send(win); // best-effort recycle
                         }
@@ -366,6 +396,7 @@ impl LayerRunner {
         // simulator) must not skew tiles_per_sec / overlap_efficiency.
         metrics.wall = wall_start.elapsed();
         metrics.fetch_busy = fetch_busy;
+        metrics.gemm = gemm;
         metrics.absorb_dram(&fetch_dram);
         metrics.absorb_dram(&report.dram);
         metrics.writeback_payload_bits = report.payload_bits;
@@ -509,6 +540,38 @@ mod tests {
         assert!(m.tiles > 0);
         assert!(m.feature_lines > 0);
         assert!(m.metadata_words > 0);
+        // The compute lane reports measured kernel work.
+        assert!(m.gemm.dense_macs > 0);
+        assert!(m.measured_macs().unwrap() < m.gemm.dense_macs, "50% map must skip");
+    }
+
+    /// Every kernel skip policy yields the same pipeline output; the
+    /// measured MAC ladder is monotone (ZeroSkip ≤ ValueSkip < Dense on
+    /// a sparse map) and the dense-equivalent count is policy-invariant.
+    #[test]
+    fn skip_policies_agree_and_report_measured_macs() {
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 8);
+        let w = Weights::random(&layer, 11);
+        let fm = generate(24, 24, 16, SparsityParams::clustered(0.25, 14));
+        let mut outs = Vec::new();
+        let mut stats = Vec::new();
+        for skip in crate::compute::SkipPolicy::all() {
+            let mut c = cfg();
+            c.skip = skip;
+            let runner = LayerRunner::new(c);
+            let packed = runner.pack(&layer, &fm).unwrap();
+            let (out, m) = runner.run_layer(&layer, &w, &packed).unwrap();
+            outs.push(out);
+            stats.push(m.gemm);
+        }
+        assert_eq!(outs[0].as_slice(), outs[1].as_slice());
+        assert_eq!(outs[0].as_slice(), outs[2].as_slice());
+        let (dense, vskip, zskip) = (stats[0], stats[1], stats[2]);
+        assert_eq!(dense.macs, dense.dense_macs);
+        assert!(vskip.macs < dense.macs);
+        assert!(zskip.macs <= vskip.macs);
+        assert_eq!(vskip.dense_macs, dense.dense_macs);
+        assert_eq!(zskip.dense_macs, dense.dense_macs);
     }
 
     #[test]

@@ -113,7 +113,14 @@ impl SimServerConfig {
 /// different PE width is honest without a new functional pass.
 #[derive(Debug, Clone)]
 pub struct LayerWork {
+    /// MACs this layer charges the PE array. **Measured** from the GEMM
+    /// kernel when the pipeline's compute backend ran (the normal case);
+    /// the analytic `ConvLayer::macs()` estimate only as fallback —
+    /// [`Self::measured`] says which.
     pub macs: u64,
+    /// `true` when `macs` came from kernel counters, `false` when it is
+    /// the analytic estimate.
+    pub measured: bool,
     pub trace: LayerTrace,
 }
 
@@ -137,6 +144,18 @@ pub struct RequestTrace {
     pub layers: Vec<LayerWork>,
 }
 
+impl RequestTrace {
+    /// Total MACs this request charges across its layers.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// `true` iff every layer's MAC count was kernel-measured.
+    pub fn macs_measured(&self) -> bool {
+        !self.layers.is_empty() && self.layers.iter().all(|l| l.measured)
+    }
+}
+
 /// Per-request outcome, in request-id order.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestStat {
@@ -146,6 +165,9 @@ pub struct RequestStat {
     pub queue_cycles: u64,
     /// Cycles from arrival to completion.
     pub latency_cycles: u64,
+    /// MACs the request charged the PE array (kernel-measured when the
+    /// compute backend ran — see [`RequestTrace::macs_measured`]).
+    pub macs: u64,
 }
 
 /// The simulated serving report — every field in simulated cycles or
@@ -161,6 +183,10 @@ pub struct SimServerReport {
     pub completed: u64,
     pub makespan_cycles: u64,
     pub requests: Vec<RequestStat>,
+    /// MACs across all requests, and whether every count was
+    /// kernel-measured (vs the analytic estimate).
+    pub total_macs: u64,
+    pub macs_measured: bool,
     pub total_feature_bytes: u64,
     pub output_checksum: u64,
     pub dram_lines: u64,
@@ -264,17 +290,24 @@ impl SimServerReport {
         let _ = writeln!(s, "bank_busy_cycles {:?}", self.bank_busy_cycles);
         let _ = writeln!(
             s,
+            "macs={} source={}",
+            self.total_macs,
+            if self.macs_measured { "measured-kernel" } else { "analytic-estimate" }
+        );
+        let _ = writeln!(
+            s,
             "feature_bytes={} output_checksum={:016x}",
             self.total_feature_bytes, self.output_checksum
         );
         for r in &self.requests {
             let _ = writeln!(
                 s,
-                "request id={} priority={} queue={} latency={}",
+                "request id={} priority={} queue={} latency={} macs={}",
                 r.id,
                 r.priority.name(),
                 r.queue_cycles,
-                r.latency_cycles
+                r.latency_cycles,
+                r.macs
             );
         }
         s
@@ -330,11 +363,18 @@ impl SimServer {
             let runner = LayerRunner::new(self.cfg.pipeline);
             let (out, per_layer, traces) =
                 runner.run_network_traced(&self.layers, req.input.clone())?;
+            // Prefer the GEMM kernel's measured MAC count over the
+            // analytic estimate — no double counting: exactly one of
+            // the two prices the layer, and `measured` records which.
             let layers: Vec<LayerWork> = self
                 .layers
                 .iter()
+                .zip(per_layer.iter())
                 .zip(traces)
-                .map(|((layer, _), trace)| LayerWork { macs: layer.macs(), trace })
+                .map(|(((layer, _), m), trace)| match m.measured_macs() {
+                    Some(macs) => LayerWork { macs, measured: true, trace },
+                    None => LayerWork { macs: layer.macs(), measured: false, trace },
+                })
                 .collect();
             let feature_bytes = per_layer.iter().map(|m| m.feature_bytes()).sum();
             let mut ck = FNV1A64_OFFSET;
@@ -495,6 +535,7 @@ pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerRepo
                     priority: t.priority,
                     queue_cycles: now - t.arrival_cycle,
                     latency_cycles: finish - t.arrival_cycle,
+                    macs: t.macs(),
                 });
             }
             makespan = makespan.max(finish);
@@ -504,6 +545,8 @@ pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerRepo
     }
 
     let requests: Vec<RequestStat> = stats.into_iter().flatten().collect();
+    let total_macs = traces.iter().map(|t| t.macs()).sum();
+    let macs_measured = !traces.is_empty() && traces.iter().all(|t| t.macs_measured());
     let total_feature_bytes = traces.iter().map(|t| t.feature_bytes).sum();
     let mut ck = FNV1A64_OFFSET;
     for t in traces {
@@ -519,6 +562,8 @@ pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerRepo
         completed: requests.len() as u64,
         makespan_cycles: makespan,
         requests,
+        total_macs,
+        macs_measured,
         total_feature_bytes,
         output_checksum: ck,
         dram_lines: dram.lines,
@@ -675,6 +720,30 @@ mod tests {
         assert!(only > 0);
         for p in [-1.0, 0.0, 0.5, 1.0, 2.0, f64::NAN] {
             assert_eq!(rep.latency_percentile(p), only, "p={p}");
+        }
+    }
+
+    /// The functional pass prices layers with kernel-measured MACs —
+    /// on a 50%-dense input that must be strictly less than the analytic
+    /// estimate, and the report says which source it used.
+    #[test]
+    fn traces_carry_measured_macs_and_report_labels_source() {
+        let net = tiny_net();
+        let analytic: u64 = net.iter().map(|(l, _)| l.macs()).sum();
+        let server = SimServer::new(sim_cfg(), net);
+        let traces =
+            server.functional_pass(&server.synthetic_requests(2, 0.5, 21)).unwrap();
+        for t in &traces {
+            assert!(t.macs_measured(), "pipeline always runs the GEMM backend");
+            assert!(t.macs() > 0);
+            assert!(t.macs() < analytic, "{} vs analytic {analytic}", t.macs());
+        }
+        let rep = simulate(&sim_cfg(), &traces);
+        assert!(rep.macs_measured);
+        assert_eq!(rep.total_macs, traces.iter().map(|t| t.macs()).sum::<u64>());
+        assert!(rep.render().contains("source=measured-kernel"));
+        for r in &rep.requests {
+            assert!(r.macs > 0);
         }
     }
 

@@ -243,7 +243,10 @@ pub fn serve_scaling_table() -> Table {
 }
 
 /// Roofline: compute/memory bound per benchmark layer and the runtime
-/// speedup GrateTile's bandwidth saving buys.
+/// speedup GrateTile's bandwidth saving buys. The suite layers are too
+/// large to run the GEMM backend in a study table, so the compute roof
+/// is the analytic MAC count — *labelled* as an estimate per row
+/// ([`gemm_table`] is the measured-count counterpart).
 pub fn roofline_table(policy: impl Into<CodecPolicy>) -> Table {
     use crate::power::{roofline, Machine};
     use crate::sim::experiment::suite_feature_maps;
@@ -253,7 +256,7 @@ pub fn roofline_table(policy: impl Into<CodecPolicy>) -> Table {
     let mut t = Table::new(
         "Roofline — layer bound and runtime speedup from GrateTile mod 8 (Eyeriss)",
     )
-    .header(vec!["Layer", "Bound (dense)", "Feature saving %", "Speedup"]);
+    .header(vec!["Layer", "Bound (dense)", "Feature saving %", "MACs (source)", "Speedup"]);
     for (b, fm) in suite_feature_maps() {
         if let Ok(r) =
             roofline(&machine, &hw, &b.layer, fm, DivisionMode::GrateTile { n: 8 }, policy)
@@ -262,8 +265,77 @@ pub fn roofline_table(policy: impl Into<CodecPolicy>) -> Table {
                 format!("{} {}", b.network.name(), b.name),
                 r.bound_dense().to_string(),
                 format!("{:.1}", r.feature_saving * 100.0),
+                format!("{} ({})", r.macs, r.mac_source.name()),
                 format!("{:.2}x", r.speedup()),
             ]);
+        }
+    }
+    t
+}
+
+/// GEMM compute-backend study: measured kernel work per layer × input
+/// density × skip policy. Every cell runs the real backend — MAC
+/// counts are kernel counters (not estimates), the skip columns are
+/// the fetch/kernel elision counters, and `Bit-exact` asserts the
+/// output against the direct-conv oracle word for word. Deterministic
+/// (seeded inputs, no host parallelism) — golden-filed in
+/// `tests/golden.rs`.
+pub fn gemm_table() -> Table {
+    use crate::compute::{GemmBackend, SkipPolicy};
+    use crate::coordinator::conv::direct_conv_relu;
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let layers = [
+        ("conv3x3 24x24x16->16", ConvLayer::new(1, 1, 24, 24, 16, 16)),
+        ("pointwise 16x16x32->8", ConvLayer::new(0, 1, 16, 16, 32, 8)),
+        ("strided3x3 24x24x8->16", ConvLayer::new(1, 2, 24, 24, 8, 16)),
+    ];
+    let mut t = Table::new(
+        "GEMM backend — measured MACs and zero-skip elision per layer x density x policy (Nvidia small-tile, GrateTile mod 8, bitmask)",
+    )
+    .header(vec![
+        "Layer",
+        "Density",
+        "Policy",
+        "MACs",
+        "Dense MACs",
+        "MAC red %",
+        "Rows skipped",
+        "Subtensors skipped",
+        "Spans skipped",
+        "Bit-exact",
+    ]);
+    for (name, layer) in &layers {
+        for &density in &[0.1, 0.25, 0.6, 0.9] {
+            let fm = generate(
+                layer.h,
+                layer.w,
+                layer.c_in,
+                SparsityParams::clustered(density, 31 ^ (layer.c_in as u64) << 4),
+            );
+            let w = Weights::random(layer, 13);
+            let oracle = direct_conv_relu(layer, &w, &fm);
+            for skip in SkipPolicy::all() {
+                let run = GemmBackend::new(hw)
+                    .with_skip(skip)
+                    .conv_relu(layer, &w, &fm)
+                    .expect("backend run");
+                t.row(vec![
+                    name.to_string(),
+                    format!("{density:.2}"),
+                    skip.name().to_string(),
+                    run.stats.macs.to_string(),
+                    run.stats.dense_macs.to_string(),
+                    format!("{:.1}", run.stats.mac_reduction() * 100.0),
+                    run.stats.skipped_rows.to_string(),
+                    run.skipped_subtensors.to_string(),
+                    run.skipped_spans.to_string(),
+                    if run.out.as_slice() == oracle.as_slice() {
+                        "exact".into()
+                    } else {
+                        "MISMATCH".to_string()
+                    },
+                ]);
+            }
         }
     }
     t
@@ -319,6 +391,33 @@ mod tests {
             .map(|l| l.rsplit(',').next().unwrap().trim_end_matches('x').parse().unwrap())
             .fold(1.0, f64::max);
         assert!(best > 1.3, "best speedup {best}");
+    }
+
+    /// Every cell of the GEMM study is bit-exact against the oracle,
+    /// and zero-skip strictly reduces measured MACs on sparse inputs.
+    #[test]
+    fn gemm_table_is_exact_and_skips_pay_off() {
+        let csv = gemm_table().render_csv();
+        // 3 layers x 4 densities x 3 policies + header.
+        assert_eq!(csv.lines().count(), 37, "{csv}");
+        assert!(!csv.contains("MISMATCH"), "{csv}");
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        for chunk in rows.chunks(3) {
+            let [dense, vskip, zskip] = chunk else { panic!("policy triple") };
+            let dm: u64 = dense[3].parse().unwrap();
+            let vm: u64 = vskip[3].parse().unwrap();
+            let zm: u64 = zskip[3].parse().unwrap();
+            assert_eq!(dense[3], dense[4], "dense executes everything: {dense:?}");
+            assert!(vm <= dm && zm <= vm, "skip ladder must be monotone: {chunk:?}");
+            let density: f64 = dense[1].parse().unwrap();
+            if density <= 0.25 {
+                assert!(zm < dm, "sparse input must skip MACs: {chunk:?}");
+            }
+        }
     }
 
     #[test]

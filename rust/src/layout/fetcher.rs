@@ -168,6 +168,11 @@ pub struct Fetcher<'a> {
     cache: Option<DecodedCache>,
     pool: Vec<Vec<f32>>,
     decoded_words: u64,
+    zero_skip: bool,
+    skipped_subtensors: u64,
+    skipped_spans: u64,
+    track_occupancy: bool,
+    occ_rows: Vec<bool>,
 }
 
 /// Recycled window buffers kept at most (beyond this they drop).
@@ -198,6 +203,11 @@ impl<'a> Fetcher<'a> {
             cache: None,
             pool: Vec::new(),
             decoded_words: 0,
+            zero_skip: true,
+            skipped_subtensors: 0,
+            skipped_spans: 0,
+            track_occupancy: false,
+            occ_rows: Vec::new(),
         }
     }
 
@@ -209,12 +219,57 @@ impl<'a> Fetcher<'a> {
         self
     }
 
+    /// Toggle the zero-skip decode bypass (on by default). Purely a
+    /// software-speed knob like the LRU: window contents and DRAM
+    /// accounting are bit-identical with it on or off — the occupancy
+    /// query reads only the codec's index metadata, and the window
+    /// buffer is pre-zeroed, so an all-zero sub-tensor's decode + copy
+    /// are pure no-ops.
+    pub fn with_zero_skip(mut self, enabled: bool) -> Self {
+        self.zero_skip = enabled;
+        self
+    }
+
+    /// Track per-window-row occupancy during fetches (off by default).
+    /// When on, [`Fetcher::row_occupancy`] reports, for each row of the
+    /// most recent window, whether it *may* contain nonzeros: `false`
+    /// entries are **proven** all-zero from the codecs' metadata-only
+    /// occupancy index (no value decode), `true` is the conservative
+    /// answer everywhere else (LRU hits, full decodes, codecs without
+    /// an index). The GEMM backend's `ZeroSkip` policy consumes this to
+    /// drop whole im2col row spans before they reach the kernel.
+    pub fn with_occupancy(mut self, enabled: bool) -> Self {
+        self.track_occupancy = enabled;
+        self
+    }
+
+    /// Row-occupancy index of the most recent [`Fetcher::fetch_window`]
+    /// (window-relative: entry `i` covers map row `y0 + i`). Empty
+    /// unless tracking was enabled via [`Fetcher::with_occupancy`].
+    /// `false` = the row is certainly all zero across the whole fetched
+    /// window; `true` = it may contain nonzeros.
+    pub fn row_occupancy(&self) -> &[bool] {
+        &self.occ_rows
+    }
+
     /// Dense elements materialised by decompression so far — the
     /// partial-window fast path's saving shows up here (a full decode
     /// of a sub-tensor costs its whole element count; a row-skipped one
     /// only the covered elements). LRU hits decode nothing.
     pub fn decoded_words(&self) -> u64 {
         self.decoded_words
+    }
+
+    /// Sub-tensors whose decode was bypassed entirely because the
+    /// metadata-only occupancy query answered "all zero".
+    pub fn skipped_subtensors(&self) -> u64 {
+        self.skipped_subtensors
+    }
+
+    /// Partial-window row spans bypassed because their occupancy count
+    /// was zero (the window row stayed at its pre-zeroed contents).
+    pub fn skipped_spans(&self) -> u64 {
+        self.skipped_spans
     }
 
     /// Return a spent window's buffer to the fetch pool (the pipeline's
@@ -248,6 +303,12 @@ impl<'a> Fetcher<'a> {
         let mut out = self.pool.pop().unwrap_or_default();
         out.clear();
         out.resize(wh * ww * wc, 0.0);
+        if self.track_occupancy {
+            // Rows start "proven zero" and are promoted to maybe-nonzero
+            // by every fetch path that lands data (or can't rule it out).
+            self.occ_rows.clear();
+            self.occ_rows.resize(wh, false);
+        }
 
         // Metadata reads: one record per touched block, once per fetch.
         // The touched blocks form an axis-aligned box (block ids are
@@ -327,6 +388,12 @@ impl<'a> Fetcher<'a> {
             if let Some(data) = cache.get(li) {
                 let win = (y0, x0, c0, x1 - x0, c1 - c0);
                 copy_intersection(data, out, sy, sx, scg0, cd, clip, win);
+                if self.track_occupancy {
+                    // Conservative: a cached decode may hold nonzeros.
+                    for y in iy0..iy1 {
+                        self.occ_rows[y - y0] = true;
+                    }
+                }
                 return;
             }
         }
@@ -338,32 +405,88 @@ impl<'a> Fetcher<'a> {
             words: std::mem::take(&mut self.comp_words),
         };
 
+        // Zero-skip: the metadata-only occupancy query (for bitmask, an
+        // O(1) payload-length test — no value decode) lets an all-zero
+        // sub-tensor bypass decode and copy entirely. The window buffer
+        // is pre-zeroed and the modeled DRAM access above has already
+        // been issued, so this is invisible to both window contents and
+        // traffic accounting.
+        if self.zero_skip && codec.is_all_zero(&comp) == Some(true) {
+            self.skipped_subtensors += 1;
+            self.comp_words = comp.words;
+            return;
+        }
+
         // Partial-window fast path: decode only the covered rows.
         // (With the LRU on, a partially covered sub-tensor is decoded
         // fully instead so the halo neighbours can hit the cache.)
         if !full && self.cache.is_none() {
             let run = ic1 - ic0;
-            self.scratch.clear();
-            self.scratch.resize(run, 0.0);
             let (ww, wc) = (x1 - x0, c1 - c0);
-            let mut fast = true;
-            'rows: for y in iy0..iy1 {
-                for x in ix0..ix1 {
-                    let start = ((y - sy.start) * sx.len + (x - sx.start)) * cd + (ic0 - scg0);
-                    if !codec.decompress_span(&comp, start, &mut self.scratch[..run]) {
+            // Decode-fusion seam: when consecutive x cells are adjacent
+            // in both the compressed stream (full sub-tensor channel
+            // depth) and the window buffer (window depth == run, same
+            // channel origin), each covered row is ONE contiguous span —
+            // decoded word-at-a-time straight into the window buffer,
+            // no scratch staging. All-zero rows skip the decode via the
+            // occupancy index and leave the pre-zeroed row untouched.
+            if run == cd && run == wc && ic0 == c0 {
+                let rowlen = (ix1 - ix0) * cd;
+                let mut fast = true;
+                for y in iy0..iy1 {
+                    let start = ((y - sy.start) * sx.len + (ix0 - sx.start)) * cd;
+                    if self.zero_skip
+                        && codec.span_nonzeros(&comp, start, rowlen) == Some(0)
+                    {
+                        self.skipped_spans += 1;
+                        continue;
+                    }
+                    let dst = ((y - y0) * ww + (ix0 - x0)) * wc;
+                    if !codec.decompress_span(&comp, start, &mut out[dst..dst + rowlen]) {
                         // Codec cannot random-access its stream (first
                         // call, nothing decoded yet) — full decode below.
                         fast = false;
-                        break 'rows;
+                        break;
                     }
-                    self.decoded_words += run as u64;
-                    let dst = ((y - y0) * ww + (x - x0)) * wc + (ic0 - c0);
-                    out[dst..dst + run].copy_from_slice(&self.scratch[..run]);
+                    self.decoded_words += rowlen as u64;
+                    if self.track_occupancy {
+                        self.occ_rows[y - y0] = true;
+                    }
                 }
-            }
-            if fast {
-                self.comp_words = comp.words;
-                return;
+                if fast {
+                    self.comp_words = comp.words;
+                    return;
+                }
+            } else {
+                self.scratch.clear();
+                self.scratch.resize(run, 0.0);
+                let mut fast = true;
+                'rows: for y in iy0..iy1 {
+                    for x in ix0..ix1 {
+                        let start =
+                            ((y - sy.start) * sx.len + (x - sx.start)) * cd + (ic0 - scg0);
+                        if self.zero_skip
+                            && codec.span_nonzeros(&comp, start, run) == Some(0)
+                        {
+                            self.skipped_spans += 1;
+                            continue;
+                        }
+                        if !codec.decompress_span(&comp, start, &mut self.scratch[..run]) {
+                            fast = false;
+                            break 'rows;
+                        }
+                        self.decoded_words += run as u64;
+                        if self.track_occupancy {
+                            self.occ_rows[y - y0] = true;
+                        }
+                        let dst = ((y - y0) * ww + (x - x0)) * wc + (ic0 - c0);
+                        out[dst..dst + run].copy_from_slice(&self.scratch[..run]);
+                    }
+                }
+                if fast {
+                    self.comp_words = comp.words;
+                    return;
+                }
             }
         }
 
@@ -383,6 +506,32 @@ impl<'a> Fetcher<'a> {
         );
         if let Some(cache) = self.cache.as_mut() {
             cache.insert(li, &self.scratch);
+        }
+        if self.track_occupancy {
+            // Full decodes cover most interior sub-tensors, so refine
+            // per row from the occupancy index (metadata-only popcount)
+            // rather than conservatively marking everything; a codec
+            // without an index answers `None` and the row stays the
+            // conservative `true`.
+            let run = ic1 - ic0;
+            for y in iy0..iy1 {
+                if self.occ_rows[y - y0] {
+                    continue;
+                }
+                let zero = if run == cd {
+                    let start = ((y - sy.start) * sx.len + (ix0 - sx.start)) * cd;
+                    codec.span_nonzeros(&comp, start, (ix1 - ix0) * cd) == Some(0)
+                } else {
+                    (ix0..ix1).all(|x| {
+                        let start =
+                            ((y - sy.start) * sx.len + (x - sx.start)) * cd + (ic0 - scg0);
+                        codec.span_nonzeros(&comp, start, run) == Some(0)
+                    })
+                };
+                if !zero {
+                    self.occ_rows[y - y0] = true;
+                }
+            }
         }
         self.comp_words = comp.words;
     }
@@ -544,7 +693,10 @@ mod tests {
             .map(|&r| packed.division.subtensor_words(r) as u64)
             .sum();
         let mut dram = Dram::default();
-        let mut fetcher = Fetcher::new(&packed);
+        // Zero-skip off: this test pins the *row-clipping* saving alone
+        // (with it on, all-zero rows would additionally skip decode and
+        // the lower bound below would not hold).
+        let mut fetcher = Fetcher::new(&packed).with_zero_skip(false);
         let win = fetcher.fetch_window(&mut dram, y0, y1, x0, x1, c0, c1);
         assert!(
             fetcher.decoded_words() < touched,
@@ -603,6 +755,110 @@ mod tests {
                 cached.decoded_words(),
                 plain.decoded_words()
             );
+        }
+    }
+
+    /// Zero-skip on vs off: bit-identical window data, bit-identical
+    /// DRAM accounting, and on a clustered-sparse map the skip counters
+    /// actually fire (all-zero sub-tensors exist at 40% clustered
+    /// density) while decoding strictly fewer words.
+    #[test]
+    fn zero_skip_is_traffic_invariant_and_fires() {
+        for scheme in [Scheme::Bitmask, Scheme::Zrlc] {
+            let (_, packed) = packed_map(DivisionMode::GrateTile { n: 8 }, scheme);
+            let windows = [
+                (0usize, 10usize, 0usize, 10usize, 0usize, 16usize),
+                (7, 17, 7, 17, 0, 16),
+                (0, 24, 0, 24, 0, 16),
+                (3, 19, 5, 21, 2, 14),
+            ];
+            let mut skip = Fetcher::new(&packed);
+            let mut noskip = Fetcher::new(&packed).with_zero_skip(false);
+            let mut d_skip = Dram::default();
+            let mut d_noskip = Dram::default();
+            for &(y0, y1, x0, x1, c0, c1) in &windows {
+                let a = skip.fetch_window(&mut d_skip, y0, y1, x0, x1, c0, c1);
+                let b = noskip.fetch_window(&mut d_noskip, y0, y1, x0, x1, c0, c1);
+                assert_eq!(a, b, "{scheme:?} window ({y0},{y1},{x0},{x1})");
+            }
+            for stream in [Stream::FeatureRead, Stream::MetadataRead] {
+                assert_eq!(
+                    d_skip.words_of(stream),
+                    d_noskip.words_of(stream),
+                    "{scheme:?} {stream:?} traffic"
+                );
+            }
+            assert_eq!(noskip.skipped_subtensors() + noskip.skipped_spans(), 0);
+            if scheme == Scheme::Bitmask {
+                assert!(
+                    skip.skipped_subtensors() + skip.skipped_spans() > 0,
+                    "nothing skipped on a clustered 40% map"
+                );
+                assert!(
+                    skip.decoded_words() < noskip.decoded_words(),
+                    "skip decoded {} vs {}",
+                    skip.decoded_words(),
+                    noskip.decoded_words()
+                );
+            } else {
+                // No occupancy index -> conservative: nothing skipped.
+                assert_eq!(skip.skipped_subtensors(), 0);
+                assert_eq!(skip.decoded_words(), noskip.decoded_words());
+            }
+        }
+    }
+
+    /// The row-occupancy index is sound (`false` ⇒ the window row is
+    /// truly all zero) and, with an indexed codec over a map with
+    /// planted zero rows, actually proves those rows zero.
+    #[test]
+    fn row_occupancy_is_sound_and_fires() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let tile = TileShape::new(8, 8, 8);
+        let division = crate::tiling::Division::build(
+            DivisionMode::GrateTile { n: 8 }, &layer, &tile, &hw, 24, 24, 16)
+            .unwrap();
+        let mut fm = generate(24, 24, 16, SparsityParams::clustered(0.4, 33));
+        for y in 10..14 {
+            for x in 0..24 {
+                for ch in 0..16 {
+                    fm.set(y, x, ch, 0.0);
+                }
+            }
+        }
+        for scheme in [Scheme::Bitmask, Scheme::Zrlc] {
+            let packed = Packer::new(hw, scheme).pack(&fm, &division, true);
+            let mut fetcher = Fetcher::new(&packed).with_occupancy(true);
+            let mut dram = Dram::default();
+            for (y0, y1) in [(0usize, 24usize), (6, 18), (11, 13)] {
+                let win = fetcher.fetch_window(&mut dram, y0, y1, 0, 24, 0, 16);
+                let occ = fetcher.row_occupancy().to_vec();
+                assert_eq!(occ.len(), y1 - y0, "{scheme:?}");
+                for (i, &maybe) in occ.iter().enumerate() {
+                    if !maybe {
+                        for x in 0..24 {
+                            for ch in 0..16 {
+                                assert_eq!(
+                                    win.get(y0 + i, x, ch),
+                                    0.0,
+                                    "{scheme:?}: row {} marked zero but isn't",
+                                    y0 + i
+                                );
+                            }
+                        }
+                    }
+                }
+                if scheme == Scheme::Bitmask {
+                    // The planted zero band is provable from the mask.
+                    for y in 10..14 {
+                        if y >= y0 && y < y1 {
+                            assert!(!occ[y - y0], "row {y} not proven zero");
+                        }
+                    }
+                }
+                fetcher.recycle(win);
+            }
         }
     }
 

@@ -19,6 +19,7 @@
 
 pub mod cli;
 pub mod compress;
+pub mod compute;
 pub mod config;
 pub mod coordinator;
 pub mod harness;

@@ -114,6 +114,7 @@ fn run(cli: &Cli) -> Result<()> {
         "metacache" => emit(cli, "metacache", harness::metacache_table()),
         "datapath" => emit(cli, "datapath", harness::codec_datapath_table()),
         "roofline" => emit(cli, "roofline", harness::roofline_table(policy)),
+        "gemm" => emit(cli, "gemm", harness::gemm_table()),
         "sweep" => cmd_sweep(cli, policy)?,
         "e2e" => cmd_e2e(cli, policy)?,
         "serve" => cmd_serve(cli, policy)?,
@@ -455,6 +456,10 @@ Analysis:
   metacache           metadata SRAM-cache absorption study
   datapath            codec decode datapath cycle model
   roofline            compute/memory bound + runtime speedup per layer
+                      (analytic MACs, labelled 'estimate')
+  gemm                GEMM compute-backend study: measured MACs + zero-skip
+                      elision per layer x density x skip policy, bit-checked
+                      against the direct-conv oracle
 
 End to end:
   e2e                 PJRT CNN -> GrateTile pipeline  [--mode --codec --requests]

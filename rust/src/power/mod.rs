@@ -14,5 +14,5 @@ pub mod roofline;
 pub mod systolic;
 
 pub use energy::EnergyTable;
-pub use roofline::{roofline, Machine, Roofline};
+pub use roofline::{roofline, roofline_measured, MacSource, Machine, Roofline};
 pub use systolic::{network_power, ArrayConfig, LayerCounts, PowerBreakdown};

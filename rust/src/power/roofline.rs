@@ -14,11 +14,34 @@
 
 use super::systolic::{layer_counts, ArrayConfig};
 use crate::compress::CodecPolicy;
+use crate::compute::GemmStats;
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
 use crate::sim::experiment::run_layer;
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{DivisionError, DivisionMode};
+
+/// Where a roofline's MAC count came from. Reports must say which —
+/// the analytic `ConvLayer::macs()` closed form is an *estimate*
+/// (it counts SAME-padding clipped taps the kernel never executes and
+/// assumes a dense input); kernel counters are *measured*. Exactly one
+/// source prices a layer, never a mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacSource {
+    /// MACs executed by the GEMM compute backend.
+    Measured,
+    /// Analytic estimate — no compute backend ran.
+    Estimate,
+}
+
+impl MacSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MacSource::Measured => "measured",
+            MacSource::Estimate => "estimate",
+        }
+    }
+}
 
 /// Machine balance for the roofline.
 #[derive(Debug, Clone, Copy)]
@@ -43,6 +66,9 @@ pub struct Roofline {
     pub memory_cycles_compressed: f64,
     /// Bandwidth saving applied to the feature stream.
     pub feature_saving: f64,
+    /// MACs that priced `compute_cycles`, and where they came from.
+    pub macs: u64,
+    pub mac_source: MacSource,
 }
 
 impl Roofline {
@@ -70,6 +96,9 @@ impl Roofline {
 
 /// Analyse one layer: measure the division mode's feature saving on
 /// `fm`, then place the layer on the roofline with and without it.
+/// Compute time is priced from the analytic MAC *estimate* (labelled
+/// [`MacSource::Estimate`]); pass the GEMM backend's counters through
+/// [`roofline_measured`] when a compute backend ran.
 pub fn roofline(
     machine: &Machine,
     hw: &Hardware,
@@ -78,12 +107,46 @@ pub fn roofline(
     mode: DivisionMode,
     policy: impl Into<CodecPolicy>,
 ) -> Result<Roofline, DivisionError> {
+    roofline_inner(machine, hw, layer, fm, mode, policy.into(), None)
+}
+
+/// [`roofline`] with the compute side priced from **measured** kernel
+/// counters instead of the analytic estimate — use when the GEMM
+/// compute backend ran. A zero `stats` (no backend run) falls back to
+/// the estimate and is labelled so: exactly one source prices the
+/// layer, never both.
+pub fn roofline_measured(
+    machine: &Machine,
+    hw: &Hardware,
+    layer: &ConvLayer,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    policy: impl Into<CodecPolicy>,
+    stats: &GemmStats,
+) -> Result<Roofline, DivisionError> {
+    let measured = (stats.dense_macs > 0).then_some(stats.macs);
+    roofline_inner(machine, hw, layer, fm, mode, policy.into(), measured)
+}
+
+fn roofline_inner(
+    machine: &Machine,
+    hw: &Hardware,
+    layer: &ConvLayer,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    policy: CodecPolicy,
+    measured_macs: Option<u64>,
+) -> Result<Roofline, DivisionError> {
     let counts = layer_counts(&machine.array, layer);
     let report = run_layer(hw, layer, fm, mode, policy)?;
     let saving = report.saving_with_meta().max(0.0);
 
+    let (macs, mac_source) = match measured_macs {
+        Some(m) => (m, MacSource::Measured),
+        None => (counts.macs, MacSource::Estimate),
+    };
     let macs_per_cycle = (machine.array.rows * machine.array.cols) as f64;
-    let compute_cycles = counts.macs as f64 / macs_per_cycle;
+    let compute_cycles = macs as f64 / macs_per_cycle;
 
     let feature = counts.dram_feature_words as f64;
     let other = (counts.dram_weight_words + counts.dram_output_words) as f64;
@@ -96,6 +159,8 @@ pub fn roofline(
         memory_cycles_dense,
         memory_cycles_compressed,
         feature_saving: saving,
+        macs,
+        mac_source,
     })
 }
 
@@ -145,5 +210,43 @@ mod tests {
         let r = analyse(ConvLayer::new(1, 1, 56, 56, 64, 64), 0.4);
         assert!(r.memory_cycles_compressed <= r.memory_cycles_dense);
         assert!(r.runtime_compressed() <= r.runtime_dense());
+    }
+
+    /// Measured kernel counters shrink the compute roof on sparse
+    /// inputs and flip the label; a zero `GemmStats` (no backend run)
+    /// falls back to the estimate — one source, never both.
+    #[test]
+    fn measured_macs_replace_the_estimate() {
+        use crate::compute::{GemmBackend, SkipPolicy};
+        use crate::coordinator::conv::Weights;
+        let machine = Machine::default();
+        let hw = Platform::EyerissLargeTile.hardware();
+        let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+        let fm = generate(24, 24, 16, SparsityParams::clustered(0.3, 5));
+        let w = Weights::random(&layer, 2);
+        let mode = DivisionMode::GrateTile { n: 8 };
+        let run = GemmBackend::new(hw)
+            .with_mode(mode)
+            .with_skip(SkipPolicy::ZeroSkip)
+            .conv_relu(&layer, &w, &fm)
+            .unwrap();
+        let est = roofline(&machine, &hw, &layer, &fm, mode, Scheme::Bitmask).unwrap();
+        let meas =
+            roofline_measured(&machine, &hw, &layer, &fm, mode, Scheme::Bitmask, &run.stats)
+                .unwrap();
+        assert_eq!(est.mac_source, MacSource::Estimate);
+        assert_eq!(est.macs, layer.macs());
+        assert_eq!(meas.mac_source, MacSource::Measured);
+        assert_eq!(meas.macs, run.stats.macs);
+        assert!(meas.compute_cycles < est.compute_cycles, "sparse input must shrink the roof");
+        // Memory side is MAC-source independent.
+        assert_eq!(meas.memory_cycles_dense, est.memory_cycles_dense);
+        // No backend run ⇒ honest fallback to the estimate.
+        let zero = roofline_measured(
+            &machine, &hw, &layer, &fm, mode, Scheme::Bitmask, &GemmStats::default(),
+        )
+        .unwrap();
+        assert_eq!(zero.mac_source, MacSource::Estimate);
+        assert_eq!(zero.macs, est.macs);
     }
 }

@@ -163,3 +163,18 @@ fn golden_metacache_table() {
 fn golden_serve_scaling_table() {
     check_golden("serve_scaling.csv", &harness::serve_scaling_table().render_csv());
 }
+
+/// ISSUE 6 satellite (d): the GEMM compute-backend study table —
+/// measured MAC counts, skip counters and oracle bit-exactness flags —
+/// is a golden artifact, byte-stable across `--jobs`.
+#[test]
+fn golden_gemm_table() {
+    let mut renders = Vec::new();
+    for jobs in [1usize, 4] {
+        set_threads(jobs);
+        renders.push(harness::gemm_table().render_csv());
+    }
+    set_threads(0);
+    assert_eq!(renders[0], renders[1], "gemm table bytes depend on --jobs");
+    check_golden("gemm_table.csv", &renders[0]);
+}

@@ -3,8 +3,10 @@
 //! division mode, not just the benchmark configurations.
 
 use gratetile::compress::{CodecPolicy, Compressor, Registry, Scheme};
+use gratetile::compute::{GemmBackend, SkipPolicy};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
+use gratetile::coordinator::conv::{direct_conv_relu, Weights};
 use gratetile::layout::{Fetcher, Packer};
 use gratetile::memsim::{Dram, DramTiming, SharedDram};
 use gratetile::sim::experiment::{run_layer, run_layer_naive};
@@ -840,6 +842,150 @@ fn adaptive_strictly_beats_every_fixed_codec_on_mixed_density_map() {
             scheme.name()
         );
     }
+}
+
+/// ISSUE 6 satellite (a): the GEMM compute backend is **bit-identical**
+/// (f32) to the `direct_conv_relu` oracle for every randomized layer
+/// geometry — stride/dilation/SAME-padding edges included — under every
+/// division mode, codec policy, and all three skip policies. The same
+/// runs also assert the fetch-side invariance acceptance: zero-skip
+/// decode elision never changes what DRAM traffic is accounted.
+#[test]
+fn prop_gemm_matches_direct_conv() {
+    use gratetile::memsim::Stream;
+    forall_res(
+        0x6E77,
+        12,
+        |r: &mut SplitMix64| {
+            // Smaller shapes than gen_scenario: every case runs the
+            // dense kernel 3x, so keep the MAC budget honest.
+            let k = r.below(3); // kernels 1/3/5
+            let s = 1 + r.below(2);
+            let d = if k > 0 && r.chance(0.25) { 2 } else { 1 };
+            let h = 9 + r.below(16);
+            let w = 9 + r.below(16);
+            let c = 8 * (1 + r.below(2));
+            let mode = match r.below(4) {
+                0 => DivisionMode::GrateTile { n: 4 },
+                1 | 2 => DivisionMode::GrateTile { n: 8 },
+                _ => DivisionMode::Uniform { edge: 4 },
+            };
+            let policy = match r.below(4) {
+                0 => CodecPolicy::Fixed(Scheme::Bitmask),
+                1 => CodecPolicy::Fixed(Scheme::Zrlc),
+                2 => CodecPolicy::Fixed(Scheme::Dictionary),
+                _ => CodecPolicy::Adaptive,
+            };
+            Scenario {
+                layer: ConvLayer { k, s, d, h, w, c_in: c, c_out: 8 },
+                mode,
+                policy,
+                density: r.next_f64(),
+                seed: r.next_u64(),
+            }
+        },
+        |sc| {
+            let hw = Platform::NvidiaSmallTile.hardware();
+            let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+            let fm = generate(h, w, c, SparsityParams::clustered(sc.density, sc.seed));
+            let weights = Weights::random(&sc.layer, sc.seed ^ 0x11);
+            let oracle = direct_conv_relu(&sc.layer, &weights, &fm);
+            let be = GemmBackend::new(hw).with_mode(sc.mode).with_policy(sc.policy);
+            let mut runs = Vec::new();
+            for skip in SkipPolicy::all() {
+                let run = match be.with_skip(skip).conv_relu(&sc.layer, &weights, &fm) {
+                    Ok(r) => r,
+                    Err(_) => return Ok(()), // N/A division for this geometry
+                };
+                let tag = format!(
+                    "k={} s={} d={} {h}x{w}x{c} {} {} {}",
+                    sc.layer.k,
+                    sc.layer.s,
+                    sc.layer.d,
+                    sc.mode.name(),
+                    sc.policy.name(),
+                    skip.name()
+                );
+                if run.out.as_slice() != oracle.as_slice() {
+                    return Err(format!("{tag}: GEMM diverges from oracle"));
+                }
+                if run.stats.dense_macs == 0 {
+                    return Err(format!("{tag}: kernel measured nothing"));
+                }
+                runs.push(run);
+            }
+            // Dense vs ZeroSkip: the compute policy must not change one
+            // word of accounted DRAM traffic.
+            for s in [Stream::FeatureRead, Stream::MetadataRead] {
+                if runs[0].dram.words_of(s) != runs[2].dram.words_of(s) {
+                    return Err(format!(
+                        "{} {}: {s:?} traffic {} (dense) != {} (zeroskip)",
+                        sc.mode.name(),
+                        sc.policy.name(),
+                        runs[0].dram.words_of(s),
+                        runs[2].dram.words_of(s)
+                    ));
+                }
+            }
+            if runs[0].stats.dense_macs != runs[2].stats.dense_macs {
+                return Err("dense-equivalent MACs must be policy-invariant".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// ISSUE 6 acceptance: GEMM == oracle bit for bit across the layer
+/// *zoo* geometries under every codec policy including Adaptive. The
+/// suite's kernel/stride/dilation diversity is kept; spatial and
+/// channel extents are capped so the dense oracle stays affordable in
+/// a debug test run.
+#[test]
+fn gemm_matches_oracle_on_layer_zoo_all_policies() {
+    use gratetile::config::zoo::benchmark_suite;
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let mut checked = 0;
+    for (i, bench) in benchmark_suite().iter().enumerate() {
+        let b = bench.layer;
+        let layer = ConvLayer {
+            k: b.k,
+            s: b.s,
+            d: b.d,
+            h: b.h.min(18),
+            w: b.w.min(18),
+            c_in: b.c_in.min(16),
+            c_out: b.c_out.min(8),
+        };
+        let fm = generate(
+            layer.h,
+            layer.w,
+            layer.c_in,
+            SparsityParams::clustered(bench.density, 0x200 + i as u64),
+        );
+        let weights = Weights::random(&layer, 0x300 + i as u64);
+        let oracle = direct_conv_relu(&layer, &weights, &fm);
+        for policy in [
+            CodecPolicy::Fixed(Scheme::Bitmask),
+            CodecPolicy::Fixed(Scheme::Zrlc),
+            CodecPolicy::Adaptive,
+        ] {
+            let Ok(run) = GemmBackend::new(hw)
+                .with_policy(policy)
+                .conv_relu(&layer, &weights, &fm)
+            else {
+                continue;
+            };
+            assert_eq!(
+                run.out.as_slice(),
+                oracle.as_slice(),
+                "{} {} {policy:?}",
+                bench.network.name(),
+                bench.name
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 30, "zoo coverage too small: {checked}");
 }
 
 /// ISSUE 5 acceptance: on the standard layer zoo (the Table III
