@@ -1,6 +1,7 @@
 //! Pipeline metrics: traffic, timing, overlap, measured compute.
 
 use crate::compute::GemmStats;
+use crate::layout::FetchCounters;
 use crate::memsim::{Dram, Stream};
 use std::time::Duration;
 
@@ -32,6 +33,15 @@ pub struct PipelineMetrics {
     pub row_hits: u64,
     pub row_misses: u64,
     pub dram_cycles: u64,
+    /// Read-side datapath counters from the fetch lane (decode cache
+    /// hits, words emitted by the span decoder, metadata-only skips).
+    pub cache_hits: u64,
+    pub decoded_words: u64,
+    pub skipped_subtensors: u64,
+    pub skipped_spans: u64,
+    /// Compressed payload bits of the layer's *input* map, split by
+    /// codec tag (registry order: bitmask, zrlc, dictionary, raw).
+    pub packed_bits_by_codec: [u64; 4],
     /// Measured kernel work from the GEMM compute backend (`macs` =
     /// executed, `dense_macs` = dense-equivalent on the same in-bounds
     /// taps). Zero when no compute backend ran — consumers fall back to
@@ -45,6 +55,14 @@ impl PipelineMetrics {
         self.metadata_words += dram.words_of(Stream::MetadataRead);
         self.output_words += dram.words_of(Stream::OutputWrite);
         self.metadata_write_words += dram.words_of(Stream::MetadataWrite);
+    }
+
+    /// Fold the fetch lane's datapath counters into the layer metrics.
+    pub fn absorb_fetch_counters(&mut self, c: &FetchCounters) {
+        self.cache_hits += c.cache_hits;
+        self.decoded_words += c.decoded_words;
+        self.skipped_subtensors += c.skipped_subtensors;
+        self.skipped_spans += c.skipped_spans;
     }
 
     pub fn merge(&mut self, o: &PipelineMetrics) {
@@ -62,6 +80,13 @@ impl PipelineMetrics {
         self.row_hits += o.row_hits;
         self.row_misses += o.row_misses;
         self.dram_cycles += o.dram_cycles;
+        self.cache_hits += o.cache_hits;
+        self.decoded_words += o.decoded_words;
+        self.skipped_subtensors += o.skipped_subtensors;
+        self.skipped_spans += o.skipped_spans;
+        for (a, b) in self.packed_bits_by_codec.iter_mut().zip(o.packed_bits_by_codec) {
+            *a += b;
+        }
         self.gemm.merge(&o.gemm);
     }
 
@@ -130,18 +155,58 @@ impl PipelineMetrics {
     }
 }
 
-/// Nearest-rank index of percentile `p` over `n` sorted samples,
-/// clamped to the valid domain: `NaN` and `p < 0` select the minimum,
-/// `p > 1` the maximum. Both serving reports ([`crate::coordinator::ServerReport`]
-/// and the simulator's) index through this, so an out-of-range `p` can
-/// never panic an index computation.
-pub fn percentile_index(n: usize, p: f64) -> usize {
-    if n == 0 {
-        return 0;
+// The percentile machinery moved to [`crate::obs::metrics`] (the
+// unified metrics layer); this re-export keeps the historical path —
+// and with it the nearest-rank semantics the goldens pin — intact.
+pub use crate::obs::metrics::{percentile_index, SortedSamples};
+
+/// Per-layer observable counters computed by the **functional** pass
+/// and carried alongside each [`crate::coordinator::simserver::LayerWork`],
+/// so the single-threaded timing pass can emit them as trace counter
+/// events at exact simulated cycles — `--jobs`-invariant by
+/// construction (host parallelism never touches emission order).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LayerObs {
+    /// Executed MACs (measured when a compute backend ran, else the
+    /// analytic estimate — same fallback as the serving report).
+    pub macs: u64,
+    /// Input payload bits by codec tag (registry order).
+    pub packed_bits_by_codec: [u64; 4],
+    pub cache_hits: u64,
+    pub decoded_words: u64,
+    pub skipped_subtensors: u64,
+    pub skipped_spans: u64,
+    pub skipped_rows: u64,
+    pub skipped_values: u64,
+}
+
+impl LayerObs {
+    /// Project the observable subset out of a layer's pipeline metrics.
+    pub fn from_metrics(m: &PipelineMetrics) -> Self {
+        LayerObs {
+            macs: m.gemm.macs,
+            packed_bits_by_codec: m.packed_bits_by_codec,
+            cache_hits: m.cache_hits,
+            decoded_words: m.decoded_words,
+            skipped_subtensors: m.skipped_subtensors,
+            skipped_spans: m.skipped_spans,
+            skipped_rows: m.gemm.skipped_rows,
+            skipped_values: m.gemm.skipped_values,
+        }
     }
-    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
-    // p <= 1 ⇒ (n-1)·p rounds to at most n-1: always in bounds.
-    (((n - 1) as f64) * p).round() as usize
+
+    pub fn merge(&mut self, o: &LayerObs) {
+        self.macs += o.macs;
+        for (a, b) in self.packed_bits_by_codec.iter_mut().zip(o.packed_bits_by_codec) {
+            *a += b;
+        }
+        self.cache_hits += o.cache_hits;
+        self.decoded_words += o.decoded_words;
+        self.skipped_subtensors += o.skipped_subtensors;
+        self.skipped_spans += o.skipped_spans;
+        self.skipped_rows += o.skipped_rows;
+        self.skipped_values += o.skipped_values;
+    }
 }
 
 #[cfg(test)]
@@ -149,17 +214,35 @@ mod tests {
     use super::*;
 
     #[test]
-    fn percentile_index_clamps_domain() {
+    fn percentile_index_reexport_keeps_semantics() {
+        // The implementation lives in obs::metrics now; the historical
+        // path must keep the exact nearest-rank clamping semantics.
         assert_eq!(percentile_index(0, 0.5), 0);
-        assert_eq!(percentile_index(1, f64::NAN), 0);
-        assert_eq!(percentile_index(5, -3.0), 0);
-        assert_eq!(percentile_index(5, 0.0), 0);
-        assert_eq!(percentile_index(5, 0.5), 2);
-        assert_eq!(percentile_index(5, 1.0), 4);
-        assert_eq!(percentile_index(5, 17.0), 4);
         assert_eq!(percentile_index(5, f64::NAN), 0);
-        assert_eq!(percentile_index(5, f64::INFINITY), 4);
-        assert_eq!(percentile_index(5, f64::NEG_INFINITY), 0);
+        assert_eq!(percentile_index(5, 0.5), 2);
+        assert_eq!(percentile_index(5, 17.0), 4);
+    }
+
+    #[test]
+    fn layer_obs_projects_and_merges() {
+        let m = PipelineMetrics {
+            cache_hits: 3,
+            decoded_words: 40,
+            skipped_subtensors: 2,
+            skipped_spans: 5,
+            packed_bits_by_codec: [10, 20, 0, 0],
+            gemm: GemmStats { macs: 100, dense_macs: 400, skipped_rows: 7, skipped_values: 9 },
+            ..Default::default()
+        };
+        let mut o = LayerObs::from_metrics(&m);
+        assert_eq!(o.macs, 100);
+        assert_eq!(o.skipped_rows, 7);
+        assert_eq!(o.packed_bits_by_codec, [10, 20, 0, 0]);
+        let snapshot = o;
+        o.merge(&snapshot);
+        assert_eq!(o.macs, 200);
+        assert_eq!(o.packed_bits_by_codec, [20, 40, 0, 0]);
+        assert_eq!(o.skipped_values, 18);
     }
 
     #[test]

@@ -29,9 +29,10 @@ pub mod server;
 pub mod simserver;
 
 pub use conv::{direct_conv_relu, Weights};
-pub use metrics::PipelineMetrics;
+pub use metrics::{LayerObs, PipelineMetrics};
 pub use pipeline::{LayerRunner, LayerTrace, PipelineConfig};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use simserver::{
-    simulate, Priority, SimRequest, SimServer, SimServerConfig, SimServerReport,
+    metrics_of, simulate, simulate_traced, Priority, SimRequest, SimServer, SimServerConfig,
+    SimServerReport,
 };

@@ -25,7 +25,7 @@ use crate::compress::CodecPolicy;
 use crate::compute::{gemm_tile, GemmStats, PackedWeights, SkipPolicy};
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
-use crate::layout::fetcher::{DenseWindow, Fetcher};
+use crate::layout::fetcher::{DenseWindow, FetchCounters, Fetcher};
 use crate::layout::packer::{PackedFeatureMap, Packer};
 use crate::memsim::{Access, Dram, DramTiming, Stream, TimedDram};
 use crate::sim::walker::TileWalker;
@@ -143,8 +143,8 @@ impl LayerRunner {
         let pw = PackedWeights::prepare(layer, weights);
         let mut gemm = GemmStats::default();
 
-        let (fetch_busy, fetch_dram) = std::thread::scope(
-            |scope| -> Result<(Duration, Dram)> {
+        let (fetch_busy, fetch_dram, fetch_counters) = std::thread::scope(
+            |scope| -> Result<(Duration, Dram, FetchCounters)> {
                 // ---- prefetch lane ----
                 let walker_f = walker.clone();
                 let fetch_handle = scope.spawn(move || {
@@ -169,7 +169,7 @@ impl LayerRunner {
                             break; // compute lane bailed
                         }
                     }
-                    (busy, dram)
+                    (busy, dram, fetcher.counters())
                 });
 
                 // ---- compute lane (this thread) ----
@@ -204,14 +204,16 @@ impl LayerRunner {
                     }
                 }
                 drop(rx);
-                let (busy, dram) = fetch_handle.join().expect("prefetch lane panicked");
-                Ok((busy, dram))
+                let lane = fetch_handle.join().expect("prefetch lane panicked");
+                Ok(lane)
             },
         )?;
 
         metrics.fetch_busy = fetch_busy;
         metrics.gemm = gemm;
         metrics.absorb_dram(&fetch_dram);
+        metrics.absorb_fetch_counters(&fetch_counters);
+        metrics.packed_bits_by_codec = packed.payload_bits_by_tag();
         let mut out_dram = Dram::default();
         out_dram.access(Stream::OutputWrite, 0, out.words() as u64);
         metrics.absorb_dram(&out_dram);
@@ -317,6 +319,8 @@ impl LayerRunner {
                 );
             }
         }
+        // Computed here: `snap_packed` moves into the prefetch lane.
+        let input_bits_by_codec = snap_packed.payload_bits_by_tag();
         let mut writer = StoreWriter::new(store, output, out_division, self.cfg.policy);
 
         let depth = self.cfg.prefetch_depth.max(1);
@@ -326,8 +330,8 @@ impl LayerRunner {
         let pw = PackedWeights::prepare(layer, weights);
         let mut gemm = GemmStats::default();
 
-        let (fetch_busy, fetch_dram) = std::thread::scope(
-            |scope| -> Result<(Duration, Dram)> {
+        let (fetch_busy, fetch_dram, fetch_counters) = std::thread::scope(
+            |scope| -> Result<(Duration, Dram, FetchCounters)> {
                 // ---- prefetch lane: reads the store snapshot ----
                 let walker_f = walker.clone();
                 let fetch_handle = scope.spawn(move || {
@@ -351,7 +355,7 @@ impl LayerRunner {
                             break;
                         }
                     }
-                    (busy, dram)
+                    (busy, dram, fetcher.counters())
                 });
 
                 // ---- compute lane: convolve, ReLU, stream to store ----
@@ -385,8 +389,8 @@ impl LayerRunner {
                     }
                 }
                 drop(rx);
-                let (busy, dram) = fetch_handle.join().expect("prefetch lane panicked");
-                Ok((busy, dram))
+                let lane = fetch_handle.join().expect("prefetch lane panicked");
+                Ok(lane)
             },
         )?;
 
@@ -398,6 +402,8 @@ impl LayerRunner {
         metrics.fetch_busy = fetch_busy;
         metrics.gemm = gemm;
         metrics.absorb_dram(&fetch_dram);
+        metrics.absorb_fetch_counters(&fetch_counters);
+        metrics.packed_bits_by_codec = input_bits_by_codec;
         metrics.absorb_dram(&report.dram);
         metrics.writeback_payload_bits = report.payload_bits;
         metrics.writeback_meta_bits = report.metadata_bits;
@@ -543,6 +549,11 @@ mod tests {
         // The compute lane reports measured kernel work.
         assert!(m.gemm.dense_macs > 0);
         assert!(m.measured_macs().unwrap() < m.gemm.dense_macs, "50% map must skip");
+        // The fetch lane ships its datapath counters up into metrics,
+        // and the input's payload bits land under its codec tag.
+        assert!(m.decoded_words > 0, "fetch counters absorbed");
+        let bits: u64 = m.packed_bits_by_codec.iter().sum();
+        assert!(bits > 0, "input payload bits attributed to a codec tag");
     }
 
     /// Every kernel skip policy yields the same pipeline output; the
@@ -652,6 +663,8 @@ mod tests {
             assert!(m.writeback_meta_bits > 0);
             assert!(m.metadata_write_words > 0, "producer-side index traffic accounted");
             assert!(m.row_hits + m.row_misses > 0, "timed replay ran");
+            assert!(m.decoded_words > 0, "store path also ships fetch counters");
+            assert!(m.packed_bits_by_codec.iter().sum::<u64>() > 0);
             // The streaming writer's staging stays well under the dense
             // intermediate it replaces (40x40x16 = 25600 words).
             assert!(

@@ -51,27 +51,30 @@ impl ServerReport {
         self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
+    /// Latency samples sorted once; every percentile on the returned
+    /// set is an O(1) [`super::metrics::percentile_index`] lookup.
+    pub fn sorted_latencies(&self) -> super::metrics::SortedSamples<Duration> {
+        super::metrics::SortedSamples::from_unsorted(self.latencies.clone())
+    }
+
     /// Nearest-rank latency percentile. `p` is clamped to `[0, 1]`
     /// (NaN selects the minimum), so callers can never panic the index
-    /// computation with an out-of-domain fraction.
+    /// computation with an out-of-domain fraction. Loops over several
+    /// percentiles should sort once via [`Self::sorted_latencies`].
     pub fn percentile(&self, p: f64) -> Duration {
-        if self.latencies.is_empty() {
-            return Duration::ZERO;
-        }
-        let mut l = self.latencies.clone();
-        l.sort_unstable();
-        l[super::metrics::percentile_index(l.len(), p)]
+        self.sorted_latencies().at_or(p, Duration::ZERO)
     }
 
     pub fn summary(&self) -> String {
+        let lat = self.sorted_latencies();
         format!(
             "{} requests in {:.2}s -> {:.1} req/s; p50={:.1}ms p95={:.1}ms p99={:.1}ms; feature traffic {} KB",
             self.completed,
             self.wall.as_secs_f64(),
             self.throughput_rps(),
-            self.percentile(0.50).as_secs_f64() * 1e3,
-            self.percentile(0.95).as_secs_f64() * 1e3,
-            self.percentile(0.99).as_secs_f64() * 1e3,
+            lat.at_or(0.50, Duration::ZERO).as_secs_f64() * 1e3,
+            lat.at_or(0.95, Duration::ZERO).as_secs_f64() * 1e3,
+            lat.at_or(0.99, Duration::ZERO).as_secs_f64() * 1e3,
             self.total_feature_bytes / 1024,
         )
     }

@@ -30,10 +30,13 @@
 //! `tests/golden.rs` and covered by a golden fixture.
 
 use super::conv::Weights;
-use super::metrics::percentile_index;
+use super::metrics::{LayerObs, SortedSamples};
 use super::pipeline::{LayerRunner, LayerTrace, PipelineConfig};
+use crate::compress::Registry;
 use crate::config::layer::ConvLayer;
 use crate::memsim::{DramTiming, SharedDram};
+use crate::obs::trace::{Track, TraceRecorder, ADMISSION_PID, COUNTER_PID, DRAM_PID, WORKER_PID};
+use crate::obs::MetricsRegistry;
 use crate::store::container::{fnv1a64_continue, FNV1A64_OFFSET};
 use crate::tensor::sparsity::{generate, SparsityParams};
 use crate::tensor::FeatureMap;
@@ -122,6 +125,10 @@ pub struct LayerWork {
     /// the analytic estimate.
     pub measured: bool,
     pub trace: LayerTrace,
+    /// Observable per-layer counters (packed bits by codec, cache hits,
+    /// skip counts…) computed by the functional pass and emitted as
+    /// trace counter events by the timing pass.
+    pub obs: LayerObs,
 }
 
 impl LayerWork {
@@ -206,26 +213,28 @@ impl SimServerReport {
         self.completed as f64 * 1e6 / self.makespan_cycles as f64
     }
 
-    fn percentile_of(samples: &[u64], p: f64) -> u64 {
-        if samples.is_empty() {
-            return 0;
-        }
-        let mut s = samples.to_vec();
-        s.sort_unstable();
-        s[percentile_index(s.len(), p)]
+    /// End-to-end latency samples, sorted **once** — every percentile
+    /// on the returned set is an O(1) lookup. [`Self::render`] and
+    /// [`Self::summary`] go through this instead of re-sorting per
+    /// percentile call.
+    pub fn latency_samples(&self) -> SortedSamples<u64> {
+        SortedSamples::from_unsorted(self.requests.iter().map(|r| r.latency_cycles).collect())
+    }
+
+    /// Queue-wait samples, sorted once (see [`Self::latency_samples`]).
+    pub fn queue_samples(&self) -> SortedSamples<u64> {
+        SortedSamples::from_unsorted(self.requests.iter().map(|r| r.queue_cycles).collect())
     }
 
     /// End-to-end latency percentile in cycles; `p` is clamped to
     /// `[0, 1]` (NaN → minimum), so no input can panic the index math.
     pub fn latency_percentile(&self, p: f64) -> u64 {
-        let l: Vec<u64> = self.requests.iter().map(|r| r.latency_cycles).collect();
-        Self::percentile_of(&l, p)
+        self.latency_samples().at_or(p, 0)
     }
 
     /// Queue-wait percentile in cycles (same clamping).
     pub fn queue_percentile(&self, p: f64) -> u64 {
-        let q: Vec<u64> = self.requests.iter().map(|r| r.queue_cycles).collect();
-        Self::percentile_of(&q, p)
+        self.queue_samples().at_or(p, 0)
     }
 
     pub fn row_hit_rate(&self) -> f64 {
@@ -239,13 +248,14 @@ impl SimServerReport {
 
     /// One-line digest.
     pub fn summary(&self) -> String {
+        let lat = self.latency_samples();
         format!(
             "{} requests in {} simulated cycles -> {:.3} req/Mcycle; p50={} p99={} cycles; row-hit {:.1}%",
             self.completed,
             self.makespan_cycles,
             self.throughput_rpmc(),
-            self.latency_percentile(0.50),
-            self.latency_percentile(0.99),
+            lat.at_or(0.50, 0),
+            lat.at_or(0.99, 0),
             self.row_hit_rate() * 100.0,
         )
     }
@@ -267,19 +277,22 @@ impl SimServerReport {
             self.makespan_cycles,
             self.throughput_rpmc()
         );
+        // Each sample set is sorted exactly once for all percentiles.
+        let lat = self.latency_samples();
+        let queue = self.queue_samples();
         let _ = writeln!(
             s,
             "latency_cycles p50={} p95={} p99={} max={}",
-            self.latency_percentile(0.50),
-            self.latency_percentile(0.95),
-            self.latency_percentile(0.99),
-            self.latency_percentile(1.0),
+            lat.at_or(0.50, 0),
+            lat.at_or(0.95, 0),
+            lat.at_or(0.99, 0),
+            lat.at_or(1.0, 0),
         );
         let _ = writeln!(
             s,
             "queue_cycles p50={} max={}",
-            self.queue_percentile(0.50),
-            self.queue_percentile(1.0),
+            queue.at_or(0.50, 0),
+            queue.at_or(1.0, 0),
         );
         let _ = writeln!(
             s,
@@ -371,9 +384,12 @@ impl SimServer {
                 .iter()
                 .zip(per_layer.iter())
                 .zip(traces)
-                .map(|(((layer, _), m), trace)| match m.measured_macs() {
-                    Some(macs) => LayerWork { macs, measured: true, trace },
-                    None => LayerWork { macs: layer.macs(), measured: false, trace },
+                .map(|(((layer, _), m), trace)| {
+                    let obs = LayerObs::from_metrics(m);
+                    match m.measured_macs() {
+                        Some(macs) => LayerWork { macs, measured: true, trace, obs },
+                        None => LayerWork { macs: layer.macs(), measured: false, trace, obs },
+                    }
                 })
                 .collect();
             let feature_bytes = per_layer.iter().map(|m| m.feature_bytes()).sum();
@@ -396,8 +412,20 @@ impl SimServer {
 
     /// Functional pass + timing pass.
     pub fn serve(&self, requests: Vec<SimRequest>) -> Result<SimServerReport> {
+        self.serve_traced(requests, &mut TraceRecorder::disabled())
+    }
+
+    /// [`Self::serve`] with a trace recorder: when `rec` is enabled the
+    /// timing pass emits per-worker request/layer spans, per-bank DRAM
+    /// occupancy, admission waits, and cumulative counter events — all
+    /// in simulated cycles, byte-stable across `--jobs`.
+    pub fn serve_traced(
+        &self,
+        requests: Vec<SimRequest>,
+        rec: &mut TraceRecorder,
+    ) -> Result<SimServerReport> {
         let traces = self.functional_pass(&requests)?;
-        Ok(simulate(&self.cfg, &traces))
+        Ok(simulate_traced(&self.cfg, &traces, rec))
     }
 }
 
@@ -430,16 +458,29 @@ fn grant_rr(idle: &[bool], rr: &mut usize) -> Option<usize> {
 /// (bank-contended completion times) while the batch's compute
 /// accumulates on the worker; the layer ends when both streams drain
 /// (double-buffered overlap).
+///
+/// With an enabled recorder it also emits, on `worker_track`, one
+/// `L{li}` span per layer with `dram`/`compute` child spans (children
+/// share the layer's start, so nesting holds by construction), and
+/// buffers a `(finish, request, layer)` mark per batched layer into
+/// `layer_marks` — counter events are emitted later in global
+/// timestamp order, because batches complete ahead of the event
+/// loop's clock.
+#[allow(clippy::too_many_arguments)] // one call site; a params struct would only obscure it
 fn run_batch(
     dram: &mut SharedDram,
     start: u64,
     batch: &[usize],
     traces: &[RequestTrace],
     pe_lanes: u64,
+    rec: &mut TraceRecorder,
+    worker_track: Track,
+    layer_marks: &mut Vec<(u64, usize, usize)>,
 ) -> u64 {
     let n_layers = batch.iter().map(|&i| traces[i].layers.len()).max().unwrap_or(0);
     let mut t = start;
     for li in 0..n_layers {
+        let t0 = t;
         let mut dram_done = t;
         let mut compute = 0u64;
         for &ri in batch {
@@ -452,8 +493,28 @@ fn run_batch(
             compute += lw.compute_cycles(pe_lanes);
         }
         t = (t + compute).max(dram_done);
+        if rec.is_enabled() {
+            rec.span(worker_track, &format!("L{li}"), t0, t);
+            if dram_done > t0 {
+                rec.span(worker_track, "dram", t0, dram_done);
+            }
+            if compute > 0 {
+                rec.span(worker_track, "compute", t0, t0 + compute);
+            }
+            for &ri in batch {
+                if traces[ri].layers.get(li).is_some() {
+                    layer_marks.push((t, ri, li));
+                }
+            }
+        }
     }
     t
+}
+
+/// Display name of codec tag `tag` (registry order), for counter
+/// series and metrics keys.
+fn codec_name(tag: usize) -> &'static str {
+    Registry::global().entries().get(tag).map_or("unknown", |e| e.name)
 }
 
 /// The timing pass: replay `traces` under `cfg` and return the report.
@@ -461,11 +522,62 @@ fn run_batch(
 /// configurations (the serve-scaling study, the bench's bank sweep) is
 /// cheap and needs no new functional pass.
 pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerReport {
+    simulate_traced(cfg, traces, &mut TraceRecorder::disabled())
+}
+
+/// [`simulate`] with a trace recorder. When `rec` is enabled, the pass
+/// additionally records — all keyed on simulated cycles:
+///
+/// - per-worker tracks: one `req <ids>` span per grant, with per-layer
+///   `L{li}` / `dram` / `compute` child spans;
+/// - per-bank DRAM tracks: coalesced `busy` occupancy spans whose
+///   per-bank totals reconcile **exactly** with
+///   [`SimServerReport::bank_busy_cycles`];
+/// - per-request admission tracks: a `wait` span from arrival to grant
+///   (only when the wait is non-zero);
+/// - cumulative counter events (`macs`, cache hits, skip counts,
+///   packed bits per codec) stamped at each layer-completion cycle.
+///
+/// Emission happens entirely in this single-threaded pass from data the
+/// functional pass attached to the traces, so the recorded trace is
+/// `--jobs`-invariant by construction.
+pub fn simulate_traced(
+    cfg: &SimServerConfig,
+    traces: &[RequestTrace],
+    rec: &mut TraceRecorder,
+) -> SimServerReport {
     let workers = cfg.workers.max(1);
     let queue_depth = cfg.queue_depth.max(1);
     let batch_max = cfg.batch.max(1);
     let n = traces.len();
-    let mut dram = SharedDram::new(cfg.timing);
+    let mut dram = if rec.is_enabled() {
+        SharedDram::new(cfg.timing).with_busy_trace()
+    } else {
+        SharedDram::new(cfg.timing)
+    };
+
+    // Register every process/track up front so export order never
+    // depends on which worker or bank happens to run first.
+    let mut worker_tracks: Vec<Track> = Vec::new();
+    if rec.is_enabled() {
+        rec.process(WORKER_PID, "workers");
+        for w in 0..workers {
+            worker_tracks.push(rec.track(WORKER_PID, w as u64, &format!("worker {w}")));
+        }
+        rec.process(DRAM_PID, "dram banks");
+        for b in 0..dram.timing().n_banks {
+            rec.track(DRAM_PID, b as u64, &format!("bank {b}"));
+        }
+        rec.process(ADMISSION_PID, "admission");
+        for t in traces {
+            rec.track(ADMISSION_PID, t.id, &format!("req {}", t.id));
+        }
+        rec.process(COUNTER_PID, "counters");
+    }
+    // (completion cycle, request index, layer index) of every simulated
+    // layer — buffered because batches complete ahead of `now`, then
+    // sorted so counter events are emitted in timestamp order.
+    let mut layer_marks: Vec<(u64, usize, usize)> = Vec::new();
 
     let mut heap: BinaryHeap<Reverse<(u64, u64, EventKind)>> = BinaryHeap::new();
     let mut seq = 0u64;
@@ -527,7 +639,20 @@ pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerRepo
             idle[w] = false;
             // Grant freed admission slots: backpressure releases now.
             refill(&mut admitted, &mut waiting);
-            let finish = run_batch(&mut dram, now, &batch, traces, cfg.pe_lanes);
+            let wt = worker_tracks.get(w).copied().unwrap_or(Track { pid: WORKER_PID, tid: 0 });
+            let finish =
+                run_batch(&mut dram, now, &batch, traces, cfg.pe_lanes, rec, wt, &mut layer_marks);
+            if rec.is_enabled() {
+                let ids: Vec<String> = batch.iter().map(|&i| traces[i].id.to_string()).collect();
+                rec.span(wt, &format!("req {}", ids.join("+")), now, finish);
+                for &i in &batch {
+                    let t = &traces[i];
+                    if now > t.arrival_cycle {
+                        let at = rec.track(ADMISSION_PID, t.id, &format!("req {}", t.id));
+                        rec.span(at, "wait", t.arrival_cycle, now);
+                    }
+                }
+            }
             for &i in &batch {
                 let t = &traces[i];
                 stats[i] = Some(RequestStat {
@@ -541,6 +666,37 @@ pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerRepo
             makespan = makespan.max(finish);
             heap.push(Reverse((finish, seq, EventKind::WorkerFree(w))));
             seq += 1;
+        }
+    }
+
+    if rec.is_enabled() {
+        // Counter events: cumulative totals stamped at each layer's
+        // completion cycle, in global timestamp order (batches complete
+        // ahead of the event loop's clock, hence the sort).
+        layer_marks.sort_unstable();
+        let mut cum = LayerObs::default();
+        for (ts, ri, li) in layer_marks {
+            cum.merge(&traces[ri].layers[li].obs);
+            rec.counter("macs", ts, cum.macs);
+            rec.counter("cache_hits", ts, cum.cache_hits);
+            rec.counter("decoded_words", ts, cum.decoded_words);
+            rec.counter("skipped_subtensors", ts, cum.skipped_subtensors);
+            rec.counter("skipped_spans", ts, cum.skipped_spans);
+            rec.counter("skipped_rows", ts, cum.skipped_rows);
+            rec.counter("skipped_values", ts, cum.skipped_values);
+            for (tag, &bits) in cum.packed_bits_by_codec.iter().enumerate() {
+                if bits > 0 {
+                    rec.counter(&format!("packed_bits_{}", codec_name(tag)), ts, bits);
+                }
+            }
+        }
+        // Per-bank DRAM occupancy: coalesced busy intervals whose sums
+        // reconcile exactly with `bank_busy_cycles` (tests/obs.rs).
+        if let Some(spans) = dram.busy_spans() {
+            for s in spans {
+                let track = Track { pid: DRAM_PID, tid: s.bank as u64 };
+                rec.span(track, "busy", s.start, s.end);
+            }
         }
     }
 
@@ -573,6 +729,49 @@ pub fn simulate(cfg: &SimServerConfig, traces: &[RequestTrace]) -> SimServerRepo
         transfer_cycles: dram.transfer_cycles,
         bank_busy_cycles: dram.bank_busy_cycles().to_vec(),
     }
+}
+
+/// Project a serving run into the unified metrics registry: report
+/// aggregates as counters/gauges, per-request latency and queue waits
+/// as log-bucketed histograms, and the functional pass's per-layer
+/// observables (cache hits, skips, packed bits per codec) summed
+/// across `traces`. Deterministic — [`MetricsRegistry::to_json`] of
+/// the result is byte-stable across hosts and `--jobs`.
+pub fn metrics_of(report: &SimServerReport, traces: &[RequestTrace]) -> MetricsRegistry {
+    let mut m = MetricsRegistry::new();
+    m.counter_add("completed", report.completed);
+    m.counter_add("makespan_cycles", report.makespan_cycles);
+    m.counter_add("total_macs", report.total_macs);
+    m.counter_add("feature_bytes", report.total_feature_bytes);
+    m.counter_add("dram_lines", report.dram_lines);
+    m.counter_add("dram_requests", report.dram_requests);
+    m.counter_add("row_hits", report.row_hits);
+    m.counter_add("row_misses", report.row_misses);
+    m.counter_add("transfer_cycles", report.transfer_cycles);
+    let mut obs = LayerObs::default();
+    for t in traces {
+        for l in &t.layers {
+            obs.merge(&l.obs);
+        }
+    }
+    m.counter_add("cache_hits", obs.cache_hits);
+    m.counter_add("decoded_words", obs.decoded_words);
+    m.counter_add("skipped_subtensors", obs.skipped_subtensors);
+    m.counter_add("skipped_spans", obs.skipped_spans);
+    m.counter_add("skipped_rows", obs.skipped_rows);
+    m.counter_add("skipped_values", obs.skipped_values);
+    for (tag, &bits) in obs.packed_bits_by_codec.iter().enumerate() {
+        if bits > 0 {
+            m.counter_add(&format!("packed_bits_{}", codec_name(tag)), bits);
+        }
+    }
+    m.gauge_set("throughput_rpMcycle", report.throughput_rpmc());
+    m.gauge_set("row_hit_rate", report.row_hit_rate());
+    for r in &report.requests {
+        m.observe("latency_cycles", r.latency_cycles);
+        m.observe("queue_cycles", r.queue_cycles);
+    }
+    m
 }
 
 #[cfg(test)]
@@ -745,6 +944,32 @@ mod tests {
         for r in &rep.requests {
             assert!(r.macs > 0);
         }
+    }
+
+    #[test]
+    fn metrics_adapter_reflects_report_and_traces() {
+        let server = SimServer::new(sim_cfg(), tiny_net());
+        let traces = server.functional_pass(&server.synthetic_requests(4, 0.5, 7)).unwrap();
+        let rep = simulate(&sim_cfg(), &traces);
+        let m = metrics_of(&rep, &traces);
+        assert_eq!(m.counter("completed"), Some(rep.completed));
+        assert_eq!(m.counter("total_macs"), Some(rep.total_macs));
+        assert_eq!(m.counter("transfer_cycles"), Some(rep.transfer_cycles));
+        let lat = m.histogram("latency_cycles").expect("latency histogram");
+        assert_eq!(lat.count() as usize, rep.requests.len());
+        // The histogram quantile bounds the exact sorted percentile.
+        let exact = rep.latency_percentile(0.5);
+        let qh = lat.quantile(0.5);
+        assert!(qh <= exact && exact <= qh + (qh >> 3), "{qh} vs {exact}");
+        // Functional-pass observables made it through the traces.
+        assert!(m.counter("decoded_words").unwrap_or(0) > 0);
+        assert!(m.counter("macs").is_none(), "per-layer macs only exist as trace counters");
+        let packed: u64 = (0..4)
+            .filter_map(|tag| m.counter(&format!("packed_bits_{}", codec_name(tag))))
+            .sum();
+        assert!(packed > 0, "some codec packed bits must be accounted");
+        // JSON dump is deterministic for the same inputs.
+        assert_eq!(m.to_json(), metrics_of(&rep, &traces).to_json());
     }
 
     #[test]

@@ -6,8 +6,9 @@ use crate::compress::{CodecPolicy, Scheme};
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::config::zoo::{full_conv_stack, Network};
-use crate::coordinator::simserver::{simulate, SimServer, SimServerConfig};
+use crate::coordinator::simserver::{simulate, simulate_traced, SimServer, SimServerConfig};
 use crate::coordinator::{PipelineConfig, Weights};
+use crate::obs::TraceRecorder;
 use crate::sim::access::access_study;
 use crate::sim::metacache::{metadata_cache_study, TileOrder};
 use crate::sim::network::{depth_density, run_network_bandwidth, writeback_cost};
@@ -240,6 +241,27 @@ pub fn serve_scaling_table() -> Table {
         }
     }
     t
+}
+
+/// The golden trace scenario: run the serving simulator with tracing
+/// enabled over a tiny fixed net and roll the recorded counter series
+/// up into a table. Everything is simulated cycles computed from
+/// functional-pass data, so the table is byte-stable across hosts and
+/// `--jobs` — golden-filed in `tests/golden.rs` alongside the serving
+/// report.
+pub fn trace_rollup_table() -> Table {
+    let l1 = ConvLayer::new(1, 1, 16, 16, 8, 8);
+    let l2 = ConvLayer::new(1, 2, 16, 16, 8, 8);
+    let layers = vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))];
+    let cfg = SimServerConfig::new(PipelineConfig::new(
+        Platform::NvidiaSmallTile.hardware(),
+    ));
+    let server = SimServer::new(cfg, layers);
+    let reqs = server.synthetic_requests(6, 0.5, 7);
+    let traces = server.functional_pass(&reqs).expect("functional pass");
+    let mut rec = TraceRecorder::enabled();
+    simulate_traced(server.cfg(), &traces, &mut rec);
+    rec.rollup_table()
 }
 
 /// Roofline: compute/memory bound per benchmark layer and the runtime

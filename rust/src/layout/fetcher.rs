@@ -171,8 +171,20 @@ pub struct Fetcher<'a> {
     zero_skip: bool,
     skipped_subtensors: u64,
     skipped_spans: u64,
+    cache_hits: u64,
     track_occupancy: bool,
     occ_rows: Vec<bool>,
+}
+
+/// Snapshot of a fetcher's datapath counters, absorbed into
+/// [`crate::coordinator::PipelineMetrics`] (and from there the
+/// observability layer) when a pipeline lane retires its fetcher.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FetchCounters {
+    pub decoded_words: u64,
+    pub cache_hits: u64,
+    pub skipped_subtensors: u64,
+    pub skipped_spans: u64,
 }
 
 /// Recycled window buffers kept at most (beyond this they drop).
@@ -206,6 +218,7 @@ impl<'a> Fetcher<'a> {
             zero_skip: true,
             skipped_subtensors: 0,
             skipped_spans: 0,
+            cache_hits: 0,
             track_occupancy: false,
             occ_rows: Vec::new(),
         }
@@ -270,6 +283,22 @@ impl<'a> Fetcher<'a> {
     /// was zero (the window row stayed at its pre-zeroed contents).
     pub fn skipped_spans(&self) -> u64 {
         self.skipped_spans
+    }
+
+    /// Decoded-sub-tensor LRU hits (0 when the cache is disabled).
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    /// All datapath counters at once — what the pipeline absorbs into
+    /// its metrics when the fetch lane retires.
+    pub fn counters(&self) -> FetchCounters {
+        FetchCounters {
+            decoded_words: self.decoded_words,
+            cache_hits: self.cache_hits,
+            skipped_subtensors: self.skipped_subtensors,
+            skipped_spans: self.skipped_spans,
+        }
     }
 
     /// Return a spent window's buffer to the fetch pool (the pipeline's
@@ -386,6 +415,7 @@ impl<'a> Fetcher<'a> {
         // the previous decode instead of re-running the codec.
         if let Some(cache) = self.cache.as_mut() {
             if let Some(data) = cache.get(li) {
+                self.cache_hits += 1;
                 let win = (y0, x0, c0, x1 - x0, c1 - c0);
                 copy_intersection(data, out, sy, sx, scg0, cd, clip, win);
                 if self.track_occupancy {
@@ -748,13 +778,20 @@ mod tests {
                 d_cached.words_of(Stream::MetadataRead),
                 "{scheme:?} metadata traffic"
             );
-            // The overlapping windows actually hit: fewer decoded words.
+            // The overlapping windows actually hit: fewer decoded words,
+            // and the hit counter says so while the uncached fetcher's
+            // stays at zero.
             assert!(
                 cached.decoded_words() < plain.decoded_words(),
                 "{scheme:?} cache never hit ({} vs {})",
                 cached.decoded_words(),
                 plain.decoded_words()
             );
+            assert!(cached.cache_hits() > 0, "{scheme:?} hit counter");
+            assert_eq!(plain.cache_hits(), 0);
+            let c = cached.counters();
+            assert_eq!(c.cache_hits, cached.cache_hits());
+            assert_eq!(c.decoded_words, cached.decoded_words());
         }
     }
 

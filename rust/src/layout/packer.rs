@@ -165,6 +165,30 @@ impl PackedFeatureMap {
         self.metadata.total_bits()
     }
 
+    /// Stored payload bits attributed to each codec tag, in registry
+    /// order (bitmask, zrlc, dictionary, raw). Compact maps pay exact
+    /// compressed bits, aligned modes pay whole stored words — the same
+    /// storage-cost rule as [`Self::total_words`], split by the codec
+    /// that produced each sub-tensor. This is the per-codec breakdown
+    /// the observability layer emits as `packed_bits_<codec>` counters.
+    pub fn payload_bits_by_tag(&self) -> [u64; 4] {
+        let fixed_tag = match self.policy {
+            CodecPolicy::Fixed(s) => Some(Registry::global().tag_of(s)),
+            CodecPolicy::Adaptive => None,
+        };
+        let mut out = [0u64; 4];
+        for li in 0..self.division.n_subtensors() {
+            let bits = if self.division.compact {
+                self.sizes_bits[li] as u64
+            } else {
+                self.sizes_words[li] as u64 * 16
+            };
+            let tag = fixed_tag.unwrap_or_else(|| self.tags[li]);
+            out[(tag as usize) & 3] += bits;
+        }
+        out
+    }
+
     /// Human-readable codec description: the codec name for fixed maps,
     /// `auto(name:count,...)` with the per-codec sub-tensor histogram
     /// for adaptive ones.
@@ -828,6 +852,32 @@ mod tests {
         // Fixed maps carry no tags at all.
         assert!(fixed.tags.is_empty());
         assert!(fixed.metadata.records.iter().all(|r| r.codec_tags.is_empty()));
+    }
+
+    /// Per-codec bit attribution: a fixed map charges every stored bit
+    /// to its single codec's tag; an adaptive map's per-tag bits sum to
+    /// the same storage-rule total and land only on selected tags.
+    #[test]
+    fn payload_bits_by_tag_accounts_all_storage() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (fm, div, packer) = setup(DivisionMode::GrateTile { n: 8 }, 0.4);
+        let fixed = packer.pack(&fm, &div, false);
+        let by_tag = fixed.payload_bits_by_tag();
+        let tag = Registry::global().tag_of(Scheme::Bitmask) as usize;
+        let stored: u64 = fixed.sizes_words.iter().map(|&s| s as u64 * 16).sum();
+        assert_eq!(by_tag[tag], stored);
+        assert_eq!(by_tag.iter().sum::<u64>(), stored, "only the fixed tag is charged");
+
+        let auto = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &div, false);
+        let auto_by_tag = auto.payload_bits_by_tag();
+        let auto_stored: u64 = auto.sizes_words.iter().map(|&s| s as u64 * 16).sum();
+        assert_eq!(auto_by_tag.iter().sum::<u64>(), auto_stored);
+
+        // Compact maps charge exact bits, not padded words.
+        let (fm_c, div_c, packer_c) = setup(DivisionMode::Uniform { edge: 1 }, 0.4);
+        let compact = packer_c.pack(&fm_c, &div_c, false);
+        let exact: u64 = compact.sizes_bits.iter().map(|&b| b as u64).sum();
+        assert_eq!(compact.payload_bits_by_tag().iter().sum::<u64>(), exact);
     }
 
     #[test]

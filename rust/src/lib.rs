@@ -12,7 +12,8 @@
 //!   with its streaming write path and `.grate` container ([`store`]),
 //!   the DRAM bandwidth simulator ([`memsim`], [`sim`]), the accelerator
 //!   coordinator ([`coordinator`]), a systolic power model ([`power`]),
-//!   and the evaluation harness ([`harness`]).
+//!   deterministic tracing/metrics/logging ([`obs`]), and the
+//!   evaluation harness ([`harness`]).
 //! * **L2/L1 (build time)** — `python/compile/` lowers a JAX CNN (with a
 //!   Pallas conv kernel) to HLO text once; [`runtime`] loads and executes
 //!   it via PJRT so the e2e example runs on *real* ReLU sparsity.
@@ -25,6 +26,7 @@ pub mod coordinator;
 pub mod harness;
 pub mod layout;
 pub mod memsim;
+pub mod obs;
 pub mod power;
 pub mod runtime;
 pub mod sim;

@@ -7,21 +7,25 @@
 //! gratetile ablation --codecs|--whole-channel|--sweep|--dilated
 //! gratetile e2e [--mode grate8] [--requests 4]       # PJRT end-to-end
 //! gratetile serve --workers 4 --requests 32          # serving simulator (--wall for host time)
+//! gratetile serve --trace out.json --metrics m.json  # + Perfetto trace / metrics dump
+//! gratetile trace --requests 8 --limit 120           # text timeline + counter rollup
 //! gratetile servescale                               # serve-scaling study table
 //! gratetile store pack|inspect|serve|compare         # .grate containers
 //! ```
 
 use gratetile::cli::Cli;
-use gratetile::util::error::Result;
-use gratetile::{bail, err};
+use gratetile::util::error::{Context, Result};
+use gratetile::{bail, err, log_error, log_info, log_warn};
 use gratetile::compress::{CodecPolicy, Registry};
 use gratetile::config::hardware::Platform;
 use gratetile::config::layer::ConvLayer;
 use gratetile::coordinator::{
-    LayerRunner, PipelineConfig, Server, ServerConfig, SimServer, SimServerConfig, Weights,
+    metrics_of, simulate_traced, LayerRunner, PipelineConfig, Server, ServerConfig, SimServer,
+    SimServerConfig, Weights,
 };
 use gratetile::harness;
 use gratetile::memsim::DramTiming;
+use gratetile::obs::TraceRecorder;
 use gratetile::runtime::{Engine, Manifest};
 use gratetile::sim::experiment::run_layer;
 use gratetile::tensor::sparsity::{generate, SparsityParams};
@@ -32,7 +36,7 @@ use std::path::Path;
 fn main() {
     let cli = Cli::parse(std::env::args().skip(1));
     if let Err(e) = run(&cli) {
-        eprintln!("error: {e:#}");
+        log_error!("{e:#}");
         std::process::exit(1);
     }
 }
@@ -68,6 +72,9 @@ fn parse_policy(s: &str) -> Result<CodecPolicy> {
 }
 
 fn run(cli: &Cli) -> Result<()> {
+    // Logging first: `--quiet` wins over `--verbose`; with neither, the
+    // GRATETILE_LOG env var (error/warn/info/debug) picks the level.
+    gratetile::obs::log::configure(cli.has_flag("verbose"), cli.has_flag("quiet"));
     if let Some(jobs) = cli.opt_parsed::<usize>("jobs") {
         gratetile::util::parallel::set_threads(jobs);
     }
@@ -118,6 +125,7 @@ fn run(cli: &Cli) -> Result<()> {
         "sweep" => cmd_sweep(cli, policy)?,
         "e2e" => cmd_e2e(cli, policy)?,
         "serve" => cmd_serve(cli, policy)?,
+        "trace" => cmd_trace(cli, policy)?,
         "servescale" => emit(cli, "serve_scaling", harness::serve_scaling_table()),
         "" | "help" | "--help" => print_help(),
         other => {
@@ -209,7 +217,7 @@ fn cmd_e2e(cli: &Cli, policy: CodecPolicy) -> Result<()> {
     let entry = manifest.get("cnn")?;
     let engine = Engine::cpu()?;
     let model = engine.load_entry(entry)?;
-    println!("PJRT platform: {}; artifact: {}", engine.platform(), entry.file.display());
+    log_info!("PJRT platform: {}; artifact: {}", engine.platform(), entry.file.display());
 
     let (h, w, c) = (entry.input_dims[0], entry.input_dims[1], entry.input_dims[2]);
     let mut cfg = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
@@ -307,7 +315,7 @@ fn cmd_store(cli: &Cli, policy: CodecPolicy) -> Result<()> {
             Container::write(out, &refs)?;
             let dense_words = (h * w * c * count) as u64;
             let packed_words: u64 = packs.iter().map(|(_, p)| p.total_words).sum();
-            println!(
+            log_info!(
                 "packed {count} x {h}x{w}x{c} (d={density}) as {} under {} + {}: {} -> {} words ({:.1}%)",
                 out.display(),
                 mode.name(),
@@ -381,35 +389,21 @@ fn cmd_store(cli: &Cli, policy: CodecPolicy) -> Result<()> {
     }
 }
 
-/// Serving driver. Default (and `--sim`): the deterministic
-/// discrete-event simulator — reports in simulated cycles, byte-stable
-/// for a given seed regardless of host load or `--jobs`. `--wall` keeps
-/// the original host wall-clock leader/worker topology.
-fn cmd_serve(cli: &Cli, policy: CodecPolicy) -> Result<()> {
-    let workers = cli.opt_usize("workers", 4);
-    let requests = cli.opt_usize("requests", 16);
-    let density = cli.opt_f64("density", 0.5);
-    let seed = cli.opt_usize("seed", 7) as u64;
+/// The demo network `serve` and `trace` run (3 conv layers).
+fn demo_net() -> Vec<(ConvLayer, Weights)> {
     let l1 = ConvLayer::new(1, 1, 32, 32, 8, 16);
     let l2 = ConvLayer::new(1, 2, 32, 32, 16, 16);
     let l3 = ConvLayer::new(1, 1, 16, 16, 16, 8);
-    let layers = vec![
+    vec![
         (l1, Weights::random(&l1, 1)),
         (l2, Weights::random(&l2, 2)),
         (l3, Weights::random(&l3, 3)),
-    ];
-    let mut pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
-    pipeline.policy = policy;
-    if cli.has_flag("wall") {
-        let server = Server::new(
-            ServerConfig { pipeline, workers, queue_depth: workers * 2 },
-            layers,
-        );
-        let inputs = server.synthetic_requests(requests, density, seed);
-        let report = server.serve(inputs)?;
-        println!("{}", report.summary());
-        return Ok(());
-    }
+    ]
+}
+
+/// Simulator knobs shared by `serve` and `trace`.
+fn sim_config(cli: &Cli, pipeline: PipelineConfig) -> SimServerConfig {
+    let workers = cli.opt_usize("workers", 4);
     let mut cfg = SimServerConfig::new(pipeline);
     cfg.workers = workers;
     cfg.queue_depth = cli.opt_usize("queue-depth", workers * 2);
@@ -418,10 +412,84 @@ fn cmd_serve(cli: &Cli, policy: CodecPolicy) -> Result<()> {
         DramTiming { n_banks: cli.opt_usize("banks", 8), ..DramTiming::default() };
     cfg.pe_lanes = cli.opt_usize("lanes", 32) as u64;
     cfg.arrival_gap = cli.opt_usize("arrival-gap", 0) as u64;
-    let server = SimServer::new(cfg, layers);
+    cfg
+}
+
+/// Serving driver. Default (and `--sim`): the deterministic
+/// discrete-event simulator — reports in simulated cycles, byte-stable
+/// for a given seed regardless of host load or `--jobs`. `--trace F` /
+/// `--metrics F` additionally write a Perfetto-loadable Chrome trace
+/// and a JSON metrics dump of the simulated run (stdout stays
+/// byte-identical either way). `--wall` keeps the original host
+/// wall-clock leader/worker topology.
+fn cmd_serve(cli: &Cli, policy: CodecPolicy) -> Result<()> {
+    let workers = cli.opt_usize("workers", 4);
+    let requests = cli.opt_usize("requests", 16);
+    let density = cli.opt_f64("density", 0.5);
+    let seed = cli.opt_usize("seed", 7) as u64;
+    let trace_out = cli.opt("trace");
+    let metrics_out = cli.opt("metrics");
+    let mut pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+    pipeline.policy = policy;
+    if cli.has_flag("wall") {
+        if trace_out.is_some() || metrics_out.is_some() {
+            log_warn!("--trace/--metrics record the simulated path; ignored under --wall");
+        }
+        let server = Server::new(
+            ServerConfig { pipeline, workers, queue_depth: workers * 2 },
+            demo_net(),
+        );
+        let inputs = server.synthetic_requests(requests, density, seed);
+        let report = server.serve(inputs)?;
+        println!("{}", report.summary());
+        return Ok(());
+    }
+    let server = SimServer::new(sim_config(cli, pipeline), demo_net());
     let inputs = server.synthetic_requests(requests, density, seed);
-    let report = server.serve(inputs)?;
+    let mut rec = if trace_out.is_some() || metrics_out.is_some() {
+        TraceRecorder::enabled()
+    } else {
+        TraceRecorder::disabled()
+    };
+    let traces = server.functional_pass(&inputs)?;
+    let report = simulate_traced(server.cfg(), &traces, &mut rec);
     print!("{}", report.render());
+    if let Some(path) = trace_out {
+        std::fs::write(path, rec.to_chrome_json())
+            .with_context(|| format!("writing trace {path}"))?;
+        log_info!("wrote Perfetto trace to {path}");
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, metrics_of(&report, &traces).to_json())
+            .with_context(|| format!("writing metrics {path}"))?;
+        log_info!("wrote metrics dump to {path}");
+    }
+    Ok(())
+}
+
+/// Run the serving simulator with tracing on and render the recorded
+/// trace in the terminal: summary line, indented per-track timeline,
+/// and the counter rollup table — the no-Perfetto view of
+/// `serve --trace`. `--out F` also writes the Chrome trace JSON.
+fn cmd_trace(cli: &Cli, policy: CodecPolicy) -> Result<()> {
+    let requests = cli.opt_usize("requests", 16);
+    let density = cli.opt_f64("density", 0.5);
+    let seed = cli.opt_usize("seed", 7) as u64;
+    let limit = cli.opt_usize("limit", 80);
+    let mut pipeline = PipelineConfig::new(Platform::NvidiaSmallTile.hardware());
+    pipeline.policy = policy;
+    let server = SimServer::new(sim_config(cli, pipeline), demo_net());
+    let inputs = server.synthetic_requests(requests, density, seed);
+    let mut rec = TraceRecorder::enabled();
+    let report = server.serve_traced(inputs, &mut rec)?;
+    println!("{}", report.summary());
+    print!("{}", rec.render_text(limit));
+    emit(cli, "trace_rollup", rec.rollup_table());
+    if let Some(path) = cli.opt("out") {
+        std::fs::write(path, rec.to_chrome_json())
+            .with_context(|| format!("writing trace {path}"))?;
+        log_info!("wrote Perfetto trace to {path}");
+    }
     Ok(())
 }
 
@@ -466,14 +534,20 @@ End to end:
   serve               serving driver. Default --sim: deterministic discrete-event
                       simulator in simulated cycles (byte-stable per seed)
                       [--workers --requests --density --seed --queue-depth
-                       --batch --banks --lanes --arrival-gap]; --wall: host
+                       --batch --banks --lanes --arrival-gap]
+                      [--trace F: write Perfetto-loadable Chrome trace JSON]
+                      [--metrics F: write JSON metrics dump]; --wall: host
                       wall-clock leader/worker topology
+  trace               simulate with tracing on, render the text timeline +
+                      counter rollup [serve's sim knobs --limit N (0 = all
+                      lines) --out F (also write the Chrome trace JSON)]
   servescale          serve-scaling study: workers x queue x density, simulated
                       (fixed bitmask codec — the golden-filed baseline)
 
 Common flags: --codec NAME|auto (codec policy: bitmask/zrlc/dictionary/raw, or
 auto = cheapest codec per sub-tensor; --scheme is an alias); --markdown (emit
 GFM tables); --jobs N (suite worker threads, default: all cores, also via
-GRATETILE_THREADS); all tables also land in results/*.csv"
+GRATETILE_THREADS); --verbose/--quiet (stderr log level, also via
+GRATETILE_LOG=error|warn|info|debug); all tables also land in results/*.csv"
     );
 }

@@ -13,4 +13,4 @@ pub mod timing;
 
 pub use cache::Cache;
 pub use dram::{Access, Dram, Stream};
-pub use timing::{DramTiming, SharedDram, TimedDram};
+pub use timing::{BankSpan, DramTiming, SharedDram, TimedDram};

@@ -115,6 +115,21 @@ impl TimedDram {
     }
 }
 
+/// One coalesced busy interval on a DRAM bank, in simulated cycles.
+///
+/// Produced by [`SharedDram`] when busy tracing is on
+/// ([`SharedDram::with_busy_trace`]): back-to-back line services on
+/// the same bank (next start == previous finish) extend one span, so
+/// the per-bank spans are **disjoint** and their lengths sum exactly
+/// to that bank's `bank_busy_cycles` entry — the reconciliation
+/// `tests/obs.rs` asserts against the serving report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BankSpan {
+    pub bank: usize,
+    pub start: u64,
+    pub end: u64,
+}
+
 /// Bank-contended DRAM shared by every simulated worker of the serving
 /// simulator ([`crate::coordinator::simserver`]).
 ///
@@ -148,6 +163,12 @@ pub struct SharedDram {
     pub requests: u64,
     /// Sum of all per-line service cycles across banks.
     pub transfer_cycles: u64,
+    /// Coalesced per-bank busy intervals; `None` unless enabled via
+    /// [`Self::with_busy_trace`] (the common, allocation-free case).
+    busy_spans: Option<Vec<BankSpan>>,
+    /// Index into `busy_spans` of each bank's most recent span
+    /// (`usize::MAX` = none yet) — O(1) coalescing.
+    last_span: Vec<usize>,
 }
 
 impl SharedDram {
@@ -166,7 +187,24 @@ impl SharedDram {
             lines: 0,
             requests: 0,
             transfer_cycles: 0,
+            busy_spans: None,
+            last_span: Vec::new(),
         }
+    }
+
+    /// Enable busy tracing: [`Self::busy_spans`] will return the
+    /// coalesced per-bank occupancy intervals of every serviced line.
+    pub fn with_busy_trace(mut self) -> Self {
+        self.busy_spans = Some(Vec::new());
+        self.last_span = vec![usize::MAX; self.timing.n_banks];
+        self
+    }
+
+    /// The coalesced busy intervals (`None` when tracing is off). Spans
+    /// are appended in service order; per bank they are disjoint and
+    /// non-decreasing in `start`.
+    pub fn busy_spans(&self) -> Option<&[BankSpan]> {
+        self.busy_spans.as_deref()
     }
 
     pub fn timing(&self) -> DramTiming {
@@ -207,6 +245,18 @@ impl SharedDram {
             };
             let start = issue.max(self.busy_until[bank]);
             let finish = start + cost;
+            if let Some(spans) = self.busy_spans.as_mut() {
+                // `start >= busy_until[bank]` (the previous finish), so
+                // per-bank intervals never overlap; back-to-back ones
+                // coalesce into the span opened by the last service.
+                let last = self.last_span[bank];
+                if last != usize::MAX && spans[last].end == start {
+                    spans[last].end = finish;
+                } else {
+                    self.last_span[bank] = spans.len();
+                    spans.push(BankSpan { bank, start, end: finish });
+                }
+            }
             self.busy_until[bank] = finish;
             self.bank_busy_cycles[bank] += cost;
             self.transfer_cycles += cost;
@@ -345,6 +395,44 @@ mod tests {
         assert_eq!(d.row_hits + d.row_misses, d.lines);
         assert!(d.peak_bank_utilisation(now) <= 1.0);
         assert_eq!(d.peak_bank_utilisation(0), 0.0);
+    }
+
+    #[test]
+    fn busy_trace_spans_reconcile_with_bank_busy_cycles() {
+        let mut d = SharedDram::new(DramTiming::default()).with_busy_trace();
+        let mut now = 0;
+        for i in 0..50u64 {
+            now = d.service(now + (i % 3) * 11, i * 37, 1 + (i % 40));
+        }
+        let spans = d.busy_spans().expect("tracing enabled");
+        assert!(!spans.is_empty());
+        let n = d.timing().n_banks;
+        let mut per_bank = vec![0u64; n];
+        let mut last_end = vec![0u64; n];
+        for s in spans {
+            assert!(s.end > s.start, "empty span {s:?}");
+            assert!(s.start >= last_end[s.bank], "overlap on bank {}", s.bank);
+            last_end[s.bank] = s.end;
+            per_bank[s.bank] += s.end - s.start;
+        }
+        assert_eq!(per_bank, d.bank_busy_cycles(), "coalesced spans must sum exactly");
+    }
+
+    #[test]
+    fn busy_trace_coalesces_back_to_back_lines() {
+        // One 4-line read on a single bank: all lines queue back to
+        // back, so tracing yields exactly one coalesced span.
+        let timing = DramTiming { n_banks: 1, ..DramTiming::default() };
+        let mut d = SharedDram::new(timing).with_busy_trace();
+        d.service(0, 0, 32);
+        assert_eq!(d.lines, 4);
+        let spans = d.busy_spans().unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].end - spans[0].start, d.transfer_cycles);
+        // Untraced DRAM allocates nothing.
+        let mut plain = SharedDram::new(timing);
+        plain.service(0, 0, 32);
+        assert!(plain.busy_spans().is_none());
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Trace export: Chrome trace-event JSON (Perfetto-loadable), a text
+//! timeline, and a counter rollup table.
+//!
+//! Determinism rules (golden-tested): every timestamp is a simulated
+//! cycle, event order is a pure function of the recorded data (sorted,
+//! never hash-ordered), and the artifact carries no wall clock, git
+//! rev, or host identity. `displayTimeUnit` is cosmetic — Perfetto
+//! renders one cycle as one microsecond.
+
+use super::trace::{Counter, Span, TraceRecorder, COUNTER_PID};
+use crate::util::benchkit::json_escape;
+use crate::util::table::Table;
+use std::cmp::Reverse;
+use std::fmt::Write as _;
+
+impl TraceRecorder {
+    /// Serialize to Chrome trace-event JSON: metadata events first
+    /// (process then thread names, by pid/tid), then complete (`"X"`)
+    /// span events sorted by `(track, start)` — so `ts` is monotonic
+    /// per track — then counter (`"C"`) events, one series per tid on
+    /// [`COUNTER_PID`], sorted by `(tid, ts)`. One event per line.
+    pub fn to_chrome_json(&self) -> String {
+        let mut s = String::from("{\"traceEvents\":[\n");
+        let mut first = true;
+        let mut push = |s: &mut String, line: String| {
+            if !first {
+                s.push_str(",\n");
+            }
+            first = false;
+            s.push_str(&line);
+        };
+
+        let mut procs: Vec<&(u64, String)> = self.process_names().iter().collect();
+        procs.sort_by_key(|(pid, _)| *pid);
+        for (pid, name) in procs {
+            push(
+                &mut s,
+                format!(
+                    "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    json_escape(name)
+                ),
+            );
+        }
+        let mut tracks: Vec<&(super::trace::Track, String)> = self.track_names().iter().collect();
+        tracks.sort_by_key(|(t, _)| *t);
+        for (t, name) in tracks {
+            push(
+                &mut s,
+                format!(
+                    "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{},\"tid\":{},\
+                     \"args\":{{\"name\":\"{}\"}}}}",
+                    t.pid,
+                    t.tid,
+                    json_escape(name)
+                ),
+            );
+        }
+
+        let mut spans: Vec<&Span> = self.spans().iter().collect();
+        spans.sort_by_key(|sp| (sp.track, sp.start, Reverse(sp.end)));
+        for sp in spans {
+            push(
+                &mut s,
+                format!(
+                    "{{\"name\":\"{}\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\"ts\":{},\"dur\":{}}}",
+                    json_escape(&sp.name),
+                    sp.track.pid,
+                    sp.track.tid,
+                    sp.start,
+                    sp.end - sp.start
+                ),
+            );
+        }
+
+        // Counter series occupy one tid each on COUNTER_PID, in
+        // first-seen order — deterministic because the emitter is the
+        // single-threaded timing pass.
+        let mut series: Vec<&str> = Vec::new();
+        for c in self.counters() {
+            if !series.contains(&c.name.as_str()) {
+                series.push(&c.name);
+            }
+        }
+        let tid_of = |name: &str| series.iter().position(|n| *n == name).unwrap_or(0) as u64;
+        let mut counters: Vec<&Counter> = self.counters().iter().collect();
+        counters.sort_by_key(|c| (tid_of(&c.name), c.ts));
+        for c in counters {
+            push(
+                &mut s,
+                format!(
+                    "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{COUNTER_PID},\"tid\":{},\"ts\":{},\
+                     \"args\":{{\"{}\":{}}}}}",
+                    json_escape(&c.name),
+                    tid_of(&c.name),
+                    c.ts,
+                    json_escape(&c.name),
+                    c.value
+                ),
+            );
+        }
+
+        s.push_str(
+            "\n],\"displayTimeUnit\":\"ms\",\"otherData\":{\"clock\":\"simulated-cycles\"}}\n",
+        );
+        s
+    }
+
+    /// Render an indented per-track text timeline. `max_lines` bounds
+    /// the output (0 = unlimited); a trailing note reports truncation.
+    pub fn render_text(&self, max_lines: usize) -> String {
+        let mut out = String::new();
+        let mut lines = 0usize;
+        let mut truncated = 0usize;
+        let mut emit = |out: &mut String, line: String| {
+            if max_lines > 0 && lines >= max_lines {
+                truncated += 1;
+                return;
+            }
+            out.push_str(&line);
+            out.push('\n');
+            lines += 1;
+        };
+
+        let mut tracks: Vec<&(super::trace::Track, String)> = self.track_names().iter().collect();
+        tracks.sort_by_key(|(t, _)| *t);
+        for (track, tname) in tracks {
+            let mut spans: Vec<&Span> =
+                self.spans().iter().filter(|sp| sp.track == *track).collect();
+            if spans.is_empty() {
+                continue;
+            }
+            spans.sort_by_key(|sp| (sp.start, Reverse(sp.end)));
+            emit(&mut out, format!("track {tname} (pid {} tid {})", track.pid, track.tid));
+            let mut stack: Vec<u64> = Vec::new();
+            for sp in spans {
+                while stack.last().is_some_and(|&end| end <= sp.start) {
+                    stack.pop();
+                }
+                let indent = "  ".repeat(stack.len() + 1);
+                emit(&mut out, format!("{indent}[{:>8} .. {:>8}] {}", sp.start, sp.end, sp.name));
+                stack.push(sp.end);
+            }
+        }
+        if truncated > 0 {
+            let _ = writeln!(out, "... {truncated} more lines (raise --limit to see all)");
+        }
+        out
+    }
+
+    /// Rollup of every counter series to its final (cumulative) value
+    /// and sample count, in first-seen order — the golden-filed table
+    /// behind `gratetile trace`.
+    pub fn rollup_table(&self) -> Table {
+        let mut t = Table::new("Trace counter rollup (final cumulative values, simulated cycles)")
+            .header(vec!["Series", "Final value", "Points"]);
+        let mut series: Vec<(&str, u64, u64)> = Vec::new();
+        for c in self.counters() {
+            match series.iter_mut().find(|(n, _, _)| *n == c.name) {
+                Some((_, v, pts)) => {
+                    *v = c.value;
+                    *pts += 1;
+                }
+                None => series.push((&c.name, c.value, 1)),
+            }
+        }
+        for (name, last, points) in series {
+            t.row(vec![name.to_string(), last.to_string(), points.to_string()]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{DRAM_PID, WORKER_PID};
+    use super::*;
+
+    fn sample() -> TraceRecorder {
+        let mut r = TraceRecorder::enabled();
+        r.process(WORKER_PID, "workers");
+        r.process(DRAM_PID, "dram banks");
+        let w = r.track(WORKER_PID, 0, "worker 0");
+        let b = r.track(DRAM_PID, 0, "bank 0");
+        r.span(w, "req 0", 0, 100);
+        r.span(w, "L0", 0, 60);
+        r.span(w, "L1", 60, 100);
+        r.span(b, "busy", 5, 25);
+        r.counter("macs", 60, 640);
+        r.counter("macs", 100, 1280);
+        r.counter("cache_hits", 100, 3);
+        r
+    }
+
+    #[test]
+    fn chrome_json_shape_and_order() {
+        let j = sample().to_chrome_json();
+        assert!(j.starts_with("{\"traceEvents\":[\n"));
+        assert!(j.contains("\"process_name\""));
+        assert!(j.contains("\"thread_name\""));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"ph\":\"C\""));
+        assert!(j.contains("\"clock\":\"simulated-cycles\""));
+        // Metadata precedes spans precedes counters.
+        let meta = j.find("process_name").unwrap();
+        let x = j.find("\"ph\":\"X\"").unwrap();
+        let c = j.find("\"ph\":\"C\"").unwrap();
+        assert!(meta < x && x < c);
+        // Counter series tids follow first-seen order: macs=0, cache_hits=1.
+        assert!(j.contains("{\"name\":\"macs\",\"ph\":\"C\",\"pid\":4,\"tid\":0,"));
+        assert!(j.contains("{\"name\":\"cache_hits\",\"ph\":\"C\",\"pid\":4,\"tid\":1,"));
+    }
+
+    #[test]
+    fn text_timeline_nests_and_truncates() {
+        let full = sample().render_text(0);
+        assert!(full.contains("track worker 0"));
+        // L0 is a child of req 0: one extra indent level.
+        assert!(full.contains("\n  [       0 ..      100] req 0"));
+        assert!(full.contains("\n    [       0 ..       60] L0"));
+        let cut = sample().render_text(2);
+        assert!(cut.lines().count() == 3 && cut.contains("more lines"));
+    }
+
+    #[test]
+    fn rollup_keeps_last_value_and_counts_points() {
+        let t = sample().rollup_table();
+        let csv = t.render_csv();
+        assert!(csv.contains("macs,1280,2"));
+        assert!(csv.contains("cache_hits,3,1"));
+    }
+
+    #[test]
+    fn empty_recorder_exports_cleanly() {
+        let r = TraceRecorder::disabled();
+        let j = r.to_chrome_json();
+        assert!(j.contains("\"traceEvents\":[\n\n]"));
+        assert_eq!(r.render_text(0), "");
+    }
+}

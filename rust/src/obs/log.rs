@@ -1,0 +1,174 @@
+//! Leveled stderr logging for diagnostics.
+//!
+//! Human-facing study tables and reports stay on **stdout** untouched;
+//! everything that used to be a scattered `eprintln!`/progress
+//! `println!` goes through [`log_error!`](crate::log_error) /
+//! [`log_warn!`](crate::log_warn) / [`log_info!`](crate::log_info) /
+//! [`log_debug!`](crate::log_debug) instead.
+//!
+//! The level is resolved in priority order: an explicit
+//! [`set_level`]/[`configure`] call (CLI `--verbose`/`--quiet`), else
+//! the `GRATETILE_LOG` environment variable
+//! (`error|warn|info|debug|quiet`), else `info`. The logger is the one
+//! deliberate piece of global state in `obs` — it writes only to
+//! stderr and never into any exported artifact, so determinism of
+//! traces/metrics/goldens is unaffected.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Severity, ordered: a message is printed when its level is at or
+/// below the configured one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a level name; `quiet` is an alias for `error`.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" | "quiet" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+/// `u8::MAX` = "not explicitly set": fall back to the env default.
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn env_default() -> Level {
+    static ENV: OnceLock<Level> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("GRATETILE_LOG").ok().and_then(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    })
+}
+
+/// Explicitly set the level (overrides `GRATETILE_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// The currently effective level.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        u8::MAX => env_default(),
+        v => Level::from_u8(v),
+    }
+}
+
+/// Whether a message at `l` would be printed.
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Apply the CLI flags: `--quiet` wins over `--verbose`; with neither,
+/// the env default stands.
+pub fn configure(verbose: bool, quiet: bool) {
+    if quiet {
+        set_level(Level::Error);
+    } else if verbose {
+        set_level(Level::Debug);
+    }
+}
+
+/// Print `msg` to stderr as `[level] msg` if `l` is enabled. Use the
+/// `log_*!` macros rather than calling this directly.
+pub fn log(l: Level, msg: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{}] {}", l.name(), msg);
+    }
+}
+
+/// Log at error level (always printed unless the logger is broken).
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+/// Log at info level (the default): progress and one-line summaries.
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Log at debug level (enabled by `--verbose` / `GRATETILE_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::obs::log::log($crate::obs::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test exercises every level transition: the level is global
+    // state, so splitting these into parallel #[test]s would race.
+    #[test]
+    fn level_parsing_ordering_and_configure() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse(" WARN "), Some(Level::Warn));
+        assert_eq!(Level::parse("quiet"), Some(Level::Error));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Debug);
+
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+
+        // --quiet beats --verbose.
+        configure(true, true);
+        assert_eq!(level(), Level::Error);
+        configure(true, false);
+        assert_eq!(level(), Level::Debug);
+        // Neither flag: the previous explicit level stands.
+        configure(false, false);
+        assert_eq!(level(), Level::Debug);
+
+        // Leave a sane default for any other test in this process.
+        set_level(Level::Info);
+        log(Level::Debug, format_args!("suppressed at info"));
+    }
+}

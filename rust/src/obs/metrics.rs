@@ -1,0 +1,383 @@
+//! Unified metrics: counters, gauges, log-bucketed histograms, and the
+//! shared percentile machinery behind both serving reports.
+//!
+//! Everything here is integer- or format-deterministic: registries
+//! iterate in insertion order, histograms use pure integer bucket
+//! math, and the JSON dump is built with the same escaping the bench
+//! harness uses — byte-stable across hosts.
+
+/// Nearest-rank index of percentile `p` over `n` sorted samples,
+/// clamped to the valid domain: `NaN` and `p < 0` select the minimum,
+/// `p > 1` the maximum. Both serving reports ([`crate::coordinator::ServerReport`]
+/// and the simulator's) index through this, so an out-of-range `p` can
+/// never panic an index computation.
+pub fn percentile_index(n: usize, p: f64) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 1.0) };
+    // p <= 1 ⇒ (n-1)·p rounds to at most n-1: always in bounds.
+    (((n - 1) as f64) * p).round() as usize
+}
+
+/// A sample set sorted **once** at construction; every percentile is
+/// then an O(1) [`percentile_index`] lookup. Replaces the
+/// sort-per-percentile-call paths in both serving reports.
+#[derive(Debug, Clone, Default)]
+pub struct SortedSamples<T> {
+    sorted: Vec<T>,
+}
+
+impl<T: Ord + Copy> SortedSamples<T> {
+    /// Sort `samples` once (unstable — the sample type is totally
+    /// ordered, so ties are indistinguishable) and keep them.
+    pub fn from_unsorted(mut samples: Vec<T>) -> Self {
+        samples.sort_unstable();
+        SortedSamples { sorted: samples }
+    }
+
+    /// The sample at percentile `p`, or `default` when empty. Exactly
+    /// `sorted[percentile_index(len, p)]` — bit-identical to the
+    /// historical sort-per-call paths.
+    pub fn at_or(&self, p: f64, default: T) -> T {
+        if self.sorted.is_empty() {
+            return default;
+        }
+        self.sorted[percentile_index(self.sorted.len(), p)]
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+}
+
+/// Sub-bucket resolution: each power-of-two octave is split into
+/// `2^SUB_BITS = 8` linear sub-buckets.
+const SUB_BITS: u32 = 3;
+
+/// A log-bucketed `u64` histogram with a *documented* quantile error
+/// bound.
+///
+/// Values `< 8` get exact unit buckets; larger values land in one of 8
+/// linear sub-buckets per power-of-two octave, so a bucket spans at
+/// most 1/8 of its lower bound. [`LogHistogram::quantile`] returns the
+/// bucket lower bound `q̂` at the nearest rank, giving the two-sided
+/// bound **`q̂ ≤ exact ≤ q̂ + (q̂ >> 3)`** (≤ 12.5% relative error;
+/// exact for values < 8) against the true sorted-vector quantile at
+/// the same [`percentile_index`] rank — property-tested in
+/// `tests/obs.rs`.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: Vec::new(), count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index of `v`: identity below 8, then
+    /// `(msb - 3) * 8 + 8 + sub` where `sub` is the top 3 bits below
+    /// the msb. Maximum index is 495 (for `u64::MAX`).
+    fn bucket_of(v: u64) -> usize {
+        if v < 8 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let sub = (v >> (msb - SUB_BITS)) - 8;
+        ((msb - SUB_BITS) * 8 + 8) as usize + sub as usize
+    }
+
+    /// Smallest value mapping to bucket `b` (inverse of [`Self::bucket_of`]).
+    fn lower_bound_of(b: usize) -> u64 {
+        if b < 8 {
+            return b as u64;
+        }
+        let octave = (b - 8) / 8;
+        let sub = ((b - 8) % 8) as u64;
+        (8 + sub) << octave
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        let b = Self::bucket_of(v);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Lower bound of the bucket holding the nearest-rank sample at
+    /// percentile `p` (see the type docs for the error bound). 0 when
+    /// empty.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = percentile_index(self.count as usize, p) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::lower_bound_of(b);
+            }
+        }
+        Self::lower_bound_of(self.counts.len().saturating_sub(1))
+    }
+
+    pub fn merge(&mut self, o: &LogHistogram) {
+        if self.counts.len() < o.counts.len() {
+            self.counts.resize(o.counts.len(), 0);
+        }
+        for (b, &c) in o.counts.iter().enumerate() {
+            self.counts[b] += c;
+        }
+        self.count += o.count;
+        self.sum = self.sum.saturating_add(o.sum);
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Smallest observed value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+}
+
+/// A registry of named counters, gauges, and histograms. Iteration and
+/// JSON order is insertion order — first registration wins the slot —
+/// so dumps are byte-stable for a deterministic producer.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, f64)>,
+    hists: Vec<(String, LogHistogram)>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter_add(&mut self, name: &str, delta: u64) {
+        match self.counters.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v += delta,
+            None => self.counters.push((name.to_string(), delta)),
+        }
+    }
+
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        match self.gauges.iter_mut().find(|(n, _)| n == name) {
+            Some((_, v)) => *v = value,
+            None => self.gauges.push((name.to_string(), value)),
+        }
+    }
+
+    pub fn observe(&mut self, name: &str, value: u64) {
+        match self.hists.iter_mut().find(|(n, _)| n == name) {
+            Some((_, h)) => h.observe(value),
+            None => {
+                let mut h = LogHistogram::new();
+                h.observe(value);
+                self.hists.push((name.to_string(), h));
+            }
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn counters(&self) -> &[(String, u64)] {
+        &self.counters
+    }
+
+    pub fn gauges(&self) -> &[(String, f64)] {
+        &self.gauges
+    }
+
+    /// Deterministic JSON dump: counters as integers, gauges with six
+    /// fixed decimals, histograms as count/min/max/sum + p50/p90/p99
+    /// summaries. No wall clock, no git rev — safe for golden files.
+    pub fn to_json(&self) -> String {
+        use crate::util::benchkit::json_escape;
+        use std::fmt::Write as _;
+        let mut s = String::from("{\n  \"counters\": {");
+        for (i, (n, v)) in self.counters.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(s, "{sep}\n    \"{}\": {v}", json_escape(n));
+        }
+        s.push_str("\n  },\n  \"gauges\": {");
+        for (i, (n, v)) in self.gauges.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(s, "{sep}\n    \"{}\": {v:.6}", json_escape(n));
+        }
+        s.push_str("\n  },\n  \"histograms\": {");
+        for (i, (n, h)) in self.hists.iter().enumerate() {
+            let sep = if i == 0 { "" } else { "," };
+            let _ = write!(
+                s,
+                "{sep}\n    \"{}\": {{\"count\": {}, \"min\": {}, \"max\": {}, \"sum\": {}, \
+                 \"p50\": {}, \"p90\": {}, \"p99\": {}}}",
+                json_escape(n),
+                h.count(),
+                h.min(),
+                h.max(),
+                h.sum(),
+                h.quantile(0.50),
+                h.quantile(0.90),
+                h.quantile(0.99),
+            );
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_index_clamps_domain() {
+        assert_eq!(percentile_index(0, 0.5), 0);
+        assert_eq!(percentile_index(1, f64::NAN), 0);
+        assert_eq!(percentile_index(5, -3.0), 0);
+        assert_eq!(percentile_index(5, 0.0), 0);
+        assert_eq!(percentile_index(5, 0.5), 2);
+        assert_eq!(percentile_index(5, 1.0), 4);
+        assert_eq!(percentile_index(5, 17.0), 4);
+        assert_eq!(percentile_index(5, f64::NAN), 0);
+        assert_eq!(percentile_index(5, f64::INFINITY), 4);
+        assert_eq!(percentile_index(5, f64::NEG_INFINITY), 0);
+    }
+
+    #[test]
+    fn sorted_samples_match_sort_per_call() {
+        let raw = vec![40u64, 10, 30, 20, 50];
+        let ss = SortedSamples::from_unsorted(raw.clone());
+        let mut sorted = raw;
+        sorted.sort_unstable();
+        for &p in &[0.0, 0.25, 0.5, 0.95, 1.0] {
+            assert_eq!(ss.at_or(p, 0), sorted[percentile_index(sorted.len(), p)]);
+        }
+        assert_eq!(SortedSamples::<u64>::from_unsorted(vec![]).at_or(0.5, 7), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_are_consistent() {
+        // Identity below 8; octave boundaries land on fresh buckets.
+        for v in 0..8u64 {
+            assert_eq!(LogHistogram::bucket_of(v), v as usize);
+            assert_eq!(LogHistogram::lower_bound_of(v as usize), v);
+        }
+        assert_eq!(LogHistogram::bucket_of(8), 8);
+        assert_eq!(LogHistogram::bucket_of(15), 15);
+        assert_eq!(LogHistogram::bucket_of(16), 16);
+        for v in [8u64, 100, 1000, 1 << 20, u64::MAX] {
+            let b = LogHistogram::bucket_of(v);
+            let lo = LogHistogram::lower_bound_of(b);
+            assert!(lo <= v);
+            // Bucket width bound: v - lo <= lo/8.
+            assert!(v - lo <= (lo >> SUB_BITS));
+        }
+        assert!(LogHistogram::bucket_of(u64::MAX) <= 495);
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_min_max() {
+        let mut h = LogHistogram::new();
+        assert_eq!((h.count(), h.min(), h.max(), h.sum()), (0, 0, 0, 0));
+        assert_eq!(h.quantile(0.5), 0);
+        for v in [3u64, 900, 17] {
+            h.observe(v);
+        }
+        assert_eq!((h.count(), h.min(), h.max(), h.sum()), (3, 3, 900, 920));
+        // p0 is exact (3 < 8); p100 falls in 900's bucket.
+        assert_eq!(h.quantile(0.0), 3);
+        let q = h.quantile(1.0);
+        assert!(q <= 900 && 900 <= q + (q >> 3));
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_observe() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        for v in [1u64, 50, 2000] {
+            a.observe(v);
+            c.observe(v);
+        }
+        for v in [9u64, 9, 123456] {
+            b.observe(v);
+            c.observe(v);
+        }
+        a.merge(&b);
+        for &p in &[0.0, 0.5, 1.0] {
+            assert_eq!(a.quantile(p), c.quantile(p));
+        }
+        assert_eq!((a.count(), a.sum(), a.min(), a.max()), (c.count(), c.sum(), c.min(), c.max()));
+    }
+
+    #[test]
+    fn registry_accumulates_and_dumps_in_insertion_order() {
+        let mut m = MetricsRegistry::new();
+        m.counter_add("b_second", 2);
+        m.counter_add("a_first", 1);
+        m.counter_add("b_second", 3);
+        m.gauge_set("g", 0.25);
+        m.observe("lat", 10);
+        m.observe("lat", 20);
+        assert_eq!(m.counter("b_second"), Some(5));
+        assert_eq!(m.counter("a_first"), Some(1));
+        assert_eq!(m.counter("missing"), None);
+        assert_eq!(m.gauge("g"), Some(0.25));
+        assert_eq!(m.histogram("lat").unwrap().count(), 2);
+        let json = m.to_json();
+        // Insertion order preserved, not alphabetical.
+        assert!(json.find("b_second").unwrap() < json.find("a_first").unwrap());
+        assert!(json.contains("\"g\": 0.250000"));
+        assert!(json.contains("\"count\": 2"));
+    }
+}

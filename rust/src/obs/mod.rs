@@ -1,0 +1,30 @@
+//! Deterministic observability: spans, counters, metrics, and logging.
+//!
+//! Everything exported from this module is keyed on **simulated
+//! cycles**, never wall clock, so every artifact (Chrome trace JSON,
+//! metrics dump, rollup tables) is byte-stable across hosts and
+//! `--jobs` settings — the same invariant the serving simulator's
+//! golden suite already enforces.
+//!
+//! - [`trace`] — a span/counter recorder ([`trace::TraceRecorder`])
+//!   threaded as a plumbed handle (no globals) through the simserver
+//!   timing pass and the DRAM model. A disabled recorder is inert: the
+//!   `perf_obs` bench gates its overhead on serve and pack at <2%.
+//! - [`metrics`] — counters, gauges, and a log-bucketed histogram
+//!   ([`metrics::LogHistogram`]) with a documented quantile error
+//!   bound, plus the shared [`metrics::percentile_index`] /
+//!   [`metrics::SortedSamples`] percentile machinery both serving
+//!   reports index through.
+//! - [`log`] — a leveled stderr logger (`--verbose`/`--quiet`,
+//!   `GRATETILE_LOG`) for diagnostics; study tables stay on stdout.
+//! - Export lives in `export.rs` as inherent methods on the recorder:
+//!   Chrome trace-event JSON (Perfetto-loadable), an indented text
+//!   timeline, and a counter rollup [`crate::util::table::Table`].
+
+mod export;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{LogHistogram, MetricsRegistry, SortedSamples};
+pub use trace::{Track, TraceRecorder};

@@ -1,0 +1,230 @@
+//! Span/counter recorder keyed on simulated cycles.
+//!
+//! The recorder is a plain value handed down by `&mut` reference (no
+//! globals, no interior mutability): whoever owns the run owns the
+//! trace. All timestamps are **simulated cycles** — recording the same
+//! simulation twice, on any host, at any `--jobs`, yields byte-equal
+//! exports.
+//!
+//! Track layout (process ids are fixed so Perfetto groups stably):
+//!
+//! | pid | process        | tracks (tid)                         |
+//! |-----|----------------|--------------------------------------|
+//! | 1   | `workers`      | one per simulated worker             |
+//! | 2   | `dram banks`   | one per DRAM bank (`busy` spans)     |
+//! | 3   | `admission`    | one per request (`wait` spans)       |
+//! | 4   | `counters`     | one per counter series               |
+
+/// Process id for per-worker request/layer spans.
+pub const WORKER_PID: u64 = 1;
+/// Process id for per-bank DRAM occupancy tracks.
+pub const DRAM_PID: u64 = 2;
+/// Process id for per-request admission-wait tracks.
+pub const ADMISSION_PID: u64 = 3;
+/// Process id for counter series.
+pub const COUNTER_PID: u64 = 4;
+
+/// A (process, thread) pair identifying one horizontal trace track.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Track {
+    pub pid: u64,
+    pub tid: u64,
+}
+
+/// A closed interval of simulated cycles on one track.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub track: Track,
+    pub name: String,
+    pub start: u64,
+    pub end: u64,
+}
+
+/// One sample of a named counter series.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Counter {
+    pub name: String,
+    pub ts: u64,
+    pub value: u64,
+}
+
+/// The recorder. Construct with [`TraceRecorder::enabled`] to collect,
+/// [`TraceRecorder::disabled`] for a zero-allocation inert handle —
+/// every mutator early-returns when disabled, so threading a disabled
+/// recorder through a hot loop costs one branch.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    enabled: bool,
+    process_names: Vec<(u64, String)>,
+    track_names: Vec<(Track, String)>,
+    spans: Vec<Span>,
+    counters: Vec<Counter>,
+}
+
+impl TraceRecorder {
+    /// A recorder that collects spans and counters.
+    pub fn enabled() -> Self {
+        TraceRecorder { enabled: true, ..Default::default() }
+    }
+
+    /// An inert recorder: every mutator is a no-op.
+    pub fn disabled() -> Self {
+        TraceRecorder::default()
+    }
+
+    /// Whether this recorder collects anything. Emitters with per-event
+    /// setup cost (string formatting, lookups) should guard on this.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Name a process (a Perfetto track group). Idempotent per pid.
+    pub fn process(&mut self, pid: u64, name: &str) {
+        if !self.enabled || self.process_names.iter().any(|(p, _)| *p == pid) {
+            return;
+        }
+        self.process_names.push((pid, name.to_string()));
+    }
+
+    /// Name a track and return its handle. Idempotent per (pid, tid).
+    pub fn track(&mut self, pid: u64, tid: u64, name: &str) -> Track {
+        let track = Track { pid, tid };
+        if self.enabled && !self.track_names.iter().any(|(t, _)| *t == track) {
+            self.track_names.push((track, name.to_string()));
+        }
+        track
+    }
+
+    /// Record a span of `[start, end]` simulated cycles on `track`.
+    #[inline]
+    pub fn span(&mut self, track: Track, name: &str, start: u64, end: u64) {
+        if !self.enabled {
+            return;
+        }
+        debug_assert!(start <= end, "span {name} has start {start} > end {end}");
+        self.spans.push(Span { track, name: name.to_string(), start, end });
+    }
+
+    /// Record one sample of counter series `name` at cycle `ts`.
+    #[inline]
+    pub fn counter(&mut self, name: &str, ts: u64, value: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.push(Counter { name: name.to_string(), ts, value });
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn counters(&self) -> &[Counter] {
+        &self.counters
+    }
+
+    pub(crate) fn process_names(&self) -> &[(u64, String)] {
+        &self.process_names
+    }
+
+    pub(crate) fn track_names(&self) -> &[(Track, String)] {
+        &self.track_names
+    }
+
+    /// The declared name of `track`, if registered.
+    pub fn track_name(&self, track: Track) -> Option<&str> {
+        self.track_names.iter().find(|(t, _)| *t == track).map(|(_, n)| n.as_str())
+    }
+
+    /// Verify that spans are well-nested per track: sorted by
+    /// `(start asc, end desc)`, every span must lie entirely within the
+    /// enclosing span still open on the stack (equal intervals nest).
+    /// Returns the first violation as an error string.
+    pub fn check_well_nested(&self) -> Result<(), String> {
+        let mut sorted: Vec<&Span> = self.spans.iter().collect();
+        sorted.sort_by(|a, b| {
+            (a.track, a.start, std::cmp::Reverse(a.end))
+                .cmp(&(b.track, b.start, std::cmp::Reverse(b.end)))
+        });
+        let mut stack: Vec<&Span> = Vec::new();
+        let mut cur: Option<Track> = None;
+        for s in sorted {
+            if s.end < s.start {
+                return Err(format!("span '{}' ends before it starts", s.name));
+            }
+            if cur != Some(s.track) {
+                stack.clear();
+                cur = Some(s.track);
+            }
+            while stack.last().is_some_and(|t| t.end <= s.start) {
+                stack.pop();
+            }
+            if let Some(top) = stack.last() {
+                if s.end > top.end {
+                    return Err(format!(
+                        "span '{}' [{}..{}] crosses '{}' [{}..{}] on track {:?}",
+                        s.name, s.start, s.end, top.name, top.start, top.end, s.track
+                    ));
+                }
+            }
+            stack.push(s);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_collects_nothing() {
+        let mut r = TraceRecorder::disabled();
+        let t = r.track(WORKER_PID, 0, "worker 0");
+        r.process(WORKER_PID, "workers");
+        r.span(t, "x", 0, 10);
+        r.counter("macs", 5, 100);
+        assert!(!r.is_enabled());
+        assert!(r.spans().is_empty());
+        assert!(r.counters().is_empty());
+        assert!(r.process_names().is_empty());
+        assert!(r.track_names().is_empty());
+    }
+
+    #[test]
+    fn track_and_process_registration_dedups() {
+        let mut r = TraceRecorder::enabled();
+        r.process(DRAM_PID, "dram banks");
+        r.process(DRAM_PID, "dram banks again");
+        let a = r.track(DRAM_PID, 3, "bank 3");
+        let b = r.track(DRAM_PID, 3, "bank 3 again");
+        assert_eq!(a, b);
+        assert_eq!(r.process_names().len(), 1);
+        assert_eq!(r.track_names().len(), 1);
+        assert_eq!(r.track_name(a), Some("bank 3"));
+    }
+
+    #[test]
+    fn well_nested_accepts_containment_rejects_crossing() {
+        let mut r = TraceRecorder::enabled();
+        let t = r.track(WORKER_PID, 0, "worker 0");
+        r.span(t, "parent", 0, 100);
+        r.span(t, "child", 0, 40);
+        r.span(t, "sibling", 40, 100);
+        r.span(t, "grandchild", 10, 40);
+        assert!(r.check_well_nested().is_ok());
+        r.span(t, "crosser", 30, 60);
+        assert!(r.check_well_nested().is_err());
+    }
+
+    #[test]
+    fn well_nested_is_per_track() {
+        let mut r = TraceRecorder::enabled();
+        let a = r.track(WORKER_PID, 0, "worker 0");
+        let b = r.track(WORKER_PID, 1, "worker 1");
+        // Overlapping across *different* tracks is fine.
+        r.span(a, "x", 0, 50);
+        r.span(b, "y", 25, 75);
+        assert!(r.check_well_nested().is_ok());
+    }
+}

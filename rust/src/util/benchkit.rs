@@ -242,7 +242,7 @@ impl Bencher {
 }
 
 /// Current short git revision (best-effort; "unknown" off-repo).
-fn git_rev() -> String {
+pub(crate) fn git_rev() -> String {
     std::process::Command::new("git")
         .args(["rev-parse", "--short", "HEAD"])
         .output()
@@ -255,7 +255,7 @@ fn git_rev() -> String {
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for ch in s.chars() {
         match ch {

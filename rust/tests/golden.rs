@@ -164,6 +164,21 @@ fn golden_serve_scaling_table() {
     check_golden("serve_scaling.csv", &harness::serve_scaling_table().render_csv());
 }
 
+/// ISSUE 7 acceptance: the trace counter rollup — final cumulative
+/// values of every counter series the traced serving simulation emits —
+/// is a golden artifact, byte-stable across `--jobs`.
+#[test]
+fn golden_trace_rollup_table() {
+    let mut renders = Vec::new();
+    for jobs in [1usize, 4] {
+        set_threads(jobs);
+        renders.push(harness::trace_rollup_table().render_csv());
+    }
+    set_threads(0);
+    assert_eq!(renders[0], renders[1], "trace rollup bytes depend on --jobs");
+    check_golden("trace_rollup.csv", &renders[0]);
+}
+
 /// ISSUE 6 satellite (d): the GEMM compute-backend study table —
 /// measured MAC counts, skip counters and oracle bit-exactness flags —
 /// is a golden artifact, byte-stable across `--jobs`.
