@@ -37,20 +37,26 @@ impl Compressor for Bitmask {
     fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
         assert_eq!(out.len(), comp.n_elems);
         let mask_words = ceil_div(comp.n_elems, 16);
-        let (mask, values) = comp.words.split_at(mask_words);
-        // Word-at-a-time: zero-fill the 16-element chunk, then scatter
-        // only the set bits (trailing_zeros walk) — all-zero mask words
-        // cost one branch instead of 16.
+        // Corruption-tolerant: a flipped mask bit may claim more values
+        // than the payload carries, and a truncated payload may be
+        // shorter than the mask itself. Decode must produce *something*
+        // (zeros for missing values) and never panic — the integrity
+        // layer above decides whether the bits were trustworthy.
+        let (mask, values) = comp.words.split_at(mask_words.min(comp.words.len()));
+        out.fill(0.0);
+        // Word-at-a-time scatter: only the set bits (trailing_zeros
+        // walk) — all-zero mask words cost one branch instead of 16.
         let mut vi = 0;
         for (wi, &m) in mask.iter().enumerate() {
             let base = wi * 16;
             let lim = (comp.n_elems - base).min(16);
             let chunk = &mut out[base..base + lim];
-            chunk.fill(0.0);
             let mut bits = m;
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
-                chunk[b] = bf16_from_bits(values[vi]);
+                if b < lim {
+                    chunk[b] = bf16_from_bits(values.get(vi).copied().unwrap_or(0));
+                }
                 vi += 1;
                 bits &= bits - 1;
             }
@@ -85,20 +91,23 @@ impl Compressor for Bitmask {
     fn decompress_span(&self, comp: &CompressedBlock, start: usize, out: &mut [f32]) -> bool {
         debug_assert!(start + out.len() <= comp.n_elems);
         let mask_words = ceil_div(comp.n_elems, 16);
-        let (mask, values) = comp.words.split_at(mask_words);
+        // Same corruption tolerance as `decompress`: short payloads read
+        // as zero mask words / zero values instead of panicking.
+        let (mask, values) = comp.words.split_at(mask_words.min(comp.words.len()));
+        let word = |i: usize| mask.get(i).copied().unwrap_or(0);
         // Value cursor = popcount of the mask bits before `start`.
         let mut vi = 0usize;
-        for &m in &mask[..start / 16] {
-            vi += m.count_ones() as usize;
+        for i in 0..start / 16 {
+            vi += word(i).count_ones() as usize;
         }
         let rem = start % 16;
         if rem > 0 {
-            vi += (mask[start / 16] & ((1u16 << rem) - 1)).count_ones() as usize;
+            vi += (word(start / 16) & ((1u16 << rem) - 1)).count_ones() as usize;
         }
         for (j, o) in out.iter_mut().enumerate() {
             let i = start + j;
-            if mask[i / 16] >> (i % 16) & 1 == 1 {
-                *o = bf16_from_bits(values[vi]);
+            if word(i / 16) >> (i % 16) & 1 == 1 {
+                *o = bf16_from_bits(values.get(vi).copied().unwrap_or(0));
                 vi += 1;
             } else {
                 *o = 0.0;
@@ -114,12 +123,16 @@ impl Compressor for Bitmask {
         }
         // Popcount over the mask words alone — the value payload after
         // `mask_words` is never read (the whole point of the query).
-        let mask = &comp.words[..ceil_div(comp.n_elems, 16)];
+        // Truncated payloads answer as if the missing mask words were
+        // zero (never panic; garbage-in garbage-out).
+        let mask_words = ceil_div(comp.n_elems, 16);
+        let mask = &comp.words[..mask_words.min(comp.words.len())];
         let end = start + len;
         let (w0, w1) = (start / 16, end.div_ceil(16));
         let mut nnz = 0usize;
-        for (wi, &m) in mask[w0..w1].iter().enumerate() {
-            let base = (w0 + wi) * 16;
+        for wi in w0..w1 {
+            let Some(&m) = mask.get(wi) else { break };
+            let base = wi * 16;
             let mut bits = m;
             if base < start {
                 bits &= !((1u16 << (start - base)) - 1);

@@ -65,7 +65,11 @@ impl<'a> BitReader<'a> {
         Self { words, pos: 0 }
     }
 
-    /// Read `n` bits (n ≤ 32). Panics past end of stream.
+    /// Read `n` bits (n ≤ 32). Reading past the end of the stream
+    /// yields zero bits — corrupt payloads must decode to *something*
+    /// (garbage is fine; the integrity layer above decides whether the
+    /// bits were trustworthy), never panic. Well-formed streams never
+    /// read past their own length.
     pub fn read(&mut self, n: usize) -> u32 {
         debug_assert!(n <= 32);
         let mut out: u64 = 0;
@@ -75,7 +79,7 @@ impl<'a> BitReader<'a> {
             let bit_idx = self.pos % 16;
             let avail = 16 - bit_idx;
             let take = avail.min(n - got);
-            let chunk = (self.words[word_idx] >> bit_idx) as u64;
+            let chunk = (self.words.get(word_idx).copied().unwrap_or(0) >> bit_idx) as u64;
             let mask = if take == 16 { 0xFFFF } else { (1u64 << take) - 1 };
             out |= (chunk & mask) << got;
             got += take;

@@ -89,19 +89,28 @@ impl Compressor for Dictionary {
         if comp.n_elems == 0 {
             return;
         }
-        let header = comp.words[0];
+        // Corruption-tolerant: a flipped header may claim a dictionary
+        // larger than the payload, and corrupt indices may point past
+        // the dictionary. Decode clamps to what exists and fills the
+        // rest with zeros — never panics; the integrity layer above
+        // decides whether the bits were trustworthy.
+        out.fill(0.0);
+        let Some(&header) = comp.words.first() else { return };
         if header == RAW_MARKER {
             for (o, &wv) in out.iter_mut().zip(&comp.words[1..]) {
                 *o = bf16_from_bits(wv);
             }
             return;
         }
-        let dict_len = header as usize;
+        let dict_len = (header as usize).min(comp.words.len() - 1);
+        if dict_len == 0 {
+            return;
+        }
         let dict = &comp.words[1..1 + dict_len];
         let idx_bits = Self::index_bits(dict_len);
         let mut r = BitReader::new(&comp.words[1 + dict_len..]);
         for o in out.iter_mut() {
-            let idx = r.read(idx_bits) as usize;
+            let idx = (r.read(idx_bits) as usize).min(dict_len - 1);
             *o = bf16_from_bits(dict[idx]);
         }
     }

@@ -243,6 +243,54 @@ mod tests {
         }
     }
 
+    /// Robustness property (ISSUE 8 tentpole): *no* codec may panic on
+    /// a corrupted payload — flipped bits, zeroed words, truncated
+    /// tails. Garbage output is fine (the integrity layer above flags
+    /// it); a panic inside a fetch lane is not.
+    #[test]
+    fn corrupt_payloads_never_panic_any_codec() {
+        let mut rng = SplitMix64::new(0xC0AB);
+        for scheme in all_schemes() {
+            let codec = scheme.build();
+            for &density in &[0.0, 0.3, 1.0] {
+                let blk = testutil::random_block(&mut rng, 300, density);
+                let clean = codec.compress(&blk);
+                let mut out = vec![0.0f32; blk.len()];
+                for trial in 0..40 {
+                    let mut comp = clean.clone();
+                    if comp.words.is_empty() {
+                        continue;
+                    }
+                    match trial % 3 {
+                        // Single bit flip (what FaultySource injects).
+                        0 => {
+                            let w = rng.below(comp.words.len());
+                            comp.words[w] ^= 1 << rng.below(16);
+                        }
+                        // Truncated tail (what a short read leaves).
+                        1 => {
+                            let keep = rng.below(comp.words.len());
+                            comp.words.truncate(keep);
+                        }
+                        // Zero-filled span (FilePayload's unreadable-
+                        // span behaviour).
+                        _ => {
+                            let from = rng.below(comp.words.len());
+                            for w in &mut comp.words[from..] {
+                                *w = 0;
+                            }
+                        }
+                    }
+                    codec.decompress(&comp, &mut out);
+                    let mut span = vec![0.0f32; blk.len() / 2];
+                    codec.decompress_span(&comp, 7.min(blk.len() / 2), &mut span);
+                    let _ = codec.span_nonzeros(&comp, 0, blk.len());
+                    let _ = codec.is_all_zero(&comp);
+                }
+            }
+        }
+    }
+
     /// An all-zero 512-word block must compress to (near) nothing for the
     /// sparse codecs.
     #[test]

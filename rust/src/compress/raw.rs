@@ -22,6 +22,11 @@ impl Compressor for RawDense {
 
     fn decompress(&self, comp: &CompressedBlock, out: &mut [f32]) {
         assert_eq!(out.len(), comp.n_elems);
+        if comp.words.len() < comp.n_elems {
+            // Truncated payload: the missing tail decodes as zeros
+            // (never panic — the integrity layer above flags it).
+            out.fill(0.0);
+        }
         for (o, &w) in out.iter_mut().zip(&comp.words) {
             *o = bf16_from_bits(w);
         }
@@ -45,7 +50,11 @@ impl Compressor for RawDense {
 
     fn decompress_span(&self, comp: &CompressedBlock, start: usize, out: &mut [f32]) -> bool {
         debug_assert!(start + out.len() <= comp.n_elems);
-        for (o, &w) in out.iter_mut().zip(&comp.words[start..]) {
+        let avail = comp.words.get(start..).unwrap_or(&[]);
+        if avail.len() < out.len() {
+            out.fill(0.0);
+        }
+        for (o, &w) in out.iter_mut().zip(avail) {
             *o = bf16_from_bits(w);
         }
         true

@@ -92,13 +92,17 @@ impl Compressor for Zrlc {
             let run = r.read(RUN_BITS) as usize;
             let val = r.read(16) as u16;
             pos += run;
+            if pos >= comp.n_elems {
+                // A corrupt run count overshot the block: stop decoding
+                // (the rest stays zero) rather than panic — the
+                // integrity layer above decides whether to trust this.
+                break;
+            }
             if val != 0 {
                 out[pos] = bf16_from_bits(val);
-                pos += 1;
-            } else {
-                // Filler token: consumed MAX_RUN zeros + one zero value.
-                pos += 1;
             }
+            // Filler tokens (val == 0) consume MAX_RUN zeros + one zero.
+            pos += 1;
         }
     }
 

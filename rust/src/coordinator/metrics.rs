@@ -39,6 +39,18 @@ pub struct PipelineMetrics {
     pub decoded_words: u64,
     pub skipped_subtensors: u64,
     pub skipped_spans: u64,
+    /// Integrity-layer counters from the fetch lane (zero unless
+    /// verify-on-fetch ran; see [`crate::layout::IntegrityPolicy`]).
+    pub verified_reads: u64,
+    pub checksum_mismatches: u64,
+    pub retried_reads: u64,
+    pub recovered_reads: u64,
+    /// Sub-tensors that exhausted their retry budget and were served as
+    /// all-zero substitutes (one count per degraded *touch*).
+    pub degraded_subtensors: u64,
+    /// Simulated cycles of exponential backoff spent on retries; the
+    /// serving simulator adds these to the layer's timing.
+    pub retry_backoff_cycles: u64,
     /// Compressed payload bits of the layer's *input* map, split by
     /// codec tag (registry order: bitmask, zrlc, dictionary, raw).
     pub packed_bits_by_codec: [u64; 4],
@@ -63,6 +75,12 @@ impl PipelineMetrics {
         self.decoded_words += c.decoded_words;
         self.skipped_subtensors += c.skipped_subtensors;
         self.skipped_spans += c.skipped_spans;
+        self.verified_reads += c.verified_reads;
+        self.checksum_mismatches += c.checksum_mismatches;
+        self.retried_reads += c.retried_reads;
+        self.recovered_reads += c.recovered_reads;
+        self.degraded_subtensors += c.degraded_subtensors;
+        self.retry_backoff_cycles += c.retry_backoff_cycles;
     }
 
     pub fn merge(&mut self, o: &PipelineMetrics) {
@@ -84,6 +102,12 @@ impl PipelineMetrics {
         self.decoded_words += o.decoded_words;
         self.skipped_subtensors += o.skipped_subtensors;
         self.skipped_spans += o.skipped_spans;
+        self.verified_reads += o.verified_reads;
+        self.checksum_mismatches += o.checksum_mismatches;
+        self.retried_reads += o.retried_reads;
+        self.recovered_reads += o.recovered_reads;
+        self.degraded_subtensors += o.degraded_subtensors;
+        self.retry_backoff_cycles += o.retry_backoff_cycles;
         for (a, b) in self.packed_bits_by_codec.iter_mut().zip(o.packed_bits_by_codec) {
             *a += b;
         }
@@ -178,6 +202,15 @@ pub struct LayerObs {
     pub skipped_spans: u64,
     pub skipped_rows: u64,
     pub skipped_values: u64,
+    /// Integrity-layer counters (zero unless verify-on-fetch ran).
+    pub verified_reads: u64,
+    pub checksum_mismatches: u64,
+    pub retried_reads: u64,
+    pub recovered_reads: u64,
+    pub degraded_subtensors: u64,
+    /// Simulated retry-backoff cycles the timing pass must add to the
+    /// layer's service time.
+    pub retry_backoff_cycles: u64,
 }
 
 impl LayerObs {
@@ -192,6 +225,12 @@ impl LayerObs {
             skipped_spans: m.skipped_spans,
             skipped_rows: m.gemm.skipped_rows,
             skipped_values: m.gemm.skipped_values,
+            verified_reads: m.verified_reads,
+            checksum_mismatches: m.checksum_mismatches,
+            retried_reads: m.retried_reads,
+            recovered_reads: m.recovered_reads,
+            degraded_subtensors: m.degraded_subtensors,
+            retry_backoff_cycles: m.retry_backoff_cycles,
         }
     }
 
@@ -206,6 +245,12 @@ impl LayerObs {
         self.skipped_spans += o.skipped_spans;
         self.skipped_rows += o.skipped_rows;
         self.skipped_values += o.skipped_values;
+        self.verified_reads += o.verified_reads;
+        self.checksum_mismatches += o.checksum_mismatches;
+        self.retried_reads += o.retried_reads;
+        self.recovered_reads += o.recovered_reads;
+        self.degraded_subtensors += o.degraded_subtensors;
+        self.retry_backoff_cycles += o.retry_backoff_cycles;
     }
 }
 

@@ -33,6 +33,6 @@ pub use metrics::{LayerObs, PipelineMetrics};
 pub use pipeline::{LayerRunner, LayerTrace, PipelineConfig};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use simserver::{
-    metrics_of, simulate, simulate_traced, Priority, SimRequest, SimServer, SimServerConfig,
-    SimServerReport,
+    metrics_of, simulate, simulate_traced, Priority, RequestOutcome, ServingPolicy, SimRequest,
+    SimServer, SimServerConfig, SimServerReport,
 };

@@ -25,7 +25,8 @@ use crate::compress::CodecPolicy;
 use crate::compute::{gemm_tile, GemmStats, PackedWeights, SkipPolicy};
 use crate::config::hardware::Hardware;
 use crate::config::layer::ConvLayer;
-use crate::layout::fetcher::{DenseWindow, FetchCounters, Fetcher};
+use crate::fault::{FaultPlan, FaultySource};
+use crate::layout::fetcher::{DenseWindow, FetchCounters, Fetcher, IntegrityPolicy, PayloadSource};
 use crate::layout::packer::{PackedFeatureMap, Packer};
 use crate::memsim::{Access, Dram, DramTiming, Stream, TimedDram};
 use crate::sim::walker::TileWalker;
@@ -56,6 +57,19 @@ pub struct PipelineConfig {
     /// Kernel sparsity policy (see [`SkipPolicy`]); every tier is
     /// bit-identical in output, they differ only in executed MACs.
     pub skip: SkipPolicy,
+    /// Verify-on-fetch policy: when set, every payload read is hashed
+    /// against the map's per-sub-tensor checksum table (`.grate` v3),
+    /// with bounded retry / quarantine / zero-substitution on mismatch.
+    /// `None` = trust payload reads (the historical behaviour).
+    pub integrity: Option<IntegrityPolicy>,
+    /// Deterministic fault injection at the payload-read boundary of
+    /// store-backed runs (`None` = clean reads). Timing-class faults in
+    /// the plan are consulted by the serving simulator, not here.
+    pub fault: Option<FaultPlan>,
+    /// Stable identifier mixed into payload-fault decisions; the
+    /// serving simulator sets it per request so concurrent requests
+    /// draw independent — yet reproducible — fault streams.
+    pub fault_salt: u64,
 }
 
 impl PipelineConfig {
@@ -66,6 +80,9 @@ impl PipelineConfig {
             policy: CodecPolicy::Fixed(crate::compress::Scheme::Bitmask),
             prefetch_depth: 2,
             skip: SkipPolicy::ZeroSkip,
+            integrity: None,
+            fault: None,
+            fault_salt: 0,
         }
     }
 }
@@ -147,10 +164,14 @@ impl LayerRunner {
             |scope| -> Result<(Duration, Dram, FetchCounters)> {
                 // ---- prefetch lane ----
                 let walker_f = walker.clone();
+                let integrity = self.cfg.integrity;
                 let fetch_handle = scope.spawn(move || {
                     let mut fetcher = Fetcher::new(packed)
                         .with_cache(DECODE_CACHE_SUBTENSORS)
                         .with_occupancy(track);
+                    if let Some(pol) = integrity {
+                        fetcher = fetcher.with_integrity(pol);
+                    }
                     let mut dram = Dram::default();
                     let mut busy = Duration::ZERO;
                     for w in walker_f.iter() {
@@ -334,11 +355,27 @@ impl LayerRunner {
             |scope| -> Result<(Duration, Dram, FetchCounters)> {
                 // ---- prefetch lane: reads the store snapshot ----
                 let walker_f = walker.clone();
+                let integrity = self.cfg.integrity;
+                let fault = self.cfg.fault;
+                let fault_salt = self.cfg.fault_salt;
                 let fetch_handle = scope.spawn(move || {
                     let packed = snap_packed;
-                    let mut fetcher = Fetcher::with_source(&packed, Box::new(snap_payload))
+                    // The fault boundary: payload reads from the store
+                    // snapshot pass through the plan's corruption
+                    // decorator before the fetcher (and its verify-on-
+                    // fetch layer) ever sees them.
+                    let source: Box<dyn PayloadSource> = match fault {
+                        Some(plan) if plan.payload_faults_active() => {
+                            Box::new(FaultySource::new(snap_payload, plan, fault_salt))
+                        }
+                        _ => Box::new(snap_payload),
+                    };
+                    let mut fetcher = Fetcher::with_source(&packed, source)
                         .with_cache(DECODE_CACHE_SUBTENSORS)
                         .with_occupancy(track);
+                    if let Some(pol) = integrity {
+                        fetcher = fetcher.with_integrity(pol);
+                    }
                     let mut dram = Dram::default().with_trace();
                     let mut busy = Duration::ZERO;
                     for w in walker_f.iter() {

@@ -33,6 +33,7 @@ use super::conv::Weights;
 use super::metrics::{LayerObs, SortedSamples};
 use super::pipeline::{LayerRunner, LayerTrace, PipelineConfig};
 use crate::compress::Registry;
+use crate::fault::FaultPlan;
 use crate::config::layer::ConvLayer;
 use crate::memsim::{DramTiming, SharedDram};
 use crate::obs::trace::{Track, TraceRecorder, ADMISSION_PID, COUNTER_PID, DRAM_PID, WORKER_PID};
@@ -62,6 +63,65 @@ impl Priority {
             Priority::Batch => "batch",
         }
     }
+}
+
+/// First-class per-request serving outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RequestOutcome {
+    /// Served with a bit-exact output.
+    Completed,
+    /// Served, but at least one quarantined sub-tensor was substituted
+    /// with zeros along the way (graceful degradation — the client got
+    /// an answer, flagged imperfect).
+    Degraded,
+    /// Deadline missed after exhausting the serving retry budget.
+    TimedOut,
+    /// Dropped at admission under overload (Batch class sheds first;
+    /// Interactive is never shed).
+    Shed,
+    /// Bounded waiting-room overflow at admission.
+    Rejected,
+}
+
+impl RequestOutcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RequestOutcome::Completed => "completed",
+            RequestOutcome::Degraded => "degraded",
+            RequestOutcome::TimedOut => "timed_out",
+            RequestOutcome::Shed => "shed",
+            RequestOutcome::Rejected => "rejected",
+        }
+    }
+
+    /// Whether the request actually ran on a worker (and therefore has
+    /// meaningful queue/latency samples).
+    pub fn served(&self) -> bool {
+        matches!(
+            self,
+            RequestOutcome::Completed | RequestOutcome::Degraded | RequestOutcome::TimedOut
+        )
+    }
+}
+
+/// Serving-robustness knobs. All off under [`Default`] — the
+/// historical always-serve behaviour — so existing configurations are
+/// unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServingPolicy {
+    /// Per-request deadline in cycles from (effective) arrival;
+    /// 0 disables deadlines.
+    pub deadline_cycles: u64,
+    /// Re-serve attempts granted after a deadline miss before the
+    /// request is counted [`RequestOutcome::TimedOut`].
+    pub retry_budget: u32,
+    /// Under overload (admission queue plus waiting room at the
+    /// admission-queue capacity), shed arriving Batch-class requests
+    /// instead of queueing them. Interactive arrivals are never shed.
+    pub shed_batch_on_overload: bool,
+    /// Bound on the pre-admission waiting room (0 = unbounded). An
+    /// arrival beyond it is rejected — counted, never silently dropped.
+    pub waiting_depth: usize,
 }
 
 /// One inference request for the simulator.
@@ -94,6 +154,9 @@ pub struct SimServerConfig {
     /// Cycles between successive request arrivals (0 = closed batch,
     /// everything arrives at cycle 0).
     pub arrival_gap: u64,
+    /// Deadlines, retry budgets, overload shedding and waiting-room
+    /// bounds (all off by default).
+    pub serving: ServingPolicy,
 }
 
 impl SimServerConfig {
@@ -106,6 +169,7 @@ impl SimServerConfig {
             timing: DramTiming::default(),
             pe_lanes: 32,
             arrival_gap: 0,
+            serving: ServingPolicy::default(),
         }
     }
 }
@@ -161,6 +225,29 @@ impl RequestTrace {
     pub fn macs_measured(&self) -> bool {
         !self.layers.is_empty() && self.layers.iter().all(|l| l.measured)
     }
+
+    /// Zero-substituted sub-tensor touches across the request's layers
+    /// (from the functional pass's integrity layer).
+    pub fn degraded_subtensors(&self) -> u64 {
+        self.layers.iter().map(|l| l.obs.degraded_subtensors).sum()
+    }
+
+    /// Checksum mismatches the integrity layer detected across layers.
+    pub fn checksum_mismatches(&self) -> u64 {
+        self.layers.iter().map(|l| l.obs.checksum_mismatches).sum()
+    }
+
+    /// True when any sub-tensor fetch fell back to the zero substitute
+    /// — the request's output is flagged, not bit-exact.
+    pub fn degraded(&self) -> bool {
+        self.degraded_subtensors() > 0
+    }
+
+    /// True when corruption was detected but every read healed on
+    /// retry: the output is still bit-exact ("silently correct").
+    pub fn recovered(&self) -> bool {
+        !self.degraded() && self.checksum_mismatches() > 0
+    }
 }
 
 /// Per-request outcome, in request-id order.
@@ -168,9 +255,14 @@ impl RequestTrace {
 pub struct RequestStat {
     pub id: u64,
     pub priority: Priority,
-    /// Cycles from arrival to worker grant.
+    /// How the request left the system.
+    pub outcome: RequestOutcome,
+    /// Serve attempts consumed (1 for a first-try completion; 0 for
+    /// requests shed/rejected at admission).
+    pub attempts: u32,
+    /// Cycles from (effective) arrival to the final worker grant.
     pub queue_cycles: u64,
-    /// Cycles from arrival to completion.
+    /// Cycles from (effective) arrival to completion.
     pub latency_cycles: u64,
     /// MACs the request charged the PE array (kernel-measured when the
     /// compute backend ran — see [`RequestTrace::macs_measured`]).
@@ -187,7 +279,34 @@ pub struct SimServerReport {
     pub batch: usize,
     pub n_banks: usize,
     pub pe_lanes: u64,
+    /// Requests served to completion (bit-exact **or** degraded).
     pub completed: u64,
+    /// Requests offered to admission; conservation
+    /// `admitted + rejected + shed == offered` is asserted by the
+    /// timing pass (see [`Self::conservation_holds`]).
+    pub offered: u64,
+    /// Requests that reached a worker (`completed + timed_out`).
+    pub admitted: u64,
+    /// Bounded waiting-room overflows at admission.
+    pub rejected: u64,
+    /// Batch-class requests dropped by overload shedding.
+    pub shed: u64,
+    /// Requests that missed their deadline after every retry.
+    pub timed_out: u64,
+    /// Deadline-miss re-serves granted by the retry budget.
+    pub serving_retries: u64,
+    /// Served requests flagged degraded (zero-substituted sub-tensors).
+    pub degraded_requests: u64,
+    /// Served requests whose detected corruption fully healed on
+    /// re-read — output still bit-exact.
+    pub recovered_requests: u64,
+    /// Integrity-layer read counters, summed over the functional pass
+    /// (per unique request, independent of serving retries).
+    pub verified_reads: u64,
+    pub checksum_mismatches: u64,
+    pub retried_reads: u64,
+    pub recovered_reads: u64,
+    pub degraded_subtensors: u64,
     pub makespan_cycles: u64,
     pub requests: Vec<RequestStat>,
     /// MACs across all requests, and whether every count was
@@ -213,17 +332,47 @@ impl SimServerReport {
         self.completed as f64 * 1e6 / self.makespan_cycles as f64
     }
 
-    /// End-to-end latency samples, sorted **once** — every percentile
-    /// on the returned set is an O(1) lookup. [`Self::render`] and
-    /// [`Self::summary`] go through this instead of re-sorting per
-    /// percentile call.
+    /// End-to-end latency samples over **served** requests (shed and
+    /// rejected arrivals never ran, so they contribute no sample),
+    /// sorted **once** — every percentile on the returned set is an
+    /// O(1) lookup. [`Self::render`] and [`Self::summary`] go through
+    /// this instead of re-sorting per percentile call.
     pub fn latency_samples(&self) -> SortedSamples<u64> {
-        SortedSamples::from_unsorted(self.requests.iter().map(|r| r.latency_cycles).collect())
+        SortedSamples::from_unsorted(
+            self.requests
+                .iter()
+                .filter(|r| r.outcome.served())
+                .map(|r| r.latency_cycles)
+                .collect(),
+        )
     }
 
     /// Queue-wait samples, sorted once (see [`Self::latency_samples`]).
     pub fn queue_samples(&self) -> SortedSamples<u64> {
-        SortedSamples::from_unsorted(self.requests.iter().map(|r| r.queue_cycles).collect())
+        SortedSamples::from_unsorted(
+            self.requests
+                .iter()
+                .filter(|r| r.outcome.served())
+                .map(|r| r.queue_cycles)
+                .collect(),
+        )
+    }
+
+    /// Admission conservation: every offered request is exactly one of
+    /// admitted, rejected or shed, and every admitted request either
+    /// completed or timed out.
+    pub fn conservation_holds(&self) -> bool {
+        self.admitted + self.rejected + self.shed == self.offered
+            && self.completed + self.timed_out == self.admitted
+    }
+
+    /// Completed-and-bit-exact requests per million simulated cycles —
+    /// degraded and timed-out requests do not count as goodput.
+    pub fn goodput_rpmc(&self) -> f64 {
+        if self.makespan_cycles == 0 {
+            return 0.0;
+        }
+        (self.completed - self.degraded_requests) as f64 * 1e6 / self.makespan_cycles as f64
     }
 
     /// End-to-end latency percentile in cycles; `p` is clamped to
@@ -277,6 +426,29 @@ impl SimServerReport {
             self.makespan_cycles,
             self.throughput_rpmc()
         );
+        let _ = writeln!(
+            s,
+            "outcomes offered={} admitted={} degraded={} timed_out={} shed={} rejected={} retries={}",
+            self.offered,
+            self.admitted,
+            self.degraded_requests,
+            self.timed_out,
+            self.shed,
+            self.rejected,
+            self.serving_retries
+        );
+        if self.verified_reads > 0 || self.checksum_mismatches > 0 {
+            let _ = writeln!(
+                s,
+                "integrity verified={} mismatches={} retried={} recovered={} degraded_subtensors={} recovered_requests={}",
+                self.verified_reads,
+                self.checksum_mismatches,
+                self.retried_reads,
+                self.recovered_reads,
+                self.degraded_subtensors,
+                self.recovered_requests
+            );
+        }
         // Each sample set is sorted exactly once for all percentiles.
         let lat = self.latency_samples();
         let queue = self.queue_samples();
@@ -315,9 +487,11 @@ impl SimServerReport {
         for r in &self.requests {
             let _ = writeln!(
                 s,
-                "request id={} priority={} queue={} latency={} macs={}",
+                "request id={} priority={} outcome={} attempts={} queue={} latency={} macs={}",
                 r.id,
                 r.priority.name(),
+                r.outcome.name(),
+                r.attempts,
                 r.queue_cycles,
                 r.latency_cycles,
                 r.macs
@@ -373,7 +547,13 @@ impl SimServer {
     /// store via owned snapshots.
     pub fn functional_pass(&self, requests: &[SimRequest]) -> Result<Vec<RequestTrace>> {
         par_map(requests, |_, req| -> Result<RequestTrace> {
-            let runner = LayerRunner::new(self.cfg.pipeline);
+            // Per-request fault salt: concurrent requests draw
+            // independent fault streams, yet request k sees the same
+            // faults on every run and every `--jobs` (the salt is its
+            // id, not anything scheduling-dependent).
+            let mut pipeline = self.cfg.pipeline;
+            pipeline.fault_salt = req.id;
+            let runner = LayerRunner::new(pipeline);
             let (out, per_layer, traces) =
                 runner.run_network_traced(&self.layers, req.input.clone())?;
             // Prefer the GEMM kernel's measured MAC count over the
@@ -473,6 +653,7 @@ fn run_batch(
     batch: &[usize],
     traces: &[RequestTrace],
     pe_lanes: u64,
+    fault: &FaultPlan,
     rec: &mut TraceRecorder,
     worker_track: Track,
     layer_marks: &mut Vec<(u64, usize, usize)>,
@@ -489,8 +670,15 @@ fn run_batch(
             for a in lw.trace.iter() {
                 cursor = dram.service(cursor, a.addr_words, a.words);
             }
+            // Injected bank spikes and integrity retry backoff extend
+            // this request's fetch stream only — shared bank state is
+            // untouched, so the per-bank busy totals still reconcile
+            // exactly with `transfer_cycles`.
+            cursor += fault.bank_spike(traces[ri].id, li as u64);
+            cursor += lw.obs.retry_backoff_cycles;
             dram_done = dram_done.max(cursor);
             compute += lw.compute_cycles(pe_lanes);
+            compute += fault.worker_stall(traces[ri].id, li as u64);
         }
         t = (t + compute).max(dram_done);
         if rec.is_enabled() {
@@ -579,10 +767,25 @@ pub fn simulate_traced(
     // sorted so counter events are emitted in timestamp order.
     let mut layer_marks: Vec<(u64, usize, usize)> = Vec::new();
 
+    let fault = cfg.pipeline.fault.unwrap_or_default();
+    let pol = cfg.serving;
+    // Effective arrivals after injected burst collapse: a burst-flagged
+    // request arrives together with its predecessor (chained, so a run
+    // of flagged requests lands as one burst). Queue waits and
+    // latencies are measured from these effective arrivals.
+    let mut arrivals: Vec<u64> = traces.iter().map(|t| t.arrival_cycle).collect();
+    if fault.arrival_burst_rate > 0.0 {
+        for i in 1..n {
+            if fault.arrival_burst(traces[i].id) {
+                arrivals[i] = arrivals[i - 1];
+            }
+        }
+    }
+
     let mut heap: BinaryHeap<Reverse<(u64, u64, EventKind)>> = BinaryHeap::new();
     let mut seq = 0u64;
-    for (i, t) in traces.iter().enumerate() {
-        heap.push(Reverse((t.arrival_cycle, seq, EventKind::Arrive(i))));
+    for i in 0..n {
+        heap.push(Reverse((arrivals[i], seq, EventKind::Arrive(i))));
         seq += 1;
     }
     // Arrived but not admitted (admission-queue overflow), FIFO.
@@ -592,6 +795,9 @@ pub fn simulate_traced(
     let mut idle = vec![true; workers];
     let mut rr = 0usize;
     let mut stats: Vec<Option<RequestStat>> = vec![None; n];
+    let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; n];
+    let mut attempts = vec![0u32; n];
+    let (mut shed, mut rejected, mut timed_out, mut serving_retries) = (0u64, 0u64, 0u64, 0u64);
     let mut makespan = 0u64;
 
     while let Some(Reverse((now, _, kind))) = heap.pop() {
@@ -608,7 +814,36 @@ pub fn simulate_traced(
         }
         for kind in pending {
             match kind {
-                EventKind::Arrive(i) => waiting.push_back(i),
+                EventKind::Arrive(i) => {
+                    // Admission control. Retries (attempts > 0) bypass
+                    // it: the request is already accepted work.
+                    if attempts[i] == 0
+                        && pol.shed_batch_on_overload
+                        && traces[i].priority == Priority::Batch
+                        && admitted.len() + waiting.len() >= queue_depth
+                    {
+                        outcomes[i] = Some(RequestOutcome::Shed);
+                        shed += 1;
+                        if rec.is_enabled() {
+                            let at = rec
+                                .track(ADMISSION_PID, traces[i].id, &format!("req {}", traces[i].id));
+                            rec.span(at, "shed", now, now + 1);
+                        }
+                    } else if attempts[i] == 0
+                        && pol.waiting_depth > 0
+                        && waiting.len() >= pol.waiting_depth
+                    {
+                        outcomes[i] = Some(RequestOutcome::Rejected);
+                        rejected += 1;
+                        if rec.is_enabled() {
+                            let at = rec
+                                .track(ADMISSION_PID, traces[i].id, &format!("req {}", traces[i].id));
+                            rec.span(at, "rejected", now, now + 1);
+                        }
+                    } else {
+                        waiting.push_back(i);
+                    }
+                }
                 EventKind::WorkerFree(w) => idle[w] = true,
             }
         }
@@ -626,9 +861,7 @@ pub fn simulate_traced(
             // Queue pop order: priority class first, FIFO (arrival, id)
             // within a class; a batch groups the head with same-class
             // followers up to the batch cap.
-            admitted.sort_by_key(|&i| {
-                (traces[i].priority, traces[i].arrival_cycle, traces[i].id)
-            });
+            admitted.sort_by_key(|&i| (traces[i].priority, arrivals[i], traces[i].id));
             let class = traces[admitted[0]].priority;
             let take = admitted
                 .iter()
@@ -640,26 +873,50 @@ pub fn simulate_traced(
             // Grant freed admission slots: backpressure releases now.
             refill(&mut admitted, &mut waiting);
             let wt = worker_tracks.get(w).copied().unwrap_or(Track { pid: WORKER_PID, tid: 0 });
-            let finish =
-                run_batch(&mut dram, now, &batch, traces, cfg.pe_lanes, rec, wt, &mut layer_marks);
+            let finish = run_batch(
+                &mut dram, now, &batch, traces, cfg.pe_lanes, &fault, rec, wt, &mut layer_marks,
+            );
             if rec.is_enabled() {
                 let ids: Vec<String> = batch.iter().map(|&i| traces[i].id.to_string()).collect();
                 rec.span(wt, &format!("req {}", ids.join("+")), now, finish);
                 for &i in &batch {
                     let t = &traces[i];
-                    if now > t.arrival_cycle {
+                    if now > arrivals[i] {
                         let at = rec.track(ADMISSION_PID, t.id, &format!("req {}", t.id));
-                        rec.span(at, "wait", t.arrival_cycle, now);
+                        rec.span(at, "wait", arrivals[i], now);
                     }
                 }
             }
             for &i in &batch {
                 let t = &traces[i];
+                let deadline_ok =
+                    pol.deadline_cycles == 0 || finish <= arrivals[i] + pol.deadline_cycles;
+                if !deadline_ok && attempts[i] < pol.retry_budget {
+                    // Deadline missed with budget left: the attempt's
+                    // work is wasted and the request re-enters
+                    // admission at this worker's finish cycle.
+                    attempts[i] += 1;
+                    serving_retries += 1;
+                    heap.push(Reverse((finish, seq, EventKind::Arrive(i))));
+                    seq += 1;
+                    continue;
+                }
+                let outcome = if !deadline_ok {
+                    timed_out += 1;
+                    RequestOutcome::TimedOut
+                } else if t.degraded() {
+                    RequestOutcome::Degraded
+                } else {
+                    RequestOutcome::Completed
+                };
+                outcomes[i] = Some(outcome);
                 stats[i] = Some(RequestStat {
                     id: t.id,
                     priority: t.priority,
-                    queue_cycles: now - t.arrival_cycle,
-                    latency_cycles: finish - t.arrival_cycle,
+                    outcome,
+                    attempts: attempts[i] + 1,
+                    queue_cycles: now - arrivals[i],
+                    latency_cycles: finish - arrivals[i],
                     macs: t.macs(),
                 });
             }
@@ -684,6 +941,16 @@ pub fn simulate_traced(
             rec.counter("skipped_spans", ts, cum.skipped_spans);
             rec.counter("skipped_rows", ts, cum.skipped_rows);
             rec.counter("skipped_values", ts, cum.skipped_values);
+            // Integrity/fault series only exist when something was
+            // detected — fault-free traces stay byte-identical lean.
+            if cum.checksum_mismatches > 0 {
+                rec.counter("checksum_mismatches", ts, cum.checksum_mismatches);
+                rec.counter("retried_reads", ts, cum.retried_reads);
+                rec.counter("recovered_reads", ts, cum.recovered_reads);
+            }
+            if cum.degraded_subtensors > 0 {
+                rec.counter("degraded_subtensors", ts, cum.degraded_subtensors);
+            }
             for (tag, &bits) in cum.packed_bits_by_codec.iter().enumerate() {
                 if bits > 0 {
                     rec.counter(&format!("packed_bits_{}", codec_name(tag)), ts, bits);
@@ -700,7 +967,48 @@ pub fn simulate_traced(
         }
     }
 
-    let requests: Vec<RequestStat> = stats.into_iter().flatten().collect();
+    // Every request resolves to exactly one outcome: served requests
+    // carry full stats, shed/rejected ones a zero-latency stub (they
+    // never ran — the sample filters skip them).
+    let requests: Vec<RequestStat> = traces
+        .iter()
+        .enumerate()
+        .filter_map(|(i, t)| {
+            stats[i].clone().or_else(|| {
+                outcomes[i].map(|o| RequestStat {
+                    id: t.id,
+                    priority: t.priority,
+                    outcome: o,
+                    attempts: attempts[i],
+                    queue_cycles: 0,
+                    latency_cycles: 0,
+                    macs: 0,
+                })
+            })
+        })
+        .collect();
+    let completed = requests
+        .iter()
+        .filter(|r| matches!(r.outcome, RequestOutcome::Completed | RequestOutcome::Degraded))
+        .count() as u64;
+    let degraded_requests =
+        requests.iter().filter(|r| r.outcome == RequestOutcome::Degraded).count() as u64;
+    let recovered_requests = requests
+        .iter()
+        .zip(traces)
+        .filter(|(r, t)| r.outcome == RequestOutcome::Completed && t.recovered())
+        .count() as u64;
+    let mut iobs = LayerObs::default();
+    for t in traces {
+        for l in &t.layers {
+            iobs.merge(&l.obs);
+        }
+    }
+    let offered = n as u64;
+    let admitted = offered - shed - rejected;
+    // The admission conservation invariant the report advertises.
+    assert_eq!(admitted + rejected + shed, offered, "admission conservation");
+    assert_eq!(completed + timed_out, admitted, "service conservation");
     let total_macs = traces.iter().map(|t| t.macs()).sum();
     let macs_measured = !traces.is_empty() && traces.iter().all(|t| t.macs_measured());
     let total_feature_bytes = traces.iter().map(|t| t.feature_bytes).sum();
@@ -715,7 +1023,20 @@ pub fn simulate_traced(
         batch: batch_max,
         n_banks: dram.timing().n_banks,
         pe_lanes: cfg.pe_lanes,
-        completed: requests.len() as u64,
+        completed,
+        offered,
+        admitted,
+        rejected,
+        shed,
+        timed_out,
+        serving_retries,
+        degraded_requests,
+        recovered_requests,
+        verified_reads: iobs.verified_reads,
+        checksum_mismatches: iobs.checksum_mismatches,
+        retried_reads: iobs.retried_reads,
+        recovered_reads: iobs.recovered_reads,
+        degraded_subtensors: iobs.degraded_subtensors,
         makespan_cycles: makespan,
         requests,
         total_macs,
@@ -740,6 +1061,19 @@ pub fn simulate_traced(
 pub fn metrics_of(report: &SimServerReport, traces: &[RequestTrace]) -> MetricsRegistry {
     let mut m = MetricsRegistry::new();
     m.counter_add("completed", report.completed);
+    m.counter_add("offered", report.offered);
+    m.counter_add("admitted", report.admitted);
+    m.counter_add("rejected", report.rejected);
+    m.counter_add("shed", report.shed);
+    m.counter_add("timed_out", report.timed_out);
+    m.counter_add("serving_retries", report.serving_retries);
+    m.counter_add("degraded_requests", report.degraded_requests);
+    m.counter_add("recovered_requests", report.recovered_requests);
+    m.counter_add("verified_reads", report.verified_reads);
+    m.counter_add("checksum_mismatches", report.checksum_mismatches);
+    m.counter_add("retried_reads", report.retried_reads);
+    m.counter_add("recovered_reads", report.recovered_reads);
+    m.counter_add("degraded_subtensors", report.degraded_subtensors);
     m.counter_add("makespan_cycles", report.makespan_cycles);
     m.counter_add("total_macs", report.total_macs);
     m.counter_add("feature_bytes", report.total_feature_bytes);
@@ -989,5 +1323,158 @@ mod tests {
         let open = simulate(&cfg, &spaced);
         assert_eq!(open.queue_percentile(1.0), 0, "no contention ⇒ no waiting");
         assert!(open.queue_percentile(1.0) <= closed.queue_percentile(1.0));
+    }
+
+    #[test]
+    fn shedding_drops_batch_first_and_conserves_offered() {
+        let mut cfg = sim_cfg();
+        cfg.workers = 1;
+        cfg.queue_depth = 1;
+        cfg.serving.shed_batch_on_overload = true;
+        let server = SimServer::new(cfg, tiny_net());
+        // 8 simultaneous arrivals; ids 3 and 7 are Batch class.
+        let traces =
+            server.functional_pass(&server.synthetic_requests(8, 0.5, 19)).unwrap();
+        let rep = simulate(&cfg, &traces);
+        assert!(rep.conservation_holds());
+        assert_eq!(rep.offered, 8);
+        assert_eq!(rep.shed, 2, "both batch-class arrivals shed under overload");
+        assert_eq!(rep.completed, 6);
+        assert_eq!(rep.timed_out, 0);
+        for r in &rep.requests {
+            if r.outcome == RequestOutcome::Shed {
+                assert_eq!(r.priority, Priority::Batch, "interactive is never shed");
+                assert_eq!(r.latency_cycles, 0);
+                assert_eq!(r.attempts, 0);
+            }
+        }
+        assert!(rep.render().contains("shed=2"));
+    }
+
+    #[test]
+    fn bounded_waiting_room_rejects_overflow_and_conserves() {
+        let mut cfg = sim_cfg();
+        cfg.workers = 1;
+        cfg.queue_depth = 1;
+        cfg.serving.waiting_depth = 2;
+        let server = SimServer::new(cfg, tiny_net());
+        let traces =
+            server.functional_pass(&server.synthetic_requests(6, 0.5, 23)).unwrap();
+        let rep = simulate(&cfg, &traces);
+        assert!(rep.conservation_holds());
+        assert_eq!(rep.offered, 6);
+        assert_eq!(rep.rejected, 4, "waiting room of 2 rejects the later arrivals");
+        assert_eq!(rep.completed, 2);
+        assert_eq!(rep.admitted + rep.rejected + rep.shed, rep.offered);
+        // Rejected requests contribute no latency sample.
+        assert_eq!(rep.latency_samples().len(), 2);
+    }
+
+    #[test]
+    fn deadlines_and_retry_budgets_produce_timeouts() {
+        let mut cfg = sim_cfg();
+        cfg.workers = 1;
+        cfg.serving.deadline_cycles = 1; // unmeetable
+        let server = SimServer::new(cfg, tiny_net());
+        let traces =
+            server.functional_pass(&server.synthetic_requests(3, 0.5, 27)).unwrap();
+        let rep = simulate(&cfg, &traces);
+        assert!(rep.conservation_holds());
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.timed_out, 3);
+        assert_eq!(rep.serving_retries, 0);
+        assert!(rep.requests.iter().all(|r| r.outcome == RequestOutcome::TimedOut));
+        assert!(rep.latency_percentile(1.0) > 0, "timed-out requests still ran");
+
+        // A retry budget re-serves each request before giving up.
+        let mut retry_cfg = cfg;
+        retry_cfg.serving.retry_budget = 2;
+        let rep2 = simulate(&retry_cfg, &traces);
+        assert!(rep2.conservation_holds());
+        assert_eq!(rep2.timed_out, 3);
+        assert_eq!(rep2.serving_retries, 6, "every request spends its whole budget");
+        assert!(rep2.requests.iter().all(|r| r.attempts == 3));
+        assert!(rep2.makespan_cycles > rep.makespan_cycles, "retries burn simulated time");
+
+        // A generous deadline completes everything first try.
+        let mut loose = cfg;
+        loose.serving.deadline_cycles = u64::MAX / 2;
+        let rep3 = simulate(&loose, &traces);
+        assert_eq!(rep3.completed, 3);
+        assert_eq!(rep3.timed_out, 0);
+    }
+
+    #[test]
+    fn arrival_bursts_collapse_gaps_and_stay_deterministic() {
+        let mut cfg = sim_cfg();
+        cfg.workers = 1;
+        cfg.arrival_gap = 1_000_000; // spaced: no queueing at all
+        let server = SimServer::new(cfg, tiny_net());
+        let traces =
+            server.functional_pass(&server.synthetic_requests(4, 0.5, 31)).unwrap();
+        let calm = simulate(&cfg, &traces);
+        assert_eq!(calm.queue_percentile(1.0), 0, "spaced arrivals never wait");
+        let mut bursty = cfg;
+        bursty.pipeline.fault =
+            Some(FaultPlan { arrival_burst_rate: 1.0, ..FaultPlan::default() });
+        let b1 = simulate(&bursty, &traces);
+        assert!(b1.queue_percentile(1.0) > 0, "burst collapse forces queueing");
+        assert_eq!(b1.completed, 4);
+        assert!(b1.conservation_holds());
+        let b2 = simulate(&bursty, &traces);
+        assert_eq!(b1.render(), b2.render(), "fault injection is deterministic");
+    }
+
+    /// THE recovery-soundness criterion: with checksums + retries on
+    /// and only transient corruption, zero requests degrade and the
+    /// serving output checksum is bit-identical to the fault-free run
+    /// at the same seed; persistent corruption degrades gracefully and
+    /// is counted exactly.
+    #[test]
+    fn corruption_recovers_transparently_or_degrades_gracefully() {
+        let clean_cfg = sim_cfg();
+        let server = SimServer::new(clean_cfg, tiny_net());
+        let requests = server.synthetic_requests(4, 0.5, 33);
+        let clean = simulate(&clean_cfg, &server.functional_pass(&requests).unwrap());
+
+        // Transient-only corruption, defended: detected, healed,
+        // bit-exact — silently correct.
+        let mut defended = clean_cfg;
+        defended.pipeline.integrity = Some(crate::layout::IntegrityPolicy::default());
+        defended.pipeline.fault = Some(FaultPlan {
+            seed: 17,
+            payload_flip_rate: 0.4,
+            persistent_fraction: 0.0,
+            ..FaultPlan::default()
+        });
+        let dserver = SimServer::new(defended, tiny_net());
+        let rep = simulate(&defended, &dserver.functional_pass(&requests).unwrap());
+        assert!(rep.checksum_mismatches > 0, "rate 0.4 must corrupt something");
+        assert!(rep.recovered_reads > 0);
+        assert_eq!(rep.degraded_subtensors, 0, "transient faults always heal");
+        assert_eq!(rep.degraded_requests, 0);
+        assert!(rep.recovered_requests > 0);
+        assert_eq!(
+            rep.output_checksum, clean.output_checksum,
+            "zero degraded ⇒ serving output bit-identical to the fault-free run"
+        );
+
+        // Persistent corruption exhausts the read-retry budget:
+        // requests complete flagged degraded, with exact counters.
+        let mut lossy = defended;
+        lossy.pipeline.fault = Some(FaultPlan {
+            seed: 17,
+            payload_flip_rate: 0.4,
+            persistent_fraction: 1.0,
+            ..FaultPlan::default()
+        });
+        let lserver = SimServer::new(lossy, tiny_net());
+        let lrep = simulate(&lossy, &lserver.functional_pass(&requests).unwrap());
+        assert!(lrep.degraded_subtensors > 0);
+        assert!(lrep.degraded_requests > 0);
+        assert_eq!(lrep.completed, 4, "degraded requests still complete");
+        assert!(lrep.conservation_holds());
+        assert_ne!(lrep.output_checksum, clean.output_checksum);
+        assert!(lrep.requests.iter().any(|r| r.outcome == RequestOutcome::Degraded));
     }
 }

@@ -1,0 +1,336 @@
+//! Deterministic fault injection for the store → fetch → serve path.
+//!
+//! A [`FaultPlan`] describes *what* can go wrong (payload bit-flips and
+//! codec-head corruption at the [`PayloadSource`] boundary, DRAM bank
+//! latency spikes, worker stalls, arrival bursts at admission) and a
+//! seed. Every individual fault decision is a **pure stateless hash** of
+//! `(seed, fault class, stable identifiers)` — never a draw from shared
+//! mutable RNG state — so a chaos run produces byte-identical reports
+//! regardless of `--jobs`, host, or scheduling. The only mutable state
+//! is the per-address attempt counter inside [`FaultySource`], which is
+//! owned by exactly one fetcher lane and exists so *transient* faults
+//! can clear on a retry while *persistent* ones keep failing.
+//!
+//! Injection sites:
+//!
+//! * [`FaultySource`] wraps any payload source and corrupts reads; the
+//!   fetcher's verify-on-fetch layer
+//!   ([`crate::layout::IntegrityPolicy`]) is the matching defense.
+//! * [`FaultPlan::bank_spike`] / [`FaultPlan::worker_stall`] /
+//!   [`FaultPlan::arrival_burst`] are consulted by the serving
+//!   simulator's single-threaded timing pass — faults land as added
+//!   simulated cycles there, never inside the shared DRAM model, so the
+//!   bank-busy conservation invariant is untouched.
+
+use crate::layout::fetcher::PayloadSource;
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+
+// Distinct per-fault-class salts so the decision streams are
+// independent even for equal identifiers.
+const SALT_SITE: u64 = 0xFA17_0001;
+const SALT_PERSISTENT: u64 = 0xFA17_0002;
+const SALT_META: u64 = 0xFA17_0003;
+const SALT_WORD: u64 = 0xFA17_0004;
+const SALT_BANK: u64 = 0xFA17_0005;
+const SALT_STALL: u64 = 0xFA17_0006;
+const SALT_BURST: u64 = 0xFA17_0007;
+
+/// Seeded description of an injected-fault mixture. All-zero rates
+/// (the [`Default`]) inject nothing; every decision method is a pure
+/// function of the plan and its arguments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed; equal seeds reproduce the exact same fault pattern.
+    pub seed: u64,
+    /// Probability that a payload read *site* (a sub-tensor address) is
+    /// corrupted.
+    pub payload_flip_rate: f64,
+    /// Of the corrupted sites, the fraction whose fault hits the codec
+    /// head word (word 0: the bitmask / run-length index — "metadata"
+    /// corruption) instead of a uniformly chosen payload word.
+    pub metadata_fraction: f64,
+    /// Of the corrupted sites, the fraction that stay corrupt on every
+    /// re-read (persistent). The rest are transient: the first read is
+    /// corrupt, retries come back clean.
+    pub persistent_fraction: f64,
+    /// Probability a request-layer's DRAM phase suffers a bank latency
+    /// spike of [`FaultPlan::bank_spike_cycles`].
+    pub bank_spike_rate: f64,
+    /// Added simulated cycles per bank spike.
+    pub bank_spike_cycles: u64,
+    /// Probability a worker stalls before computing a request-layer.
+    pub worker_stall_rate: f64,
+    /// Added simulated cycles per worker stall.
+    pub worker_stall_cycles: u64,
+    /// Probability a request arrives in a burst (its arrival gap to the
+    /// previous request collapses to zero at admission).
+    pub arrival_burst_rate: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            payload_flip_rate: 0.0,
+            metadata_fraction: 0.0,
+            persistent_fraction: 0.0,
+            bank_spike_rate: 0.0,
+            bank_spike_cycles: 256,
+            worker_stall_rate: 0.0,
+            worker_stall_cycles: 2048,
+            arrival_burst_rate: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// The canonical chaos mixture used by the `gratetile chaos` study:
+    /// one knob scales payload corruption and timing disturbance
+    /// together. A quarter of corrupted sites hit the codec head and a
+    /// quarter are persistent (unrecoverable by retry).
+    pub fn uniform(seed: u64, rate: f64) -> Self {
+        Self {
+            seed,
+            payload_flip_rate: rate,
+            metadata_fraction: 0.25,
+            persistent_fraction: 0.25,
+            bank_spike_rate: rate,
+            worker_stall_rate: rate / 2.0,
+            arrival_burst_rate: rate,
+            ..Self::default()
+        }
+    }
+
+    /// True when any fault class has a non-zero rate.
+    pub fn is_active(&self) -> bool {
+        self.payload_flip_rate > 0.0
+            || self.bank_spike_rate > 0.0
+            || self.worker_stall_rate > 0.0
+            || self.arrival_burst_rate > 0.0
+    }
+
+    /// True when payload reads can be corrupted (i.e. wrapping sources
+    /// in a [`FaultySource`] would change anything).
+    pub fn payload_faults_active(&self) -> bool {
+        self.payload_flip_rate > 0.0
+    }
+
+    /// Pure mixing core: one well-distributed 64-bit value per
+    /// `(seed, class, salt, key)` tuple.
+    fn roll(&self, class: u64, salt: u64, key: u64) -> u64 {
+        SplitMix64::new(
+            self.seed
+                ^ class.rotate_left(17)
+                ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ key.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        )
+        .next_u64()
+    }
+
+    /// Stateless Bernoulli draw with probability `p`.
+    fn chance(&self, class: u64, salt: u64, key: u64, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        (self.roll(class, salt, key) >> 11) as f64 / (1u64 << 53) as f64 < p
+    }
+
+    /// Decide whether the `attempt`-th read of the sub-tensor at `addr`
+    /// (under the per-request `salt`) is corrupted, and how: returns the
+    /// word offset and XOR mask to apply, or `None` for a clean read.
+    pub fn payload_fault(
+        &self,
+        salt: u64,
+        addr: u64,
+        attempt: u32,
+        n_words: usize,
+    ) -> Option<(usize, u16)> {
+        if n_words == 0 || !self.chance(SALT_SITE, salt, addr, self.payload_flip_rate) {
+            return None;
+        }
+        let persistent = self.chance(SALT_PERSISTENT, salt, addr, self.persistent_fraction);
+        if attempt > 0 && !persistent {
+            return None; // transient: the re-read comes back clean
+        }
+        let meta = self.chance(SALT_META, salt, addr, self.metadata_fraction);
+        let r = self.roll(SALT_WORD, salt, addr ^ u64::from(attempt).rotate_left(48));
+        let word = if meta { 0 } else { (r as usize) % n_words };
+        Some((word, 1u16 << ((r >> 32) & 15)))
+    }
+
+    /// Extra DRAM cycles for `(request, layer)` from a bank latency
+    /// spike (0 when the draw misses).
+    pub fn bank_spike(&self, request: u64, layer: u64) -> u64 {
+        if self.chance(SALT_BANK, request, layer, self.bank_spike_rate) {
+            self.bank_spike_cycles
+        } else {
+            0
+        }
+    }
+
+    /// Extra compute cycles for `(request, layer)` from a worker stall
+    /// (0 when the draw misses).
+    pub fn worker_stall(&self, request: u64, layer: u64) -> u64 {
+        if self.chance(SALT_STALL, request, layer, self.worker_stall_rate) {
+            self.worker_stall_cycles
+        } else {
+            0
+        }
+    }
+
+    /// Whether `request` arrives in a burst (admission collapses its
+    /// arrival gap to zero).
+    pub fn arrival_burst(&self, request: u64) -> bool {
+        self.chance(SALT_BURST, request, 0, self.arrival_burst_rate)
+    }
+}
+
+/// [`PayloadSource`] decorator that injects the plan's payload faults.
+///
+/// Owned by exactly one fetcher lane; the per-address attempt counter
+/// is the only mutable state and exists so transient faults clear on
+/// the integrity layer's re-read while persistent ones keep failing.
+/// Two `FaultySource`s with equal `(plan, salt)` over equal inner
+/// sources return bit-identical streams.
+pub struct FaultySource<S> {
+    inner: S,
+    plan: FaultPlan,
+    /// Per-request salt: concurrent requests draw independent fault
+    /// streams, yet request *k* sees the same faults on every run.
+    salt: u64,
+    attempts: HashMap<u64, u32>,
+    injected: u64,
+}
+
+impl<S: PayloadSource> FaultySource<S> {
+    pub fn new(inner: S, plan: FaultPlan, salt: u64) -> Self {
+        Self { inner, plan, salt, attempts: HashMap::new(), injected: 0 }
+    }
+
+    /// Number of reads this source has corrupted so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+impl<S: PayloadSource> PayloadSource for FaultySource<S> {
+    fn read_words(&mut self, addr_words: u64, n_words: usize, out: &mut Vec<u16>) {
+        let at = out.len();
+        self.inner.read_words(addr_words, n_words, out);
+        if n_words == 0 {
+            return;
+        }
+        let attempt = self.attempts.entry(addr_words).or_insert(0);
+        let a = *attempt;
+        *attempt += 1;
+        if let Some((word, mask)) = self.plan.payload_fault(self.salt, addr_words, a, n_words) {
+            out[at + word] ^= mask;
+            self.injected += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::fetcher::SlicePayload;
+
+    fn read(src: &mut impl PayloadSource, addr: u64, n: usize) -> Vec<u16> {
+        let mut v = Vec::new();
+        src.read_words(addr, n, &mut v);
+        v
+    }
+
+    #[test]
+    fn inactive_plan_is_bit_exact_passthrough() {
+        let data: Vec<u16> = (0..256u16).collect();
+        let mut f = FaultySource::new(SlicePayload(&data), FaultPlan::default(), 7);
+        for a in [0u64, 17, 128] {
+            assert_eq!(read(&mut f, a, 32), &data[a as usize..a as usize + 32]);
+        }
+        assert_eq!(f.injected(), 0);
+    }
+
+    #[test]
+    fn same_seed_and_salt_reproduce_identical_corruption() {
+        let data: Vec<u16> = (0..512u32).map(|i| (i * 37) as u16).collect();
+        let plan = FaultPlan::uniform(42, 0.5);
+        let mut a = FaultySource::new(SlicePayload(&data), plan, 3);
+        let mut b = FaultySource::new(SlicePayload(&data), plan, 3);
+        for site in 0..16u64 {
+            assert_eq!(read(&mut a, site * 32, 32), read(&mut b, site * 32, 32));
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "rate 0.5 over 16 sites should corrupt something");
+    }
+
+    #[test]
+    fn different_salts_draw_different_fault_streams() {
+        let data = vec![0u16; 4096];
+        let plan = FaultPlan::uniform(1, 0.5);
+        let mut a = FaultySource::new(SlicePayload(&data), plan, 1);
+        let mut b = FaultySource::new(SlicePayload(&data), plan, 2);
+        let ra: Vec<_> = (0..64u64).map(|i| read(&mut a, i * 64, 64)).collect();
+        let rb: Vec<_> = (0..64u64).map(|i| read(&mut b, i * 64, 64)).collect();
+        assert_ne!(ra, rb);
+    }
+
+    #[test]
+    fn transient_faults_clear_on_retry_persistent_ones_do_not() {
+        let data = vec![0x1111u16; 1024];
+        let plan = FaultPlan {
+            seed: 5,
+            payload_flip_rate: 1.0,
+            persistent_fraction: 0.5,
+            ..FaultPlan::default()
+        };
+        let mut f = FaultySource::new(SlicePayload(&data), plan, 9);
+        let (mut transients, mut persistents) = (0u32, 0u32);
+        for site in 0..32u64 {
+            let addr = site * 32;
+            let first = read(&mut f, addr, 32);
+            assert_ne!(first, &data[..32], "rate-1.0 plan must corrupt the first read");
+            let retry = read(&mut f, addr, 32);
+            if retry == &data[..32] {
+                transients += 1;
+            } else {
+                persistents += 1;
+            }
+        }
+        assert!(transients > 0, "some sites must be transient");
+        assert!(persistents > 0, "some sites must be persistent");
+    }
+
+    #[test]
+    fn metadata_faults_hit_the_codec_head_word() {
+        let plan = FaultPlan {
+            seed: 8,
+            payload_flip_rate: 1.0,
+            metadata_fraction: 1.0,
+            ..FaultPlan::default()
+        };
+        let data = vec![0xABCDu16; 256];
+        let mut f = FaultySource::new(SlicePayload(&data), plan, 0);
+        for site in 0..8u64 {
+            let got = read(&mut f, site * 32, 32);
+            assert_ne!(got[0], 0xABCD, "metadata fault must corrupt word 0");
+            assert_eq!(&got[1..], &data[1..32], "only the head word is touched");
+        }
+    }
+
+    #[test]
+    fn timing_decisions_are_pure_and_rate_scaled() {
+        let plan = FaultPlan::uniform(3, 1.0);
+        assert!(plan.is_active());
+        assert!(plan.payload_faults_active());
+        assert_eq!(plan.bank_spike(4, 0), plan.bank_spike_cycles);
+        assert_eq!(plan.worker_stall(1, 2), plan.worker_stall(1, 2));
+        assert!(plan.arrival_burst(0));
+        let zero = FaultPlan::uniform(3, 0.0);
+        assert!(!zero.is_active());
+        assert_eq!(zero.bank_spike(4, 0), 0);
+        assert_eq!(zero.worker_stall(4, 0), 0);
+        assert!(!zero.arrival_burst(7));
+    }
+}

@@ -6,8 +6,12 @@ use crate::compress::{CodecPolicy, Scheme};
 use crate::config::hardware::Platform;
 use crate::config::layer::ConvLayer;
 use crate::config::zoo::{full_conv_stack, Network};
-use crate::coordinator::simserver::{simulate, simulate_traced, SimServer, SimServerConfig};
+use crate::coordinator::simserver::{
+    simulate, simulate_traced, ServingPolicy, SimServer, SimServerConfig,
+};
 use crate::coordinator::{PipelineConfig, Weights};
+use crate::fault::FaultPlan;
+use crate::layout::IntegrityPolicy;
 use crate::obs::TraceRecorder;
 use crate::sim::access::access_study;
 use crate::sim::metacache::{metadata_cache_study, TileOrder};
@@ -243,6 +247,104 @@ pub fn serve_scaling_table() -> Table {
     t
 }
 
+/// Chaos study: deterministic fault injection swept over fault rate ×
+/// defense policy. Every cell re-runs the *functional* pass under a
+/// seeded [`FaultPlan`] (payload bit-flips, metadata corruption, bank
+/// spikes, worker stalls, arrival bursts) and re-simulates serving, so
+/// the table shows what each defense layer actually buys:
+///
+/// * `none` — faults land undetected; the *Silent corrupt* column
+///   counts requests whose output checksum silently diverged from the
+///   fault-free reference.
+/// * `verify+retry` — per-sub-tensor checksums verified on fetch, with
+///   bounded re-fetch retries; transient faults heal, persistent ones
+///   degrade gracefully to zero-filled sub-tensors (flagged, counted).
+/// * `verify+shed` — additionally enables serving deadlines, retry
+///   budgets and Batch-class overload shedding.
+///
+/// Fault decisions are pure hashes of (seed, site, request, address),
+/// so every cell is byte-stable across hosts and `--jobs` — golden-filed
+/// in `tests/golden.rs`.
+pub fn chaos_table() -> Table {
+    let l1 = ConvLayer::new(1, 1, 24, 24, 8, 16);
+    let l2 = ConvLayer::new(1, 2, 24, 24, 16, 8);
+    let layers = vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))];
+    let base = SimServerConfig::new(PipelineConfig::new(
+        Platform::NvidiaSmallTile.hardware(),
+    ));
+    // Fault-free reference outputs: silent corruption is any served
+    // request whose checksum diverges from these without being flagged.
+    let reference = SimServer::new(base, layers.clone());
+    let reqs = reference.synthetic_requests(12, 0.4, 11);
+    let clean: Vec<u64> = reference
+        .functional_pass(&reqs)
+        .expect("clean pass")
+        .iter()
+        .map(|t| t.output_checksum)
+        .collect();
+    let defended = ServingPolicy {
+        deadline_cycles: 40_000_000,
+        retry_budget: 1,
+        shed_batch_on_overload: true,
+        waiting_depth: 0,
+    };
+    let policies: [(&str, Option<IntegrityPolicy>, ServingPolicy); 3] = [
+        ("none", None, ServingPolicy::default()),
+        ("verify+retry", Some(IntegrityPolicy::default()), ServingPolicy::default()),
+        ("verify+shed", Some(IntegrityPolicy::default()), defended),
+    ];
+    let mut t = Table::new(
+        "Chaos study — seeded faults x defense policy, 2-layer 24x24 net, 12 requests (simulated cycles)",
+    )
+    .header(vec![
+        "Fault rate",
+        "Defense",
+        "Completed",
+        "Degraded",
+        "Silent corrupt",
+        "Shed",
+        "Timed out",
+        "Recovery %",
+        "Goodput req/Mcyc",
+        "p99 kcyc",
+    ]);
+    for &rate in &[0.0, 0.05, 0.2] {
+        for (name, integrity, serving) in &policies {
+            let mut cfg = base;
+            cfg.pipeline.fault = Some(FaultPlan::uniform(97, rate));
+            cfg.pipeline.integrity = *integrity;
+            cfg.serving = *serving;
+            let server = SimServer::new(cfg, layers.clone());
+            let traces = server.functional_pass(&reqs).expect("chaos pass");
+            let rep = simulate(server.cfg(), &traces);
+            let silent = traces
+                .iter()
+                .enumerate()
+                .filter(|(i, tr)| tr.output_checksum != clean[*i] && !tr.degraded())
+                .count();
+            let healed = rep.recovered_reads + rep.degraded_subtensors;
+            let recovery = if healed > 0 {
+                format!("{:.1}", rep.recovered_reads as f64 / healed as f64 * 100.0)
+            } else {
+                "-".to_string()
+            };
+            t.row(vec![
+                format!("{rate:.2}"),
+                name.to_string(),
+                rep.completed.to_string(),
+                rep.degraded_requests.to_string(),
+                silent.to_string(),
+                rep.shed.to_string(),
+                rep.timed_out.to_string(),
+                recovery,
+                format!("{:.2}", rep.goodput_rpmc()),
+                format!("{:.1}", rep.latency_percentile(0.99) as f64 / 1e3),
+            ]);
+        }
+    }
+    t
+}
+
 /// The golden trace scenario: run the serving simulator with tracing
 /// enabled over a tiny fixed net and roll the recorded counter series
 /// up into a table. Everything is simulated cycles computed from
@@ -468,6 +570,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The chaos study's core claims: fault-free cells are clean
+    /// (nothing degraded, nothing silently corrupt), the undefended
+    /// column exposes silent corruption under faults, and *every*
+    /// checksummed cell has zero silent corruption — integrity either
+    /// heals the read or flags the request, it never lies.
+    #[test]
+    fn chaos_table_defenses_eliminate_silent_corruption() {
+        let csv = chaos_table().render_csv();
+        // 3 fault rates x 3 defense policies + header.
+        assert_eq!(csv.lines().count(), 10, "{csv}");
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(str::to_string).collect())
+            .collect();
+        for r in rows.iter().filter(|r| r[0] == "0.00") {
+            assert_eq!(r[3], "0", "fault-free row degraded: {r:?}");
+            assert_eq!(r[4], "0", "fault-free row silently corrupt: {r:?}");
+            assert_eq!(r[6], "0", "fault-free row timed out: {r:?}");
+        }
+        let undefended = rows.iter().find(|r| r[0] == "0.20" && r[1] == "none").unwrap();
+        assert!(
+            undefended[4].parse::<u64>().unwrap() > 0,
+            "undefended faults must corrupt silently: {undefended:?}"
+        );
+        for r in rows.iter().filter(|r| r[1] != "none") {
+            assert_eq!(r[4], "0", "checksummed cell silently corrupt: {r:?}");
+        }
+        // At a nonzero fault rate the verify path must show recoveries.
+        let verified = rows.iter().find(|r| r[0] == "0.20" && r[1] == "verify+retry").unwrap();
+        assert_ne!(verified[7], "-", "verify cell must report recovery: {verified:?}");
     }
 
     #[test]

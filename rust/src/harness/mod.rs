@@ -12,7 +12,7 @@ pub mod tables;
 
 pub use ablation::{ablation_codecs, ablation_dilated, ablation_sweep, ablation_whole_channel};
 pub use extended::{
-    access_table, codec_datapath_table, gemm_table, metacache_table, network_table,
+    access_table, chaos_table, codec_datapath_table, gemm_table, metacache_table, network_table,
     roofline_table, serve_scaling_table, store_compare_table, trace_rollup_table,
 };
 pub use figures::{fig1, fig8, fig9};

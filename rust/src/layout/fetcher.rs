@@ -106,6 +106,33 @@ impl PayloadSource for SegmentPayload {
     }
 }
 
+/// Verify-on-fetch configuration ([`Fetcher::with_integrity`]): every
+/// payload read is hashed against the map's per-sub-tensor checksum
+/// table (`.grate` v3). On a mismatch the sub-tensor is re-read from
+/// the source up to `retry_budget` times with exponential backoff in
+/// *simulated* cycles; if every attempt fails the sub-tensor is
+/// quarantined and an all-zero substitute is served (the request
+/// completes, flagged degraded, instead of failing the whole layer —
+/// the graceful-degradation story GrateTile's independently
+/// checksummable sub-tensors make cheap, paper §IV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntegrityPolicy {
+    /// Re-reads attempted per corrupt read before degrading to the
+    /// all-zero substitute. 0 disables recovery (detect-only).
+    pub retry_budget: u32,
+    /// Simulated-cycle cost of the first re-read; doubles on each
+    /// further attempt. Accumulated in
+    /// [`FetchCounters::retry_backoff_cycles`] and charged to the
+    /// layer's simulated time by the serving timing pass.
+    pub backoff_cycles: u64,
+}
+
+impl Default for IntegrityPolicy {
+    fn default() -> Self {
+        Self { retry_budget: 3, backoff_cycles: 64 }
+    }
+}
+
 /// LRU of decoded sub-tensors, keyed by linear sub-tensor index. Small
 /// (a few dozen entries), so a stamped linear scan beats any map.
 /// Evicted entries donate their buffers to the replacement, so the
@@ -174,6 +201,20 @@ pub struct Fetcher<'a> {
     cache_hits: u64,
     track_occupancy: bool,
     occ_rows: Vec<bool>,
+    /// Verify-on-fetch policy (None = trust every read, the pre-v3
+    /// behaviour). Verification also needs a non-empty checksum table
+    /// on the map; pre-v3 maps fetch unverified either way.
+    integrity: Option<IntegrityPolicy>,
+    /// Sub-tensors that exhausted their retry budget: later touches
+    /// skip the (deterministically futile) re-reads and go straight to
+    /// the zero substitute.
+    quarantined: Vec<bool>,
+    verified_reads: u64,
+    checksum_mismatches: u64,
+    retried_reads: u64,
+    recovered_reads: u64,
+    degraded_subtensors: u64,
+    retry_backoff_cycles: u64,
 }
 
 /// Snapshot of a fetcher's datapath counters, absorbed into
@@ -185,6 +226,24 @@ pub struct FetchCounters {
     pub cache_hits: u64,
     pub skipped_subtensors: u64,
     pub skipped_spans: u64,
+    /// Payload reads hashed against the v3 checksum table.
+    pub verified_reads: u64,
+    /// Reads whose hash disagreed with the table (initial + retry
+    /// attempts both count — a retry storm shows up here).
+    pub checksum_mismatches: u64,
+    /// Re-reads issued by the bounded retry loop.
+    pub retried_reads: u64,
+    /// Corrupt reads a re-read recovered bit-exactly (the request stays
+    /// silently correct).
+    pub recovered_reads: u64,
+    /// Zero-substitution events: a fetch served the all-zero substitute
+    /// because retries were exhausted (or the sub-tensor was already
+    /// quarantined). Any nonzero value flags the consuming request
+    /// `degraded`.
+    pub degraded_subtensors: u64,
+    /// Simulated-cycle cost of retry backoff, charged to the layer's
+    /// time by the serving timing pass.
+    pub retry_backoff_cycles: u64,
 }
 
 /// Recycled window buffers kept at most (beyond this they drop).
@@ -221,6 +280,14 @@ impl<'a> Fetcher<'a> {
             cache_hits: 0,
             track_occupancy: false,
             occ_rows: Vec::new(),
+            integrity: None,
+            quarantined: Vec::new(),
+            verified_reads: 0,
+            checksum_mismatches: 0,
+            retried_reads: 0,
+            recovered_reads: 0,
+            degraded_subtensors: 0,
+            retry_backoff_cycles: 0,
         }
     }
 
@@ -240,6 +307,18 @@ impl<'a> Fetcher<'a> {
     /// are pure no-ops.
     pub fn with_zero_skip(mut self, enabled: bool) -> Self {
         self.zero_skip = enabled;
+        self
+    }
+
+    /// Enable verify-on-fetch under `policy` (off by default). Needs a
+    /// map with a populated checksum table (v3 containers, any freshly
+    /// packed/streamed map); on a pre-v3 map this is a no-op and every
+    /// read stays unverified. In the fault-free case the only cost is
+    /// one FNV-1a pass over each compressed read — gated < 3% end to
+    /// end by `benches/perf_chaos.rs`.
+    pub fn with_integrity(mut self, policy: IntegrityPolicy) -> Self {
+        self.quarantined = vec![false; self.packed.division.n_subtensors()];
+        self.integrity = Some(policy);
         self
     }
 
@@ -298,7 +377,19 @@ impl<'a> Fetcher<'a> {
             cache_hits: self.cache_hits,
             skipped_subtensors: self.skipped_subtensors,
             skipped_spans: self.skipped_spans,
+            verified_reads: self.verified_reads,
+            checksum_mismatches: self.checksum_mismatches,
+            retried_reads: self.retried_reads,
+            recovered_reads: self.recovered_reads,
+            degraded_subtensors: self.degraded_subtensors,
+            retry_backoff_cycles: self.retry_backoff_cycles,
         }
+    }
+
+    /// Zero-substitution events so far (see
+    /// [`FetchCounters::degraded_subtensors`]).
+    pub fn degraded_subtensors(&self) -> u64 {
+        self.degraded_subtensors
     }
 
     /// Return a spent window's buffer to the fetch pool (the pipeline's
@@ -430,10 +521,54 @@ impl<'a> Fetcher<'a> {
 
         self.comp_words.clear();
         self.source.read_words(addr, size as usize, &mut self.comp_words);
-        let comp = CompressedBlock {
+        let mut comp = CompressedBlock {
             n_elems: n,
             words: std::mem::take(&mut self.comp_words),
         };
+
+        // Integrity layer: hash the read against the v3 checksum table.
+        // A mismatch triggers bounded re-reads — each a real modeled
+        // DRAM access plus exponential backoff in simulated cycles; an
+        // unrecoverable sub-tensor is quarantined and served all-zero.
+        // The window is pre-zeroed and the access above already moved
+        // the modeled lines, so the degraded early return keeps window
+        // shape and traffic accounting intact.
+        if let Some(pol) = self.integrity {
+            if let Some(&want) = self.packed.checksums.get(li) {
+                self.verified_reads += 1;
+                if crate::store::container::fnv1a64_words(&comp.words) != want {
+                    self.checksum_mismatches += 1;
+                    let mut recovered = false;
+                    if !self.quarantined[li] {
+                        let mut backoff = pol.backoff_cycles;
+                        for _ in 0..pol.retry_budget {
+                            self.retried_reads += 1;
+                            self.retry_backoff_cycles += backoff;
+                            backoff = backoff.saturating_mul(2);
+                            comp.words.clear();
+                            self.source.read_words(addr, size as usize, &mut comp.words);
+                            dram.access(
+                                Stream::FeatureRead,
+                                addr,
+                                size.max(if div.compact { 0 } else { 1 }),
+                            );
+                            if crate::store::container::fnv1a64_words(&comp.words) == want {
+                                recovered = true;
+                                self.recovered_reads += 1;
+                                break;
+                            }
+                            self.checksum_mismatches += 1;
+                        }
+                    }
+                    if !recovered {
+                        self.quarantined[li] = true;
+                        self.degraded_subtensors += 1;
+                        self.comp_words = comp.words;
+                        return;
+                    }
+                }
+            }
+        }
 
         // Zero-skip: the metadata-only occupancy query (for bitmask, an
         // O(1) payload-length test — no value decode) lets an all-zero
@@ -946,6 +1081,173 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Test source: corrupts the first `transient` reads of every
+    /// address (a retry then reads clean) and every read of the
+    /// `persistent` addresses.
+    struct FlakySource<'a> {
+        inner: SlicePayload<'a>,
+        transient: u32,
+        persistent: Vec<u64>,
+        seen: std::collections::HashMap<u64, u32>,
+    }
+
+    impl PayloadSource for FlakySource<'_> {
+        fn read_words(&mut self, addr: u64, n: usize, out: &mut Vec<u16>) {
+            let at = out.len();
+            self.inner.read_words(addr, n, out);
+            let attempt = self.seen.entry(addr).or_insert(0);
+            let corrupt = self.persistent.contains(&addr) || *attempt < self.transient;
+            *attempt += 1;
+            if corrupt && n > 0 {
+                out[at] ^= 0x5a5a;
+            }
+        }
+    }
+
+    /// Transient corruption (clean on re-read) is detected and healed by
+    /// the bounded retry: windows stay bit-exact, nothing degrades.
+    #[test]
+    fn integrity_recovers_transient_corruption() {
+        let (fm, packed) = packed_map(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask);
+        let payload = packed.payload.as_ref().unwrap();
+        let source = FlakySource {
+            inner: SlicePayload(payload),
+            transient: 1,
+            persistent: Vec::new(),
+            seen: Default::default(),
+        };
+        let mut fetcher = Fetcher::with_source(&packed, Box::new(source))
+            .with_integrity(IntegrityPolicy::default());
+        let mut dram = Dram::default();
+        let win = fetcher.fetch_window(&mut dram, 0, 24, 0, 24, 0, 16);
+        for y in 0..24 {
+            for x in 0..24 {
+                for ch in 0..16 {
+                    assert_eq!(win.get(y, x, ch), fm.get(y, x, ch), "({y},{x},{ch})");
+                }
+            }
+        }
+        let c = fetcher.counters();
+        assert!(c.verified_reads > 0);
+        assert!(c.checksum_mismatches > 0, "corruption went undetected");
+        assert!(c.recovered_reads > 0, "nothing recovered");
+        assert!(c.retry_backoff_cycles > 0, "recovery charged no simulated time");
+        assert_eq!(c.degraded_subtensors, 0, "transient faults must heal");
+    }
+
+    /// Persistent corruption of one sub-tensor exhausts the retry
+    /// budget, quarantines it, and serves an all-zero substitute — the
+    /// rest of the window stays bit-exact, and a re-touch goes straight
+    /// to the substitute without futile re-reads.
+    #[test]
+    fn integrity_degrades_persistent_corruption_to_zeros() {
+        let (fm, packed) = packed_map(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask);
+        let payload = packed.payload.as_ref().unwrap();
+        // Pick a sub-tensor that actually holds nonzeros so the zero
+        // substitution is observable.
+        let div = &packed.division;
+        let li_bad = (0..div.n_subtensors())
+            .find(|&li| {
+                let r = div.subtensor_coords(li);
+                let (sy, sx) = (div.ys[r.iy], div.xs[r.ix]);
+                let (cg0, cd) = (r.icg * div.cd, div.cg_depth(r.icg));
+                packed.sizes_words[li] > 0
+                    && (sy.start..sy.end()).any(|y| {
+                        (sx.start..sx.end()).any(|x| {
+                            (cg0..cg0 + cd).any(|ch| fm.get(y, x, ch) != 0.0)
+                        })
+                    })
+            })
+            .expect("a nonzero sub-tensor exists at 40% density");
+        let r_bad = div.subtensor_coords(li_bad);
+        let (sy, sx) = (div.ys[r_bad.iy], div.xs[r_bad.ix]);
+        let (cg0, cd) = (r_bad.icg * div.cd, div.cg_depth(r_bad.icg));
+        let source = FlakySource {
+            inner: SlicePayload(payload),
+            transient: 0,
+            persistent: vec![packed.addr_words[li_bad]],
+            seen: Default::default(),
+        };
+        let policy = IntegrityPolicy { retry_budget: 2, backoff_cycles: 16 };
+        let mut fetcher =
+            Fetcher::with_source(&packed, Box::new(source)).with_integrity(policy);
+        let mut dram = Dram::default();
+        let win = fetcher.fetch_window(&mut dram, 0, 24, 0, 24, 0, 16);
+        for y in 0..24 {
+            for x in 0..24 {
+                for ch in 0..16 {
+                    let inside = y >= sy.start
+                        && y < sy.end()
+                        && x >= sx.start
+                        && x < sx.end()
+                        && ch >= cg0
+                        && ch < cg0 + cd;
+                    let want = if inside { 0.0 } else { fm.get(y, x, ch) };
+                    assert_eq!(win.get(y, x, ch), want, "({y},{x},{ch})");
+                }
+            }
+        }
+        let c1 = fetcher.counters();
+        assert_eq!(c1.degraded_subtensors, 1);
+        assert_eq!(c1.retried_reads, policy.retry_budget as u64);
+        assert_eq!(c1.recovered_reads, 0);
+        // Quarantine: the re-touch degrades again but never re-reads.
+        let _ = fetcher.fetch_window(&mut dram, sy.start, sy.end(), sx.start, sx.end(), cg0, cg0 + cd);
+        let c2 = fetcher.counters();
+        assert_eq!(c2.degraded_subtensors, 2);
+        assert_eq!(c2.retried_reads, c1.retried_reads, "quarantined sub-tensor was re-read");
+    }
+
+    /// Without a checksum table (pre-v3 map) verify-on-fetch is a no-op.
+    #[test]
+    fn integrity_noop_without_checksum_table() {
+        let (fm, mut packed) = packed_map(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask);
+        packed.checksums.clear();
+        let mut fetcher = Fetcher::new(&packed).with_integrity(IntegrityPolicy::default());
+        let mut dram = Dram::default();
+        let win = fetcher.fetch_window(&mut dram, 0, 24, 0, 24, 0, 16);
+        for y in 0..24 {
+            for x in 0..24 {
+                for ch in 0..16 {
+                    assert_eq!(win.get(y, x, ch), fm.get(y, x, ch));
+                }
+            }
+        }
+        assert_eq!(fetcher.counters().verified_reads, 0);
+    }
+
+    /// Fault-free verify-on-fetch changes nothing observable: windows,
+    /// DRAM accounting, and every non-integrity counter are identical,
+    /// and every read hashes clean.
+    #[test]
+    fn integrity_is_invariant_when_fault_free() {
+        let (_, packed) = packed_map(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask);
+        let windows = [
+            (0usize, 10usize, 0usize, 10usize, 0usize, 16usize),
+            (7, 17, 7, 17, 0, 16),
+            (0, 24, 0, 24, 0, 16),
+        ];
+        let mut plain = Fetcher::new(&packed);
+        let mut verified = Fetcher::new(&packed).with_integrity(IntegrityPolicy::default());
+        let mut d_plain = Dram::default();
+        let mut d_verified = Dram::default();
+        for &(y0, y1, x0, x1, c0, c1) in &windows {
+            let a = plain.fetch_window(&mut d_plain, y0, y1, x0, x1, c0, c1);
+            let b = verified.fetch_window(&mut d_verified, y0, y1, x0, x1, c0, c1);
+            assert_eq!(a, b, "window ({y0},{y1},{x0},{x1})");
+        }
+        for stream in [Stream::FeatureRead, Stream::MetadataRead] {
+            assert_eq!(d_plain.words_of(stream), d_verified.words_of(stream), "{stream:?}");
+        }
+        let c = verified.counters();
+        assert!(c.verified_reads > 0);
+        assert_eq!(c.checksum_mismatches, 0);
+        assert_eq!(c.retried_reads, 0);
+        assert_eq!(c.degraded_subtensors, 0);
+        assert_eq!(c.retry_backoff_cycles, 0);
+        assert_eq!(c.decoded_words, plain.counters().decoded_words);
     }
 
     #[test]

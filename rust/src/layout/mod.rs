@@ -15,6 +15,8 @@ pub mod fetcher;
 pub mod metadata;
 pub mod packer;
 
-pub use fetcher::{FetchCounters, Fetcher, PayloadSource, SegmentPayload, SlicePayload};
+pub use fetcher::{
+    FetchCounters, Fetcher, IntegrityPolicy, PayloadSource, SegmentPayload, SlicePayload,
+};
 pub use metadata::{metadata_bits_per_kb, size_field_bits_for};
 pub use packer::{PackedFeatureMap, Packer};

@@ -67,6 +67,14 @@ pub struct PackedFeatureMap {
     /// Compressed payload words, addressed by `addr_words` (present only
     /// when packed with `with_payload`).
     pub payload: Option<Vec<u16>>,
+    /// Per-sub-tensor integrity checksums (FNV-1a-64 over the compressed
+    /// words as little-endian bytes), same indexing as `sizes_words`.
+    /// Content-addressed — independent of `addr_words` — so rebasing a
+    /// sub-tensor (store import/export, segment sources) carries its
+    /// checksum unchanged. Populated only when the payload was
+    /// materialised; empty for sizes-only packs and for maps decoded
+    /// from pre-v3 containers (the fetcher then skips verification).
+    pub checksums: Vec<u64>,
     /// Total storage footprint in words (end of the last sub-tensor,
     /// line-rounded for aligned modes).
     pub total_words: u64,
@@ -308,6 +316,10 @@ impl Packer {
         let payload = with_payload.then(|| {
             execute_payload(fm, division, self.policy, &plan, &layout, parallel)
         });
+        let checksums = match &payload {
+            Some(p) => payload_checksums(p, &layout.addr_words, &plan.words),
+            None => Vec::new(),
+        };
         PackedFeatureMap {
             division: division.clone(),
             policy: self.policy,
@@ -320,6 +332,7 @@ impl Packer {
                 bits_per_record: record_bits_for(division, self.policy),
             },
             payload,
+            checksums,
             total_words: layout.total_words,
             words_per_line: wpl,
         }
@@ -452,6 +465,10 @@ impl Packer {
         }
 
         let total_words = if division.compact { cursor } else { round_up(cursor as usize, wpl) as u64 };
+        let checksums = match &payload {
+            Some(p) => payload_checksums(p, &addr_words, &sizes_words),
+            None => Vec::new(),
+        };
         PackedFeatureMap {
             division: division.clone(),
             policy: self.policy,
@@ -464,10 +481,26 @@ impl Packer {
                 bits_per_record: record_bits_for(division, self.policy),
             },
             payload,
+            checksums,
             total_words,
             words_per_line: wpl,
         }
     }
+}
+
+/// Per-sub-tensor FNV-1a-64 checksums over the packed payload slices —
+/// the integrity table `.grate` v3 stores and the fetcher verifies on
+/// every payload read. A serial O(payload) post-pass (one hash per
+/// stored word, no re-compression), so it rides the pack for free at
+/// table precision.
+fn payload_checksums(payload: &[u16], addr_words: &[u64], sizes_words: &[u32]) -> Vec<u64> {
+    addr_words
+        .iter()
+        .zip(sizes_words)
+        .map(|(&a, &s)| {
+            crate::store::container::fnv1a64_words(&payload[a as usize..a as usize + s as usize])
+        })
+        .collect()
 }
 
 /// Plan phase: exact `(words, bits)` for every sub-tensor from one fused
@@ -788,6 +821,8 @@ mod tests {
                 assert_eq!(a.addr_words, b.addr_words, "{tag} addr_words");
                 assert_eq!(a.total_words, b.total_words, "{tag} total_words");
                 assert_eq!(a.payload, b.payload, "{tag} payload");
+                assert_eq!(a.checksums, b.checksums, "{tag} checksums");
+                assert_eq!(a.checksums.len(), div.n_subtensors(), "{tag} checksum count");
                 assert_eq!(
                     a.metadata.records.len(),
                     b.metadata.records.len(),

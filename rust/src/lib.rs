@@ -23,6 +23,7 @@ pub mod compress;
 pub mod compute;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod harness;
 pub mod layout;
 pub mod memsim;

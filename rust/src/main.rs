@@ -10,6 +10,7 @@
 //! gratetile serve --trace out.json --metrics m.json  # + Perfetto trace / metrics dump
 //! gratetile trace --requests 8 --limit 120           # text timeline + counter rollup
 //! gratetile servescale                               # serve-scaling study table
+//! gratetile chaos                                    # fault-injection chaos study table
 //! gratetile store pack|inspect|serve|compare         # .grate containers
 //! ```
 
@@ -127,6 +128,7 @@ fn run(cli: &Cli) -> Result<()> {
         "serve" => cmd_serve(cli, policy)?,
         "trace" => cmd_trace(cli, policy)?,
         "servescale" => emit(cli, "serve_scaling", harness::serve_scaling_table()),
+        "chaos" => emit(cli, "chaos", harness::chaos_table()),
         "" | "help" | "--help" => print_help(),
         other => {
             print_help();
@@ -543,6 +545,8 @@ End to end:
                       lines) --out F (also write the Chrome trace JSON)]
   servescale          serve-scaling study: workers x queue x density, simulated
                       (fixed bitmask codec — the golden-filed baseline)
+  chaos               chaos study: seeded fault injection x defense policy
+                      (checksums/retries/shedding) — goodput, recovery, p99
 
 Common flags: --codec NAME|auto (codec policy: bitmask/zrlc/dictionary/raw, or
 auto = cheapest codec per sub-tensor; --scheme is an alias); --markdown (emit

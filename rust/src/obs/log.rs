@@ -64,8 +64,17 @@ static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
 
 fn env_default() -> Level {
     static ENV: OnceLock<Level> = OnceLock::new();
-    *ENV.get_or_init(|| {
-        std::env::var("GRATETILE_LOG").ok().and_then(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    *ENV.get_or_init(|| match std::env::var("GRATETILE_LOG") {
+        Ok(v) => Level::parse(&v).unwrap_or_else(|| {
+            // A typo'd level must not silently change verbosity: say so
+            // once (OnceLock caches this path) and fall back to info.
+            eprintln!(
+                "[warn] GRATETILE_LOG={v:?} is not a log level \
+                 (error|warn|info|debug|quiet); defaulting to info"
+            );
+            Level::Info
+        }),
+        Err(_) => Level::Info,
     })
 }
 
@@ -95,6 +104,11 @@ pub fn configure(verbose: bool, quiet: bool) {
         set_level(Level::Error);
     } else if verbose {
         set_level(Level::Debug);
+    } else {
+        // Resolve (and thereby validate) the env default eagerly: a
+        // typo'd GRATETILE_LOG warns once at startup rather than at
+        // the first log call — or, on a silent code path, never.
+        let _ = level();
     }
 }
 

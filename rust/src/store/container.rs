@@ -8,7 +8,8 @@
 //! ├────────────────────────────────────────────────────────────┤
 //! │ TOC      per tensor: name · codec policy (v2; + packed     │
 //! │          2-bit tag table for adaptive tensors) · division ·│
-//! │          sizes/addr tables · Fig. 7 block records ·        │
+//! │          sizes/addr tables · per-sub-tensor fnv1a64        │
+//! │          checksum table (v3) · Fig. 7 block records ·      │
 //! │          payload (offset, words, fnv1a64)                  │
 //! ├────────────────────────────────────────────────────────────┤
 //! │ payload  one 16-byte-aligned segment per tensor,           │
@@ -40,10 +41,13 @@ use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"GRTC";
 /// Current write version. v2 added the codec *policy* byte and, for
-/// adaptive tensors, the packed 2-bit codec tag table in the TOC. The
-/// reader accepts v1 (implicit uniform codec from the scheme byte) and
-/// v2.
-const VERSION: u32 = 2;
+/// adaptive tensors, the packed 2-bit codec tag table in the TOC. v3
+/// added the per-sub-tensor integrity checksum table (FNV-1a-64 over
+/// each sub-tensor's compressed words) the fetcher verifies on every
+/// payload read. The reader accepts v1 (implicit uniform codec from
+/// the scheme byte), v2, and v3 — pre-v3 tensors decode with an empty
+/// checksum table, which disables per-sub-tensor verification.
+const VERSION: u32 = 3;
 const MIN_VERSION: u32 = 1;
 const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8;
 
@@ -62,6 +66,17 @@ pub fn fnv1a64_continue(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a-64 over a word slice as little-endian bytes — the
+/// per-sub-tensor checksum rule shared by the packer, the streaming
+/// store writer, the v3 TOC table, and the fetcher's verify-on-fetch.
+pub fn fnv1a64_words(words: &[u16]) -> u64 {
+    let mut h = FNV1A64_OFFSET;
+    for &w in words {
+        h = fnv1a64_continue(h, &w.to_le_bytes());
     }
     h
 }
@@ -287,7 +302,7 @@ impl ContainerEntry {
 #[derive(Debug)]
 pub struct Container {
     pub path: PathBuf,
-    /// On-disk format version the file was written with (1 or 2).
+    /// On-disk format version the file was written with (1, 2 or 3).
     pub version: u32,
     pub entries: Vec<ContainerEntry>,
 }
@@ -300,11 +315,22 @@ pub struct FilePayload {
 
 impl PayloadSource for FilePayload {
     fn read_words(&mut self, addr_words: u64, n_words: usize, out: &mut Vec<u16>) {
-        self.file
-            .seek(SeekFrom::Start(self.base_bytes + addr_words * 2))
-            .expect("container payload seek");
+        // A seek/read failure (file truncated or shrunk after open) must
+        // not panic mid-fetch: deliver zeros for the unreadable span and
+        // let the integrity layer catch it — a zeroed sub-tensor fails
+        // its v3 checksum, and `Container::reader` already rejects
+        // segments the TOC says are short. Exactly `n_words` words are
+        // always appended (the fetcher's span accounting relies on it).
         let mut buf = vec![0u8; n_words * 2];
-        self.file.read_exact(&mut buf).expect("container payload read");
+        if self.file.seek(SeekFrom::Start(self.base_bytes + addr_words * 2)).is_ok() {
+            let mut filled = 0;
+            while filled < buf.len() {
+                match self.file.read(&mut buf[filled..]) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => filled += n,
+                }
+            }
+        }
         out.extend(buf.chunks_exact(2).map(|b| u16::from_le_bytes([b[0], b[1]])));
     }
 }
@@ -347,6 +373,18 @@ fn encode_entry(
     if version >= 2 && p.policy.is_adaptive() {
         // The v2 tag table: 2 bits per sub-tensor, packed 4 per byte.
         e.bytes(&pack_tags(&p.tags));
+    }
+    if version >= 3 {
+        // The v3 integrity table: one presence byte (a map re-exported
+        // from a pre-v3 file carries no checksums), then one FNV-1a-64
+        // per sub-tensor.
+        let present = p.checksums.len() == p.sizes_words.len();
+        e.u8(present as u8);
+        if present {
+            for &c in &p.checksums {
+                e.u64(c);
+            }
+        }
     }
     e.usize32(p.metadata.records.len());
     for r in &p.metadata.records {
@@ -406,6 +444,21 @@ fn decode_entry(dec: &mut Dec, version: u32) -> Result<ContainerEntry> {
     } else {
         Vec::new()
     };
+    let checksums = if version >= 3 {
+        match dec.u8()? {
+            0 => Vec::new(),
+            1 => {
+                let mut c = Vec::with_capacity(n);
+                for _ in 0..n {
+                    c.push(dec.u64()?);
+                }
+                c
+            }
+            other => bail!("container '{name}': bad checksum presence byte {other}"),
+        }
+    } else {
+        Vec::new()
+    };
     let n_rec = dec.usize32()?;
     if n_rec != division.n_blocks() {
         bail!("container '{name}': {n_rec} records for {} blocks", division.n_blocks());
@@ -440,6 +493,7 @@ fn decode_entry(dec: &mut Dec, version: u32) -> Result<ContainerEntry> {
             addr_words,
             metadata: MetadataTable { records, bits_per_record },
             payload: None,
+            checksums,
             total_words,
             words_per_line,
         },
@@ -464,10 +518,10 @@ impl Container {
         Self::write_with_version(path, entries, VERSION)
     }
 
-    /// Write a container pinned to a specific format version (`1` or
-    /// `2`). v1 has no codec-policy byte, so adaptive tensors are
-    /// rejected; this exists so the backward-compat suite can
-    /// materialise genuine v1 fixtures.
+    /// Write a container pinned to a specific format version (`1`–`3`).
+    /// v1 has no codec-policy byte, so adaptive tensors are rejected;
+    /// v2 has no integrity table. This exists so the backward-compat
+    /// suite can materialise genuine v1/v2 fixtures.
     pub fn write_with_version(
         path: &Path,
         entries: &[(String, &PackedFeatureMap)],
@@ -548,13 +602,29 @@ impl Container {
         let n_tensors = dec.u32()? as usize;
         let toc_len = dec.u64()? as usize;
         let toc_sum = dec.u64()?;
+        // Bound the TOC allocation by the actual file size before
+        // trusting the header-declared length — a corrupt or hostile
+        // header must produce a typed error, not an OOM attempt.
+        let file_len = f
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if toc_len as u64 > file_len.saturating_sub(HEADER_BYTES) {
+            bail!(
+                "{}: TOC length {toc_len} exceeds file size {file_len} (truncated or corrupt)",
+                path.display()
+            );
+        }
         let mut toc = vec![0u8; toc_len];
         f.read_exact(&mut toc).context("container TOC")?;
         if fnv1a64(&toc) != toc_sum {
             bail!("{}: TOC checksum mismatch (corrupt container)", path.display());
         }
         let mut dec = Dec { buf: &toc, at: 0 };
-        let mut entries = Vec::with_capacity(n_tensors);
+        // The header's tensor count is *not* covered by the TOC checksum
+        // — never pre-reserve from it (a flipped count must end in a
+        // decode error below, not a giant allocation here).
+        let mut entries = Vec::new();
         for _ in 0..n_tensors {
             entries.push(decode_entry(&mut dec, version)?);
         }
@@ -834,20 +904,22 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
-    /// v2 adaptive round trip: the packed tag table survives the TOC,
-    /// per-record tags are rebuilt, and mixed-codec windows decode
-    /// bit-exactly off the file.
+    /// v2 adaptive round trip (version-pinned): the packed tag table
+    /// survives the TOC, per-record tags are rebuilt, and mixed-codec
+    /// windows decode bit-exactly off the file. v2 has no integrity
+    /// table, so the reopened map's checksums are empty.
     #[test]
     fn v2_adaptive_roundtrip_with_tag_table() {
         let path = tmp("v2-adaptive.grate");
         let (fm, p) = packed_policy(DivisionMode::GrateTile { n: 8 }, CodecPolicy::Adaptive, 10);
-        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        Container::write_with_version(&path, &[("t".to_string(), &p)], 2).unwrap();
         let c = Container::open(&path).unwrap();
         assert_eq!(c.version, 2);
         c.verify().unwrap();
         let e = c.entry("t").unwrap();
         assert_eq!(e.packed.policy, CodecPolicy::Adaptive);
         assert_eq!(e.packed.tags, p.tags);
+        assert!(e.packed.checksums.is_empty());
         assert_eq!(e.packed.metadata.bits_per_record, p.metadata.bits_per_record);
         for (ra, rb) in e.packed.metadata.records.iter().zip(&p.metadata.records) {
             assert_eq!(ra.codec_tags, rb.codec_tags);
@@ -861,6 +933,57 @@ mod tests {
                 }
             }
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// v3 round trip: the per-sub-tensor integrity table survives the
+    /// TOC byte-exactly, for fixed and adaptive tensors alike.
+    #[test]
+    fn v3_roundtrip_carries_checksum_table() {
+        let path = tmp("v3-checksums.grate");
+        let (_, p_fixed) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 11);
+        let (_, p_auto) =
+            packed_policy(DivisionMode::Uniform { edge: 1 }, CodecPolicy::Adaptive, 12);
+        assert_eq!(p_fixed.checksums.len(), p_fixed.sizes_words.len());
+        Container::write(
+            &path,
+            &[("f".to_string(), &p_fixed), ("a".to_string(), &p_auto)],
+        )
+        .unwrap();
+        let c = Container::open(&path).unwrap();
+        assert_eq!(c.version, 3);
+        c.verify().unwrap();
+        assert_eq!(c.entry("f").unwrap().packed.checksums, p_fixed.checksums);
+        assert_eq!(c.entry("a").unwrap().packed.checksums, p_auto.checksums);
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The per-sub-tensor checksum is content-addressed: hashing each
+    /// payload slice reproduces the stored table exactly.
+    #[test]
+    fn checksums_match_payload_slices() {
+        let (_, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Zrlc, 13);
+        let payload = p.payload.as_ref().unwrap();
+        for li in 0..p.sizes_words.len() {
+            let a = p.addr_words[li] as usize;
+            let s = p.sizes_words[li] as usize;
+            assert_eq!(p.checksums[li], fnv1a64_words(&payload[a..a + s]), "sub {li}");
+        }
+    }
+
+    /// A header whose declared TOC length exceeds the file is a typed
+    /// error (no allocation-from-attacker-controlled-length, no panic).
+    #[test]
+    fn oversized_toc_length_rejected() {
+        let path = tmp("bad-toc-len.grate");
+        let (_, p) = packed(DivisionMode::GrateTile { n: 8 }, Scheme::Bitmask, 14);
+        Container::write(&path, &[("t".to_string(), &p)]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // toc_len lives at header bytes [12, 20).
+        bytes[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let e = Container::open(&path).unwrap_err();
+        assert!(e.to_string().contains("exceeds file size"), "{e}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -232,6 +232,8 @@ impl TensorStore {
                 bits_per_record: src.metadata.bits_per_record,
             },
             payload: Some(payload),
+            // Content-addressed, so rebasing leaves them valid as-is.
+            checksums: src.checksums.clone(),
             total_words,
             words_per_line: wpl,
         })
@@ -304,6 +306,7 @@ mod tests {
         assert_eq!(ex.addr_words, p.addr_words, "canonical layout matches the packer's");
         assert_eq!(ex.total_words, p.total_words);
         assert_eq!(ex.payload.as_ref().unwrap(), p.payload.as_ref().unwrap());
+        assert_eq!(ex.checksums, p.checksums, "checksums survive the rebase");
         let recs_ex: Vec<u64> =
             ex.metadata.records.iter().map(|r| r.pointer_words).collect();
         let recs_p: Vec<u64> =

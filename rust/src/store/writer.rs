@@ -84,6 +84,10 @@ pub struct StoreWriter<'s> {
     pending: Vec<Option<Vec<u16>>>,
     sizes_words: Vec<u32>,
     sizes_bits: Vec<u32>,
+    /// Per-sub-tensor FNV-1a-64 over the compressed words — the v3
+    /// integrity table, hashed at compression time (the words are
+    /// already in cache) so it rides the streamed write for free.
+    checksums: Vec<u64>,
     addr_words: Vec<u64>,
     records: Vec<Option<BlockRecord>>,
     block_remaining: Vec<u32>,
@@ -131,6 +135,7 @@ impl<'s> StoreWriter<'s> {
             pending: vec![None; n],
             sizes_words: vec![0; n],
             sizes_bits: vec![0; n],
+            checksums: vec![0; n],
             addr_words: vec![0; n],
             records: vec![None; division.n_blocks()],
             block_remaining,
@@ -228,6 +233,7 @@ impl<'s> StoreWriter<'s> {
         let (comp, bits) = codec.compress_with_bits(&buf);
         self.sizes_words[li] = comp.words.len() as u32;
         self.sizes_bits[li] = bits as u32;
+        self.checksums[li] = super::container::fnv1a64_words(&comp.words);
         self.pending[li] = Some(comp.words);
         self.completed_subs += 1;
         let b = self.division.block_linear(r);
@@ -324,6 +330,7 @@ impl<'s> StoreWriter<'s> {
             wpl,
             sizes_words,
             sizes_bits,
+            checksums,
             addr_words,
             records,
             block_remaining,
@@ -345,6 +352,7 @@ impl<'s> StoreWriter<'s> {
             addr_words,
             metadata: MetadataTable { records, bits_per_record: record_bits },
             payload: None,
+            checksums,
             total_words: payload_bits / 16,
             words_per_line: wpl,
         };
@@ -414,6 +422,10 @@ mod tests {
                 let t = store.get("t").unwrap();
                 assert_eq!(t.packed.sizes_words, reference.sizes_words, "{mode:?} {policy:?}");
                 assert_eq!(t.packed.tags, reference.tags, "{mode:?} {policy:?} tags");
+                assert_eq!(
+                    t.packed.checksums, reference.checksums,
+                    "{mode:?} {policy:?} checksums"
+                );
                 assert_eq!(t.packed.total_words, reference.total_words);
                 assert_eq!(
                     report.metadata_bits,

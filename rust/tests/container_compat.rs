@@ -98,7 +98,9 @@ fn v2_adaptive_pack_inspect_serve_roundtrip() {
     let packed = Packer::new(hw, CodecPolicy::Adaptive).pack(&fm, &division, true);
     let mut path = std::env::temp_dir();
     path.push(format!("gratetile-compat-v2-{}.grate", std::process::id()));
-    Container::write(&path, &[("act".to_string(), &packed)]).unwrap();
+    // Pinned to version 2: the default writer moved on to v3 (per-sub-
+    // tensor integrity checksums), and this test is the v2 compat pin.
+    Container::write_with_version(&path, &[("act".to_string(), &packed)], 2).unwrap();
 
     // Inspect: v2 header, adaptive policy, intact tag table + records.
     let c = Container::open(&path).unwrap();
@@ -124,5 +126,25 @@ fn v2_adaptive_pack_inspect_serve_roundtrip() {
     store.insert_packed("act", &c.read_tensor("act").unwrap()).unwrap();
     let mut d2 = Dram::default();
     assert_eq!(store.fetch_dense("act", &mut d2).unwrap().as_slice(), fm.as_slice());
+    std::fs::remove_file(&path).ok();
+}
+
+/// v3 (the default writer): the per-sub-tensor integrity checksum
+/// table survives the TOC round trip bit-exactly, one checksum per
+/// sub-tensor — the foundation the fetch-time verify/retry/quarantine
+/// path stands on.
+#[test]
+fn v3_default_write_carries_checksums() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let (fm, division) = fixture_map();
+    let packed = Packer::new(hw, Scheme::Bitmask).pack(&fm, &division, true);
+    let mut path = std::env::temp_dir();
+    path.push(format!("gratetile-compat-v3-{}.grate", std::process::id()));
+    Container::write(&path, &[("act".to_string(), &packed)]).unwrap();
+    let c = Container::open(&path).unwrap();
+    assert_eq!(c.version, 3);
+    let e = c.entry("act").unwrap();
+    assert_eq!(e.packed.checksums.len(), e.packed.sizes_words.len());
+    assert_eq!(e.packed.checksums, packed.checksums);
     std::fs::remove_file(&path).ok();
 }

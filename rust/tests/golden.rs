@@ -179,6 +179,28 @@ fn golden_trace_rollup_table() {
     check_golden("trace_rollup.csv", &renders[0]);
 }
 
+/// ISSUE 8 tentpole acceptance: the chaos study — seeded fault
+/// injection swept against defense policies — is a golden artifact,
+/// byte-identical across `--jobs` ∈ {1, 2, 8}. Fault decisions are
+/// pure hashes of (seed, site, request, address), so neither the
+/// functional fan-out width nor host scheduling may leak into a byte.
+#[test]
+fn golden_chaos_table_identical_across_jobs() {
+    let mut renders = Vec::new();
+    for jobs in [1usize, 2, 8] {
+        set_threads(jobs);
+        renders.push((jobs, harness::chaos_table().render_csv()));
+    }
+    set_threads(0);
+    for (jobs, r) in &renders[1..] {
+        assert_eq!(
+            r, &renders[0].1,
+            "chaos table bytes diverge between --jobs 1 and --jobs {jobs}"
+        );
+    }
+    check_golden("chaos.csv", &renders[0].1);
+}
+
 /// ISSUE 6 satellite (d): the GEMM compute-backend study table —
 /// measured MAC counts, skip counters and oracle bit-exactness flags —
 /// is a golden artifact, byte-stable across `--jobs`.

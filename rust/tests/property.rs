@@ -94,6 +94,9 @@ fn prop_engine_matches_seed_packer() {
         if oracle.payload != engine.payload {
             return Err(format!("{tag}: payload bytes diverge"));
         }
+        if oracle.checksums != engine.checksums {
+            return Err(format!("{tag}: integrity checksums diverge"));
+        }
         if oracle.metadata.records.len() != engine.metadata.records.len() {
             return Err(format!("{tag}: record counts diverge"));
         }
@@ -431,6 +434,104 @@ fn prop_store_container_roundtrip() {
         }
         Ok(())
     });
+}
+
+/// ISSUE 8 satellite: a randomly truncated or bit-flipped `.grate`
+/// file must never panic on open or fetch. Every structural violation
+/// is a typed error (bad magic, short TOC, checksum mismatch, short
+/// payload); payload-only corruption decodes to garbage data, never a
+/// crash — the decoders are corruption-tolerant by contract.
+#[test]
+fn prop_corrupt_container_never_panics() {
+    forall_res(0xFA17, 6, gen_scenario, |sc| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let (h, w, c) = (sc.layer.h, sc.layer.w, sc.layer.c_in);
+        let tile = hw.tile_for_layer(&sc.layer);
+        let division = match Division::build(sc.mode, &sc.layer, &tile, &hw, h, w, c) {
+            Ok(d) => d,
+            Err(_) => return Ok(()),
+        };
+        let fm = generate(h, w, c, SparsityParams::clustered(sc.density.max(0.2), sc.seed));
+        let mut store = TensorStore::new();
+        let mut writer = StoreWriter::new(&mut store, "t", division, sc.policy);
+        let data = fm.extract_block(0, 0, 0, h, w, c);
+        writer.write_tile(0, h, 0, w, 0, c, &data);
+        writer.finish().map_err(|e| e.to_string())?;
+        let exported = store.export("t").map_err(|e| e.to_string())?;
+        let mut path = std::env::temp_dir();
+        path.push(format!("gratetile-chaos-{}-{}.grate", std::process::id(), sc.seed));
+        Container::write(&path, &[("t".to_string(), &exported)])
+            .map_err(|e| e.to_string())?;
+        let pristine = std::fs::read(&path).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+
+        let mut rng = SplitMix64::new(sc.seed ^ 0xBAD);
+        let mut mangled = path.clone();
+        mangled.set_extension("mangled.grate");
+        for trial in 0..24 {
+            let mut bytes = pristine.clone();
+            if trial % 2 == 0 {
+                // Truncate at a random offset (including inside the
+                // header, the TOC and the payload region).
+                bytes.truncate(rng.below(bytes.len() + 1));
+            } else {
+                // Flip a random bit anywhere in the file.
+                let at = rng.below(bytes.len());
+                bytes[at] ^= 1 << rng.below(8);
+            }
+            std::fs::write(&mangled, &bytes).map_err(|e| e.to_string())?;
+            // Every call below must return (Ok or Err) — never panic.
+            if let Ok(cont) = Container::open(&mangled) {
+                let mut dram = Dram::default();
+                let _ = cont.fetch_window("t", &mut dram, 0, h, 0, w, 0, c);
+                let _ = cont.read_tensor("t");
+                let _ = cont.verify();
+            }
+        }
+        std::fs::remove_file(&mangled).ok();
+        Ok(())
+    });
+}
+
+/// ISSUE 8 acceptance: chaos runs are deterministic in the host worker
+/// count. With payload faults, integrity retries, deadlines and
+/// shedding ALL active, the same seed renders byte-identical serving
+/// reports across `--jobs` ∈ {1, 2, 8} — fault decisions are pure
+/// hashes of (plan seed, site, request, address), never of scheduling.
+#[test]
+fn prop_chaos_report_deterministic_across_jobs() {
+    use gratetile::coordinator::simserver::{ServingPolicy, SimServer, SimServerConfig};
+    use gratetile::coordinator::PipelineConfig;
+    use gratetile::fault::FaultPlan;
+    use gratetile::layout::IntegrityPolicy;
+    use gratetile::util::parallel::set_threads;
+    let l1 = ConvLayer::new(1, 1, 16, 16, 8, 8);
+    let l2 = ConvLayer::new(1, 2, 16, 16, 8, 8);
+    let layers = vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))];
+    let mut cfg = SimServerConfig::new(PipelineConfig::new(Platform::NvidiaSmallTile.hardware()));
+    cfg.pipeline.fault = Some(FaultPlan::uniform(41, 0.3));
+    cfg.pipeline.integrity = Some(IntegrityPolicy::default());
+    cfg.serving = ServingPolicy {
+        deadline_cycles: 30_000_000,
+        retry_budget: 1,
+        shed_batch_on_overload: true,
+        waiting_depth: 0,
+    };
+    let server = SimServer::new(cfg, layers);
+    let reqs = server.synthetic_requests(8, 0.45, 21);
+    let mut renders = Vec::new();
+    for jobs in [1usize, 2, 8] {
+        set_threads(jobs);
+        let report = server.serve(reqs.clone()).unwrap();
+        renders.push((jobs, report.render()));
+    }
+    set_threads(0);
+    for (jobs, r) in &renders[1..] {
+        assert_eq!(
+            r, &renders[0].1,
+            "chaos report bytes diverge between --jobs 1 and --jobs {jobs}"
+        );
+    }
 }
 
 /// Arena invariants under randomized size churn: line alignment, no
