@@ -1,0 +1,97 @@
+//! Perf bench: auto-tuner search cost and memoization payoff (ISSUE 9).
+//!
+//! §Perf acceptance (EXPERIMENTS.md, asserted below):
+//!
+//! * fidelity: the cold search is never worse than the best fixed
+//!   preset (and the default plan) on every study layer, and a warm
+//!   re-tune of the full zoo is 100% memo hits with a byte-identical
+//!   manifest;
+//! * the memoized full-zoo re-tune is interactive-class: median
+//!   < 1 s for the whole study (in practice it is micro-seconds — a
+//!   hash per layer — so the gate has orders-of-magnitude headroom).
+//!
+//! Timing gates are noisy on shared hosts, so the gate re-measures up
+//! to five times before failing (latest sample wins). Results append to
+//! `results/bench.csv` and land machine-readable in `BENCH_TUNE.json`
+//! at the repo root (CI uploads it per commit).
+
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::config::zoo::network_layers;
+use gratetile::harness::TUNE_STUDY_NETWORKS;
+use gratetile::sim::experiment::bench_feature_map;
+use gratetile::tensor::FeatureMap;
+use gratetile::tune::Tuner;
+use gratetile::util::benchkit::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let hw = Platform::EyerissLargeTile.hardware();
+
+    // The full default study zoo, maps synthesised once up front.
+    let layers: Vec<(String, ConvLayer, FeatureMap)> = TUNE_STUDY_NETWORKS
+        .iter()
+        .flat_map(|&net| network_layers(net))
+        .map(|bl| {
+            let fm = bench_feature_map(&bl);
+            (format!("{}.{}", bl.network.name(), bl.name), bl.layer, fm)
+        })
+        .collect();
+    let n = layers.len() as u64;
+
+    // ---- Fidelity: cold search quality, then warm bit-identity ----
+    let mut tuner = Tuner::new(hw);
+    let (manifest, results) = tuner.tune_network(&layers);
+    let mut nodes = 0u64;
+    let mut pruned = 0u64;
+    for (r, (name, _, _)) in results.iter().zip(&layers) {
+        assert!(!r.memo_hit, "{name}: cold pass must not memo-hit");
+        assert!(
+            r.total_bits() <= r.best_preset_total,
+            "{name}: tuned {} > best preset {}",
+            r.total_bits(),
+            r.best_preset_total
+        );
+        assert!(
+            r.best_preset_total <= r.default_total,
+            "{name}: best preset worse than the default plan"
+        );
+        nodes += r.nodes;
+        pruned += r.pruned;
+    }
+    println!(
+        "tune cold quality      {n} layers, {nodes} nodes priced, {pruned} pruned, never worse"
+    );
+    let (warm_manifest, warm) = tuner.tune_network(&layers);
+    assert!(warm.iter().all(|r| r.memo_hit), "warm full-zoo re-tune must be all memo hits");
+    assert_eq!(
+        warm_manifest.render(),
+        manifest.render(),
+        "memoized manifest bytes diverge from the cold search"
+    );
+    println!("tune warm fidelity     manifest byte-identical, {} memo hits", tuner.memo_hits);
+
+    // ---- Measurements: cold search vs memoized re-tune ----
+    b.bench_items("tune/cold/zoo", n, || Tuner::new(hw).tune_network(&layers).1.len());
+
+    // ---- Gate: memoized full-zoo re-tune < 1 s median ----
+    let mut med = f64::INFINITY;
+    for attempt in 1..=5 {
+        let s = b.bench_items("tune/warm/zoo", n, || tuner.tune_network(&layers).1.len());
+        med = s.median_ns;
+        println!("tune warm full-zoo     {:>10.1} us median  (attempt {attempt})", med / 1e3);
+        if med < 1e9 {
+            break;
+        }
+    }
+    assert!(
+        med < 1e9,
+        "memoized full-zoo re-tune took {:.1} ms, breaching the 1 s gate",
+        med / 1e6
+    );
+    b.report_speedup("tune/warm/zoo", "tune/cold/zoo");
+
+    b.write_csv("perf_tune");
+    b.write_json("perf_tune", "../BENCH_TUNE.json");
+    println!("perf_tune: all acceptance asserts passed");
+}

@@ -33,6 +33,7 @@ use crate::sim::walker::TileWalker;
 use crate::store::{StoreWriter, TensorStore};
 use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, DivisionMode};
+use crate::tune::LayerPlan;
 use crate::util::error::{Context, Result};
 use std::sync::mpsc::{channel, sync_channel};
 use std::time::{Duration, Instant};
@@ -118,20 +119,55 @@ impl LayerTrace {
 /// Executes layers tile-by-tile.
 pub struct LayerRunner {
     pub cfg: PipelineConfig,
+    /// Per-layer tuned plans: entry `i` governs layer `i`'s *input* map
+    /// (its division mode and codec policy). Empty = every map uses the
+    /// global `cfg.mode`/`cfg.policy`, the historical behaviour.
+    plans: Vec<LayerPlan>,
 }
 
 impl LayerRunner {
     pub fn new(cfg: PipelineConfig) -> Self {
-        Self { cfg }
+        Self { cfg, plans: Vec::new() }
     }
 
-    /// Pack a dense feature map for this pipeline's storage scheme.
+    /// Attach per-layer tuned plans (from a tuned manifest; see
+    /// [`crate::tune`]). Positional: plan `i` applies to layer `i`'s
+    /// input map. Layers beyond the list fall back to the global config.
+    pub fn with_plans(mut self, plans: Vec<LayerPlan>) -> Self {
+        self.plans = plans;
+        self
+    }
+
+    /// The plan for layer `i`'s input map: tuned if provided, otherwise
+    /// the global config as a plan.
+    pub fn plan_for(&self, i: usize) -> LayerPlan {
+        self.plans.get(i).copied().unwrap_or(LayerPlan {
+            mode: self.cfg.mode,
+            policy: self.cfg.policy,
+            order: crate::sim::metacache::TileOrder::SpatialMajor,
+        })
+    }
+
+    /// Pack a dense feature map for this pipeline's storage scheme
+    /// (layer 0's input plan when tuned plans are attached).
     pub fn pack(&self, layer: &ConvLayer, fm: &FeatureMap) -> Result<PackedFeatureMap> {
+        let p = self.plan_for(0);
+        self.pack_with(layer, fm, p.mode, p.policy)
+    }
+
+    /// Pack under an explicit `(mode, policy)` — the per-layer seam the
+    /// tuned path and `store pack --tuned` drive directly.
+    pub fn pack_with(
+        &self,
+        layer: &ConvLayer,
+        fm: &FeatureMap,
+        mode: DivisionMode,
+        policy: CodecPolicy,
+    ) -> Result<PackedFeatureMap> {
         let tile = self.cfg.hw.tile_for_layer(layer);
-        let division =
-            Division::build(self.cfg.mode, layer, &tile, &self.cfg.hw, fm.h, fm.w, fm.c)
-                .context("building division")?;
-        Ok(Packer::new(self.cfg.hw, self.cfg.policy).pack(fm, &division, true))
+        let division = Division::build(mode, layer, &tile, &self.cfg.hw, fm.h, fm.w, fm.c)
+            .context("building division")?;
+        Ok(Packer::new(self.cfg.hw, policy).pack(fm, &division, true))
     }
 
     /// Run one layer over a packed input; returns the ReLU'd output map
@@ -254,10 +290,23 @@ impl LayerRunner {
         w: usize,
         c: usize,
     ) -> Result<Division> {
+        self.output_division_with(self.cfg.mode, consumer, h, w, c)
+    }
+
+    /// [`LayerRunner::output_division`] under an explicit mode — the
+    /// per-layer seam the tuned network path drives.
+    pub fn output_division_with(
+        &self,
+        mode: DivisionMode,
+        consumer: Option<&ConvLayer>,
+        h: usize,
+        w: usize,
+        c: usize,
+    ) -> Result<Division> {
         let fallback = ConvLayer::new(0, 1, h, w, c, c);
         let consumer = consumer.copied().unwrap_or(fallback);
         let tile = self.cfg.hw.tile_for_layer(&consumer);
-        match Division::build(self.cfg.mode, &consumer, &tile, &self.cfg.hw, h, w, c) {
+        match Division::build(mode, &consumer, &tile, &self.cfg.hw, h, w, c) {
             Ok(d) => Ok(d),
             Err(_) => {
                 Division::build(
@@ -324,6 +373,32 @@ impl LayerRunner {
         weights: &Weights,
         out_division: Division,
     ) -> Result<(PipelineMetrics, LayerTrace)> {
+        self.run_layer_store_traced_policy(
+            store,
+            input,
+            output,
+            layer,
+            weights,
+            out_division,
+            self.cfg.policy,
+        )
+    }
+
+    /// [`LayerRunner::run_layer_store_traced`] with an explicit codec
+    /// policy for the *output* map — the per-layer seam the tuned
+    /// network path drives (the output of layer `i` is the input of
+    /// layer `i+1`, so it is written under layer `i+1`'s plan).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_layer_store_traced_policy(
+        &self,
+        store: &mut TensorStore,
+        input: &str,
+        output: &str,
+        layer: &ConvLayer,
+        weights: &Weights,
+        out_division: Division,
+        out_policy: CodecPolicy,
+    ) -> Result<(PipelineMetrics, LayerTrace)> {
         let tile = self.cfg.hw.tile_for_layer(layer);
         let walker = TileWalker::new(*layer, tile);
         let (out_h, out_w) = (layer.out_h(), layer.out_w());
@@ -342,7 +417,7 @@ impl LayerRunner {
         }
         // Computed here: `snap_packed` moves into the prefetch lane.
         let input_bits_by_codec = snap_packed.payload_bits_by_tag();
-        let mut writer = StoreWriter::new(store, output, out_division, self.cfg.policy);
+        let mut writer = StoreWriter::new(store, output, out_division, out_policy);
 
         let depth = self.cfg.prefetch_depth.max(1);
         let track = self.cfg.skip == SkipPolicy::ZeroSkip;
@@ -499,11 +574,22 @@ impl LayerRunner {
         let mut per_layer = Vec::with_capacity(layers.len());
         for (i, (layer, weights)) in layers.iter().enumerate() {
             let next = layers.get(i + 1).map(|(l, _)| l);
-            let div = self.output_division(next, layer.out_h(), layer.out_w(), layer.c_out)?;
+            // Layer i's output is layer i+1's input: store it under the
+            // consumer's plan. Past the last tuned entry this is the
+            // global config, preserving the untuned behaviour.
+            let out_plan = self.plan_for(i + 1);
+            let div = self.output_division_with(
+                out_plan.mode,
+                next,
+                layer.out_h(),
+                layer.out_w(),
+                layer.c_out,
+            )?;
             let in_name = format!("{prefix}{i}");
             let out_name = format!("{prefix}{}", i + 1);
-            let m =
-                self.run_layer_store_traced(store, &in_name, &out_name, layer, weights, div)?;
+            let m = self.run_layer_store_traced_policy(
+                store, &in_name, &out_name, layer, weights, div, out_plan.policy,
+            )?;
             per_layer.push(m);
             store.remove(&in_name)?;
         }
@@ -753,6 +839,37 @@ mod tests {
         assert_eq!(traces[0].fetch, traces2[0].fetch);
         assert_eq!(traces[0].write, traces2[0].write);
         assert_eq!(out_a.as_slice(), out_b.as_slice());
+    }
+
+    /// Per-layer tuned plans change only *how* maps are stored, never
+    /// what the network computes: a mixed-plan run (different division
+    /// mode and codec per layer) matches the untuned run bit-for-bit.
+    #[test]
+    fn tuned_plans_preserve_network_output() {
+        use crate::compress::Scheme;
+        use crate::sim::metacache::TileOrder;
+        let l1 = ConvLayer::new(1, 1, 16, 16, 8, 8);
+        let l2 = ConvLayer::new(1, 2, 16, 16, 8, 16);
+        let layers = vec![(l1, Weights::random(&l1, 1)), (l2, Weights::random(&l2, 2))];
+        let input = generate(16, 16, 8, SparsityParams::clustered(0.5, 7));
+        let base = LayerRunner::new(cfg());
+        let (out_a, _) = base.run_network(&layers, input.clone()).unwrap();
+        let plans = vec![
+            LayerPlan {
+                mode: DivisionMode::Uniform { edge: 4 },
+                policy: CodecPolicy::Adaptive,
+                order: TileOrder::SpatialMajor,
+            },
+            LayerPlan {
+                mode: DivisionMode::Anchored { edge: 8, anchor: 1 },
+                policy: CodecPolicy::Fixed(Scheme::Zrlc),
+                order: TileOrder::ChannelMajor,
+            },
+        ];
+        let tuned = LayerRunner::new(cfg()).with_plans(plans);
+        let (out_b, metrics) = tuned.run_network(&layers, input).unwrap();
+        assert_eq!(out_a.as_slice(), out_b.as_slice());
+        assert_eq!(metrics.len(), 2);
     }
 
     #[test]

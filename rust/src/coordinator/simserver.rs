@@ -506,11 +506,23 @@ impl SimServerReport {
 pub struct SimServer {
     cfg: SimServerConfig,
     layers: Vec<(ConvLayer, Weights)>,
+    /// Per-layer tuned plans applied to every request's pipeline
+    /// (positional, layer `i`'s input map; empty = untuned).
+    plans: Vec<crate::tune::LayerPlan>,
 }
 
 impl SimServer {
     pub fn new(cfg: SimServerConfig, layers: Vec<(ConvLayer, Weights)>) -> Self {
-        Self { cfg, layers }
+        Self { cfg, layers, plans: Vec::new() }
+    }
+
+    /// Serve under per-layer tuned plans (from a tuned manifest): every
+    /// request's store-resident pipeline packs and writes each layer's
+    /// map under its tuned `(division, codec)` instead of the global
+    /// config.
+    pub fn with_plans(mut self, plans: Vec<crate::tune::LayerPlan>) -> Self {
+        self.plans = plans;
+        self
     }
 
     pub fn cfg(&self) -> &SimServerConfig {
@@ -553,7 +565,7 @@ impl SimServer {
             // id, not anything scheduling-dependent).
             let mut pipeline = self.cfg.pipeline;
             pipeline.fault_salt = req.id;
-            let runner = LayerRunner::new(pipeline);
+            let runner = LayerRunner::new(pipeline).with_plans(self.plans.clone());
             let (out, per_layer, traces) =
                 runner.run_network_traced(&self.layers, req.input.clone())?;
             // Prefer the GEMM kernel's measured MAC count over the

@@ -57,6 +57,24 @@ pub fn ablation_codecs() -> Table {
         "-".to_string(),
         "-".to_string(),
     ]);
+    // The auto-tuner as the final row: per-layer search over division ×
+    // codec × order (see `crate::tune`), verified here through the same
+    // independent pack-and-price path as every fixed row.
+    let tuned = |d: f64| {
+        let fm = generate(56, 56, 64, SparsityParams::clustered(d, 31));
+        let r = crate::tune::Tuner::new(hw).tune_layer(&layer, &fm);
+        run_layer(&hw, &layer, &fm, r.plan.mode, r.plan.policy)
+            .map(|x| format!("{:.1}", x.saving_with_meta() * 100.0))
+            .unwrap_or("N/A".into())
+    };
+    t.row(vec![
+        "tuned".to_string(),
+        tuned(0.37),
+        tuned(0.15),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
     t
 }
 
@@ -155,15 +173,16 @@ mod tests {
     use super::*;
 
     #[test]
-    fn codec_ablation_has_all_codecs_and_auto() {
+    fn codec_ablation_has_all_codecs_auto_and_tuned() {
         let csv = ablation_codecs().render_csv();
-        for name in ["bitmask", "zrlc", "dictionary", "raw", "auto"] {
+        for name in ["bitmask", "zrlc", "dictionary", "raw", "auto", "tuned"] {
             assert!(csv.contains(name), "{csv}");
         }
         // The auto row's saving must track the best fixed codec at both
         // densities: its payload is the per-sub-tensor min, and the tag
         // overhead is ~0.1pp of baseline at this geometry (plus up to
-        // 0.1pp of display rounding on each side).
+        // 0.1pp of display rounding on each side). The tuned row also
+        // searches divisions, so it must track auto in turn.
         let rows: Vec<Vec<f64>> = csv
             .lines()
             .skip(1)
@@ -175,11 +194,15 @@ mod tests {
                     .collect()
             })
             .collect();
-        let auto = rows.last().unwrap();
-        for fixed in &rows[..rows.len() - 1] {
+        let tuned = rows.last().unwrap();
+        let auto = &rows[rows.len() - 2];
+        for fixed in &rows[..rows.len() - 2] {
             for (&a, &f) in auto.iter().zip(fixed) {
                 assert!(a >= f - 0.3, "auto {auto:?} vs fixed {fixed:?}");
             }
+        }
+        for (&t, &a) in tuned.iter().zip(auto) {
+            assert!(t >= a - 0.3, "tuned {tuned:?} vs auto {auto:?}");
         }
     }
 

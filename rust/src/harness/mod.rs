@@ -9,8 +9,10 @@ pub mod ablation;
 pub mod extended;
 pub mod figures;
 pub mod tables;
+pub mod tuning;
 
 pub use ablation::{ablation_codecs, ablation_dilated, ablation_sweep, ablation_whole_channel};
+pub use tuning::{tune_study, tune_study_with, tune_table, TUNE_STUDY_NETWORKS};
 pub use extended::{
     access_table, chaos_table, codec_datapath_table, gemm_table, metacache_table, network_table,
     roofline_table, serve_scaling_table, store_compare_table, trace_rollup_table,

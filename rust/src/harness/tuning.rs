@@ -1,0 +1,122 @@
+//! The `gratetile tune` study: per-layer tuned plans vs the fixed
+//! presets, over the benchmark layer zoo.
+//!
+//! Each row is one zoo layer: the default plan's priced cost, the best
+//! fixed preset (any Table III division × any codec policy), the tuned
+//! plan the branch-and-bound search found, its priced fetch/metadata
+//! split, the saving over the best preset, and the search accounting
+//! (nodes priced, nodes pruned, memo hits). The emitted
+//! [`TunedManifest`] is the machine half of the same study — what
+//! `store pack --tuned` and the serving simulator consume.
+
+use crate::config::hardware::Platform;
+use crate::config::zoo::{network_layers, Network};
+use crate::sim::experiment::bench_feature_map;
+use crate::tune::{feature_map_sig, TunedManifest, Tuner};
+use crate::util::table::Table;
+
+/// The networks the default study covers. AlexNet + ResNet-18 span
+/// small ragged maps, strides and pointwise layers while keeping the
+/// cold-search cost CI-friendly (the VGG/VDSR maps are megaword-scale).
+pub const TUNE_STUDY_NETWORKS: &[Network] = &[Network::AlexNet, Network::ResNet18];
+
+/// Run the tuning study over `networks` with a caller-owned [`Tuner`]:
+/// repeated layer specs — within this call or remembered from earlier
+/// studies on the same tuner — are memo hits (`memo` column, zero
+/// nodes). Returns the rendered table plus the tuned manifest.
+pub fn tune_study_with(tuner: &mut Tuner, networks: &[Network]) -> (Table, TunedManifest) {
+    let mut t = Table::new("Auto-tuned plans vs fixed presets (priced bits)").header(vec![
+        "Layer",
+        "d",
+        "default bits",
+        "best preset",
+        "preset bits",
+        "tuned plan",
+        "fetch bits",
+        "meta bits",
+        "vs preset %",
+        "nodes",
+        "pruned",
+        "memo",
+    ]);
+    let mut manifest = TunedManifest::default();
+    for &net in networks {
+        for b in network_layers(net) {
+            let fm = bench_feature_map(&b);
+            let r = tuner.tune_layer(&b.layer, &fm);
+            let name = format!("{}.{}", net.name(), b.name);
+            manifest.entries.push((name.clone(), r.entry(feature_map_sig(&fm))));
+            let total = r.total_bits();
+            let delta = if r.best_preset_total == 0 {
+                "0.00".to_string()
+            } else {
+                format!(
+                    "{:+.2}",
+                    (total as f64 - r.best_preset_total as f64) / r.best_preset_total as f64
+                        * 100.0
+                )
+            };
+            t.row(vec![
+                name,
+                format!("{:.2}", b.density),
+                r.default_total.to_string(),
+                r.best_preset.key(),
+                r.best_preset_total.to_string(),
+                r.plan.key(),
+                r.cost.fetched_bits.to_string(),
+                r.cost.metadata_bits.to_string(),
+                delta,
+                r.nodes.to_string(),
+                r.pruned.to_string(),
+                if r.memo_hit { "hit" } else { "-" }.to_string(),
+            ]);
+        }
+    }
+    (t, manifest)
+}
+
+/// The study with a fresh tuner on the Eyeriss-class platform (what the
+/// CLI and the golden fixture run).
+pub fn tune_study(networks: &[Network]) -> (Table, TunedManifest) {
+    let mut tuner = Tuner::new(Platform::EyerissLargeTile.hardware());
+    tune_study_with(&mut tuner, networks)
+}
+
+/// The default study ([`TUNE_STUDY_NETWORKS`]).
+pub fn tune_table() -> Table {
+    tune_study(TUNE_STUDY_NETWORKS).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn study_rows_never_worse_and_warm_rerun_is_all_memo_hits() {
+        let mut tuner = Tuner::new(Platform::EyerissLargeTile.hardware());
+        let (cold, m_cold) = tune_study_with(&mut tuner, &[Network::AlexNet]);
+        let csv = cold.render_csv();
+        for line in csv.lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            let default: u64 = cols[2].parse().unwrap();
+            let preset: u64 = cols[4].parse().unwrap();
+            let fetch: u64 = cols[6].parse().unwrap();
+            let meta: u64 = cols[7].parse().unwrap();
+            assert!(fetch + meta <= preset, "tuned worse than best preset: {line}");
+            assert!(preset <= default, "best preset worse than default: {line}");
+            assert_eq!(cols[11], "-", "cold pass must not memo-hit: {line}");
+        }
+        // Same tuner, same study: every layer is a memo hit with zero
+        // search nodes, and the manifest bytes are identical.
+        let (warm, m_warm) = tune_study_with(&mut tuner, &[Network::AlexNet]);
+        for line in warm.render_csv().lines().skip(1) {
+            let cols: Vec<&str> = line.split(',').collect();
+            assert_eq!(cols[11], "hit", "warm pass must memo-hit: {line}");
+            assert_eq!(cols[9], "0", "memo hits price no nodes: {line}");
+        }
+        assert_eq!(m_cold.render(), m_warm.render());
+        assert_eq!(tuner.memo_hits, 4);
+        // The manifest round-trips through its text form.
+        assert_eq!(TunedManifest::parse(&m_cold.render()).unwrap(), m_cold);
+    }
+}

@@ -49,6 +49,9 @@ pub fn metadata_bits_per_kb(mode: DivisionMode, hw: &Hardware) -> f64 {
             }
         }
         DivisionMode::WholeMap => 0.0,
+        // Anchored: same economics as aligned Uniform (one pointer per
+        // edge×edge×8 block); only the cut positions differ.
+        DivisionMode::Anchored { edge, .. } => record(hw.pointer_bits, edge * edge * 8),
     }
 }
 

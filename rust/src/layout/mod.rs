@@ -19,4 +19,4 @@ pub use fetcher::{
     FetchCounters, Fetcher, IntegrityPolicy, PayloadSource, SegmentPayload, SlicePayload,
 };
 pub use metadata::{metadata_bits_per_kb, size_field_bits_for};
-pub use packer::{PackedFeatureMap, Packer};
+pub use packer::{size_all_codecs, AllCodecSizes, PackedFeatureMap, Packer};

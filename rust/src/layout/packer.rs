@@ -590,6 +590,77 @@ fn plan_sizes(
     }
 }
 
+/// Exact `(words, bits)` of **every registered codec** for every
+/// sub-tensor of `division`, flattened `[li × n_codecs + tag]` — the
+/// auto-tuner's sizing substrate. One fused stats pass per sub-tensor
+/// (the same scan [`plan_sizes`] does under `Adaptive`) prices all
+/// codecs at once, so a plan search over codec policies costs one pass
+/// over the map per division candidate, never a re-pack. Results are
+/// position-indexed and computed with the deterministic-order parallel
+/// map, hence byte-stable for any `--jobs`.
+pub struct AllCodecSizes {
+    pub n_codecs: usize,
+    sizes: Vec<(u32, u32)>,
+}
+
+impl AllCodecSizes {
+    /// `(words, bits)` of sub-tensor `li` under codec tag `tag`.
+    #[inline]
+    pub fn at(&self, li: usize, tag: usize) -> (u32, u32) {
+        self.sizes[li * self.n_codecs + tag]
+    }
+
+    /// Number of sub-tensors covered.
+    pub fn n_subtensors(&self) -> usize {
+        self.sizes.len() / self.n_codecs
+    }
+}
+
+/// Size every registered codec on every sub-tensor of `division` in one
+/// stats pass each. See [`AllCodecSizes`].
+pub fn size_all_codecs(fm: &FeatureMap, division: &Division) -> AllCodecSizes {
+    let reg = Registry::global();
+    let n = division.n_subtensors();
+    let n_codecs = reg.entries().len();
+    let dict_cap = reg.max_stats_dict_cap();
+    let data = fm.as_slice();
+
+    let size_one = |st: &mut PlanScratch, li: usize| -> Vec<(u32, u32)> {
+        let (sy, sx, c0, cdep) = geom(division, li);
+        let mut acc = StatsAcc::new(dict_cap, st.tracker.as_mut());
+        for y in sy.start..sy.end() {
+            let row = y * fm.w;
+            for x in sx.start..sx.end() {
+                let px = (row + x) * fm.c + c0;
+                acc.feed(&data[px..px + cdep]);
+            }
+        }
+        let stats = acc.finish();
+        let block = if reg.any_stats_blind(&stats) {
+            fm.extract_block_into(sy.start, sx.start, c0, sy.len, sx.len, cdep, &mut st.block);
+            Some(st.block.as_slice())
+        } else {
+            None
+        };
+        reg.sizes_from(&stats, block, &mut st.sizes);
+        st.sizes.iter().map(|&(w, b)| (w as u32, b as u32)).collect()
+    };
+    let init = || PlanScratch {
+        tracker: (dict_cap > 0).then(DistinctTracker::new),
+        block: Vec::new(),
+        sizes: Vec::new(),
+    };
+
+    let per_li: Vec<Vec<(u32, u32)>> = if fm.words() >= PAR_MIN_ELEMS && n > 1 {
+        let idxs: Vec<usize> = (0..n).collect();
+        par_map_init(&idxs, init, |st, _, &li| size_one(st, li))
+    } else {
+        let mut st = init();
+        (0..n).map(|li| size_one(&mut st, li)).collect()
+    };
+    AllCodecSizes { n_codecs, sizes: per_li.into_iter().flatten().collect() }
+}
+
 /// Serial prefix walk over the block raster: with every size known, all
 /// final addresses, records and the total footprint follow in O(n)
 /// arithmetic — the seed's cursor discipline without any compression or
@@ -913,6 +984,26 @@ mod tests {
         let compact = packer_c.pack(&fm_c, &div_c, false);
         let exact: u64 = compact.sizes_bits.iter().map(|&b| b as u64).sum();
         assert_eq!(compact.payload_bits_by_tag().iter().sum::<u64>(), exact);
+    }
+
+    /// The tuner's sizing substrate agrees exactly with what a real pack
+    /// under each fixed codec produces — per sub-tensor, words and bits.
+    #[test]
+    fn size_all_codecs_matches_fixed_packs() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        for mode in [DivisionMode::GrateTile { n: 8 }, DivisionMode::Uniform { edge: 1 }] {
+            let (fm, div, _) = setup(mode, 0.4);
+            let all = size_all_codecs(&fm, &div);
+            assert_eq!(all.n_subtensors(), div.n_subtensors());
+            for (tag, entry) in Registry::global().entries().iter().enumerate() {
+                let packed = Packer::new(hw, entry.scheme).pack(&fm, &div, false);
+                for li in 0..div.n_subtensors() {
+                    let (w, b) = all.at(li, tag);
+                    assert_eq!(w, packed.sizes_words[li], "{mode:?} {} sub {li}", entry.name);
+                    assert_eq!(b, packed.sizes_bits[li], "{mode:?} {} sub {li}", entry.name);
+                }
+            }
+        }
     }
 
     #[test]

@@ -34,4 +34,5 @@ pub mod sim;
 pub mod store;
 pub mod tensor;
 pub mod tiling;
+pub mod tune;
 pub mod util;

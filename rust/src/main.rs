@@ -51,18 +51,11 @@ fn emit(cli: &Cli, name: &str, t: Table) {
     t.save_csv(name);
 }
 
+/// The one division-mode parser: [`DivisionMode::parse`] reads the same
+/// keys `DivisionMode::key` renders (and tuned manifests carry),
+/// including the tuner's shifted `anchored<edge>@<anchor>` grids.
 fn parse_mode(s: &str) -> Result<DivisionMode> {
-    Ok(match s {
-        "grate4" => DivisionMode::GrateTile { n: 4 },
-        "grate8" => DivisionMode::GrateTile { n: 8 },
-        "grate16" => DivisionMode::GrateTile { n: 16 },
-        "uniform8" => DivisionMode::Uniform { edge: 8 },
-        "uniform4" => DivisionMode::Uniform { edge: 4 },
-        "uniform2" => DivisionMode::Uniform { edge: 2 },
-        "uniform1" => DivisionMode::Uniform { edge: 1 },
-        "wholemap" => DivisionMode::WholeMap,
-        other => bail!("unknown mode '{other}' (grate4/8/16, uniform8/4/2/1, wholemap)"),
-    })
+    DivisionMode::parse(s).map_err(|e| err!("{e}"))
 }
 
 /// The one codec-name parser (satisfying ISSUE 5's dedup): the
@@ -124,6 +117,7 @@ fn run(cli: &Cli) -> Result<()> {
         "roofline" => emit(cli, "roofline", harness::roofline_table(policy)),
         "gemm" => emit(cli, "gemm", harness::gemm_table()),
         "sweep" => cmd_sweep(cli, policy)?,
+        "tune" => cmd_tune(cli)?,
         "e2e" => cmd_e2e(cli, policy)?,
         "serve" => cmd_serve(cli, policy)?,
         "trace" => cmd_trace(cli, policy)?,
@@ -134,6 +128,35 @@ fn run(cli: &Cli) -> Result<()> {
             print_help();
             bail!("unknown subcommand '{other}'");
         }
+    }
+    Ok(())
+}
+
+/// The auto-tuner study: per-layer exact search over division × codec ×
+/// tile order, rendered against the fixed presets. `--out F` also
+/// writes the tuned manifest (`tunedv 1` + `tuned` lines) for
+/// `store pack --tuned` and manifest-driven serving.
+fn cmd_tune(cli: &Cli) -> Result<()> {
+    use gratetile::config::zoo::Network;
+    let networks: Vec<Network> = match cli.opt("network") {
+        Some(name) => vec![match name.to_ascii_lowercase().as_str() {
+            "alexnet" => Network::AlexNet,
+            "vgg16" => Network::Vgg16,
+            "resnet18" => Network::ResNet18,
+            "resnet50" => Network::ResNet50,
+            "vdsr" => Network::Vdsr,
+            other => bail!(
+                "unknown network '{other}' (alexnet, vgg16, resnet18, resnet50, vdsr)"
+            ),
+        }],
+        None => harness::TUNE_STUDY_NETWORKS.to_vec(),
+    };
+    let (t, manifest) = harness::tune_study(&networks);
+    emit(cli, "tune", t);
+    if let Some(path) = cli.opt("out") {
+        std::fs::write(path, manifest.render())
+            .with_context(|| format!("writing tuned manifest {path}"))?;
+        log_info!("wrote tuned manifest ({} layers) to {path}", manifest.entries.len());
     }
     Ok(())
 }
@@ -297,7 +320,30 @@ fn cmd_store(cli: &Cli, policy: CodecPolicy) -> Result<()> {
             let count = cli.opt_usize("count", 4);
             let density = cli.opt_f64("density", 0.4);
             let seed = cli.opt_usize("seed", 7) as u64;
-            let mode = parse_mode(cli.opt_or("mode", "grate8"))?;
+            let mut mode = parse_mode(cli.opt_or("mode", "grate8"))?;
+            // `--tuned F [--plan NAME]`: take the whole plan (division
+            // mode + codec policy) from a `gratetile tune` manifest —
+            // explicit `--mode`/`--codec` do not apply once tuned.
+            if let Some(tf) = cli.opt("tuned") {
+                let text = std::fs::read_to_string(tf)
+                    .with_context(|| format!("reading tuned manifest {tf}"))?;
+                let tm = gratetile::tune::TunedManifest::parse(&text)?;
+                let entry = match cli.opt("plan") {
+                    Some(name) => tm.get(name).ok_or_else(|| {
+                        err!(
+                            "plan '{name}' not in {tf} (have: {:?})",
+                            tm.entries.iter().map(|(n, _)| n).collect::<Vec<_>>()
+                        )
+                    })?,
+                    None => tm
+                        .entries
+                        .first()
+                        .map(|(_, e)| e)
+                        .ok_or_else(|| err!("{tf}: empty tuned manifest"))?,
+                };
+                mode = entry.plan.mode;
+                policy = entry.plan.policy;
+            }
             let hw = Platform::NvidiaSmallTile.hardware();
             // Pack for a 3x3 s=1 consumer of each map.
             let layer = ConvLayer::new(1, 1, h, w, c, c);
@@ -514,11 +560,17 @@ Analysis:
   sweep               one-layer sweep      [--h --w --c --k --s --density --codec]
                       or config-file driven [--config layers.ini]
   ablation            extra studies        [--codecs --whole-channel --sweep --dilated]
+  tune                auto-tune division x codec x tile order per zoo layer
+                      (exact branch-and-bound over the pricer closed forms;
+                      never worse than any preset) [--network N]
+                      [--out F: write the tuned manifest (tunedv 1 format)]
   network             whole-network read+write traffic per mode
   store pack          synthesize + pack maps into a .grate container
                       [--out --h --w --c --count --density --mode --codec]
                       [--manifest DIR --name N: take out-path + codec from a
                        manifest 'container N file [codec=...]' line]
+                      [--tuned F [--plan NAME]: take mode + codec from a
+                       'gratetile tune --out' manifest entry]
   store inspect F     verify checksums, list a container's tensors
   store serve F       serve inference from a container  [--workers]
   store compare       functional vs analytic write-back bits per network

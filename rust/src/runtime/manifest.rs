@@ -8,14 +8,23 @@
 //! artifact <name> <file> in=<d0>x<d1>x...xf32 outs=<n>
 //! layer <model> <idx> h=<h> w=<w> c=<c>
 //! container <name> <file.grate> [codec=<name>|auto]
+//! tunedv 1
+//! tuned <name> mode=<key> codec=<key> [order=<key>] [cost=<bits>] [sig=<hex16>]
 //! ```
 //!
 //! `container` lines register `.grate` tensor-store files (see
 //! [`crate::store::container`]) alongside the compiled artifacts, so a
 //! deployment manifest can name both the model and the packed
-//! activation sets it serves from.
+//! activation sets it serves from. `tuned` lines (gated by a `tunedv`
+//! version header) carry per-layer plans from `gratetile tune` — field
+//! parsing is shared with [`crate::tune::plan::TunedManifest`].
+//!
+//! Every directive rejects unknown `key=` options with an error naming
+//! the key and line — a typo'd option must never silently fall back to
+//! a default.
 
 use crate::compress::{CodecPolicy, Registry};
+use crate::tune::plan::{parse_tuned_fields, TunedEntry, TUNED_MANIFEST_VERSION};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
 use std::collections::HashMap;
@@ -48,6 +57,9 @@ pub struct Manifest {
     pub entries: HashMap<String, ArtifactEntry>,
     /// Registered `.grate` container files, by name.
     pub containers: HashMap<String, ContainerRef>,
+    /// Per-layer tuned plans in declaration order (order is load-bearing:
+    /// consumers map entries onto network layers positionally).
+    pub tuned: Vec<(String, TunedEntry)>,
     pub dir: PathBuf,
 }
 
@@ -65,8 +77,10 @@ impl Manifest {
         let mut m = Manifest {
             entries: HashMap::new(),
             containers: HashMap::new(),
+            tuned: Vec::new(),
             dir: dir.to_path_buf(),
         };
+        let mut tuned_version: Option<u32> = None;
         for (ln, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
@@ -90,6 +104,9 @@ impl Manifest {
                                 .collect::<Result<_>>()?;
                         } else if let Some(n) = kv.strip_prefix("outs=") {
                             n_outputs = n.parse().map_err(|e| err!("line {ln}: {e}"))?;
+                        } else {
+                            let key = kv.split('=').next().unwrap_or(kv);
+                            bail!("line {ln}: unknown artifact option '{key}' (in, outs)");
                         }
                     }
                     if input_dims.is_empty() || n_outputs == 0 {
@@ -122,6 +139,9 @@ impl Manifest {
                             w = v.parse()?;
                         } else if let Some(v) = kv.strip_prefix("c=") {
                             c = v.parse()?;
+                        } else {
+                            let key = kv.split('=').next().unwrap_or(kv);
+                            bail!("line {ln}: unknown layer option '{key}' (h, w, c)");
                         }
                     }
                     m.entries
@@ -150,6 +170,26 @@ impl Manifest {
                     m.containers
                         .insert(name.to_string(), ContainerRef { path: dir.join(file), policy });
                 }
+                Some("tunedv") => {
+                    let v: u32 = parts
+                        .next()
+                        .ok_or_else(|| err!("line {ln}: tunedv needs a version"))?
+                        .parse()
+                        .map_err(|e| err!("line {ln}: {e}"))?;
+                    if v != TUNED_MANIFEST_VERSION {
+                        bail!(
+                            "line {ln}: unsupported tuned-manifest version {v} \
+                             (this build reads version {TUNED_MANIFEST_VERSION})"
+                        );
+                    }
+                    tuned_version = Some(v);
+                }
+                Some("tuned") => {
+                    if tuned_version.is_none() {
+                        bail!("line {ln}: 'tuned' before 'tunedv' version header");
+                    }
+                    m.tuned.push(parse_tuned_fields(ln, parts)?);
+                }
                 Some(other) => bail!("line {ln}: unknown directive {other}"),
                 None => {}
             }
@@ -167,6 +207,12 @@ impl Manifest {
     /// Path of a registered `.grate` container.
     pub fn container(&self, name: &str) -> Result<&Path> {
         self.container_ref(name).map(|c| c.path.as_path())
+    }
+
+    /// The tuned plan list in declaration order (what
+    /// [`crate::coordinator::LayerRunner::with_plans`] consumes).
+    pub fn tuned_plans(&self) -> Vec<crate::tune::LayerPlan> {
+        self.tuned.iter().map(|(_, e)| e.plan).collect()
     }
 
     /// Full container reference (path + declared codec policy).
@@ -192,6 +238,9 @@ artifact stats compress.hlo.txt in=512xf32 outs=2
 container acts acts.grate codec=auto
 container fixed fixed.grate codec=zrlc
 container plain plain.grate
+tunedv 1
+tuned CONV1 mode=grate8 codec=auto order=spatial
+tuned CONV2 mode=anchored8@1 codec=zrlc order=channel cost=4096
 ";
 
     #[test]
@@ -213,6 +262,16 @@ container plain plain.grate
         );
         assert_eq!(m.container_ref("plain").unwrap().policy, None);
         assert!(m.container("nope").is_err());
+        // Tuned directives: ordered, fully parsed.
+        assert_eq!(m.tuned.len(), 2);
+        assert_eq!(m.tuned[0].0, "CONV1");
+        let plans = m.tuned_plans();
+        assert_eq!(plans[0].policy, CodecPolicy::Adaptive);
+        assert_eq!(
+            plans[1].mode,
+            crate::tiling::division::DivisionMode::Anchored { edge: 8, anchor: 1 }
+        );
+        assert_eq!(m.tuned[1].1.cost_bits, Some(4096));
     }
 
     #[test]
@@ -242,5 +301,37 @@ container plain plain.grate
     fn comments_and_blanks_ignored() {
         let m = Manifest::parse("# nothing\n\n", Path::new("/tmp")).unwrap();
         assert!(m.entries.is_empty());
+    }
+
+    /// ISSUE 9 satellite (bugfix regression): kv loops used to silently
+    /// skip unknown keys — a misspelled `codec=` in a tuned line (or any
+    /// typo'd option) must be an error naming the key and the line.
+    #[test]
+    fn unknown_option_keys_rejected_with_key_and_line() {
+        let e = Manifest::parse("tunedv 1\ntuned L mode=grate8 codecc=auto", Path::new("/tmp"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("codecc"), "must name the bad key: {e}");
+        assert!(e.contains("line 1"), "must name the line: {e}");
+
+        let e = Manifest::parse("artifact x f in=4xf32 outs=1 inn=2xf32", Path::new("/tmp"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("inn") && e.contains("line 0"), "{e}");
+
+        let e = Manifest::parse(
+            "artifact m f in=1xf32 outs=1\nlayer m 0 h=1 w=1 cc=1",
+            Path::new("/tmp"),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("cc") && e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn tuned_requires_version_header_and_known_version() {
+        assert!(Manifest::parse("tuned L mode=grate8 codec=auto", Path::new("/tmp")).is_err());
+        let e = Manifest::parse("tunedv 9", Path::new("/tmp")).unwrap_err().to_string();
+        assert!(e.contains("version 9"), "{e}");
     }
 }

@@ -21,12 +21,31 @@ use crate::tensor::FeatureMap;
 use crate::tiling::division::{Division, DivisionError, DivisionMode};
 
 /// Tile iteration order.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TileOrder {
     /// (ty, tx) outer, channel groups inner — the paper's default.
     SpatialMajor,
     /// Channel groups outer, (ty, tx) inner — whole-channel processing.
     ChannelMajor,
+}
+
+impl TileOrder {
+    /// Stable machine key — the `order=` value in tuned manifests.
+    pub fn key(&self) -> &'static str {
+        match self {
+            TileOrder::SpatialMajor => "spatial",
+            TileOrder::ChannelMajor => "channel",
+        }
+    }
+
+    /// Parse a [`TileOrder::key`]-style name.
+    pub fn parse(s: &str) -> Option<TileOrder> {
+        match s {
+            "spatial" => Some(TileOrder::SpatialMajor),
+            "channel" => Some(TileOrder::ChannelMajor),
+            _ => None,
+        }
+    }
 }
 
 /// Result of the cache study.

@@ -59,12 +59,19 @@ pub struct LayerPricer<'a> {
 impl<'a> LayerPricer<'a> {
     /// One O(n_subtensors) pass over `packed`'s cost grid.
     pub fn new(packed: &'a PackedFeatureMap) -> Self {
-        let division = &packed.division;
-        let record_bits = packed.record_bits() as u64;
+        Self::from_grid(&packed.division, packed.record_bits() as u64, &packed.fetch_bits_grid())
+    }
+
+    /// Build a pricer from an explicit per-sub-tensor fetch-bits grid
+    /// (linear-index order) instead of a packed map. The tuner prices
+    /// candidate plans from sizing passes alone — no payload ever
+    /// materialises — and its admissible lower bounds are priced from
+    /// idealised grids through this same constructor.
+    pub fn from_grid(division: &'a Division, record_bits: u64, grid: &[u64]) -> Self {
         let ny = division.ys.len();
         let nx = division.xs.len();
         let ncg = division.n_cgroups;
-        let grid = packed.fetch_bits_grid();
+        debug_assert_eq!(grid.len(), ny * nx * ncg);
 
         let nx1 = nx + 1;
         let ncg1 = ncg + 1;

@@ -186,6 +186,8 @@ fn encode_division(e: &mut Enc, d: &Division) {
         DivisionMode::Uniform { edge } => (0u8, edge as u32),
         DivisionMode::GrateTile { n } => (1, n as u32),
         DivisionMode::WholeMap => (2, 0),
+        // Edge and anchor both fit comfortably in 16 bits each.
+        DivisionMode::Anchored { edge, anchor } => (3, ((edge as u32) << 16) | anchor as u32),
     };
     e.u8(tag);
     e.u32(param);
@@ -220,6 +222,7 @@ fn decode_division(dec: &mut Dec) -> Result<Division> {
         0 => DivisionMode::Uniform { edge: param },
         1 => DivisionMode::GrateTile { n: param },
         2 => DivisionMode::WholeMap,
+        3 => DivisionMode::Anchored { edge: param >> 16, anchor: param & 0xFFFF },
         other => bail!("container: unknown division tag {other}"),
     };
     let fm_h = dec.usize32()?;

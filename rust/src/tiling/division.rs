@@ -42,6 +42,15 @@ pub enum DivisionMode {
     /// No spatial division: one sub-tensor per channel group (the
     /// whole-channel ablation of §IV-B(3)).
     WholeMap,
+    /// Uniform `edge × edge × 8` grid with an *explicit* cut anchor
+    /// (cuts at positions ≡ `anchor` (mod `edge`)) instead of the
+    /// left-window-boundary anchor [`DivisionMode::Uniform`] derives
+    /// from the layer halo. This is the tuner's split-point axis: it
+    /// exposes shifted grids (including deliberately bad ones — split
+    /// at 1, split at `edge-1`) as first-class candidates. `edge ≥ 2`
+    /// and `anchor < edge`; `Uniform{edge}` ≡ `Anchored{edge, -halo mod
+    /// edge}` by construction.
+    Anchored { edge: usize, anchor: usize },
 }
 
 impl DivisionMode {
@@ -50,7 +59,46 @@ impl DivisionMode {
             DivisionMode::Uniform { edge } => format!("Uniform {edge}x{edge}x8"),
             DivisionMode::GrateTile { n } => format!("GrateTile (mod {n})"),
             DivisionMode::WholeMap => "WholeMap".to_string(),
+            DivisionMode::Anchored { edge, anchor } => format!("Anchored {edge}x{edge}@{anchor}"),
         }
+    }
+
+    /// Stable machine key: round-trips through [`DivisionMode::parse`]
+    /// and is the `mode=` value in tuned manifests and CLI `--mode`.
+    pub fn key(&self) -> String {
+        match self {
+            DivisionMode::Uniform { edge } => format!("uniform{edge}"),
+            DivisionMode::GrateTile { n } => format!("grate{n}"),
+            DivisionMode::WholeMap => "wholemap".to_string(),
+            DivisionMode::Anchored { edge, anchor } => format!("anchored{edge}@{anchor}"),
+        }
+    }
+
+    /// Parse a [`DivisionMode::key`]-style name. THE one parser: the CLI
+    /// `--mode` flag and the tuned-manifest reader both delegate here.
+    pub fn parse(s: &str) -> Result<DivisionMode, DivisionError> {
+        let bad = |what: &str| DivisionError::Invalid(format!("{what} in mode '{s}'"));
+        if let Some(n) = s.strip_prefix("grate") {
+            let n: usize = n.parse().map_err(|_| bad("bad modulus"))?;
+            return Ok(DivisionMode::GrateTile { n });
+        }
+        if let Some(e) = s.strip_prefix("uniform") {
+            let e: usize = e.parse().map_err(|_| bad("bad edge"))?;
+            return Ok(DivisionMode::Uniform { edge: e });
+        }
+        if let Some(rest) = s.strip_prefix("anchored") {
+            let (e, a) = rest.split_once('@').ok_or_else(|| bad("missing '@anchor'"))?;
+            let edge: usize = e.parse().map_err(|_| bad("bad edge"))?;
+            let anchor: usize = a.parse().map_err(|_| bad("bad anchor"))?;
+            return Ok(DivisionMode::Anchored { edge, anchor });
+        }
+        if s == "wholemap" {
+            return Ok(DivisionMode::WholeMap);
+        }
+        Err(DivisionError::Invalid(format!(
+            "unknown mode '{s}' (grate4|grate8|grate16|uniform8|uniform4|uniform2|uniform1|\
+             wholemap|anchored<E>@<A>)"
+        )))
     }
 
     /// The division modes compared in Table III, in the paper's row order.
@@ -139,6 +187,15 @@ fn segments_from_cuts(len: usize, cuts: &[usize]) -> Vec<Seg> {
     segs
 }
 
+/// Segments of a uniform `edge`-grid over `[0, len)` with cuts at
+/// positions ≡ `anchor` (mod `edge`) — shared by the Uniform and
+/// Anchored build arms.
+fn uniform_segments(len: usize, edge: usize, anchor: usize) -> Vec<Seg> {
+    let first = if anchor == 0 { edge } else { anchor };
+    let cuts: Vec<usize> = (0..).map(|i| first + i * edge).take_while(|&p| p < len).collect();
+    segments_from_cuts(len, &cuts)
+}
+
 /// Group segments into metadata blocks: a new block starts at every
 /// segment whose start ≡ `anchor` (mod `n`). Returns (block_of, n_blocks).
 fn group_blocks(segs: &[Seg], n: usize, anchor: usize) -> (Vec<usize>, usize) {
@@ -179,15 +236,8 @@ impl Division {
                 // would double the halo over-fetch for free. GrateTile
                 // additionally cuts at B_r; uniform cuts at B_l only.
                 let anchor = crate::util::umod(-(layer.halo() as i64), edge as i64) as usize;
-                let cuts = |len: usize| -> Vec<usize> {
-                    let first = if anchor == 0 { edge } else { anchor };
-                    (0..)
-                        .map(|i| first + i * edge)
-                        .take_while(|&p| p < len)
-                        .collect()
-                };
-                let ys = segments_from_cuts(fm_h, &cuts(fm_h));
-                let xs = segments_from_cuts(fm_w, &cuts(fm_w));
+                let ys = uniform_segments(fm_h, edge, anchor);
+                let xs = uniform_segments(fm_w, edge, anchor);
                 let (block_of_y, n_blocks_y) = group_blocks(&ys, edge, anchor);
                 let (block_of_x, n_blocks_x) = group_blocks(&xs, edge, anchor);
                 // Table II: aligned uniform blocks carry a 28-bit pointer;
@@ -284,6 +334,42 @@ impl Division {
                     block_of_x: vec![0],
                     n_blocks_y: 1,
                     n_blocks_x: 1,
+                    meta_bits_per_block: hw.pointer_bits,
+                    compact: false,
+                })
+            }
+            DivisionMode::Anchored { edge, anchor } => {
+                // Explicit-anchor grids exist so the tuner can search
+                // split points; edge 1 would shadow the compact
+                // Uniform{1} scheme with different metadata economics,
+                // so it is rejected rather than silently aliased.
+                if edge < 2 {
+                    return Err(DivisionError::Invalid(
+                        "anchored edge must be >= 2 (use uniform1 for compact packing)".into(),
+                    ));
+                }
+                if anchor >= edge {
+                    return Err(DivisionError::Invalid(format!(
+                        "anchor {anchor} must be < edge {edge}"
+                    )));
+                }
+                let ys = uniform_segments(fm_h, edge, anchor);
+                let xs = uniform_segments(fm_w, edge, anchor);
+                let (block_of_y, n_blocks_y) = group_blocks(&ys, edge, anchor);
+                let (block_of_x, n_blocks_x) = group_blocks(&xs, edge, anchor);
+                Ok(Division {
+                    mode,
+                    fm_h,
+                    fm_w,
+                    fm_c,
+                    ys,
+                    xs,
+                    cd,
+                    n_cgroups,
+                    block_of_y,
+                    block_of_x,
+                    n_blocks_y,
+                    n_blocks_x,
                     meta_bits_per_block: hw.pointer_bits,
                     compact: false,
                 })
@@ -670,6 +756,63 @@ mod tests {
         assert_eq!(count((2, 2)), 4, "four 2x2");
         let total: usize = subs.iter().map(|r| d.subtensor_words(*r)).sum();
         assert_eq!(total, 10 * 10 * 8);
+    }
+
+    /// Anchored with the halo-derived anchor reproduces the Uniform grid
+    /// exactly (same segments, same blocks) — the tuner's dedup relies
+    /// on this equivalence.
+    #[test]
+    fn anchored_at_halo_matches_uniform() {
+        let l = layer31();
+        let anchor = crate::util::umod(-(l.halo() as i64), 8) as usize;
+        let u = build(DivisionMode::Uniform { edge: 8 });
+        let a = build(DivisionMode::Anchored { edge: 8, anchor });
+        assert_eq!(u.ys, a.ys);
+        assert_eq!(u.xs, a.xs);
+        assert_eq!(u.block_of_y, a.block_of_y);
+        assert_eq!(u.meta_bits_per_block, a.meta_bits_per_block);
+        assert!(!a.compact);
+    }
+
+    /// Split-at-1 / split-at-(edge-1) edge geometries: the clipped rim
+    /// segments still cover the axis exactly and record_slots stays 1.
+    #[test]
+    fn anchored_edge_geometries_cover() {
+        for anchor in [1usize, 7] {
+            let d = build(DivisionMode::Anchored { edge: 8, anchor });
+            assert_covers(&d.ys, 56);
+            assert_covers(&d.xs, 56);
+            assert_eq!(d.ys[0], Seg { start: 0, len: anchor });
+            assert_eq!(d.record_slots(), 1, "uniform-style grids hold 1 sub-tensor/record");
+        }
+    }
+
+    #[test]
+    fn anchored_rejects_bad_params() {
+        let l = layer31();
+        let t = hw().tile_for_layer(&l);
+        for mode in [
+            DivisionMode::Anchored { edge: 1, anchor: 0 },
+            DivisionMode::Anchored { edge: 8, anchor: 8 },
+        ] {
+            let e = Division::build(mode, &l, &t, &hw(), 56, 56, 64);
+            assert!(matches!(e, Err(DivisionError::Invalid(_))), "{mode:?}");
+        }
+    }
+
+    /// `parse` inverts `key` for every mode the tuner can emit, and
+    /// rejects junk with a useful message.
+    #[test]
+    fn mode_key_round_trips_through_parse() {
+        let mut modes = DivisionMode::table3_modes();
+        modes.push(DivisionMode::WholeMap);
+        modes.push(DivisionMode::Anchored { edge: 8, anchor: 3 });
+        for m in modes {
+            assert_eq!(DivisionMode::parse(&m.key()).unwrap(), m, "{}", m.name());
+        }
+        for junk in ["grate", "uniformx", "anchored8", "anchored8@x", "diagonal"] {
+            assert!(DivisionMode::parse(junk).is_err(), "{junk}");
+        }
     }
 
     #[test]

@@ -1,0 +1,29 @@
+//! Auto-tuning plan search over division × codec × tile order.
+//!
+//! GrateTile's presets (Table III divisions, one codec policy for the
+//! whole network) leave per-layer headroom on the table: a layer's best
+//! `(division mode, split points, codec, tile order)` depends on its
+//! geometry *and* its sparsity pattern. This module searches that space
+//! exactly — per layer, through the [`crate::sim::pricer::LayerPricer`]
+//! closed forms only (no packing during search) — and emits a versioned
+//! **tuned manifest** the store writer and serving simulator consume.
+//!
+//! * [`plan`] — [`plan::LayerPlan`] / [`plan::TunedManifest`]: the plan
+//!   triple and its versioned line format (`tunedv 1` + `tuned` lines).
+//! * [`search`] — [`search::Tuner`]: the memoized branch-and-bound
+//!   search with an admissible lower bound (exact; never worse than any
+//!   preset by construction, property-tested in `tests/tune.rs`).
+//!
+//! Determinism: candidate order is fixed, ties keep the first-seen
+//! winner, layers tune serially, and the memo key is a canonical
+//! geometry × density-signature spec — so tuned manifests are
+//! byte-identical across `--jobs` and across repeated runs.
+
+pub mod plan;
+pub mod search;
+
+pub use plan::{LayerPlan, TunedEntry, TunedManifest, TUNED_MANIFEST_VERSION};
+pub use search::{
+    candidate_modes, candidate_policies, feature_map_sig, LayerSpec, TunedResult, Tuner,
+    TUNE_META_CACHE_BYTES,
+};

@@ -1,0 +1,298 @@
+//! Tuned layer plans and the versioned tuned-manifest text format.
+//!
+//! A [`LayerPlan`] is one point of the tuner's search space — the
+//! `(division mode, codec policy, tile order)` triple the packer,
+//! store writer and serving simulator consume per layer. Plans travel
+//! as a **tuned manifest**: a line format in the same family as
+//! [`crate::runtime::manifest`] (dependency-free, hand-parseable),
+//! version-gated so future plan axes can extend it without silently
+//! misreading old files:
+//!
+//! ```text
+//! # comments and blank lines ignored
+//! tunedv 1
+//! tuned <name> mode=<key> codec=<key> order=<key> [cost=<bits>] [sig=<hex16>]
+//! ```
+//!
+//! `mode=` keys go through [`DivisionMode::parse`], `codec=` through the
+//! codec registry and `order=` through [`TileOrder::parse`] — the same
+//! single parsers as the CLI, so a name accepted anywhere is accepted
+//! here. Unknown keys are **errors naming the key and line**, never
+//! ignored: a typo'd directive must not silently fall back to defaults.
+
+use crate::compress::{CodecPolicy, Registry};
+use crate::sim::metacache::TileOrder;
+use crate::tiling::division::DivisionMode;
+use crate::util::error::Result;
+use crate::{bail, err};
+
+/// Current tuned-manifest format version.
+pub const TUNED_MANIFEST_VERSION: u32 = 1;
+
+/// One layer's tuned execution plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub mode: DivisionMode,
+    pub policy: CodecPolicy,
+    pub order: TileOrder,
+}
+
+impl LayerPlan {
+    /// The repo-wide default plan (GrateTile mod 8, bitmask,
+    /// spatial-major) — what every pipeline runs without a tuned
+    /// manifest, and the baseline column of the tune study.
+    pub fn default_plan() -> LayerPlan {
+        LayerPlan {
+            mode: DivisionMode::GrateTile { n: 8 },
+            policy: CodecPolicy::Fixed(crate::compress::Scheme::Bitmask),
+            order: TileOrder::SpatialMajor,
+        }
+    }
+
+    /// Compact human/machine description: `grate8+auto+spatial`.
+    pub fn key(&self) -> String {
+        format!("{}+{}+{}", self.mode.key(), self.policy.name(), self.order.key())
+    }
+}
+
+/// One named entry of a tuned manifest: the plan plus optional search
+/// provenance (the priced total and the input-map signature the plan
+/// was tuned against — consumers can warn when serving different data).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedEntry {
+    pub plan: LayerPlan,
+    /// Priced total (fetched + metadata bits) of the plan, if recorded.
+    pub cost_bits: Option<u64>,
+    /// FNV-1a-64 signature of the feature map the plan was tuned on.
+    pub sig: Option<u64>,
+}
+
+/// A parsed tuned manifest: ordered (layer name, entry) pairs. Order is
+/// load-bearing — `store pack` maps entries onto request indices and
+/// the serving simulator onto network layers positionally when names
+/// don't match.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TunedManifest {
+    pub entries: Vec<(String, TunedEntry)>,
+}
+
+impl TunedManifest {
+    /// Entry by layer name.
+    pub fn get(&self, name: &str) -> Option<&TunedEntry> {
+        self.entries.iter().find(|(n, _)| n == name).map(|(_, e)| e)
+    }
+
+    /// The per-layer plan list in manifest order (what
+    /// [`crate::coordinator::LayerRunner`] consumes).
+    pub fn plans(&self) -> Vec<LayerPlan> {
+        self.entries.iter().map(|(_, e)| e.plan).collect()
+    }
+
+    /// Render the versioned text form. Byte-deterministic: entries in
+    /// stored order, fixed key order per line.
+    pub fn render(&self) -> String {
+        let mut out = String::from("# gratetile tuned manifest\n");
+        out.push_str(&format!("tunedv {TUNED_MANIFEST_VERSION}\n"));
+        for (name, e) in &self.entries {
+            out.push_str(&render_tuned_line(name, e));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse the text form; rejects unsupported versions and (like every
+    /// manifest directive) unknown keys, naming the key and line.
+    pub fn parse(text: &str) -> Result<TunedManifest> {
+        let mut m = TunedManifest::default();
+        let mut version: Option<u32> = None;
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("tunedv") => {
+                    let v: u32 = parts
+                        .next()
+                        .ok_or_else(|| err!("line {ln}: tunedv needs a version"))?
+                        .parse()
+                        .map_err(|e| err!("line {ln}: {e}"))?;
+                    if v != TUNED_MANIFEST_VERSION {
+                        bail!(
+                            "line {ln}: unsupported tuned-manifest version {v} \
+                             (this build reads version {TUNED_MANIFEST_VERSION})"
+                        );
+                    }
+                    version = Some(v);
+                }
+                Some("tuned") => {
+                    if version.is_none() {
+                        bail!("line {ln}: 'tuned' before 'tunedv' version header");
+                    }
+                    let (name, entry) = parse_tuned_fields(ln, parts)?;
+                    m.entries.push((name, entry));
+                }
+                Some(other) => bail!("line {ln}: unknown directive {other}"),
+                None => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Render one `tuned` directive line (no trailing newline).
+pub fn render_tuned_line(name: &str, e: &TunedEntry) -> String {
+    debug_assert!(!name.contains(char::is_whitespace), "layer names are tokens");
+    let mut s = format!(
+        "tuned {name} mode={} codec={} order={}",
+        e.plan.mode.key(),
+        e.plan.policy.name(),
+        e.plan.order.key()
+    );
+    if let Some(c) = e.cost_bits {
+        s.push_str(&format!(" cost={c}"));
+    }
+    if let Some(sig) = e.sig {
+        s.push_str(&format!(" sig={sig:016x}"));
+    }
+    s
+}
+
+/// Parse the fields of a `tuned` directive after the keyword — shared
+/// between [`TunedManifest::parse`] and the runtime manifest's `tuned`
+/// directive ([`crate::runtime::manifest::Manifest`]). `ln` is the
+/// 0-based line number for error messages.
+pub fn parse_tuned_fields<'a>(
+    ln: usize,
+    parts: impl Iterator<Item = &'a str>,
+) -> Result<(String, TunedEntry)> {
+    let mut parts = parts.peekable();
+    let name = parts.next().ok_or_else(|| err!("line {ln}: tuned needs a layer name"))?;
+    let mut mode = None;
+    let mut policy = None;
+    let mut order = None;
+    let mut cost_bits = None;
+    let mut sig = None;
+    for kv in parts {
+        if let Some(v) = kv.strip_prefix("mode=") {
+            mode = Some(DivisionMode::parse(v).map_err(|e| err!("line {ln}: {e}"))?);
+        } else if let Some(v) = kv.strip_prefix("codec=") {
+            policy = Some(Registry::global().parse_policy(v).map_err(|e| err!("line {ln}: {e}"))?);
+        } else if let Some(v) = kv.strip_prefix("order=") {
+            order = Some(
+                TileOrder::parse(v)
+                    .ok_or_else(|| err!("line {ln}: unknown order '{v}' (spatial, channel)"))?,
+            );
+        } else if let Some(v) = kv.strip_prefix("cost=") {
+            cost_bits = Some(v.parse::<u64>().map_err(|e| err!("line {ln}: cost: {e}"))?);
+        } else if let Some(v) = kv.strip_prefix("sig=") {
+            sig = Some(
+                u64::from_str_radix(v, 16).map_err(|e| err!("line {ln}: sig: {e}"))?,
+            );
+        } else {
+            let key = kv.split('=').next().unwrap_or(kv);
+            bail!("line {ln}: unknown tuned option '{key}' (mode, codec, order, cost, sig)");
+        }
+    }
+    let entry = TunedEntry {
+        plan: LayerPlan {
+            mode: mode.ok_or_else(|| err!("line {ln}: tuned '{name}' needs mode="))?,
+            policy: policy.ok_or_else(|| err!("line {ln}: tuned '{name}' needs codec="))?,
+            order: order.unwrap_or(TileOrder::SpatialMajor),
+        },
+        cost_bits,
+        sig,
+    };
+    Ok((name.to_string(), entry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Scheme;
+
+    fn sample() -> TunedManifest {
+        TunedManifest {
+            entries: vec![
+                (
+                    "CONV2".into(),
+                    TunedEntry {
+                        plan: LayerPlan {
+                            mode: DivisionMode::GrateTile { n: 8 },
+                            policy: CodecPolicy::Adaptive,
+                            order: TileOrder::SpatialMajor,
+                        },
+                        cost_bits: Some(123_456),
+                        sig: Some(0xDEAD_BEEF_0123_4567),
+                    },
+                ),
+                (
+                    "CONV3".into(),
+                    TunedEntry {
+                        plan: LayerPlan {
+                            mode: DivisionMode::Anchored { edge: 8, anchor: 7 },
+                            policy: CodecPolicy::Fixed(Scheme::Zrlc),
+                            order: TileOrder::ChannelMajor,
+                        },
+                        cost_bits: None,
+                        sig: None,
+                    },
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn render_parse_round_trips() {
+        let m = sample();
+        let text = m.render();
+        let back = TunedManifest::parse(&text).unwrap();
+        assert_eq!(back, m);
+        // Render is stable: parse → render reproduces the bytes.
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn rejects_unsupported_version() {
+        let e = TunedManifest::parse("tunedv 2\n").unwrap_err().to_string();
+        assert!(e.contains("version 2"), "{e}");
+        let e = TunedManifest::parse("tuned L mode=grate8 codec=auto\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("before 'tunedv'"), "{e}");
+    }
+
+    /// ISSUE 9 satellite (bugfix regression): a misspelled key is an
+    /// error naming the key and line — not a silent default fallback.
+    #[test]
+    fn unknown_key_rejected_with_key_and_line() {
+        let text = "tunedv 1\ntuned L mode=grate8 codecc=auto order=spatial\n";
+        let e = TunedManifest::parse(text).unwrap_err().to_string();
+        assert!(e.contains("codecc"), "error must name the bad key: {e}");
+        assert!(e.contains("line 1"), "error must name the line: {e}");
+    }
+
+    #[test]
+    fn missing_required_fields_error() {
+        assert!(TunedManifest::parse("tunedv 1\ntuned L codec=auto\n").is_err());
+        assert!(TunedManifest::parse("tunedv 1\ntuned L mode=grate8\n").is_err());
+        // order is optional (defaults spatial).
+        let m = TunedManifest::parse("tunedv 1\ntuned L mode=grate8 codec=raw\n").unwrap();
+        assert_eq!(m.get("L").unwrap().plan.order, TileOrder::SpatialMajor);
+    }
+
+    #[test]
+    fn bad_field_values_error_with_line() {
+        for text in [
+            "tunedv 1\ntuned L mode=diagonal codec=auto\n",
+            "tunedv 1\ntuned L mode=grate8 codec=nope\n",
+            "tunedv 1\ntuned L mode=grate8 codec=auto order=zigzag\n",
+            "tunedv 1\ntuned L mode=grate8 codec=auto cost=abc\n",
+            "tunedv 1\ntuned L mode=grate8 codec=auto sig=zz\n",
+        ] {
+            let e = TunedManifest::parse(text).unwrap_err().to_string();
+            assert!(e.contains("line 1"), "{text} -> {e}");
+        }
+    }
+}

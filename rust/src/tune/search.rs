@@ -1,0 +1,439 @@
+//! The memoized branch-and-bound plan search.
+//!
+//! One layer's plan space is `(division candidate) × (codec policy) ×
+//! (tile order)`. Every point is priced through the closed forms the
+//! rest of the repo already trusts: [`size_all_codecs`] gives every
+//! codec's exact per-sub-tensor `(words, bits)` from one fused stats
+//! pass per division, and [`LayerPricer::from_grid`] prices any walk
+//! over the derived fetch-bits grid in O(tiles). **No packing happens
+//! during search** — the payload never materialises.
+//!
+//! ## Exactness
+//!
+//! The division axis is split into *preset* candidates (the Table III
+//! modes + WholeMap — also the comparison set of the never-worse
+//! property) and *extended* candidates (shifted [`DivisionMode::Anchored`]
+//! grids — the split-point axis). Presets are always fully evaluated
+//! (the study table reports them); extended candidates are pruned with
+//! an **admissible lower bound**: the division's walk priced over the
+//! grid of per-sub-tensor `min_codec(ideal bits)` with zero record
+//! bits. For every policy, the actual fetch cost of a sub-tensor is
+//! ≥ its chosen codec's ideal bits ≥ the min-codec ideal bits
+//! (line-rounding only adds), the pricer is monotone in the grid, and
+//! metadata bits are ≥ 0 — so `lb ≤ total(policy)` pointwise and a
+//! pruned division can never hold the optimum. The search is therefore
+//! *exact* over its candidate set (cross-checked against brute-force
+//! enumeration in `tests/tune.rs`).
+//!
+//! [`WalkCost`] is tile-order invariant (the priced totals are sums
+//! over the same window multiset), so order is decided after the
+//! `(mode, policy)` winner by a fixed-size metadata-cache simulation
+//! ([`metadata_cache_study`]) — fewer DRAM metadata bits wins, ties to
+//! spatial-major.
+//!
+//! ## Memoization and determinism
+//!
+//! The memo key is the canonical [`LayerSpec`]: layer geometry ×
+//! hardware identity × an FNV-1a-64 signature over the feature map's
+//! f32 bit patterns. Identical spec ⇒ identical map bytes ⇒ the search
+//! would retrace the exact same deterministic path, so a memo hit
+//! returns the cached plan bit-identically (asserted in tests).
+//! Layers tune serially; the only parallelism is inside
+//! `size_all_codecs`' position-indexed map, so results are byte-stable
+//! across `--jobs` like every other subsystem.
+
+use super::plan::{LayerPlan, TunedEntry, TunedManifest};
+use crate::compress::{CodecPolicy, Registry};
+use crate::config::hardware::Hardware;
+use crate::config::layer::ConvLayer;
+use crate::layout::metadata::record_bits_for;
+use crate::layout::packer::{size_all_codecs, AllCodecSizes};
+use crate::sim::metacache::{metadata_cache_study, TileOrder};
+use crate::sim::pricer::{LayerPricer, WalkCost};
+use crate::sim::walker::TileWalker;
+use crate::store::container::{fnv1a64_continue, FNV1A64_OFFSET};
+use crate::tensor::FeatureMap;
+use crate::tiling::division::{Division, DivisionMode};
+use crate::util::round_up;
+use std::collections::HashMap;
+
+/// Metadata SRAM cache size (bytes) used for the tile-order tie-break.
+/// Fixed so tuned manifests are a pure function of (layer, map, hw).
+pub const TUNE_META_CACHE_BYTES: usize = 2048;
+
+/// Canonical memo key: everything the search outcome depends on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LayerSpec {
+    pub k: usize,
+    pub s: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    /// Hardware identity (platform name + tile budget pin the tile
+    /// shape and metadata widths).
+    pub hw_name: &'static str,
+    pub tile_budget_words: usize,
+    /// FNV-1a-64 over the feature map's f32 bit patterns (row-major).
+    pub fm_sig: u64,
+}
+
+impl LayerSpec {
+    pub fn new(hw: &Hardware, layer: &ConvLayer, fm: &FeatureMap) -> LayerSpec {
+        LayerSpec {
+            k: layer.k,
+            s: layer.s,
+            d: layer.d,
+            h: layer.h,
+            w: layer.w,
+            c_in: layer.c_in,
+            hw_name: hw.name,
+            tile_budget_words: hw.tile_budget_words,
+            fm_sig: feature_map_sig(fm),
+        }
+    }
+}
+
+/// FNV-1a-64 signature over a feature map's exact f32 bit patterns.
+pub fn feature_map_sig(fm: &FeatureMap) -> u64 {
+    let mut h = FNV1A64_OFFSET;
+    for dim in [fm.h, fm.w, fm.c] {
+        h = fnv1a64_continue(h, &(dim as u64).to_le_bytes());
+    }
+    for &v in fm.as_slice() {
+        h = fnv1a64_continue(h, &v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Outcome of tuning one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TunedResult {
+    pub plan: LayerPlan,
+    /// Priced walk cost of the winning plan.
+    pub cost: WalkCost,
+    /// Priced total of the repo default plan (grate8 + bitmask).
+    pub default_total: u64,
+    /// Best fixed preset (mode ∈ Table III + WholeMap, any codec
+    /// policy): the never-worse comparison point.
+    pub best_preset: LayerPlan,
+    pub best_preset_total: u64,
+    /// Search accounting: `(division, policy)` nodes actually priced.
+    pub nodes: u64,
+    /// Policy nodes skipped by admissible lower-bound pruning.
+    pub pruned: u64,
+    /// Whether this result came from the memo cache.
+    pub memo_hit: bool,
+}
+
+impl TunedResult {
+    /// The objective the search minimises: payload fetch + metadata
+    /// (record + tag) bits over the layer's full tile walk.
+    pub fn total_bits(&self) -> u64 {
+        self.cost.fetched_bits + self.cost.metadata_bits
+    }
+
+    pub fn entry(&self, sig: u64) -> TunedEntry {
+        TunedEntry { plan: self.plan, cost_bits: Some(self.total_bits()), sig: Some(sig) }
+    }
+}
+
+/// Division candidates for one layer, in the fixed deterministic order
+/// that also defines tie-breaks (first strict minimum wins):
+/// presets first — the repo default GrateTile{8} leads so it seeds a
+/// strong incumbent — then the extended anchored split-point probes.
+/// The `bool` marks preset candidates (never pruned; reported in the
+/// study table).
+pub fn candidate_modes(layer: &ConvLayer) -> Vec<(DivisionMode, bool)> {
+    let mut out: Vec<(DivisionMode, bool)> = vec![(DivisionMode::GrateTile { n: 8 }, true)];
+    for m in DivisionMode::table3_modes() {
+        if !out.iter().any(|(o, _)| *o == m) {
+            out.push((m, true));
+        }
+    }
+    out.push((DivisionMode::WholeMap, true));
+    // Split-point probes: shifted uniform grids. The halo-derived
+    // anchor IS Uniform{edge} (see `anchored_at_halo_matches_uniform`),
+    // so it is excluded; the rest probe genuinely different cuts,
+    // including the deliberately adversarial split-at-1 / split-at-
+    // (edge-1) rims.
+    for edge in [2usize, 4, 8] {
+        let uniform_anchor = crate::util::umod(-(layer.halo() as i64), edge as i64) as usize;
+        let mut anchors: Vec<usize> = [0, 1, edge - 1]
+            .into_iter()
+            .filter(|&a| a != uniform_anchor)
+            .collect();
+        anchors.sort_unstable();
+        anchors.dedup();
+        for anchor in anchors {
+            out.push((DivisionMode::Anchored { edge, anchor }, false));
+        }
+    }
+    out
+}
+
+/// Codec policies in fixed search order: fixed codecs in registry tag
+/// order, then adaptive.
+pub fn candidate_policies() -> Vec<CodecPolicy> {
+    let mut v: Vec<CodecPolicy> =
+        Registry::global().schemes().into_iter().map(CodecPolicy::Fixed).collect();
+    v.push(CodecPolicy::Adaptive);
+    v
+}
+
+/// Fetch-bits grid of `division` under `policy`, derived arithmetically
+/// from the all-codec sizes (the packer's cost rule: compact maps pay
+/// ideal bits, aligned maps pay line-rounded words).
+fn fetch_grid(
+    division: &Division,
+    sizes: &AllCodecSizes,
+    policy: CodecPolicy,
+    wpl: usize,
+    scratch: &mut Vec<(usize, usize)>,
+) -> Vec<u64> {
+    let reg = Registry::global();
+    let n = division.n_subtensors();
+    let fixed_tag = match policy {
+        CodecPolicy::Fixed(s) => Some(reg.tag_of(s) as usize),
+        CodecPolicy::Adaptive => None,
+    };
+    (0..n)
+        .map(|li| {
+            let tag = fixed_tag.unwrap_or_else(|| {
+                scratch.clear();
+                scratch.extend(
+                    (0..sizes.n_codecs).map(|t| {
+                        let (w, b) = sizes.at(li, t);
+                        (w as usize, b as usize)
+                    }),
+                );
+                reg.select(scratch, division.compact) as usize
+            });
+            let (w, b) = sizes.at(li, tag);
+            if division.compact {
+                b as u64
+            } else {
+                (round_up(w as usize, wpl) * 16) as u64
+            }
+        })
+        .collect()
+}
+
+/// Admissible per-sub-tensor lower bound: the best codec's *ideal*
+/// bits — no line rounding, no tags. Every policy's real fetch cost
+/// dominates this pointwise under both cost rules.
+fn lower_bound_grid(division: &Division, sizes: &AllCodecSizes) -> Vec<u64> {
+    (0..division.n_subtensors())
+        .map(|li| (0..sizes.n_codecs).map(|t| sizes.at(li, t).1 as u64).min().unwrap_or(0))
+        .collect()
+}
+
+/// The memoizing tuner. Layers tune serially (`--jobs`-stable); repeated
+/// layer specs across a network — or across networks sharing the tuner —
+/// cost one search.
+pub struct Tuner {
+    hw: Hardware,
+    memo: HashMap<LayerSpec, TunedResult>,
+    /// Memo hits served since construction.
+    pub memo_hits: u64,
+}
+
+impl Tuner {
+    pub fn new(hw: Hardware) -> Tuner {
+        Tuner { hw, memo: HashMap::new(), memo_hits: 0 }
+    }
+
+    pub fn hw(&self) -> &Hardware {
+        &self.hw
+    }
+
+    /// Tune one layer, memoized on its canonical [`LayerSpec`].
+    pub fn tune_layer(&mut self, layer: &ConvLayer, fm: &FeatureMap) -> TunedResult {
+        let spec = LayerSpec::new(&self.hw, layer, fm);
+        if let Some(hit) = self.memo.get(&spec) {
+            self.memo_hits += 1;
+            let mut r = *hit;
+            r.memo_hit = true;
+            r.nodes = 0;
+            r.pruned = 0;
+            return r;
+        }
+        let r = self.search_layer(layer, fm);
+        self.memo.insert(spec, r);
+        r
+    }
+
+    /// The search itself (cold path; see module docs for the proof
+    /// obligations).
+    fn search_layer(&self, layer: &ConvLayer, fm: &FeatureMap) -> TunedResult {
+        let hw = &self.hw;
+        let tile = hw.tile_for_layer(layer);
+        let walker = TileWalker::new(*layer, tile);
+        let policies = candidate_policies();
+        let wpl = hw.words_per_line;
+        let mut scratch: Vec<(usize, usize)> = Vec::new();
+
+        let mut best: Option<(LayerPlan, WalkCost, u64)> = None;
+        let mut best_preset: Option<(LayerPlan, u64)> = None;
+        let mut default_total = u64::MAX;
+        let mut nodes = 0u64;
+        let mut pruned = 0u64;
+
+        for (mode, is_preset) in candidate_modes(layer) {
+            let Ok(division) = Division::build(mode, layer, &tile, hw, fm.h, fm.w, fm.c) else {
+                // Table III footnote a — the candidate doesn't exist
+                // for this layer/tile; simply absent from the space.
+                continue;
+            };
+            let sizes = size_all_codecs(fm, &division);
+
+            // Bound check (extended candidates only; presets are study
+            // rows and always priced). One pricer pass over the ideal
+            // grid bounds all |policies| evaluations below.
+            if !is_preset {
+                if let Some((_, _, incumbent)) = best {
+                    let lb_grid = lower_bound_grid(&division, &sizes);
+                    let lb = LayerPricer::from_grid(&division, 0, &lb_grid).price(&walker);
+                    if lb.fetched_bits >= incumbent {
+                        pruned += policies.len() as u64;
+                        continue;
+                    }
+                }
+            }
+
+            for &policy in &policies {
+                let grid = fetch_grid(&division, &sizes, policy, wpl, &mut scratch);
+                let record_bits = record_bits_for(&division, policy) as u64;
+                let cost = LayerPricer::from_grid(&division, record_bits, &grid).price(&walker);
+                let total = cost.fetched_bits + cost.metadata_bits;
+                nodes += 1;
+
+                let plan = LayerPlan { mode, policy, order: TileOrder::SpatialMajor };
+                if plan.mode == LayerPlan::default_plan().mode
+                    && plan.policy == LayerPlan::default_plan().policy
+                {
+                    default_total = total;
+                }
+                if is_preset && best_preset.is_none_or(|(_, t)| total < t) {
+                    best_preset = Some((plan, total));
+                }
+                // Strict `<`: ties keep the earlier candidate, making
+                // the fixed enumeration order the deterministic
+                // tie-break.
+                if best.is_none_or(|(_, _, t)| total < t) {
+                    best = Some((plan, cost, total));
+                }
+            }
+        }
+
+        let (mut plan, cost, _) = best.expect("grate8/uniform fallbacks always build");
+        let (preset_plan, preset_total) = best_preset.expect("presets always include uniform");
+
+        // Tile order: WalkCost is order-invariant, so the winner is
+        // decided by metadata-cache locality under a fixed SRAM budget.
+        // Two cache sims; ties (and study errors) keep spatial-major.
+        let dram = |order: TileOrder| {
+            metadata_cache_study(hw, layer, fm, plan.mode, TUNE_META_CACHE_BYTES, order)
+                .map(|s| s.dram_bits)
+        };
+        if let (Ok(sp), Ok(ch)) = (dram(TileOrder::SpatialMajor), dram(TileOrder::ChannelMajor)) {
+            if ch < sp {
+                plan.order = TileOrder::ChannelMajor;
+            }
+        }
+
+        TunedResult {
+            plan,
+            cost,
+            default_total,
+            best_preset: preset_plan,
+            best_preset_total: preset_total,
+            nodes,
+            pruned,
+            memo_hit: false,
+        }
+    }
+
+    /// Tune a named-layer network and emit the tuned manifest. Entries
+    /// keep input order; names must be whitespace-free tokens.
+    pub fn tune_network(
+        &mut self,
+        layers: &[(String, ConvLayer, FeatureMap)],
+    ) -> (TunedManifest, Vec<TunedResult>) {
+        let mut manifest = TunedManifest::default();
+        let mut results = Vec::with_capacity(layers.len());
+        for (name, layer, fm) in layers {
+            let r = self.tune_layer(layer, fm);
+            manifest.entries.push((name.clone(), r.entry(feature_map_sig(fm))));
+            results.push(r);
+        }
+        (manifest, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::Platform;
+    use crate::tensor::sparsity::{generate, SparsityParams};
+
+    fn fm_for(layer: &ConvLayer, density: f64, seed: u64) -> FeatureMap {
+        generate(layer.h, layer.w, layer.c_in, SparsityParams::clustered(density, seed))
+    }
+
+    #[test]
+    fn candidates_are_deduped_and_lead_with_default() {
+        let l = ConvLayer::new(1, 1, 56, 56, 64, 64);
+        let mods = candidate_modes(&l);
+        assert_eq!(mods[0].0, DivisionMode::GrateTile { n: 8 });
+        let mut seen = Vec::new();
+        for (m, _) in &mods {
+            assert!(!seen.contains(m), "duplicate candidate {m:?}");
+            seen.push(*m);
+        }
+        // halo=1 ⇒ uniform anchor is edge-1 ⇒ anchored{e}@{e-1} excluded.
+        assert!(!seen.contains(&DivisionMode::Anchored { edge: 8, anchor: 7 }));
+        assert!(seen.contains(&DivisionMode::Anchored { edge: 8, anchor: 1 }));
+    }
+
+    #[test]
+    fn tuned_beats_or_ties_default_and_presets() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let mut tuner = Tuner::new(hw);
+        let layer = ConvLayer::new(1, 1, 40, 40, 16, 16);
+        let fm = fm_for(&layer, 0.35, 5);
+        let r = tuner.tune_layer(&layer, &fm);
+        assert!(r.total_bits() <= r.default_total);
+        assert!(r.total_bits() <= r.best_preset_total);
+        assert!(r.nodes > 0);
+        assert!(!r.memo_hit);
+    }
+
+    #[test]
+    fn memo_hit_is_bit_identical_and_free() {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let mut tuner = Tuner::new(hw);
+        let layer = ConvLayer::new(1, 1, 32, 32, 16, 16);
+        let fm = fm_for(&layer, 0.4, 9);
+        let cold = tuner.tune_layer(&layer, &fm);
+        let hit = tuner.tune_layer(&layer, &fm);
+        assert!(hit.memo_hit);
+        assert_eq!(hit.nodes, 0, "memo hits cost no search nodes");
+        assert_eq!(hit.plan, cold.plan);
+        assert_eq!(hit.cost, cold.cost);
+        assert_eq!(tuner.memo_hits, 1);
+        // A different map misses.
+        let fm2 = fm_for(&layer, 0.4, 10);
+        assert!(!tuner.tune_layer(&layer, &fm2).memo_hit);
+    }
+
+    #[test]
+    fn feature_map_sig_is_content_addressed() {
+        let layer = ConvLayer::new(1, 1, 16, 16, 8, 8);
+        let a = fm_for(&layer, 0.5, 1);
+        let b = fm_for(&layer, 0.5, 1);
+        let c = fm_for(&layer, 0.5, 2);
+        assert_eq!(feature_map_sig(&a), feature_map_sig(&b));
+        assert_ne!(feature_map_sig(&a), feature_map_sig(&c));
+    }
+}

@@ -215,3 +215,75 @@ fn golden_gemm_table() {
     assert_eq!(renders[0], renders[1], "gemm table bytes depend on --jobs");
     check_golden("gemm_table.csv", &renders[0]);
 }
+
+/// ISSUE 9 satellite: the auto-tuning study — per-layer tuned plans vs
+/// the fixed presets over the default zoo networks — and the tuned
+/// manifest it emits are golden artifacts, byte-stable across `--jobs`
+/// (the search runs serially per layer; only the packer's
+/// position-indexed sizing pass fans out).
+#[test]
+fn golden_tune_study_identical_across_jobs() {
+    let mut renders = Vec::new();
+    for jobs in [1usize, 4] {
+        set_threads(jobs);
+        let (t, m) = harness::tune_study(harness::TUNE_STUDY_NETWORKS);
+        renders.push((t.render_csv(), m.render()));
+    }
+    set_threads(0);
+    assert_eq!(renders[0], renders[1], "tune study bytes depend on --jobs");
+    check_golden("tune_study.csv", &renders[0].0);
+    check_golden("tuned_manifest.txt", &renders[0].1);
+}
+
+/// ISSUE 9 satellite: tuned-manifest round trip across the whole
+/// pipeline. Tune the tiny serving net, pack a map under the tuned plan
+/// (`store pack --tuned` in library form), export → container →
+/// verify → fetch back bit-exactly, then serve the net under the
+/// parsed plans and golden the simulated report.
+#[test]
+fn golden_tuned_roundtrip_pack_inspect_serve() {
+    use gratetile::memsim::Dram;
+    use gratetile::store::{Container, TensorStore};
+    use gratetile::tensor::sparsity::{generate, SparsityParams};
+    use gratetile::tensor::FeatureMap;
+    use gratetile::tune::{TunedManifest, Tuner};
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let net = tiny_net();
+    // One representative input map per layer position, at the serving
+    // tests' density class.
+    let named: Vec<(String, ConvLayer, FeatureMap)> = net
+        .iter()
+        .enumerate()
+        .map(|(i, (l, _))| {
+            let fm = generate(l.h, l.w, l.c_in, SparsityParams::clustered(0.5, 7 + i as u64));
+            (format!("l{i}"), *l, fm)
+        })
+        .collect();
+    let (manifest, _) = Tuner::new(hw).tune_network(&named);
+    // The manifest text round-trips losslessly.
+    let parsed = TunedManifest::parse(&manifest.render()).unwrap();
+    assert_eq!(parsed, manifest);
+
+    // Pack the first layer's map under its tuned plan, push it through
+    // the store container boundary, and read it back bit-exactly.
+    let runner = gratetile::coordinator::LayerRunner::new(PipelineConfig::new(hw))
+        .with_plans(parsed.plans());
+    let plan = runner.plan_for(0);
+    let packed = runner.pack_with(&named[0].1, &named[0].2, plan.mode, plan.policy).unwrap();
+    let mut store = TensorStore::new();
+    store.insert_packed("act0", &packed).unwrap();
+    let path = std::env::temp_dir().join("gratetile-golden-tuned.grate");
+    Container::write(&path, &[("act0".to_string(), &store.export("act0").unwrap())]).unwrap();
+    let c = Container::open(&path).unwrap();
+    c.verify().unwrap();
+    let mut dram = Dram::default();
+    let dense = c.fetch_dense("act0", &mut dram).unwrap();
+    assert_eq!(dense.as_slice(), named[0].2.as_slice(), "tuned pack round trip");
+    std::fs::remove_file(&path).ok();
+
+    // Serve the net under the parsed tuned plans: the report is a
+    // golden artifact like its untuned siblings.
+    let server = sim_server().with_plans(parsed.plans());
+    let report = server.serve(server.synthetic_requests(6, 0.5, 7)).unwrap();
+    check_golden("serve_report_tuned.txt", &report.render());
+}

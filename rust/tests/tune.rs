@@ -1,0 +1,359 @@
+//! Auto-tuner acceptance harness (DESIGN.md §Auto-tuner).
+//!
+//! The claims this file pins, in order:
+//!
+//! 1. **Never worse** — the tuned plan's priced total (fetch + metadata
+//!    bits) is ≤ every fixed preset (all Table III divisions + WholeMap
+//!    × all registry codecs × both tile orders; [`WalkCost`] is
+//!    order-invariant so both orders price identically), re-priced
+//!    through the *independent* pack-then-price path rather than the
+//!    tuner's own sizing grids.
+//! 2. **Exactness** — branch-and-bound with the admissible lower bound
+//!    equals brute-force enumeration of the full candidate space on
+//!    small plan spaces: pruning never discards the optimum.
+//! 3. **Determinism** — the tuned manifest and study table are
+//!    byte-identical across `--jobs` ∈ {1, 2, 8} and across repeated
+//!    runs; the memo-hit path is bit-identical to the cold path.
+//! 4. **Pricer seams** — the extended split-point divisions the tuner
+//!    searches (anchored rims at 1 and edge−1, degenerate
+//!    single-sub-tensor cuts) price bit-exactly against the naive
+//!    walker oracle, and the record/tag-bit accounting under adaptive
+//!    plans matches the `record_slots` closed form.
+
+use gratetile::compress::{CodecPolicy, Scheme, TAG_BITS};
+use gratetile::config::hardware::Platform;
+use gratetile::config::layer::ConvLayer;
+use gratetile::config::zoo::Network;
+use gratetile::harness::tune_study;
+use gratetile::layout::metadata::record_bits_for;
+use gratetile::sim::experiment::{run_layer, run_layer_naive};
+use gratetile::tensor::sparsity::{generate, SparsityParams};
+use gratetile::tensor::FeatureMap;
+use gratetile::tiling::division::{Division, DivisionMode};
+use gratetile::tune::{candidate_modes, candidate_policies, TunedManifest, Tuner};
+use gratetile::util::parallel::set_threads;
+use gratetile::util::proptest_lite::forall_res;
+use gratetile::util::SplitMix64;
+
+/// Random layer-zoo point: geometry × density × sparsity seed.
+#[derive(Debug, Clone)]
+struct Zoo {
+    layer: ConvLayer,
+    density: f64,
+    seed: u64,
+}
+
+fn gen_zoo(r: &mut SplitMix64) -> Zoo {
+    let k = r.below(3); // kernels 1/3/5
+    let s = 1 + r.below(2);
+    let d = if k > 0 && r.chance(0.2) { 2 } else { 1 };
+    let h = 9 + r.below(28);
+    let w = 9 + r.below(28);
+    let c = 8 * (1 + r.below(3));
+    Zoo {
+        layer: ConvLayer { k, s, d, h, w, c_in: c, c_out: c },
+        density: 0.05 + 0.85 * r.next_f64(),
+        seed: r.next_u64(),
+    }
+}
+
+fn fm_of(z: &Zoo) -> FeatureMap {
+    generate(z.layer.h, z.layer.w, z.layer.c_in, SparsityParams::clustered(z.density, z.seed))
+}
+
+/// Priced total of one (mode, policy) through the independent
+/// pack-then-price path ([`run_layer`]): packer sizing, real codec
+/// selection, `LayerPricer::new(&packed)`. `None` when the division
+/// does not exist for the layer (Table III footnote a).
+fn packed_total(
+    hw: &gratetile::config::hardware::Hardware,
+    layer: &ConvLayer,
+    fm: &FeatureMap,
+    mode: DivisionMode,
+    policy: CodecPolicy,
+) -> Option<u64> {
+    run_layer(hw, layer, fm, mode, policy).ok().map(|b| b.fetched_bits + b.metadata_bits)
+}
+
+/// Satellite 1: the tuned plan is never worse than any fixed preset,
+/// and its priced cost is reproduced bit-exactly by the real packer —
+/// the search's sizing-grid arithmetic is not a private cost model.
+#[test]
+fn prop_tuned_never_worse() {
+    forall_res(0x71ED, 10, gen_zoo, |z| {
+        let hw = Platform::NvidiaSmallTile.hardware();
+        let fm = fm_of(z);
+        let mut tuner = Tuner::new(hw);
+        let r = tuner.tune_layer(&z.layer, &fm);
+        let tuned = r.total_bits();
+        // The winning plan re-priced through pack-then-price.
+        match packed_total(&hw, &z.layer, &fm, r.plan.mode, r.plan.policy) {
+            Some(t) if t == tuned => {}
+            other => {
+                return Err(format!(
+                    "tuned plan {} re-prices to {other:?}, search said {tuned}",
+                    r.plan.key()
+                ))
+            }
+        }
+        // ≤ every preset × codec. WalkCost is tile-order invariant, so
+        // this covers both orders of every preset plan.
+        for (mode, preset) in candidate_modes(&z.layer) {
+            if !preset {
+                continue;
+            }
+            for policy in candidate_policies() {
+                let Some(t) = packed_total(&hw, &z.layer, &fm, mode, policy) else { continue };
+                if tuned > t {
+                    return Err(format!(
+                        "tuned {tuned} ({}) worse than preset {} {} = {t} on {:?}",
+                        r.plan.key(),
+                        mode.name(),
+                        policy.name(),
+                        z.layer
+                    ));
+                }
+            }
+        }
+        // The reported best-preset column is itself achievable.
+        match packed_total(&hw, &z.layer, &fm, r.best_preset.mode, r.best_preset.policy) {
+            Some(t) if t == r.best_preset_total => Ok(()),
+            other => Err(format!(
+                "best preset {} re-prices to {other:?}, search said {}",
+                r.best_preset.key(),
+                r.best_preset_total
+            )),
+        }
+    });
+}
+
+/// Satellite 1 (strictness): on a mixed-density map — one dense rim,
+/// sparse elsewhere — the tuner must *strictly* beat at least one
+/// preset (a uniform plan cannot be optimal everywhere at once).
+#[test]
+fn tuned_strictly_beats_a_preset_on_mixed_density_map() {
+    let hw = Platform::EyerissLargeTile.hardware();
+    let layer = ConvLayer::new(1, 1, 40, 40, 32, 32);
+    let mut fm = generate(40, 40, 32, SparsityParams::clustered(0.08, 3));
+    let dense = generate(40, 40, 32, SparsityParams::clustered(0.9, 4));
+    for y in 0..40 {
+        for x in 0..6 {
+            for ch in 0..32 {
+                fm.set(y, x, ch, dense.get(y, x, ch));
+            }
+        }
+    }
+    let mut tuner = Tuner::new(hw);
+    let r = tuner.tune_layer(&layer, &fm);
+    let tuned = r.total_bits();
+    let mut beaten = 0usize;
+    for (mode, preset) in candidate_modes(&layer) {
+        if !preset {
+            continue;
+        }
+        for policy in candidate_policies() {
+            if let Some(t) = packed_total(&hw, &layer, &fm, mode, policy) {
+                assert!(tuned <= t, "tuned worse than {} {}", mode.name(), policy.name());
+                if tuned < t {
+                    beaten += 1;
+                }
+            }
+        }
+    }
+    assert!(beaten >= 1, "tuned plan ties every preset on a mixed-density map");
+}
+
+/// Satellite 1 (exactness): brute-force enumeration of the *entire*
+/// candidate space — presets and anchored split-point probes alike —
+/// through the independent pack-then-price path. The pruned search must
+/// land on exactly the brute-force minimum: the lower bound is
+/// admissible, so pruning never discards the optimum.
+#[test]
+fn search_matches_brute_force_enumeration() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let cases = [
+        (ConvLayer::new(1, 1, 16, 16, 8, 8), 0.30, 21u64),
+        (ConvLayer::new(1, 2, 18, 14, 16, 16), 0.55, 22),
+        (ConvLayer::new(2, 1, 20, 20, 8, 8), 0.15, 23),
+    ];
+    for (layer, density, seed) in cases {
+        let fm = generate(layer.h, layer.w, layer.c_in, SparsityParams::clustered(density, seed));
+        let mut tuner = Tuner::new(hw);
+        let r = tuner.tune_layer(&layer, &fm);
+        let mut brute = u64::MAX;
+        let mut space = 0usize;
+        for (mode, _) in candidate_modes(&layer) {
+            for policy in candidate_policies() {
+                if let Some(t) = packed_total(&hw, &layer, &fm, mode, policy) {
+                    brute = brute.min(t);
+                    space += 1;
+                }
+            }
+        }
+        assert!(space > 0, "empty plan space for {layer:?}");
+        assert_eq!(
+            r.total_bits(),
+            brute,
+            "search ({}, {} nodes, {} pruned) != brute force over {space} plans for {layer:?}",
+            r.plan.key(),
+            r.nodes,
+            r.pruned
+        );
+    }
+}
+
+/// Satellite 2: the tuned manifest and study table are byte-identical
+/// across `--jobs` ∈ {1, 2, 8} (the only parallelism under the search
+/// is the packer's position-indexed sizing fan-out) and across repeated
+/// runs with fresh tuners.
+#[test]
+fn tuned_manifest_identical_across_jobs_and_runs() {
+    let mut renders: Vec<(usize, String, String)> = Vec::new();
+    for jobs in [1usize, 2, 8] {
+        set_threads(jobs);
+        let (t, m) = tune_study(&[Network::AlexNet]);
+        renders.push((jobs, t.render_csv(), m.render()));
+    }
+    set_threads(0);
+    for (jobs, table, manifest) in &renders[1..] {
+        assert_eq!(
+            manifest, &renders[0].2,
+            "tuned manifest bytes diverge between --jobs 1 and --jobs {jobs}"
+        );
+        assert_eq!(
+            table, &renders[0].1,
+            "tune table bytes diverge between --jobs 1 and --jobs {jobs}"
+        );
+    }
+    let (t2, m2) = tune_study(&[Network::AlexNet]);
+    assert_eq!(m2.render(), renders[0].2, "manifest bytes diverge across repeated runs");
+    assert_eq!(t2.render_csv(), renders[0].1, "table bytes diverge across repeated runs");
+}
+
+/// Satellite 2: in a network with repeated layer specs the memo path
+/// serves results bit-identical to the cold path — same plan, same
+/// priced cost, same rendered manifest line (names aside) — and the
+/// manifest round-trips through its text form.
+#[test]
+fn memo_path_is_bit_identical_in_repeated_layer_network() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let mut tuner = Tuner::new(hw);
+    let layer = ConvLayer::new(1, 1, 24, 24, 16, 16);
+    let fm = generate(24, 24, 16, SparsityParams::clustered(0.3, 11));
+    let other = ConvLayer::new(1, 1, 20, 20, 8, 8);
+    let other_fm = generate(20, 20, 8, SparsityParams::clustered(0.5, 12));
+    let layers = vec![
+        ("a.conv1".to_string(), layer, fm.clone()),
+        ("b.conv1".to_string(), other, other_fm),
+        ("b.conv2".to_string(), layer, fm.clone()),
+        ("c.conv1".to_string(), layer, fm),
+    ];
+    let (m, results) = tuner.tune_network(&layers);
+    assert!(!results[0].memo_hit && !results[1].memo_hit);
+    assert!(results[2].memo_hit && results[3].memo_hit);
+    assert_eq!(tuner.memo_hits, 2);
+    for hit in [&results[2], &results[3]] {
+        assert_eq!(hit.plan, results[0].plan);
+        assert_eq!(hit.cost, results[0].cost);
+        assert_eq!(hit.nodes, 0, "memo hits price no nodes");
+    }
+    // Rendered manifest lines for the repeated spec differ only by name.
+    let lines: Vec<Vec<&str>> = m
+        .render()
+        .lines()
+        .filter(|l| l.starts_with("tuned "))
+        .map(|l| l.split_whitespace().collect())
+        .collect();
+    assert_eq!(lines.len(), 4);
+    for li in [2usize, 3] {
+        assert_eq!(&lines[li][2..], &lines[0][2..], "memo line {li} diverges beyond the name");
+    }
+    let parsed = TunedManifest::parse(&m.render()).unwrap();
+    assert_eq!(parsed, m);
+    assert_eq!(parsed.get("b.conv2"), parsed.get("a.conv1"));
+}
+
+/// Satellite 3: pricer-seam backfill. Every extended division the tuner
+/// can emit — anchored rims split at 1 and at edge−1, degenerate
+/// single-block geometries, WholeMap, the compact baseline — prices
+/// bit-exactly against the naive per-sub-tensor walker oracle, under
+/// both a fixed codec and the adaptive policy.
+#[test]
+fn extended_divisions_price_exactly_like_the_naive_oracle() {
+    let hw = Platform::NvidiaSmallTile.hardware();
+    let geoms = [
+        ConvLayer::new(1, 1, 24, 24, 16, 16),
+        ConvLayer::new(2, 1, 17, 13, 8, 8), // ragged + halo
+        ConvLayer::new(1, 2, 9, 9, 8, 8),   // degenerate: ~one block
+        ConvLayer::new(1, 1, 6, 6, 8, 8),   // smaller than one 8-edge
+    ];
+    let modes = [
+        DivisionMode::Anchored { edge: 8, anchor: 1 },
+        DivisionMode::Anchored { edge: 8, anchor: 7 },
+        DivisionMode::Anchored { edge: 4, anchor: 1 },
+        DivisionMode::Anchored { edge: 2, anchor: 1 },
+        DivisionMode::WholeMap,
+        DivisionMode::Uniform { edge: 1 },
+    ];
+    let mut checked = 0usize;
+    for layer in &geoms {
+        let fm =
+            generate(layer.h, layer.w, layer.c_in, SparsityParams::clustered(0.35, 77));
+        for mode in modes {
+            for policy in [CodecPolicy::Fixed(Scheme::Zrlc), CodecPolicy::Adaptive] {
+                let (Ok(fast), Ok(naive)) = (
+                    run_layer(&hw, layer, &fm, mode, policy),
+                    run_layer_naive(&hw, layer, &fm, mode, policy),
+                ) else {
+                    continue;
+                };
+                assert_eq!(fast.fetched_bits, naive.fetched_bits, "{} fetch", mode.name());
+                assert_eq!(fast.metadata_bits, naive.metadata_bits, "{} meta", mode.name());
+                assert_eq!(fast.baseline_bits, naive.baseline_bits, "{} base", mode.name());
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 30, "only {checked} (geometry, mode, policy) seams existed");
+}
+
+/// Satellite 3: record/tag-bit accounting under tuned mixed plans. For
+/// one division, metadata traffic is `record_bits × touched-records`;
+/// the touch count is policy-independent, so the adaptive and fixed
+/// totals must be exact multiples of their per-record widths with equal
+/// quotients, and the widths must differ by exactly
+/// `TAG_BITS × record_slots` (the Fig. 7 per-slot codec tags).
+#[test]
+fn adaptive_tag_bits_match_record_slot_accounting() {
+    let hw = Platform::EyerissLargeTile.hardware();
+    for mode in [
+        DivisionMode::GrateTile { n: 8 },
+        DivisionMode::Anchored { edge: 8, anchor: 1 },
+        DivisionMode::Anchored { edge: 4, anchor: 3 },
+    ] {
+        let layer = ConvLayer::new(1, 1, 33, 29, 16, 16);
+        let tile = hw.tile_for_layer(&layer);
+        let division =
+            Division::build(mode, &layer, &tile, &hw, layer.h, layer.w, layer.c_in).unwrap();
+        let rb_fixed = record_bits_for(&division, CodecPolicy::Fixed(Scheme::Bitmask)) as u64;
+        let rb_auto = record_bits_for(&division, CodecPolicy::Adaptive) as u64;
+        assert_eq!(
+            rb_auto - rb_fixed,
+            (TAG_BITS * division.record_slots()) as u64,
+            "{}: adaptive record width must add one tag per slot",
+            mode.name()
+        );
+        let fm = generate(33, 29, 16, SparsityParams::clustered(0.4, 41));
+        let fixed = run_layer(&hw, &layer, &fm, mode, Scheme::Bitmask).unwrap();
+        let auto = run_layer(&hw, &layer, &fm, mode, CodecPolicy::Adaptive).unwrap();
+        assert_eq!(fixed.metadata_bits % rb_fixed, 0, "{}", mode.name());
+        assert_eq!(auto.metadata_bits % rb_auto, 0, "{}", mode.name());
+        assert_eq!(
+            fixed.metadata_bits / rb_fixed,
+            auto.metadata_bits / rb_auto,
+            "{}: record touch count must be policy-independent",
+            mode.name()
+        );
+        assert!(auto.metadata_bits > fixed.metadata_bits, "{}", mode.name());
+    }
+}
