@@ -1,0 +1,294 @@
+//! Self-hosted invariant linter (`gratetile lint`).
+//!
+//! A dependency-free static-analysis pass over the crate's own sources
+//! (`src/` + `tests/`): the [`scanner`] strips comments and string
+//! literals, [`rules`] runs token queries for the five repo invariants
+//! (determinism, clock discipline, panic-free decoding, print and env
+//! hygiene), [`pragma`] resolves per-line `// lint: allow(rule, reason)`
+//! suppressions plus the checked-in `lint.allow` file, and [`report`]
+//! renders findings in a deterministic `(path, line, rule)` order.
+//!
+//! The pass lints itself — the analyzer's own sources are part of the
+//! scanned tree — and runs three ways: `gratetile lint`, the standalone
+//! `gratetile-lint` binary, and the tier-1 `tests/lint.rs` suite.
+
+pub mod pragma;
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use crate::err;
+use crate::util::error::{Context as _, Result};
+use pragma::{collect_pragmas, Allowlist};
+use report::{Finding, LintReport, Severity};
+use scanner::ScannedFile;
+
+/// Name of the checked-in allowlist, resolved against the crate root.
+pub const ALLOWLIST_FILE: &str = "lint.allow";
+
+/// Run every rule over one scanned file, resolving suppressions.
+/// Suppressed findings bump `report.suppressed`; everything else lands
+/// in `report.findings` (rule hits as errors, suppression defects as
+/// warnings).
+fn lint_scanned(f: &ScannedFile, allow: &mut Allowlist, rep: &mut LintReport) {
+    let comments: Vec<String> = f.lines.iter().map(|l| l.comment.clone()).collect();
+    let code_blank: Vec<bool> = f.lines.iter().map(|l| l.code.trim().is_empty()).collect();
+    let mut pragmas = collect_pragmas(&comments, &code_blank);
+    for (line, rule, message) in rules::check_file(f) {
+        let mut suppressed = false;
+        for p in pragmas.iter_mut() {
+            if p.defect.is_none() && p.rule == rule && p.applies_to == line {
+                p.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed && allow.allows(rule, &f.path) {
+            suppressed = true;
+        }
+        if suppressed {
+            rep.suppressed += 1;
+            continue;
+        }
+        rep.findings.push(Finding {
+            path: f.path.clone(),
+            line,
+            rule,
+            message,
+            hint: rules::rule_spec(rule).map(|r| r.hint).unwrap_or(""),
+            severity: Severity::Error,
+        });
+    }
+    // Suppressions are linted too: malformed or unknown-rule pragmas and
+    // pragmas that suppress nothing are warnings (CI denies them).
+    for p in &pragmas {
+        let (rule, message): (&'static str, String) = if let Some(d) = &p.defect {
+            ("bad-pragma", d.clone())
+        } else if !rules::is_known_rule(&p.rule) {
+            ("bad-pragma", format!("pragma names unknown rule '{}'", p.rule))
+        } else if !p.used {
+            ("unused-allow", format!("pragma for '{}' suppresses nothing", p.rule))
+        } else {
+            continue;
+        };
+        rep.findings.push(Finding {
+            path: f.path.clone(),
+            line: p.line,
+            rule,
+            message,
+            hint: rules::rule_spec(rule).map(|r| r.hint).unwrap_or(""),
+            severity: Severity::Warning,
+        });
+    }
+}
+
+/// Emit `unused-allow` warnings for allowlist entries that covered
+/// nothing, then fix the report order. Called once, after the last file.
+fn finish(allow: &Allowlist, mut rep: LintReport) -> LintReport {
+    for e in &allow.entries {
+        if !e.used {
+            rep.findings.push(Finding {
+                path: ALLOWLIST_FILE.to_string(),
+                line: e.line,
+                rule: "unused-allow",
+                message: format!("entry '{} {}' suppresses nothing", e.rule, e.path),
+                hint: rules::rule_spec("unused-allow").map(|r| r.hint).unwrap_or(""),
+                severity: Severity::Warning,
+            });
+        }
+    }
+    rep.sort();
+    rep
+}
+
+/// Lint one in-memory source against an in-memory allowlist. This is
+/// the fixture entry point used by `tests/lint.rs`; `path` decides rule
+/// scoping exactly as on disk (`src/compress/x.rs` is a decoder file).
+pub fn lint_text(path: &str, text: &str, allow_text: &str) -> Result<LintReport> {
+    let mut allow = Allowlist::parse(allow_text)?;
+    let mut rep = LintReport { files_scanned: 1, ..LintReport::default() };
+    lint_scanned(&scanner::scan(path, text), &mut allow, &mut rep);
+    Ok(finish(&allow, rep))
+}
+
+/// Collect every `.rs` file under `<crate_root>/src` and
+/// `<crate_root>/tests`, as sorted `(repo-relative path, absolute path)`
+/// pairs. Directory order is sorted explicitly — `read_dir` order is
+/// platform-dependent and the report must not be.
+fn collect_sources(crate_root: &Path) -> Result<Vec<(String, PathBuf)>> {
+    fn walk(dir: &Path, rel: &str, out: &mut Vec<(String, PathBuf)>) -> Result<()> {
+        let mut entries = Vec::new();
+        for e in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+            entries.push(e.with_context(|| format!("reading {}", dir.display()))?);
+        }
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let child_rel = format!("{rel}/{name}");
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, &child_rel, out)?;
+            } else if name.ends_with(".rs") {
+                out.push((child_rel, p));
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for top in ["src", "tests"] {
+        let dir = crate_root.join(top);
+        if dir.is_dir() {
+            walk(&dir, top, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// Lint the whole tree rooted at `crate_root` (the directory holding
+/// `src/`, `tests/` and `lint.allow`). A missing allowlist is an empty
+/// allowlist; a malformed one is a hard error.
+pub fn lint_tree(crate_root: &Path) -> Result<LintReport> {
+    let allow_path = crate_root.join(ALLOWLIST_FILE);
+    let allow_text = if allow_path.is_file() {
+        std::fs::read_to_string(&allow_path)
+            .with_context(|| format!("reading {}", allow_path.display()))?
+    } else {
+        String::new()
+    };
+    let mut allow = Allowlist::parse(&allow_text)?;
+    let mut rep = LintReport::default();
+    for (rel, abs) in collect_sources(crate_root)? {
+        let text = std::fs::read_to_string(&abs)
+            .with_context(|| format!("reading {}", abs.display()))?;
+        lint_scanned(&scanner::scan(&rel, &text), &mut allow, &mut rep);
+        rep.files_scanned += 1;
+    }
+    Ok(finish(&allow, rep))
+}
+
+/// Locate the crate root from `start`: the first of `start` itself and
+/// `start/rust` that contains `src/lib.rs`. Lets the linter run from
+/// the repo root or from `rust/` identically.
+pub fn find_crate_root(start: &Path) -> Option<PathBuf> {
+    for cand in [start.to_path_buf(), start.join("rust")] {
+        if cand.join("src").join("lib.rs").is_file() {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+/// Shared driver for the two CLI entries (`gratetile lint` and the
+/// standalone `gratetile-lint`): resolve the crate root, run the pass,
+/// optionally write the report file. Returns the rendered report and
+/// whether the pass passed — printing is the caller's job (the
+/// `stray-print` rule exempts only the entry points).
+pub fn run_cli(
+    root: Option<&str>,
+    deny_warnings: bool,
+    report_path: Option<&str>,
+) -> Result<(String, bool)> {
+    let root = match root {
+        Some(r) => PathBuf::from(r),
+        None => find_crate_root(Path::new("."))
+            .ok_or_else(|| err!("lint: no src/lib.rs under '.' or './rust' (pass --root)"))?,
+    };
+    let rep = lint_tree(&root)?;
+    let rendered = rep.render();
+    if let Some(p) = report_path {
+        std::fs::write(p, &rendered).with_context(|| format!("writing lint report {p}"))?;
+    }
+    Ok((rendered, rep.ok(deny_warnings)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pragma_suppresses_and_is_marked_used() {
+        let rep = lint_text(
+            "src/x.rs",
+            "use std::collections::HashMap; // lint: allow(nondet-iter, lookup-only)\n",
+            "",
+        )
+        .unwrap();
+        assert_eq!(rep.errors(), 0);
+        assert_eq!(rep.warnings(), 0);
+        assert_eq!(rep.suppressed, 1);
+    }
+
+    #[test]
+    fn standalone_pragma_covers_next_line() {
+        let rep = lint_text(
+            "src/x.rs",
+            "// lint: allow(nondet-iter, lookup-only)\nuse std::collections::HashMap;\n",
+            "",
+        )
+        .unwrap();
+        assert_eq!(rep.errors(), 0);
+        assert_eq!(rep.suppressed, 1);
+    }
+
+    #[test]
+    fn allowlist_suppresses_by_rule_and_path() {
+        let rep = lint_text(
+            "src/obs/pipeline.rs",
+            "let t = Instant::now();\n",
+            "wall-clock src/obs/pipeline.rs the --wall path reads host time by design\n",
+        )
+        .unwrap();
+        assert_eq!(rep.errors(), 0);
+        assert_eq!(rep.suppressed, 1);
+    }
+
+    #[test]
+    fn unsuppressed_finding_is_an_error_with_location() {
+        let rep = lint_text("src/x.rs", "fn f() {}\nlet t = Instant::now();\n", "").unwrap();
+        assert_eq!(rep.errors(), 1);
+        let f = &rep.findings[0];
+        assert_eq!((f.path.as_str(), f.line, f.rule), ("src/x.rs", 2, "wall-clock"));
+        assert!(!rep.ok(false));
+    }
+
+    #[test]
+    fn wrong_rule_pragma_does_not_suppress() {
+        let rep = lint_text(
+            "src/x.rs",
+            "use std::collections::HashMap; // lint: allow(wall-clock, wrong rule)\n",
+            "",
+        )
+        .unwrap();
+        assert_eq!(rep.errors(), 1, "{}", rep.render());
+        // And the pragma itself is flagged as suppressing nothing.
+        assert_eq!(rep.warnings(), 1);
+    }
+
+    #[test]
+    fn stale_suppressions_warn_and_fail_under_deny() {
+        let rep = lint_text(
+            "src/x.rs",
+            "fn clean() {} // lint: allow(nondet-iter, stale)\n",
+            "wall-clock src/other.rs stale entry\n",
+        )
+        .unwrap();
+        assert_eq!(rep.errors(), 0);
+        assert_eq!(rep.warnings(), 2);
+        assert!(rep.ok(false) && !rep.ok(true));
+        let allow_warn = rep.findings.iter().find(|f| f.path == ALLOWLIST_FILE).unwrap();
+        assert_eq!(allow_warn.rule, "unused-allow");
+    }
+
+    #[test]
+    fn bad_pragmas_warn() {
+        let rep =
+            lint_text("src/x.rs", "fn f() {} // lint: allow(nondet-iter)\n", "").unwrap();
+        assert_eq!(rep.warnings(), 1);
+        assert_eq!(rep.findings[0].rule, "bad-pragma");
+        let rep =
+            lint_text("src/x.rs", "fn f() {} // lint: allow(no-such-rule, why)\n", "").unwrap();
+        assert_eq!(rep.findings[0].rule, "bad-pragma");
+    }
+}

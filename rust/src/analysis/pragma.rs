@@ -1,0 +1,230 @@
+//! Suppression surfaces: per-line pragmas and the checked-in allowlist.
+//!
+//! Two ways to accept a finding, both requiring a written reason:
+//!
+//! * **Pragma** — a line comment `lint: allow(<rule>, <reason>)` on the
+//!   flagged line, or on its own comment-only line immediately above.
+//!   For invariants that hold at one specific site ("clamped by the
+//!   `min()` above").
+//! * **Allowlist entry** — a `<rule> <path> <justification…>` line in
+//!   `lint.allow`, suppressing a whole rule for a whole file. For
+//!   by-design surfaces (the `--wall` path reads host clocks; the bench
+//!   reporter prints to stdout).
+//!
+//! Both are themselves linted: a pragma without a reason or with an
+//! unknown rule id is a `bad-pragma` warning, and a pragma or allowlist
+//! entry that suppresses nothing is an `unused-allow` warning — under
+//! `--deny-warnings` (CI) stale suppressions fail the build, so the
+//! allowlist can only shrink as findings get fixed.
+
+use crate::util::error::Result;
+use crate::{bail, err};
+
+/// One parsed `lint: allow(rule, reason)` pragma.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    /// Rule id the pragma suppresses (`*` is not supported on purpose —
+    /// every suppression names exactly one invariant).
+    pub rule: String,
+    /// The written justification (must be non-empty).
+    pub reason: String,
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// 1-based line the pragma applies to (its own line, or the next
+    /// line when the pragma is the only thing on its line).
+    pub applies_to: usize,
+    /// Set when a finding was suppressed through this pragma.
+    pub used: bool,
+    /// Parse defect (missing reason / malformed syntax), reported as a
+    /// `bad-pragma` warning.
+    pub defect: Option<String>,
+}
+
+/// Extract pragmas from a scanned file's comment channel.
+///
+/// `code_blank[i]` says whether line `i+1` has no code (pure comment
+/// line) — such a pragma applies to the next line instead.
+pub fn collect_pragmas(comments: &[String], code_blank: &[bool]) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for (idx, comment) in comments.iter().enumerate() {
+        let line = idx + 1;
+        // Doc comments are documentation, not suppressions — prose
+        // describing the pragma syntax must not itself be a pragma.
+        let t = comment.trim_start();
+        if t.starts_with("///") || t.starts_with("//!") {
+            continue;
+        }
+        let Some(at) = comment.find("lint:") else { continue };
+        let rest = comment[at + "lint:".len()..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else {
+            out.push(Pragma {
+                rule: String::new(),
+                reason: String::new(),
+                line,
+                applies_to: line,
+                used: false,
+                defect: Some("expected `lint: allow(<rule>, <reason>)`".to_string()),
+            });
+            continue;
+        };
+        let applies_to = if code_blank[idx] { line + 1 } else { line };
+        let Some(close) = body.rfind(')') else {
+            out.push(Pragma {
+                rule: String::new(),
+                reason: String::new(),
+                line,
+                applies_to,
+                used: false,
+                defect: Some("unclosed `lint: allow(` pragma".to_string()),
+            });
+            continue;
+        };
+        let inner = &body[..close];
+        let (rule, reason) = match inner.split_once(',') {
+            Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+            None => (inner.trim().to_string(), String::new()),
+        };
+        let defect = if rule.is_empty() {
+            Some("pragma names no rule".to_string())
+        } else if reason.is_empty() {
+            Some(format!("pragma for '{rule}' carries no reason — justify the allow"))
+        } else {
+            None
+        };
+        out.push(Pragma { rule, reason, line, applies_to, used: false, defect });
+    }
+    out
+}
+
+/// One `lint.allow` entry: suppress `rule` everywhere in `path`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub justification: String,
+    /// 1-based line in the allowlist file.
+    pub line: usize,
+    pub used: bool,
+}
+
+/// The parsed checked-in allowlist.
+#[derive(Debug, Clone, Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse allowlist text. Malformed lines and entries without a
+    /// justification are hard errors (a suppression must never land
+    /// without a written reason), reported with their line number.
+    pub fn parse(text: &str) -> Result<Allowlist> {
+        let mut entries = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let line = idx + 1;
+            let l = raw.trim();
+            if l.is_empty() || l.starts_with('#') {
+                continue;
+            }
+            let mut parts = l.splitn(3, char::is_whitespace);
+            let rule = parts.next().unwrap_or_default().to_string();
+            let path = parts
+                .next()
+                .ok_or_else(|| err!("lint.allow:{line}: expected `<rule> <path> <justification>`"))?
+                .to_string();
+            let justification = parts.next().unwrap_or("").trim().to_string();
+            if justification.is_empty() {
+                bail!("lint.allow:{line}: entry '{rule} {path}' carries no justification");
+            }
+            entries.push(AllowEntry { rule, path, justification, line, used: false });
+        }
+        Ok(Allowlist { entries })
+    }
+
+    /// Mark-and-test: does an entry cover `(rule, path)`? The first
+    /// matching entry is marked used.
+    pub fn allows(&mut self, rule: &str, path: &str) -> bool {
+        for e in &mut self.entries {
+            if e.rule == rule && e.path == path {
+                e.used = true;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pragmas(lines: &[(&str, bool)]) -> Vec<Pragma> {
+        let comments: Vec<String> = lines.iter().map(|(c, _)| c.to_string()).collect();
+        let blank: Vec<bool> = lines.iter().map(|&(_, b)| b).collect();
+        collect_pragmas(&comments, &blank)
+    }
+
+    #[test]
+    fn trailing_pragma_applies_to_its_own_line() {
+        let p = pragmas(&[("// lint: allow(nondet-iter, lookup-only map)", false)]);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].rule, "nondet-iter");
+        assert_eq!(p[0].reason, "lookup-only map");
+        assert_eq!(p[0].applies_to, 1);
+        assert!(p[0].defect.is_none());
+    }
+
+    #[test]
+    fn standalone_pragma_applies_to_next_line() {
+        let p = pragmas(&[("// lint: allow(wall-clock, bench timer)", true), ("", false)]);
+        assert_eq!(p[0].applies_to, 2);
+    }
+
+    #[test]
+    fn reason_is_mandatory() {
+        let p = pragmas(&[("// lint: allow(nondet-iter)", false)]);
+        assert!(p[0].defect.as_deref().unwrap_or("").contains("no reason"));
+        let p = pragmas(&[("// lint: allow(nondet-iter, )", false)]);
+        assert!(p[0].defect.is_some());
+    }
+
+    #[test]
+    fn malformed_pragmas_are_defects_not_ignored() {
+        assert!(pragmas(&[("// lint: deny(x)", false)])[0].defect.is_some());
+        assert!(pragmas(&[("// lint: allow(oops, no close", false)])[0].defect.is_some());
+        assert!(pragmas(&[("// plain comment", false)]).is_empty());
+    }
+
+    #[test]
+    fn doc_comments_are_not_pragma_sites() {
+        assert!(pragmas(&[("/// write `lint: allow(rule, reason)`", false)]).is_empty());
+        assert!(pragmas(&[("//! syntax: `lint: allow(rule, reason)`", false)]).is_empty());
+    }
+
+    #[test]
+    fn reasons_may_contain_parens() {
+        let p = pragmas(&[("// lint: allow(panic-in-decoder, clamped by min() above)", false)]);
+        assert_eq!(p[0].reason, "clamped by min() above");
+        assert!(p[0].defect.is_none());
+    }
+
+    #[test]
+    fn allowlist_round_trip() {
+        let mut a = Allowlist::parse(
+            "# comment\n\nwall-clock src/x.rs the --wall path reads host time by design\n",
+        )
+        .unwrap();
+        assert_eq!(a.entries.len(), 1);
+        assert!(a.allows("wall-clock", "src/x.rs"));
+        assert!(a.entries[0].used);
+        assert!(!a.allows("wall-clock", "src/y.rs"));
+        assert!(!a.allows("nondet-iter", "src/x.rs"));
+    }
+
+    #[test]
+    fn allowlist_requires_justification() {
+        assert!(Allowlist::parse("wall-clock src/x.rs\n").is_err());
+        assert!(Allowlist::parse("wall-clock src/x.rs   \n").is_err());
+        let e = Allowlist::parse("wall-clock\n").unwrap_err().to_string();
+        assert!(e.contains("lint.allow:1"), "{e}");
+    }
+}

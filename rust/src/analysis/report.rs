@@ -1,0 +1,134 @@
+//! Deterministic finding collection and rendering.
+//!
+//! The report is itself subject to the invariants it enforces: findings
+//! are sorted by `(path, line, rule)` so the rendered text is
+//! byte-identical run-to-run and host-to-host, and rendering returns a
+//! `String` (only the CLI entry points print).
+
+use std::fmt::Write as _;
+
+/// How a finding affects the exit status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Rule violations: always fail the lint.
+    Error,
+    /// Suppression hygiene (`bad-pragma`, `unused-allow`): fail only
+    /// under `--deny-warnings` (the CI mode).
+    Warning,
+}
+
+/// One reported finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Repo-relative path with forward slashes (or `lint.allow`).
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    pub hint: &'static str,
+    pub severity: Severity,
+}
+
+/// The outcome of a lint pass.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Findings accepted through a pragma or allowlist entry.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    /// Canonical order: `(path, line, rule)`. Called once by the driver
+    /// after all files are checked.
+    pub fn sort(&mut self) {
+        self.findings
+            .sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    }
+
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// Exit-status policy: errors always fail; warnings fail only when
+    /// denied (CI runs `--deny-warnings` so stale suppressions cannot
+    /// accumulate).
+    pub fn ok(&self, deny_warnings: bool) -> bool {
+        self.errors() == 0 && (!deny_warnings || self.warnings() == 0)
+    }
+
+    /// Render the full report. Deterministic: sorted findings, fixed
+    /// summary line, no timestamps.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let sev = match f.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            let _ = writeln!(out, "{}:{}: {sev}[{}]: {}", f.path, f.line, f.rule, f.message);
+            let _ = writeln!(out, "    hint: {}", f.hint);
+        }
+        let _ = writeln!(
+            out,
+            "lint: {} files, {} errors, {} warnings, {} suppressed",
+            self.files_scanned,
+            self.errors(),
+            self.warnings(),
+            self.suppressed
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(path: &str, line: usize, rule: &'static str, sev: Severity) -> Finding {
+        Finding {
+            path: path.to_string(),
+            line,
+            rule,
+            message: "m".to_string(),
+            hint: "h",
+            severity: sev,
+        }
+    }
+
+    #[test]
+    fn sorted_and_rendered_deterministically() {
+        let mut r = LintReport {
+            findings: vec![
+                f("src/b.rs", 9, "wall-clock", Severity::Error),
+                f("src/a.rs", 3, "nondet-iter", Severity::Error),
+                f("src/b.rs", 9, "nondet-iter", Severity::Error),
+            ],
+            files_scanned: 2,
+            suppressed: 1,
+        };
+        r.sort();
+        let text = r.render();
+        let a = text.find("src/a.rs:3").unwrap();
+        let b1 = text.find("src/b.rs:9: error[nondet-iter]").unwrap();
+        let b2 = text.find("src/b.rs:9: error[wall-clock]").unwrap();
+        assert!(a < b1 && b1 < b2);
+        assert!(text.ends_with("lint: 2 files, 3 errors, 0 warnings, 1 suppressed\n"));
+    }
+
+    #[test]
+    fn warning_policy() {
+        let mut r = LintReport::default();
+        assert!(r.ok(true));
+        r.findings.push(f("src/a.rs", 1, "unused-allow", Severity::Warning));
+        assert!(r.ok(false));
+        assert!(!r.ok(true));
+        r.findings.push(f("src/a.rs", 2, "nondet-iter", Severity::Error));
+        assert!(!r.ok(false));
+    }
+}

@@ -1,0 +1,269 @@
+//! The rule catalog: every repo invariant the linter enforces.
+//!
+//! Rules are token queries over comment/string-stripped code (see
+//! [`crate::analysis::scanner`]), scoped by path and test-region:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | `nondet-iter` | no `HashMap`/`HashSet` anywhere — iteration order is nondeterministic and one stray iteration in an output-adjacent module breaks byte-stable goldens. Use `BTreeMap`/`BTreeSet` or collect-and-sort; justify lookup-only maps with an allow. |
+//! | `wall-clock` | no host-clock reads (`std::time`, `Instant::now`, `SystemTime`) — reports are *simulated* cycles, byte-stable across hosts. The explicit `--wall` path and the bench harness are allowlisted by design; benches are out of scope. |
+//! | `panic-in-decoder` | no `unwrap`/`expect`/`panic!`-family/untrusted-buffer indexing in the fault-hardened decode surfaces (`compress/*`, `store/container.rs`, `layout/fetcher.rs`): corrupt payloads must decode to garbage or typed errors, never a panic (PR 8's property-tested contract). Test modules are exempt. |
+//! | `stray-print` | no `println!`/`eprintln!`/`dbg!` outside `main.rs`, the lint binary, and `obs::log` — study tables render to `String` (printed by `main`), diagnostics go through the leveled `log_*` macros. |
+//! | `env-read` | no `std::env` reads outside `config`/`util`/log setup (`env::args` in entry points is fine) — environment must not steer packing, pricing or serving output. Tests may read bless/temp knobs. |
+//!
+//! Adding a rule: add a [`RuleSpec`] here, its scope+tokens in
+//! [`check_file`], a positive and negative fixture in `tests/lint.rs`,
+//! and a row in DESIGN.md §Static analysis.
+
+use super::scanner::{find_token, ScannedFile};
+
+/// Static description of one rule (id, invariant, fix hint).
+#[derive(Debug, Clone, Copy)]
+pub struct RuleSpec {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub hint: &'static str,
+}
+
+/// The enforced rules, in report order.
+pub const RULES: &[RuleSpec] = &[
+    RuleSpec {
+        id: "nondet-iter",
+        summary: "HashMap/HashSet iteration order is nondeterministic",
+        hint: "use BTreeMap/BTreeSet (or collect-and-sort before rendering); a provably \
+               lookup-only map may carry `// lint: allow(nondet-iter, <why>)`",
+    },
+    RuleSpec {
+        id: "wall-clock",
+        summary: "host clock read outside the --wall path",
+        hint: "reports are simulated cycles; thread cycle counts through the timing pass \
+               instead, or allowlist the file if it IS the --wall/bench surface",
+    },
+    RuleSpec {
+        id: "panic-in-decoder",
+        summary: "panic path in a fault-hardened decode surface",
+        hint: "corrupt payloads must never panic: return typed errors or clamp \
+               (`get`/`split_at(len.min(..))`); justify provable invariants with \
+               `// lint: allow(panic-in-decoder, <why>)`",
+    },
+    RuleSpec {
+        id: "stray-print",
+        summary: "direct stdout/stderr print outside main/obs::log",
+        hint: "render tables to String (main prints them) or use \
+               log_error!/log_warn!/log_info!/log_debug!",
+    },
+    RuleSpec {
+        id: "env-read",
+        summary: "environment read outside config/util/log setup",
+        hint: "plumb the knob through a config struct or CLI flag so runs are \
+               reproducible from the command line alone",
+    },
+];
+
+/// Warning-severity meta rules the driver emits (suppressions are
+/// themselves linted).
+pub const META_RULES: &[RuleSpec] = &[
+    RuleSpec {
+        id: "bad-pragma",
+        summary: "malformed lint pragma",
+        hint: "write `// lint: allow(<rule>, <reason>)` with a known rule id and a \
+               non-empty reason",
+    },
+    RuleSpec {
+        id: "unused-allow",
+        summary: "suppression that suppresses nothing",
+        hint: "the finding it covered is gone — delete the stale pragma/allowlist entry",
+    },
+];
+
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+pub fn rule_spec(id: &str) -> Option<&'static RuleSpec> {
+    RULES.iter().chain(META_RULES.iter()).find(|r| r.id == id)
+}
+
+/// One raw rule hit before suppression: `(line, rule id, message)`.
+pub type RawFinding = (usize, &'static str, String);
+
+fn is_test_path(path: &str) -> bool {
+    path.starts_with("tests/")
+}
+
+/// The fault-hardened decode surfaces (PR 8).
+fn is_decoder_path(path: &str) -> bool {
+    path.starts_with("src/compress/")
+        || path == "src/store/container.rs"
+        || path == "src/layout/fetcher.rs"
+}
+
+/// Files allowed to print directly: the CLI entry points and the log
+/// sink itself. (Study-table renderers return `String`s — they never
+/// print, which is why they need no exemption.)
+fn may_print(path: &str) -> bool {
+    path == "src/main.rs" || path == "src/bin/gratetile-lint.rs" || path == "src/obs/log.rs"
+}
+
+/// Modules whose *job* is reading the environment: config loading,
+/// util (thread-count / bench knobs) and log-level setup.
+fn may_read_env(path: &str) -> bool {
+    path.starts_with("src/util/") || path.starts_with("src/config/") || path == "src/obs/log.rs"
+}
+
+/// `std::env` occurrences that are not the `env::args` entry-point read.
+fn env_read_hit(code: &str) -> bool {
+    let mut from = 0usize;
+    while let Some(pos) = code[from..].find("std::env") {
+        let at = from + pos;
+        let after = &code[at + "std::env".len()..];
+        if !after.starts_with("::args") {
+            return true;
+        }
+        from = at + "std::env".len();
+    }
+    false
+}
+
+/// Run every rule over one scanned file. Pragma/allowlist suppression
+/// happens in the driver — this returns raw hits only, at most one per
+/// (line, rule).
+pub fn check_file(f: &ScannedFile) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    let decoder = is_decoder_path(&f.path);
+    let test_file = is_test_path(&f.path);
+    let src_file = f.path.starts_with("src/");
+    for (idx, l) in f.lines.iter().enumerate() {
+        let line = idx + 1;
+        let code = l.code.as_str();
+        if code.is_empty() {
+            continue;
+        }
+        // nondet-iter: everywhere, test code included (a nondeterministic
+        // test is a flaky test).
+        for tok in ["HashMap", "HashSet"] {
+            if find_token(code, tok).is_some() {
+                out.push((line, "nondet-iter", format!("`{tok}` has nondeterministic iteration order")));
+                break;
+            }
+        }
+        // wall-clock: everywhere (benches are not scanned; the --wall
+        // path is allowlisted, not exempted).
+        for tok in ["std::time", "Instant::now", "SystemTime", "UNIX_EPOCH"] {
+            if find_token(code, tok).is_some() {
+                out.push((line, "wall-clock", format!("`{tok}` reads host time")));
+                break;
+            }
+        }
+        // panic-in-decoder: the hardened decode surfaces, non-test code.
+        if decoder && !l.in_test {
+            for tok in [
+                ".unwrap()",
+                ".expect(",
+                "panic!",
+                "unreachable!",
+                "todo!",
+                "unimplemented!",
+                ".words[",
+                "bytes[",
+            ] {
+                if find_token(code, tok).is_some() {
+                    let what = if tok.ends_with('[') {
+                        format!("`{tok}..]` indexes an untrusted payload buffer")
+                    } else {
+                        format!("`{tok}` can panic on corrupt payloads")
+                    };
+                    out.push((line, "panic-in-decoder", what));
+                    break;
+                }
+            }
+        }
+        // stray-print: production src code only.
+        if src_file && !test_file && !l.in_test && !may_print(&f.path) {
+            for tok in ["println!", "eprintln!", "print!", "eprint!", "dbg!"] {
+                if find_token(code, tok).is_some() {
+                    out.push((line, "stray-print", format!("`{tok}` bypasses obs::log")));
+                    break;
+                }
+            }
+        }
+        // env-read: production src code only.
+        if src_file && !test_file && !l.in_test && !may_read_env(&f.path) && env_read_hit(code) {
+            out.push((line, "env-read", "`std::env` read outside config/util/log".to_string()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scanner::scan;
+
+    fn hits(path: &str, text: &str) -> Vec<(usize, &'static str)> {
+        check_file(&scan(path, text)).into_iter().map(|(l, r, _)| (l, r)).collect()
+    }
+
+    #[test]
+    fn nondet_iter_fires_everywhere_including_tests() {
+        assert_eq!(
+            hits("tests/x.rs", "use std::collections::HashMap;\n"),
+            vec![(1, "nondet-iter")]
+        );
+        assert!(hits("src/sim/x.rs", "use std::collections::BTreeMap;\n").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_matches_clock_reads() {
+        assert_eq!(hits("src/sim/x.rs", "let t = Instant::now();\n"), vec![(1, "wall-clock")]);
+        assert!(hits("src/sim/x.rs", "let cycles: u64 = 0;\n").is_empty());
+    }
+
+    #[test]
+    fn panic_rule_scopes_to_decoder_paths_and_skips_tests() {
+        let text = "fn d(v: &[u16]) { v.first().unwrap(); }\n";
+        assert_eq!(hits("src/compress/x.rs", text), vec![(1, "panic-in-decoder")]);
+        assert!(hits("src/sim/x.rs", text).is_empty());
+        let tested = "fn ok() {}\n#[cfg(test)]\nmod tests { fn t() { x.unwrap(); } }\n";
+        assert!(hits("src/compress/x.rs", tested).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_is_not_a_panic_path() {
+        assert!(hits("src/compress/x.rs", "let v = m.get(i).copied().unwrap_or(0);\n").is_empty());
+    }
+
+    #[test]
+    fn stray_print_exempts_entry_points_and_tests() {
+        let text = "fn f() { println!(\"x\"); }\n";
+        assert_eq!(hits("src/sim/x.rs", text), vec![(1, "stray-print")]);
+        assert!(hits("src/main.rs", text).is_empty());
+        assert!(hits("src/obs/log.rs", text).is_empty());
+        assert!(hits("tests/x.rs", text).is_empty());
+    }
+
+    #[test]
+    fn env_read_carves_out_args_and_owner_modules() {
+        assert_eq!(
+            hits("src/sim/x.rs", "let v = std::env::var(\"X\");\n"),
+            vec![(1, "env-read")]
+        );
+        assert!(hits("src/util/x.rs", "let v = std::env::var(\"X\");\n").is_empty());
+        assert!(hits("src/main.rs", "let a = std::env::args();\n").is_empty());
+        // args alone is carved out, a second real read on the line is not.
+        assert_eq!(
+            hits("src/sim/x.rs", "std::env::args(); std::env::var(\"X\");\n"),
+            vec![(1, "env-read")]
+        );
+    }
+
+    #[test]
+    fn rule_specs_are_well_formed() {
+        for r in RULES.iter().chain(META_RULES) {
+            assert!(!r.id.is_empty() && !r.summary.is_empty() && !r.hint.is_empty());
+        }
+        assert!(is_known_rule("nondet-iter"));
+        assert!(!is_known_rule("unused-allow"), "meta rules are not pragma targets");
+        assert!(rule_spec("unused-allow").is_some());
+    }
+}

@@ -1,0 +1,338 @@
+//! A comment/string-stripping scanner for Rust source text.
+//!
+//! The invariant linter never parses Rust properly (no `syn` on the
+//! offline image, and none needed): every rule is a token query over
+//! *code* text, so the only job here is to strip the three places a
+//! token can hide without being code — comments, string/char literals,
+//! and raw strings — while keeping the comment text around separately
+//! (that is where [`crate::analysis::pragma`] pragmas live).
+//!
+//! The state machine handles the lexical shapes that actually occur in
+//! this crate and its tests: line comments, nested block comments,
+//! (multi-line) string literals with escapes, byte strings, raw strings
+//! `r#"…"#` with any number of hashes, char literals (including
+//! escaped quotes), and lifetimes (`'a` is *not* an unterminated char
+//! literal). Stripped regions are replaced by a single space so tokens
+//! on either side never fuse.
+//!
+//! Test regions: from the first line whose code contains `#[cfg(test)]`
+//! to the end of the file, lines are marked [`ScannedLine::in_test`].
+//! This matches the crate-wide convention that the unit-test module is
+//! the last item of a file; rules that exempt test code (panics in
+//! decoder tests, bless knobs in fixtures) key off this flag.
+
+/// One scanned source line.
+#[derive(Debug, Clone)]
+pub struct ScannedLine {
+    /// The line with comments and string/char literal *contents*
+    /// removed (each stripped region collapses to one space).
+    pub code: String,
+    /// The comment text of the line (line-comment tail and/or block
+    /// comment content) — pragma syntax is searched here.
+    pub comment: String,
+    /// True from the first top-level `#[cfg(test)]` line to EOF.
+    pub in_test: bool,
+}
+
+/// A whole scanned file: repo-relative path (forward slashes) plus its
+/// lines, 1-indexed by convention (`lines[0]` is line 1).
+#[derive(Debug, Clone)]
+pub struct ScannedFile {
+    pub path: String,
+    pub lines: Vec<ScannedLine>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Number of `#` marks that close the raw string.
+    RawStr(usize),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scan `text` into per-line code/comment channels.
+pub fn scan(path: &str, text: &str) -> ScannedFile {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines: Vec<ScannedLine> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut prev_code_char = ' ';
+    let mut i = 0usize;
+    let n = chars.len();
+    let at = |j: usize| if j < n { chars[j] } else { '\0' };
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // Line comments end here; multi-line states persist.
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(ScannedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && at(i + 1) == '/' {
+                    state = State::LineComment;
+                    code.push(' ');
+                    prev_code_char = ' ';
+                    comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && at(i + 1) == '*' {
+                    state = State::BlockComment(1);
+                    code.push(' ');
+                    prev_code_char = ' ';
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if (c == 'r' || (c == 'b' && at(i + 1) == 'r')) && !is_ident(prev_code_char)
+                {
+                    // Possible raw (byte) string: r"…", r#"…"#, br"…", …
+                    let mut j = i + if c == 'b' { 2 } else { 1 };
+                    let mut hashes = 0usize;
+                    while at(j) == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if at(j) == '"' {
+                        state = State::RawStr(hashes);
+                        code.push(' ');
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        prev_code_char = c;
+                        i += 1;
+                    }
+                } else if c == 'b' && at(i + 1) == '"' && !is_ident(prev_code_char) {
+                    state = State::Str;
+                    code.push(' ');
+                    i += 2;
+                } else if c == '\'' || (c == 'b' && at(i + 1) == '\'' && !is_ident(prev_code_char))
+                {
+                    let q = if c == 'b' { i + 1 } else { i };
+                    // Char literal vs lifetime: a quote starts a char
+                    // literal when its content is an escape (`'\n'`) or a
+                    // single char followed by a closing quote (`'x'`);
+                    // otherwise it is a lifetime tick (`'a`, `'static`).
+                    if at(q + 1) == '\\' {
+                        let mut j = q + 1;
+                        while j < n {
+                            if chars[j] == '\\' {
+                                j += 2;
+                            } else if chars[j] == '\'' {
+                                j += 1;
+                                break;
+                            } else {
+                                j += 1;
+                            }
+                        }
+                        code.push(' ');
+                        prev_code_char = ' ';
+                        i = j;
+                    } else if at(q + 2) == '\'' && at(q + 1) != '\'' {
+                        code.push(' ');
+                        prev_code_char = ' ';
+                        i = q + 3;
+                    } else {
+                        // Lifetime (or the `b` was an ordinary ident char).
+                        code.push(c);
+                        prev_code_char = c;
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    prev_code_char = c;
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '*' && at(i + 1) == '/' {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && at(i + 1) == '*' {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Code;
+                    prev_code_char = ' ';
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes {
+                        if at(i + 1 + k) != '#' {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        state = State::Code;
+                        prev_code_char = ' ';
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(ScannedLine { code, comment, in_test: false });
+    }
+    // Mark the trailing test region (crate convention: `#[cfg(test)]
+    // mod tests` is the last item of a file).
+    let test_from = lines.iter().position(|l| l.code.contains("#[cfg(test)]"));
+    if let Some(from) = test_from {
+        for l in lines.iter_mut().skip(from) {
+            l.in_test = true;
+        }
+    }
+    ScannedFile { path: path.to_string(), lines }
+}
+
+/// Find `token` in `code` at identifier boundaries: when the token
+/// starts (or ends) with an identifier char, the adjacent source char
+/// must not be one — `HashMap` must not match inside `MyHashMapLike`.
+/// Returns the byte offset of the first boundary-respecting match.
+pub fn find_token(code: &str, token: &str) -> Option<usize> {
+    let t0 = token.chars().next()?;
+    let t1 = token.chars().next_back()?;
+    for (pos, _) in code.match_indices(token) {
+        if is_ident(t0) {
+            if let Some(prev) = code[..pos].chars().next_back() {
+                if is_ident(prev) {
+                    continue;
+                }
+            }
+        }
+        if is_ident(t1) {
+            if let Some(next) = code[pos + token.len()..].chars().next() {
+                if is_ident(next) {
+                    continue;
+                }
+            }
+        }
+        return Some(pos);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        scan("t.rs", text).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let c = code_of("let x = 1; // HashMap here\n/* HashMap */ let y = 2;\n");
+        assert!(c[0].contains("let x = 1;") && !c[0].contains("HashMap"));
+        assert!(c[1].contains("let y = 2;") && !c[1].contains("HashMap"));
+    }
+
+    #[test]
+    fn comment_text_is_kept_for_pragmas() {
+        let f = scan("t.rs", "let x = 1; // lint: allow(r, why)\n");
+        assert!(f.lines[0].comment.contains("lint: allow(r, why)"));
+        assert!(!f.lines[0].code.contains("lint"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let c = code_of("/* a /* HashMap */ still */ let z = 3;\n");
+        assert!(c[0].contains("let z = 3;") && !c[0].contains("HashMap"));
+    }
+
+    #[test]
+    fn strips_string_contents_including_escapes_and_multiline() {
+        let c = code_of("let s = \"HashMap \\\" quoted\"; keep(s);\nlet m = \"line1\nline2 HashMap\"; tail();\n");
+        assert!(c[0].contains("keep(s);") && !c[0].contains("HashMap"));
+        assert!(!c[1].contains("line1"));
+        assert!(!c[2].contains("HashMap") && c[2].contains("tail();"));
+    }
+
+    #[test]
+    fn strips_raw_strings_with_hashes() {
+        let c = code_of("let r = r#\"HashMap \" inner\"#; after();\n");
+        assert!(c[0].contains("after();") && !c[0].contains("HashMap"));
+        let c = code_of("let r = r\"plain HashMap\"; after();\n");
+        assert!(c[0].contains("after();") && !c[0].contains("HashMap"));
+    }
+
+    #[test]
+    fn char_literals_strip_but_lifetimes_survive() {
+        let c = code_of("let q: &'static str = f('\"'); let e = '\\''; g::<'a>();\n");
+        // The quote chars inside literals must not open strings.
+        assert!(c[0].contains("g::<'a>();"), "{:?}", c[0]);
+        assert!(c[0].contains("&'static str"), "{:?}", c[0]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let c = code_of("let b = b\"HashMap\"; let c = b'x'; done();\n");
+        assert!(c[0].contains("done();") && !c[0].contains("HashMap"));
+    }
+
+    #[test]
+    fn cfg_test_marks_the_tail_region() {
+        let f = scan("t.rs", "fn a() {}\n#[cfg(test)]\nmod tests {\n}\n");
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test && f.lines[2].in_test && f.lines[3].in_test);
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(find_token("use std::collections::HashMap;", "HashMap").is_some());
+        assert!(find_token("struct MyHashMapLike;", "HashMap").is_none());
+        assert!(find_token("x.unwrap();", ".unwrap()").is_some());
+        assert!(find_token("x.unwrap_or(0);", ".unwrap()").is_none());
+        assert!(find_token("eprintln!(\"\")", "println!").is_none());
+        assert_eq!(find_token("", "HashMap"), None);
+    }
+
+    #[test]
+    fn line_numbers_are_stable_across_multiline_literals() {
+        let f = scan("t.rs", "a();\n\"x\ny\"; b();\nc();\n");
+        assert_eq!(f.lines.len(), 4);
+        assert!(f.lines[3].code.contains("c();"));
+    }
+}

@@ -1,0 +1,32 @@
+//! Standalone entry for the self-hosted invariant linter — the same
+//! pass as `gratetile lint`, packaged as its own binary so CI and
+//! pre-commit hooks can run it without the full CLI:
+//!
+//! ```text
+//! gratetile-lint [--root DIR] [--deny-warnings] [--report FILE]
+//! ```
+//!
+//! Exit status: 0 when clean (under `--deny-warnings`, clean also means
+//! no stale suppressions), 1 otherwise.
+
+use gratetile::cli::Cli;
+use gratetile::log_error;
+
+fn main() {
+    // Reuse the `Cli` parser with a synthetic subcommand slot.
+    let args = std::iter::once("lint".to_string()).chain(std::env::args().skip(1));
+    let cli = Cli::parse(args);
+    let deny = cli.has_flag("deny-warnings");
+    match gratetile::analysis::run_cli(cli.opt("root"), deny, cli.opt("report")) {
+        Ok((rendered, ok)) => {
+            print!("{rendered}");
+            if !ok {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            log_error!("{e:#}");
+            std::process::exit(1);
+        }
+    }
+}

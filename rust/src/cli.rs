@@ -1,15 +1,16 @@
 //! Dependency-free CLI argument parsing (no `clap` in the offline
 //! build environment).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Parsed command line: a subcommand, positional args, and `--key value`
-/// / `--flag` options.
+/// / `--flag` options. Options live in a `BTreeMap` so any future
+/// iteration (help text, option echoing) is deterministic.
 #[derive(Debug, Clone, Default)]
 pub struct Cli {
     pub command: String,
     pub positional: Vec<String>,
-    pub options: HashMap<String, String>,
+    pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
 }
 

@@ -126,6 +126,7 @@ impl Compressor for Bitmask {
         // Truncated payloads answer as if the missing mask words were
         // zero (never panic; garbage-in garbage-out).
         let mask_words = ceil_div(comp.n_elems, 16);
+        // lint: allow(panic-in-decoder, end of range is clamped to words.len() by the min)
         let mask = &comp.words[..mask_words.min(comp.words.len())];
         let end = start + len;
         let (w0, w1) = (start / 16, end.div_ceil(16));

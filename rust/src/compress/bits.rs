@@ -27,7 +27,7 @@ impl BitWriter {
             if self.bit_pos == 0 {
                 self.words.push(0);
             }
-            let last = self.words.last_mut().unwrap();
+            let Some(last) = self.words.last_mut() else { break };
             let space = 16 - self.bit_pos;
             let take = space.min(remaining);
             let mask = if take == 16 { 0xFFFF } else { (1u64 << take) - 1 };

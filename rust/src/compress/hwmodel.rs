@@ -94,10 +94,14 @@ pub fn decode_block(scheme: Scheme, cfg: &DecoderConfig, comp: &CompressedBlock)
     let mut stalls = 0u64;
     // Dictionary: pay the table-load latency up front (unless the block
     // fell back to raw — header == u16::MAX marker).
-    if scheme == Scheme::Dictionary && !comp.words.is_empty() && comp.words[0] != u16::MAX {
-        let dict_len = comp.words[0] as usize;
-        cycles += ceil_div(dict_len.max(1), cfg.lanes) as u64;
-        delivered += (1 + dict_len) as f64;
+    if scheme == Scheme::Dictionary {
+        if let Some(&header) = comp.words.first() {
+            if header != u16::MAX {
+                let dict_len = header as usize;
+                cycles += ceil_div(dict_len.max(1), cfg.lanes) as u64;
+                delivered += (1 + dict_len) as f64;
+            }
+        }
     }
 
     // Input-per-output ratio over the *streamed* portion (the table, if

@@ -15,6 +15,10 @@
 //! (`decompress(compress(x)) == bf16(x)`), enforced by unit + property
 //! tests here and by the Pallas/`ref.py` cross-check at build time.
 
+// Decoder surface: unwrap() is a denied panic path in production
+// code (tests may unwrap freely).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod bits;
 pub mod bitmask;
 pub mod cost;

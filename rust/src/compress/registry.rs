@@ -91,6 +91,7 @@ impl Registry {
         self.entries
             .iter()
             .position(|e| e.scheme == scheme)
+            // lint: allow(panic-in-decoder, registry invariant - the global table registers every Scheme variant, not payload data)
             .expect("every Scheme variant is registered") as u8
     }
 
@@ -178,6 +179,7 @@ impl Registry {
         for e in self.entries {
             out.push(e.codec.sizes_from_stats(stats).unwrap_or_else(|| {
                 e.codec
+                    // lint: allow(panic-in-decoder, caller contract on the packing side - sizing never sees payload bytes)
                     .compressed_sizes(block.expect("stats-blind codec needs the gathered block"))
             }));
         }
@@ -198,6 +200,7 @@ impl Registry {
             // min_by_key keeps the FIRST minimum — lowest tag on ties.
             .min_by_key(|&(_, wb)| key(wb))
             .map(|(i, _)| i as u8)
+            // lint: allow(panic-in-decoder, registry invariant - the global table is a non-empty const list)
             .expect("registry is never empty")
     }
 }

@@ -24,7 +24,7 @@
 
 use crate::layout::fetcher::PayloadSource;
 use crate::util::rng::SplitMix64;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 // Distinct per-fault-class salts so the decision streams are
 // independent even for equal identifiers.
@@ -199,13 +199,18 @@ pub struct FaultySource<S> {
     /// Per-request salt: concurrent requests draw independent fault
     /// streams, yet request *k* sees the same faults on every run.
     salt: u64,
-    attempts: HashMap<u64, u32>,
+    /// Per-address read counters. A `BTreeMap` on principle: the map is
+    /// lookup-only (fault decisions are pure hashes of
+    /// `(seed, salt, address, attempt)` — see `payload_fault`), but a
+    /// deterministic container guarantees no future iteration can leak
+    /// hash order into decisions or report bytes.
+    attempts: BTreeMap<u64, u32>,
     injected: u64,
 }
 
 impl<S: PayloadSource> FaultySource<S> {
     pub fn new(inner: S, plan: FaultPlan, salt: u64) -> Self {
-        Self { inner, plan, salt, attempts: HashMap::new(), injected: 0 }
+        Self { inner, plan, salt, attempts: BTreeMap::new(), injected: 0 }
     }
 
     /// Number of reads this source has corrupted so far.
@@ -263,6 +268,42 @@ mod tests {
         }
         assert_eq!(a.injected(), b.injected());
         assert!(a.injected() > 0, "rate 0.5 over 16 sites should corrupt something");
+    }
+
+    #[test]
+    fn fault_decisions_are_independent_of_address_visit_order() {
+        // The per-address attempt counter lives in a map; this locks the
+        // invariant that map/visit order can never reach fault decisions:
+        // the k-th read of an address sees the same corruption no matter
+        // how reads of different addresses interleave.
+        let data: Vec<u16> = (0..4096u32).map(|i| (i * 13) as u16).collect();
+        let plan = FaultPlan::uniform(9, 0.7);
+        let addrs = [96u64, 0, 512, 32, 2048];
+        let forward: Vec<u64> =
+            (0..3).flat_map(|_| addrs.iter().copied()).collect();
+        let mut interleaved = forward.clone();
+        interleaved.reverse();
+        let mut a = FaultySource::new(SlicePayload(&data), plan, 5);
+        let mut b = FaultySource::new(SlicePayload(&data), plan, 5);
+        let mut seen_a: Vec<(u64, Vec<u16>)> = Vec::new();
+        let mut seen_b: Vec<(u64, Vec<u16>)> = Vec::new();
+        for &addr in &forward {
+            seen_a.push((addr, read(&mut a, addr, 32)));
+        }
+        for &addr in &interleaved {
+            seen_b.push((addr, read(&mut b, addr, 32)));
+        }
+        // Compare the k-th read of each address across the two orders.
+        for &addr in &addrs {
+            let ra: Vec<_> = seen_a.iter().filter(|(x, _)| *x == addr).collect();
+            let rb: Vec<_> = seen_b.iter().filter(|(x, _)| *x == addr).collect();
+            assert_eq!(ra.len(), 3);
+            for (x, y) in ra.iter().zip(&rb) {
+                assert_eq!(x.1, y.1, "addr {addr}: corruption depends on visit order");
+            }
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected() > 0, "rate 0.7 should corrupt something");
     }
 
     #[test]

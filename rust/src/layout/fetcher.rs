@@ -37,6 +37,10 @@
 //! [`Fetcher::recycle`], so a steady-state pipeline allocates nothing
 //! per window.
 
+// Decoder surface: unwrap() is a denied panic path in production
+// code (tests may unwrap freely).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use super::packer::PackedFeatureMap;
 use crate::compress::CompressedBlock;
 use crate::memsim::{Dram, Stream};
@@ -165,16 +169,16 @@ impl DecodedCache {
             e.2.extend_from_slice(data);
             return;
         }
-        let mut buf = if self.entries.len() == self.cap {
-            let (lru, _) = self
-                .entries
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, e)| e.1)
-                .expect("cap > 0");
-            self.entries.swap_remove(lru).2
+        // Evict the least-recently-stamped entry once full and recycle
+        // its buffer (a cap of 0 degrades to cap 1 rather than panicking).
+        let lru = if self.entries.len() >= self.cap {
+            self.entries.iter().enumerate().min_by_key(|(_, e)| e.1).map(|(i, _)| i)
         } else {
-            Vec::new()
+            None
+        };
+        let mut buf = match lru {
+            Some(i) => self.entries.swap_remove(i).2,
+            None => Vec::new(),
         };
         buf.clear();
         buf.extend_from_slice(data);
@@ -255,6 +259,8 @@ impl<'a> Fetcher<'a> {
             packed.payload.is_some(),
             "fetcher requires a payload-packed map (pack with with_payload=true)"
         );
+        #[allow(clippy::unwrap_used)] // guarded by the assert directly above
+        // lint: allow(panic-in-decoder, constructor contract - the assert above rejects payload-less maps before this unwrap)
         let payload = packed.payload.as_ref().unwrap().as_slice();
         Self::with_source(packed, Box::new(SlicePayload(payload)))
     }
@@ -1090,7 +1096,7 @@ mod tests {
         inner: SlicePayload<'a>,
         transient: u32,
         persistent: Vec<u64>,
-        seen: std::collections::HashMap<u64, u32>,
+        seen: std::collections::BTreeMap<u64, u32>,
     }
 
     impl PayloadSource for FlakySource<'_> {

@@ -18,6 +18,14 @@
 //!   Pallas conv kernel) to HLO text once; [`runtime`] loads and executes
 //!   it via PJRT so the e2e example runs on *real* ReLU sparsity.
 
+// The whole crate is safe Rust; the decoder surfaces additionally deny
+// `clippy::unwrap_used` via module-level attributes (see `compress`,
+// `store::container`, `layout::fetcher`) and the self-hosted linter in
+// [`analysis`] enforces the determinism/panic-safety invariants the
+// compiler cannot see.
+#![forbid(unsafe_code)]
+
+pub mod analysis;
 pub mod cli;
 pub mod compress;
 pub mod compute;

@@ -123,11 +123,28 @@ fn run(cli: &Cli) -> Result<()> {
         "trace" => cmd_trace(cli, policy)?,
         "servescale" => emit(cli, "serve_scaling", harness::serve_scaling_table()),
         "chaos" => emit(cli, "chaos", harness::chaos_table()),
+        "lint" => cmd_lint(cli)?,
         "" | "help" | "--help" => print_help(),
         other => {
             print_help();
             bail!("unknown subcommand '{other}'");
         }
+    }
+    Ok(())
+}
+
+/// `gratetile lint` — the self-hosted invariant linter over this
+/// crate's own sources (`src/` + `tests/`; see `gratetile::analysis`).
+/// `--root DIR` overrides crate-root auto-detection, `--deny-warnings`
+/// (the CI mode) also fails on stale suppressions, `--report F` writes
+/// the rendered report to a file.
+fn cmd_lint(cli: &Cli) -> Result<()> {
+    let deny = cli.has_flag("deny-warnings");
+    let (rendered, ok) =
+        gratetile::analysis::run_cli(cli.opt("root"), deny, cli.opt("report"))?;
+    print!("{rendered}");
+    if !ok {
+        bail!("lint failed{}", if deny { " (--deny-warnings)" } else { "" });
     }
     Ok(())
 }
@@ -599,6 +616,13 @@ End to end:
                       (fixed bitmask codec — the golden-filed baseline)
   chaos               chaos study: seeded fault injection x defense policy
                       (checksums/retries/shedding) — goodput, recovery, p99
+
+Tooling:
+  lint                self-hosted invariant linter over this crate's sources
+                      (nondet-iter, wall-clock, panic-in-decoder, stray-print,
+                      env-read; suppress with 'lint: allow(rule, reason)'
+                      pragmas or justified lint.allow entries)
+                      [--root DIR --deny-warnings --report F]
 
 Common flags: --codec NAME|auto (codec policy: bitmask/zrlc/dictionary/raw, or
 auto = cheapest codec per sub-tensor; --scheme is an alias); --markdown (emit

@@ -27,7 +27,7 @@ use crate::compress::{CodecPolicy, Registry};
 use crate::tune::plan::{parse_tuned_fields, TunedEntry, TUNED_MANIFEST_VERSION};
 use crate::util::error::{Context, Result};
 use crate::{bail, err};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled artifact.
@@ -54,9 +54,12 @@ pub struct ContainerRef {
 /// The parsed manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
-    pub entries: HashMap<String, ArtifactEntry>,
+    /// Artifacts by name. `BTreeMap`: the not-found error messages
+    /// below render the key list, so map order reaches user-visible
+    /// bytes — sorted order keeps them stable across runs and hosts.
+    pub entries: BTreeMap<String, ArtifactEntry>,
     /// Registered `.grate` container files, by name.
-    pub containers: HashMap<String, ContainerRef>,
+    pub containers: BTreeMap<String, ContainerRef>,
     /// Per-layer tuned plans in declaration order (order is load-bearing:
     /// consumers map entries onto network layers positionally).
     pub tuned: Vec<(String, TunedEntry)>,
@@ -75,8 +78,8 @@ impl Manifest {
     /// Parse manifest text (exposed for tests).
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
         let mut m = Manifest {
-            entries: HashMap::new(),
-            containers: HashMap::new(),
+            entries: BTreeMap::new(),
+            containers: BTreeMap::new(),
             tuned: Vec::new(),
             dir: dir.to_path_buf(),
         };
@@ -326,6 +329,35 @@ tuned CONV2 mode=anchored8@1 codec=zrlc order=channel cost=4096
         .unwrap_err()
         .to_string();
         assert!(e.contains("cc") && e.contains("line 1"), "{e}");
+    }
+
+    /// ISSUE 10 satellite (lint-driven fix regression): the not-found
+    /// errors render the artifact/container key lists, so map order
+    /// reaches user-visible bytes. With `BTreeMap` the rendered message
+    /// must be byte-identical however the manifest declared the names.
+    #[test]
+    fn not_found_errors_are_byte_identical_across_insertion_orders() {
+        let fwd = "artifact zeta f1 in=4xf32 outs=1\n\
+                   artifact alpha f2 in=4xf32 outs=1\n\
+                   artifact mid f3 in=4xf32 outs=1\n\
+                   container c2 p2.grate\ncontainer c1 p1.grate\n";
+        let rev = "container c1 p1.grate\ncontainer c2 p2.grate\n\
+                   artifact mid f3 in=4xf32 outs=1\n\
+                   artifact alpha f2 in=4xf32 outs=1\n\
+                   artifact zeta f1 in=4xf32 outs=1\n";
+        let a = Manifest::parse(fwd, Path::new("/tmp")).unwrap();
+        let b = Manifest::parse(rev, Path::new("/tmp")).unwrap();
+        let ea = a.get("missing").unwrap_err().to_string();
+        let eb = b.get("missing").unwrap_err().to_string();
+        assert_eq!(ea, eb);
+        assert!(ea.contains("alpha") && ea.contains("zeta"), "{ea}");
+        // Sorted, not insertion, order:
+        assert!(ea.find("alpha").unwrap() < ea.find("mid").unwrap(), "{ea}");
+        assert!(ea.find("mid").unwrap() < ea.find("zeta").unwrap(), "{ea}");
+        let ca = a.container_ref("nope").unwrap_err().to_string();
+        let cb = b.container_ref("nope").unwrap_err().to_string();
+        assert_eq!(ca, cb);
+        assert!(ca.find("c1").unwrap() < ca.find("c2").unwrap(), "{ca}");
     }
 
     #[test]

@@ -26,6 +26,10 @@
 //! so `serve → fetch` round-trips bit-exactly against the in-memory
 //! path.
 
+// Decoder surface: unwrap() is a denied panic path in production
+// code (tests may unwrap freely).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 use crate::compress::{CodecPolicy, Registry};
 use crate::layout::fetcher::{DenseWindow, Fetcher, PayloadSource};
 use crate::layout::metadata::{BlockRecord, MetadataTable};
@@ -123,14 +127,21 @@ impl<'a> Dec<'a> {
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
+    /// `take` an exact-size array (`try_into` cannot fail on the
+    /// `take(N)` slice, but the decoder carries no panic paths at all).
+    fn take_arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        self.take(N)?
+            .try_into()
+            .map_err(|_| err!("container: truncated TOC at byte {}", self.at))
+    }
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_arr()?))
     }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_arr()?))
     }
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_arr()?))
     }
     fn usize32(&mut self) -> Result<usize> {
         Ok(self.u32()? as usize)
@@ -154,7 +165,7 @@ fn pack_tags(tags: &[u8]) -> Vec<u8> {
 
 /// Inverse of [`pack_tags`] for `n` sub-tensors.
 fn unpack_tags(bytes: &[u8], n: usize) -> Vec<u8> {
-    (0..n).map(|i| (bytes[i / 4] >> ((i % 4) * 2)) & 0x3).collect()
+    (0..n).map(|i| (bytes.get(i / 4).copied().unwrap_or(0) >> ((i % 4) * 2)) & 0x3).collect()
 }
 
 /// Rebuild each record's per-slot codec tags from the linear tag table
@@ -230,8 +241,10 @@ fn decode_division(dec: &mut Dec) -> Result<Division> {
     let fm_c = dec.usize32()?;
     let cd = dec.usize32()?;
     let n_cgroups = dec.usize32()?;
-    let mut axes: Vec<Vec<Seg>> = Vec::with_capacity(2);
-    for _ in 0..2 {
+    // On-disk order matches the encoder's `[y, x]` loops; reading each
+    // table directly (rather than pop()-ing a two-element Vec) keeps the
+    // decode path free of unwraps.
+    fn read_segs(dec: &mut Dec) -> Result<Vec<Seg>> {
         let n = dec.usize32()?;
         let mut segs = Vec::with_capacity(n);
         for _ in 0..n {
@@ -239,21 +252,20 @@ fn decode_division(dec: &mut Dec) -> Result<Division> {
             let len = dec.usize32()?;
             segs.push(Seg { start, len });
         }
-        axes.push(segs);
+        Ok(segs)
     }
-    let xs = axes.pop().unwrap();
-    let ys = axes.pop().unwrap();
-    let mut blockmaps: Vec<Vec<usize>> = Vec::with_capacity(2);
-    for _ in 0..2 {
+    fn read_index(dec: &mut Dec) -> Result<Vec<usize>> {
         let n = dec.usize32()?;
         let mut b = Vec::with_capacity(n);
         for _ in 0..n {
             b.push(dec.usize32()?);
         }
-        blockmaps.push(b);
+        Ok(b)
     }
-    let block_of_x = blockmaps.pop().unwrap();
-    let block_of_y = blockmaps.pop().unwrap();
+    let ys = read_segs(dec)?;
+    let xs = read_segs(dec)?;
+    let block_of_y = read_index(dec)?;
+    let block_of_x = read_index(dec)?;
     let n_blocks_y = dec.usize32()?;
     let n_blocks_x = dec.usize32()?;
     let meta_bits_per_block = dec.usize32()?;
@@ -353,6 +365,7 @@ fn encode_entry(
         // v1: a bare scheme byte (the registry tag — same assignment).
         (1, CodecPolicy::Fixed(s)) => e.u8(reg.tag_of(s)),
         (1, CodecPolicy::Adaptive) => {
+            // lint: allow(panic-in-decoder, write-side dead arm - write_with_version bails on adaptive entries before encoding v1)
             unreachable!("write_with_version rejects adaptive tensors for v1")
         }
         // v2: a policy byte, then the scheme tag for fixed tensors.
@@ -557,7 +570,10 @@ impl Container {
         let mut toc = Enc(Vec::new());
         let mut payloads: Vec<(u64, Vec<u8>)> = Vec::with_capacity(entries.len());
         for (name, p) in entries {
-            let bytes = words_to_bytes(p.payload.as_ref().unwrap());
+            let words = p.payload.as_ref().ok_or_else(|| {
+                err!("container: tensor '{name}' has no payload (pack with with_payload=true)")
+            })?;
+            let bytes = words_to_bytes(words);
             encode_entry(&mut toc, version, name, p, offset, fnv1a64(&bytes));
             let next = (offset + bytes.len() as u64).div_ceil(16) * 16;
             payloads.push((offset, bytes));

@@ -24,7 +24,7 @@ use crate::tiling::division::SubTensorRef;
 use crate::util::error::Result;
 use crate::util::round_up;
 use crate::{bail, err};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// One tensor resident in the store.
 #[derive(Debug, Clone)]
@@ -50,7 +50,10 @@ impl StoredTensor {
 pub struct TensorStore {
     pub(crate) arena: Arena,
     pub(crate) mem: Vec<u16>,
-    pub(crate) tensors: HashMap<String, StoredTensor>,
+    /// Tensors by name. `BTreeMap` so every iteration surface —
+    /// `names()`, whole-store export, capacity accounting — is
+    /// deterministic without remembering to sort.
+    pub(crate) tensors: BTreeMap<String, StoredTensor>,
 }
 
 impl TensorStore {

@@ -1,0 +1,217 @@
+//! Tier-1 suite for the self-hosted invariant linter (ISSUE 10).
+//!
+//! Three layers of coverage:
+//!
+//! 1. **Fixtures** — for every rule, an embedded positive snippet that
+//!    must flag (exact file:line asserted) and a negative snippet that
+//!    must pass, exercising the path/test-region scoping.
+//! 2. **Suppression round-trips** — pragma and allowlist acceptance,
+//!    mandatory justifications, and the `unused-allow`/`bad-pragma`
+//!    hygiene warnings.
+//! 3. **Self-lint** — the full `src/` + `tests/` tree (these lines
+//!    included) must come back with zero errors *and* zero warnings:
+//!    every suppression in the tree is justified and load-bearing.
+
+use gratetile::analysis::report::Severity;
+use gratetile::analysis::{find_crate_root, lint_text, lint_tree};
+use std::path::{Path, PathBuf};
+
+fn crate_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf()
+}
+
+/// Error-severity findings as `(line, rule)` pairs.
+fn errors_of(path: &str, text: &str) -> Vec<(usize, String)> {
+    lint_text(path, text, "")
+        .unwrap()
+        .findings
+        .iter()
+        .filter(|f| f.severity == Severity::Error)
+        .map(|f| {
+            assert_eq!(f.path, path);
+            assert!(!f.hint.is_empty(), "every finding carries a fix hint");
+            (f.line, f.rule.to_string())
+        })
+        .collect()
+}
+
+fn assert_clean(path: &str, text: &str) {
+    let got = errors_of(path, text);
+    assert!(got.is_empty(), "expected no findings in {path}, got {got:?}");
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn nondet_iter_positive_and_negative() {
+    let positive = "fn ok() {}\nuse std::collections::HashMap;\n";
+    assert_eq!(errors_of("src/sim/x.rs", positive), [(2, "nondet-iter".to_string())]);
+    // Fires in test code too — a hash-ordered test is a flaky test.
+    assert_eq!(errors_of("tests/x.rs", positive), [(2, "nondet-iter".to_string())]);
+    assert_clean("src/sim/x.rs", "use std::collections::BTreeMap;\n");
+    // Tokens hidden in strings/comments are not code.
+    assert_clean("src/sim/x.rs", "// HashMap\nlet s = \"HashMap\";\n");
+    assert_clean("src/sim/x.rs", "struct MyHashMapLike;\n");
+}
+
+#[test]
+fn wall_clock_positive_and_negative() {
+    let positive = "fn f() {}\nfn g() {}\nlet t = Instant::now();\n";
+    assert_eq!(errors_of("src/memsim/x.rs", positive), [(3, "wall-clock".to_string())]);
+    assert_eq!(
+        errors_of("src/x.rs", "use std::time::Duration;\n"),
+        [(1, "wall-clock".to_string())]
+    );
+    assert_clean("src/memsim/x.rs", "let cycles: u64 = dram.busy_cycles();\n");
+}
+
+#[test]
+fn panic_in_decoder_positive_and_negative() {
+    let positive = "fn d(v: &[u16]) {\n    let x = v.first().unwrap();\n}\n";
+    assert_eq!(
+        errors_of("src/compress/x.rs", positive),
+        [(2, "panic-in-decoder".to_string())]
+    );
+    assert_eq!(
+        errors_of("src/store/container.rs", positive),
+        [(2, "panic-in-decoder".to_string())]
+    );
+    // Same text outside the decoder surfaces is allowed...
+    assert_clean("src/sim/x.rs", positive);
+    // ...as is decoder test code (the in-test region starts at
+    // `#[cfg(test)]` and runs to EOF),
+    assert_clean("src/compress/x.rs", "fn ok() {}\n#[cfg(test)]\nmod t { fn f() { x.unwrap(); } }\n");
+    // ...and the hardened patterns themselves.
+    assert_clean("src/compress/x.rs", "let v = m.get(i).copied().unwrap_or(0);\n");
+}
+
+#[test]
+fn stray_print_positive_and_negative() {
+    let positive = "fn f() {\n    println!(\"x\");\n}\n";
+    assert_eq!(errors_of("src/harness/x.rs", positive), [(2, "stray-print".to_string())]);
+    // Entry points, the log sink, and test code may print.
+    assert_clean("src/main.rs", positive);
+    assert_clean("src/bin/gratetile-lint.rs", positive);
+    assert_clean("src/obs/log.rs", positive);
+    assert_clean("tests/x.rs", positive);
+    assert_clean("src/harness/x.rs", "log_info!(\"x\");\n");
+}
+
+#[test]
+fn env_read_positive_and_negative() {
+    let positive = "fn f() {}\nlet v = std::env::var(\"GRATETILE_X\");\n";
+    assert_eq!(errors_of("src/sim/x.rs", positive), [(2, "env-read".to_string())]);
+    // Owner modules and the args() entry-point read are fine.
+    assert_clean("src/config/x.rs", positive);
+    assert_clean("src/util/x.rs", positive);
+    assert_clean("src/main.rs", "let a: Vec<String> = std::env::args().collect();\n");
+}
+
+// --------------------------------------------------------- suppressions
+
+#[test]
+fn pragma_round_trip() {
+    // Trailing pragma on the flagged line.
+    let rep = lint_text(
+        "src/sim/x.rs",
+        "use std::collections::HashMap; // lint: allow(nondet-iter, lookup-only cache)\n",
+        "",
+    )
+    .unwrap();
+    assert_eq!((rep.errors(), rep.warnings(), rep.suppressed), (0, 0, 1), "{}", rep.render());
+
+    // Standalone pragma line covers the next line.
+    let rep = lint_text(
+        "src/sim/x.rs",
+        "// lint: allow(nondet-iter, lookup-only cache)\nuse std::collections::HashMap;\n",
+        "",
+    )
+    .unwrap();
+    assert_eq!((rep.errors(), rep.warnings(), rep.suppressed), (0, 0, 1));
+
+    // A pragma for the wrong rule suppresses nothing: the finding stays
+    // an error and the pragma is flagged as stale.
+    let rep = lint_text(
+        "src/sim/x.rs",
+        "use std::collections::HashMap; // lint: allow(wall-clock, wrong)\n",
+        "",
+    )
+    .unwrap();
+    assert_eq!((rep.errors(), rep.warnings()), (1, 1));
+}
+
+#[test]
+fn pragmas_require_reason_and_known_rule() {
+    let rep = lint_text("src/x.rs", "fn f() {} // lint: allow(nondet-iter)\n", "").unwrap();
+    assert_eq!(rep.findings[0].rule, "bad-pragma");
+    let rep = lint_text("src/x.rs", "fn f() {} // lint: allow(bogus-rule, why)\n", "").unwrap();
+    assert_eq!(rep.findings[0].rule, "bad-pragma");
+    // Warnings pass by default but fail the CI mode.
+    assert!(rep.ok(false) && !rep.ok(true));
+}
+
+#[test]
+fn allowlist_round_trip() {
+    let src = "let t = Instant::now();\n";
+    let rep = lint_text("src/coordinator/x.rs", src, "").unwrap();
+    assert_eq!(rep.errors(), 1);
+    let rep = lint_text(
+        "src/coordinator/x.rs",
+        src,
+        "# comment\nwall-clock src/coordinator/x.rs measures host wall time by design\n",
+    )
+    .unwrap();
+    assert_eq!((rep.errors(), rep.warnings(), rep.suppressed), (0, 0, 1), "{}", rep.render());
+    // Entries only cover their own (rule, path).
+    let rep = lint_text(
+        "src/coordinator/y.rs",
+        src,
+        "wall-clock src/coordinator/x.rs measures host wall time by design\n",
+    )
+    .unwrap();
+    assert_eq!(rep.errors(), 1);
+    // And the unmatched entry is reported as stale, at its line.
+    let stale = rep.findings.iter().find(|f| f.path == "lint.allow").unwrap();
+    assert_eq!((stale.rule, stale.line), ("unused-allow", 1));
+}
+
+#[test]
+fn allowlist_justification_is_mandatory() {
+    let e = lint_text("src/x.rs", "fn f() {}\n", "wall-clock src/x.rs\n").unwrap_err();
+    assert!(e.to_string().contains("justification"), "{e}");
+    assert!(e.to_string().contains("lint.allow:1"), "{e}");
+}
+
+// ------------------------------------------------------------ self-lint
+
+#[test]
+fn full_tree_self_lint_is_clean_including_suppression_hygiene() {
+    let rep = lint_tree(&crate_root()).unwrap();
+    assert_eq!(rep.errors(), 0, "unallowlisted findings:\n{}", rep.render());
+    // Zero warnings too: every pragma and allowlist entry in the tree
+    // is well-formed AND suppresses a live finding (no stale allows).
+    assert_eq!(rep.warnings(), 0, "stale/malformed suppressions:\n{}", rep.render());
+    assert!(rep.ok(true));
+    assert!(rep.files_scanned > 80, "expected the whole tree, got {}", rep.files_scanned);
+    assert!(rep.suppressed > 0, "the tree carries justified suppressions");
+}
+
+#[test]
+fn report_is_deterministic_and_summarised() {
+    let a = lint_tree(&crate_root()).unwrap();
+    let b = lint_tree(&crate_root()).unwrap();
+    assert_eq!(a.render(), b.render());
+    let tail = a.render();
+    let last = tail.lines().last().unwrap().to_string();
+    assert!(last.starts_with("lint: ") && last.ends_with("suppressed"), "{last}");
+}
+
+#[test]
+fn crate_root_resolves_from_repo_root_and_crate_dir() {
+    let root = crate_root();
+    assert_eq!(find_crate_root(&root).as_deref(), Some(root.as_path()));
+    if let Some(repo) = root.parent() {
+        // From the repository root the `rust/` crate is found instead.
+        assert_eq!(find_crate_root(repo).as_deref(), Some(root.as_path()));
+    }
+}
